@@ -1,0 +1,78 @@
+//! Single-crossbar simulator walk-through (paper §IV, Tables I/IV):
+//! MAGIC op costs, the per-cell op sequence, instance totals
+//! (constructive vs published), per-instance energy, and the crossbar
+//! row bit-allocation of Figs. 3/6.
+//!
+//!     cargo run --release --example crossbar_sim
+
+use dart_pim::eval::figures;
+use dart_pim::pim::energy::EnergyModel;
+use dart_pim::pim::magic::MagicOp;
+use dart_pim::pim::xbar_sim::{
+    affine_cell_ops, affine_instance_cost, linear_cell_ops, linear_instance_cost,
+    affine_row_allocation, linear_row_allocation, traceback_bits, CostSource, B_AFFINE, B_LINEAR,
+};
+use dart_pim::params::READ_LEN;
+
+fn main() {
+    println!("== Table I: MAGIC NOR composite op cycles (b = 3) ==");
+    for (name, op) in [
+        ("AND", MagicOp::And(3)),
+        ("XNOR", MagicOp::Xnor(3)),
+        ("XOR", MagicOp::Xor(3)),
+        ("Copy", MagicOp::Copy(3)),
+        ("Add NxN", MagicOp::Add(3)),
+        ("Add N+1b", MagicOp::AddBit(3)),
+        ("Add const", MagicOp::AddConst(3)),
+        ("Sub", MagicOp::Sub(3)),
+        ("Mux", MagicOp::Mux(3)),
+        ("Min", MagicOp::Min(3)),
+    ] {
+        println!("  {:<10} {:>4} cycles", name, op.cycles());
+    }
+
+    println!("\n== Algorithm 1: linear WF cell op sequence (b = {B_LINEAR}) ==");
+    let cell = linear_cell_ops(B_LINEAR);
+    println!("  {} ops, {} cycles/cell (paper: 37b+19 = {})", cell.len(), MagicOp::total(&cell), 37 * B_LINEAR + 19);
+    let acell = affine_cell_ops(B_AFFINE);
+    println!(
+        "  affine cell (b = {B_AFFINE}): {} ops, {} cycles/cell (constructive)",
+        acell.len(),
+        MagicOp::total(&acell)
+    );
+
+    println!("\n{}", figures::table4());
+
+    let e = EnergyModel::default();
+    println!("== per-instance energy (90 fJ/switch, Table V) ==");
+    println!(
+        "  linear: {:.1} nJ (paper: 45.9)   affine: {:.1} nJ (paper: 229)",
+        e.instance_energy(&linear_instance_cost(CostSource::PaperTable4)) * 1e9,
+        e.instance_energy(&affine_instance_cost(CostSource::PaperTable4)) * 1e9,
+    );
+
+    println!("\n== crossbar row allocation (1024-bit rows, Figs. 3/6) ==");
+    let lin = linear_row_allocation(READ_LEN, 1024);
+    println!(
+        "  linear buffer row: segment {} + read {} + WF band {} + temps {} = 1024 (fits: {})",
+        lin.segment_bits,
+        lin.read_bits,
+        lin.band_bits,
+        lin.temp_bits,
+        lin.fits()
+    );
+    let aff = affine_row_allocation(READ_LEN, 1024);
+    println!(
+        "  affine compute row: window {} + read {} + 3 bands {} + temps {} (fits: {})",
+        aff.segment_bits,
+        aff.read_bits,
+        aff.band_bits,
+        aff.temp_bits,
+        aff.fits()
+    );
+    println!(
+        "  traceback: {} bits/instance across 7 rows + compute-row spare (8-row instances, 8 concurrent)",
+        traceback_bits(READ_LEN)
+    );
+    println!("\ncrossbar_sim OK");
+}

@@ -1,0 +1,68 @@
+//! Quickstart: map a handful of simulated reads end to end through the
+//! DART-PIM pipeline with the AOT-compiled Pallas kernels.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Falls back to the pure-Rust engine (identical numerics) if the
+//! artifacts have not been built.
+
+use dart_pim::coordinator::{Pipeline, PipelineConfig};
+use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+use dart_pim::index::MinimizerIndex;
+use dart_pim::params::{K, READ_LEN, W};
+use dart_pim::pim::DartPimConfig;
+use dart_pim::runtime::{RustEngine, XlaEngine};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A small synthetic reference genome (stands in for GRCh38).
+    let genome = SynthConfig { len: 200_000, ..Default::default() }.generate();
+    println!("reference: {} bp synthetic genome", genome.len());
+
+    // 2. Offline indexing: minimizers (k=12, W=30) -> occurrence lists.
+    let index = MinimizerIndex::build(genome, K, W, READ_LEN);
+    let stats = index.stats(3);
+    println!(
+        "index: {} minimizers, {} occurrences (max {})",
+        stats.n_minimizers, stats.n_occurrences, stats.max_occurrences
+    );
+
+    // 3. Simulated Illumina-like reads with known origins.
+    let reads = ReadSimConfig { n_reads: 200, ..Default::default() }
+        .simulate(&index.reference, |p| p as u32);
+
+    // 4. The pipeline: route -> FIFO -> linear WF filter -> affine WF +
+    //    traceback -> best-so-far. lowTh=0 keeps all work on the
+    //    "crossbar" path at this small scale (see DESIGN.md §6).
+    let cfg = PipelineConfig {
+        dart: DartPimConfig { low_th: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let (mappings, metrics) = match XlaEngine::load_default() {
+        Ok(engine) => {
+            println!("engine: xla/PJRT ({})", engine.platform());
+            Pipeline::new(&index, cfg, engine).map_reads(&reads)?
+        }
+        Err(e) => {
+            println!("engine: rust (artifacts unavailable: {e})");
+            Pipeline::new(&index, cfg, RustEngine).map_reads(&reads)?
+        }
+    };
+    println!("metrics: {}", metrics.summary());
+
+    // 5. Check against the simulated origins.
+    let mut correct = 0;
+    for r in &reads {
+        if let Some(m) = &mappings[r.id as usize] {
+            if (m.pos - r.truth_pos as i64).abs() <= 5 {
+                correct += 1;
+            }
+        }
+    }
+    println!("mapped {}/{} reads within ±5 bp of their origin", correct, reads.len());
+    for (i, m) in mappings.iter().flatten().take(5).enumerate() {
+        println!("  example {}: read {} -> pos {} dist {} cigar {}", i, m.read_id, m.pos, m.dist, m.cigar);
+    }
+    assert!(correct as f64 / reads.len() as f64 > 0.9, "quickstart accuracy regression");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! maxReads sweep (paper Figs. 9/10): the accuracy/throughput knob.
+//!
+//! Runs the full-system simulator over a measured synthetic workload for
+//! maxReads in {12.5k, 25k, 50k}, projects to the paper's 389 M-read
+//! dataset, and prints the paper-workload model rows next to the paper's
+//! reported values. Also reports the Batched8 affine ablation.
+//!
+//!     cargo run --release --example sweep_maxreads [--reads N]
+
+use dart_pim::eval::figures;
+use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+use dart_pim::index::MinimizerIndex;
+use dart_pim::params::{K, READ_LEN, W};
+use dart_pim::pim::xbar_sim::CostSource;
+use dart_pim::pim::DartPimConfig;
+use dart_pim::simulator::report::{build_report, paper_workload_counts, scale_counts};
+use dart_pim::simulator::{FullSystemSim, TimingMode};
+
+fn main() {
+    let n_reads: usize = std::env::args()
+        .skip_while(|a| a != "--reads")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5_000);
+
+    println!("== measured synthetic workload ==");
+    let genome = SynthConfig { len: 1_000_000, ..Default::default() }.generate();
+    let index = MinimizerIndex::build(genome, K, W, READ_LEN);
+    let reads = ReadSimConfig { n_reads, ..Default::default() }
+        .simulate(&index.reference, |p| p as u32);
+
+    println!(
+        "{:<10} {:>12} {:>10} {:>12} {:>12} {:>10} {:>12}",
+        "maxReads", "dropped", "K_L", "J_L", "J_A", "T proj(s)", "E proj(kJ)"
+    );
+    for max_reads in [12_500usize, 25_000, 50_000] {
+        let cfg = DartPimConfig { max_reads, low_th: 0, ..Default::default() };
+        let sim = FullSystemSim::new(&index, cfg.clone());
+        let counts = sim.simulate(&reads);
+        let scaled = scale_counts(&counts, 389_000_000, &cfg);
+        let proj = build_report(&scaled, &cfg, CostSource::PaperTable4, TimingMode::PaperSerial);
+        println!(
+            "{:<10} {:>12} {:>10} {:>12} {:>12} {:>10.1} {:>12.1}",
+            max_reads,
+            counts.dropped_pairs,
+            counts.k_linear,
+            counts.linear_instances,
+            counts.affine_instances,
+            proj.exec_time_s,
+            proj.energy.total() / 1e3,
+        );
+    }
+
+    println!("\n== paper-workload model (Fig. 10a parity) ==");
+    println!(
+        "{:<10} {:>12} {:>12} {:>14} {:>12}",
+        "maxReads", "T model(s)", "T paper(s)", "Batched8 T(s)", "E model(kJ)"
+    );
+    for (max_reads, paper_t) in [(12_500usize, 43.8), (25_000, 87.2), (50_000, 174.0)] {
+        let cfg = DartPimConfig::with_max_reads(max_reads);
+        let counts = paper_workload_counts(&cfg);
+        let serial = build_report(&counts, &cfg, CostSource::PaperTable4, TimingMode::PaperSerial);
+        let batched = build_report(&counts, &cfg, CostSource::PaperTable4, TimingMode::Batched8);
+        println!(
+            "{:<10} {:>12.1} {:>12.1} {:>14.1} {:>12.1}",
+            max_reads,
+            serial.exec_time_s,
+            paper_t,
+            batched.exec_time_s,
+            serial.energy.total() / 1e3
+        );
+    }
+
+    println!("\n{}", figures::headline());
+    println!("sweep_maxreads OK");
+}

@@ -1,0 +1,103 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the Rust
+``xla`` crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (one compiled executable per model variant):
+  linear_wf_b32.hlo.txt   — one crossbar's 32-row linear WF buffer
+  linear_wf_b256.hlo.txt  — bulk batch for the coordinator's batcher
+  affine_wf_b8.hlo.txt    — one crossbar's 8 concurrent affine instances
+  affine_wf_b64.hlo.txt   — bulk batch
+  manifest.json           — shapes/dtypes/params consumed by the Rust
+                            runtime at startup (runtime::artifacts)
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import params
+from .model import affine_align, linear_filter
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, regardless of arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(batch: int, length: int):
+    return jax.ShapeDtypeStruct((batch, length), "int32")
+
+
+def lower_variant(fn, batch: int, read_len: int):
+    read = _spec(batch, read_len)
+    win = _spec(batch, params.window_len(read_len))
+    return jax.jit(fn).lower(read, win)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--read-len", type=int, default=params.READ_LEN)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    n = args.read_len
+    manifest = {
+        "read_len": n,
+        "win_len": params.window_len(n),
+        "band": params.BAND,
+        "eth": params.ETH,
+        "sat_linear": params.SAT_LINEAR,
+        "sat_affine": params.SAT_AFFINE,
+        "artifacts": [],
+    }
+
+    variants = [
+        ("linear_wf", linear_filter, b, ["band", "best", "best_j"])
+        for b in params.LINEAR_BATCHES
+    ] + [
+        ("affine_wf", affine_align, b, ["band", "best", "best_j", "dirs"])
+        for b in params.AFFINE_BATCHES
+    ]
+
+    for kind, fn, batch, outputs in variants:
+        name = f"{kind}_b{batch}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lower_variant(fn, batch, n))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "kind": kind,
+                "batch": batch,
+                "file": f"{name}.hlo.txt",
+                "outputs": outputs,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

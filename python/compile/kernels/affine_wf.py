@@ -1,0 +1,153 @@
+"""L1 Pallas kernel: banded affine-gap Wagner-Fischer with traceback.
+
+Implements the paper's Eqs. (3)-(5) inside the same band as the linear
+filter (half-width eth = 6), with 5-bit value saturation at 31 and packed
+4-bit traceback directions per cell (paper §IV-B / Fig. 6 affine buffer).
+
+The in-row D <-> M2 mutual dependency (M2 opens from the *current* row's
+D, D takes the minimum over the current row's M2) folds into a single
+prefix-min-with-ramp scan:
+
+    newM2[j] = min(cbase[j], newM2[j-1] + w_ex)
+    cbase[j] = w_op + w_ex + (match[j-1] ? oldD[j-1] : A[j-1])
+    A[j]     = min(newM1[j], oldD[j] + w_sub)
+
+because at a mismatch cell ``newD[j-1] = min(A[j-1], newM2[j-1])`` and the
+``newM2[j-1] + w_op + w_ex`` branch is dominated by the chain term
+``newM2[j-1] + w_ex``. Exactness vs the serial recurrence is property-
+tested against ref.affine_wf_band.
+
+Direction encoding (params.py): bits[1:0] = D origin (match/sub/M1/M2,
+tie-break sub < M1 < M2), bit[2] = M1 extend, bit[3] = M2 extend (opens
+preferred on ties).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..params import (
+    BAND,
+    BIG,
+    D_M1,
+    D_M2,
+    D_SUB,
+    SAT_AFFINE,
+    W_EX,
+    W_OP,
+    W_SUB,
+    window_len,
+)
+from .linear_wf import _shift_left, _shift_right, prefix_min_ramp
+
+assert W_EX == 1 and W_OP == 1 and W_SUB == 1, "scan ramp assumes unit costs"
+
+
+def affine_row_update(read_i, g, d, m1, m2):
+    """One affine WF row. Returns (d', m1', m2', dirs_row), all (B, BAND)."""
+    match = g == read_i
+
+    # M1 (vertical: consume a read base, gap in the reference).
+    m1ext = _shift_left(m1, SAT_AFFINE) + W_EX
+    m1opn = _shift_left(d, SAT_AFFINE) + W_OP + W_EX
+    m1new = jnp.minimum(m1ext, m1opn)
+    m1dir = (m1ext < m1opn).astype(jnp.int32)
+
+    # Candidate D value ignoring the current row's M2.
+    a = jnp.minimum(m1new, d + W_SUB)
+
+    # M2 (horizontal) via the folded prefix scan.
+    base = jnp.where(match, d, a) + (W_OP + W_EX)
+    cbase = _shift_right(base, 1, BIG)
+    m2new = prefix_min_ramp(cbase)
+    m2dir = (m2new < cbase).astype(jnp.int32)
+
+    # D with deterministic origin priority: match, then sub < M1 < M2.
+    vsub = d + W_SUB
+    dnew = jnp.where(match, d, jnp.minimum(vsub, jnp.minimum(m1new, m2new)))
+    ddir = jnp.where(
+        match,
+        0,
+        jnp.where(
+            (vsub <= m1new) & (vsub <= m2new),
+            D_SUB,
+            jnp.where(m1new <= m2new, D_M1, D_M2),
+        ),
+    ).astype(jnp.int32)
+
+    dirs_row = ddir | (m1dir << 2) | (m2dir << 3)
+    return (
+        jnp.minimum(dnew, SAT_AFFINE),
+        jnp.minimum(m1new, SAT_AFFINE),
+        jnp.minimum(m2new, SAT_AFFINE),
+        dirs_row,
+    )
+
+
+def _affine_wf_kernel(read_ref, win_ref, band_ref, dirs_ref):
+    """Pallas kernel body: (Bt) affine WF instances with traceback.
+
+    band_ref: (Bt, BAND) final D row; dirs_ref: (Bt, n, BAND) packed dirs.
+    """
+    read = read_ref[...]
+    win = win_ref[...]
+    bt, n = read.shape
+
+    d0 = jnp.broadcast_to(
+        jnp.abs(jnp.arange(BAND, dtype=jnp.int32) - (BAND // 2)), (bt, BAND)
+    )
+    m0 = jnp.full((bt, BAND), SAT_AFFINE, dtype=jnp.int32)
+    dirs0 = jnp.zeros((bt, n, BAND), dtype=jnp.int32)
+
+    def row(i, carry):
+        d, m1, m2, dirs = carry
+        g = jax.lax.dynamic_slice(win, (0, i), (bt, BAND))
+        r = jax.lax.dynamic_slice(read, (0, i), (bt, 1))
+        d, m1, m2, dr = affine_row_update(r, g, d, m1, m2)
+        dirs = jax.lax.dynamic_update_slice(dirs, dr[:, None, :], (0, i, 0))
+        return d, m1, m2, dirs
+
+    d, _, _, dirs = jax.lax.fori_loop(0, n, row, (d0, m0, m0, dirs0))
+    band_ref[...] = d
+    dirs_ref[...] = dirs
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def affine_wf(read: jnp.ndarray, win: jnp.ndarray, block: int | None = None):
+    """Banded affine WF for a batch of (read, window) pairs.
+
+    Args:
+      read: (B, n) int32 base codes.
+      win:  (B, n + 2*eth) int32 base codes.
+      block: batch block size (defaults to min(B, 8), mirroring the 8
+        concurrent affine instances per crossbar).
+
+    Returns:
+      (band, dirs): (B, BAND) int32 final D row saturated at 31, and
+      (B, n, BAND) int32 packed 4-bit traceback directions.
+    """
+    b, n = read.shape
+    assert win.shape == (b, window_len(n)), (read.shape, win.shape)
+    bt = block or min(b, 8)
+    assert b % bt == 0, f"batch {b} not divisible by block {bt}"
+    return pl.pallas_call(
+        _affine_wf_kernel,
+        grid=(b // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((bt, window_len(n)), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, BAND), lambda i: (i, 0)),
+            pl.BlockSpec((bt, n, BAND), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, BAND), jnp.int32),
+            jax.ShapeDtypeStruct((b, n, BAND), jnp.int32),
+        ],
+        interpret=True,  # CPU path; real-TPU lowering emits Mosaic custom-calls
+    )(read.astype(jnp.int32), win.astype(jnp.int32))

@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: banded linear Wagner-Fischer (pre-alignment filter).
+
+TPU mapping of the paper's in-crossbar-row computation (DESIGN.md
+§Hardware-Adaptation):
+
+  * one crossbar row per WF instance      ->  batch dim in sublanes
+  * 13-cell WF distance buffer in the row ->  band dim in lanes
+  * bit-serial MAGIC NOR op chains        ->  int32 VPU min/add/select
+  * the serial left-neighbour chain
+    ``new[j] = min(tmp[j], new[j-1] + 1)``->  prefix-min-with-ramp scan,
+    computed with log2-doubling shifts (4 steps for a 13-lane band)
+
+The scan identity: ``new[j] = min_{k<=j}(tmp[k] + (j-k))`` — exact because
+the ramp is linear in the shift distance (requires W_EX-style unit step;
+asserted below).
+
+Kernels run under ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime compiles natively.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..params import BAND, BIG, SAT_LINEAR, W_SUB, window_len
+
+assert W_SUB == 1, "scan ramp assumes unit edit costs (paper Table III)"
+
+# Log2-doubling shift schedule covering offsets 0..12 (band width 13).
+_SCAN_SHIFTS = (1, 2, 4, 8)
+
+
+def _shift_left(x: jnp.ndarray, fill: int) -> jnp.ndarray:
+    """x[:, j] -> x[:, j+1], padding the last lane with ``fill``."""
+    pad = jnp.full((x.shape[0], 1), fill, dtype=x.dtype)
+    return jnp.concatenate([x[:, 1:], pad], axis=1)
+
+
+def _shift_right(x: jnp.ndarray, s: int, fill: int) -> jnp.ndarray:
+    """x[:, j] -> x[:, j-s], padding the first ``s`` lanes with ``fill``."""
+    pad = jnp.full((x.shape[0], s), fill, dtype=x.dtype)
+    return jnp.concatenate([pad, x[:, : x.shape[1] - s]], axis=1)
+
+
+def prefix_min_ramp(tmp: jnp.ndarray) -> jnp.ndarray:
+    """new[j] = min_{k<=j}(tmp[k] + (j-k)), vectorized over lanes."""
+    out = tmp
+    for s in _SCAN_SHIFTS:
+        out = jnp.minimum(out, _shift_right(out, s, BIG) + s)
+    return out
+
+
+def linear_row_update(read_i: jnp.ndarray, g: jnp.ndarray, wfd: jnp.ndarray) -> jnp.ndarray:
+    """One WF matrix row: (B,1) read chars x (B,BAND) window slice.
+
+    Exactly mirrors ref.linear_wf_band's inner loop (pad = saturation
+    value, end-of-row clamp).
+    """
+    mm = (g != read_i).astype(jnp.int32)
+    diag = wfd + mm
+    top = _shift_left(wfd, SAT_LINEAR) + 1
+    tmp = jnp.minimum(diag, top)
+    new = prefix_min_ramp(tmp)
+    return jnp.minimum(new, SAT_LINEAR)
+
+
+def _linear_wf_kernel(read_ref, win_ref, out_ref):
+    """Pallas kernel body: a block of (Bt) WF instances.
+
+    read_ref: (Bt, n) int32, win_ref: (Bt, n + 2*eth) int32,
+    out_ref: (Bt, BAND) int32 — the final band row.
+    """
+    read = read_ref[...]
+    win = win_ref[...]
+    bt, n = read.shape
+
+    init = jnp.broadcast_to(
+        jnp.abs(jnp.arange(BAND, dtype=jnp.int32) - (BAND // 2)), (bt, BAND)
+    )
+
+    def row(i, wfd):
+        g = jax.lax.dynamic_slice(win, (0, i), (bt, BAND))
+        r = jax.lax.dynamic_slice(read, (0, i), (bt, 1))
+        return linear_row_update(r, g, wfd)
+
+    out_ref[...] = jax.lax.fori_loop(0, n, row, init)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def linear_wf(read: jnp.ndarray, win: jnp.ndarray, block: int | None = None) -> jnp.ndarray:
+    """Banded linear WF distance band for a batch of (read, window) pairs.
+
+    Args:
+      read: (B, n) int32 base codes.
+      win:  (B, n + 2*eth) int32 base codes.
+      block: batch block size for the Pallas grid (defaults to min(B, 32),
+        mirroring the 32-row linear WF buffer of one crossbar).
+
+    Returns:
+      (B, BAND) int32 — final band row, saturated at eth+1.
+    """
+    b, n = read.shape
+    assert win.shape == (b, window_len(n)), (read.shape, win.shape)
+    bt = block or min(b, 32)
+    assert b % bt == 0, f"batch {b} not divisible by block {bt}"
+    return pl.pallas_call(
+        _linear_wf_kernel,
+        grid=(b // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i: (i, 0)),
+            pl.BlockSpec((bt, window_len(n)), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, BAND), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, BAND), jnp.int32),
+        interpret=True,  # CPU path; real-TPU lowering emits Mosaic custom-calls
+    )(read.astype(jnp.int32), win.astype(jnp.int32))

@@ -1,0 +1,274 @@
+"""Pure-numpy serial oracles for the banded Wagner-Fischer kernels.
+
+These implement the EXACT cell-by-cell semantics the Pallas kernels must
+match (same band anchoring, same pad values, same end-of-row saturation,
+same direction tie-breaking). They are deliberately written as naive
+serial loops so that any vectorization bug in the kernels shows up as a
+mismatch rather than being replicated.
+
+Conventions (see params.py and DESIGN.md §3):
+  * read  R[0..n)      — the query string, 2-bit base codes (0..3).
+  * win   G[0..n+2eth) — the reference window; the read is expected to
+    start near window offset eth (the minimizer-anchored diagonal).
+  * band coordinate j in [0, 2*eth]: DP cell (i, c) with c = i + j.
+  * buffer value wfd[j] after row i equals D[i][i+j].
+  * init D[0][j] = |j - eth| (anchored start), M1 = M2 = saturated.
+  * values are saturated at end-of-row (linear: eth+1, affine: 31).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..params import (
+    BAND,
+    BIG,
+    D_M1,
+    D_M2,
+    D_MATCH,
+    D_SUB,
+    ETH,
+    SAT_AFFINE,
+    SAT_LINEAR,
+    W_EX,
+    W_OP,
+    W_SUB,
+    window_len,
+)
+
+
+def _check_shapes(read: np.ndarray, win: np.ndarray) -> int:
+    assert read.ndim == 1 and win.ndim == 1, "oracles are single-instance"
+    n = read.shape[0]
+    assert win.shape[0] == window_len(n), (
+        f"window must be read_len + 2*eth = {window_len(n)}, got {win.shape[0]}"
+    )
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Linear WF (pre-alignment filter)
+# ---------------------------------------------------------------------------
+
+
+def linear_wf_band(read: np.ndarray, win: np.ndarray, clamp: bool = True) -> np.ndarray:
+    """Banded linear WF; returns the final band row (13 int values).
+
+    ``clamp=False`` disables the 3-bit saturation (used by the property
+    test that saturation never changes results that stay <= eth).
+    """
+    n = _check_shapes(read, win)
+    sat = SAT_LINEAR if clamp else BIG
+    wfd = np.array([abs(j - ETH) for j in range(BAND)], dtype=np.int64)
+    for i in range(n):
+        mm = np.array([1 if read[i] != win[i + j] else 0 for j in range(BAND)])
+        raw = np.empty(BAND, dtype=np.int64)
+        left = BIG
+        for j in range(BAND):
+            top = (wfd[j + 1] if j < BAND - 1 else sat) + 1
+            diag = wfd[j] + mm[j] * W_SUB
+            raw[j] = min(diag, top, left + 1)
+            left = raw[j]
+        wfd = np.minimum(raw, sat)
+    return wfd
+
+
+def linear_wf_full(read: np.ndarray, win: np.ndarray) -> np.ndarray:
+    """Structurally independent validator: full (n+1)x(m+1) DP matrix with
+    explicit band masking and identical pad/saturation semantics. Returns
+    the final band row D[n][n..n+2eth] so it is directly comparable with
+    :func:`linear_wf_band`.
+    """
+    n = _check_shapes(read, win)
+    m = win.shape[0]
+    D = np.full((n + 1, m + 1), BIG, dtype=np.int64)
+
+    def in_band(i: int, c: int) -> bool:
+        return i <= c <= i + 2 * ETH
+
+    for c in range(0, 2 * ETH + 1):
+        D[0][c] = abs(c - ETH)
+    for i in range(1, n + 1):
+        for c in range(i, i + 2 * ETH + 1):
+            # Out-of-band neighbours read as the saturation value (the
+            # paper's cells physically hold eth+1 there).
+            diag = D[i - 1][c - 1] if in_band(i - 1, c - 1) else SAT_LINEAR
+            top = D[i - 1][c] if in_band(i - 1, c) else SAT_LINEAR
+            left = D[i][c - 1] if in_band(i, c - 1) else SAT_LINEAR
+            mm = 0 if read[i - 1] == win[c - 1] else W_SUB
+            D[i][c] = min(diag + mm, top + 1, left + 1)
+        # end-of-row saturation, as in the rolling-buffer version
+        for c in range(i, i + 2 * ETH + 1):
+            D[i][c] = min(D[i][c], SAT_LINEAR)
+    return D[n][n : n + BAND].copy()
+
+
+# ---------------------------------------------------------------------------
+# Affine WF (read alignment) with traceback directions
+# ---------------------------------------------------------------------------
+
+
+def affine_wf_band(read: np.ndarray, win: np.ndarray):
+    """Banded affine-gap WF (Eqs. 3-5 of the paper, all costs 1).
+
+    Returns ``(band, dirs)`` where ``band`` is the final D row (13 values,
+    saturated at 31) and ``dirs`` is an (n, 13) int array of packed 4-bit
+    direction codes (see params.py) for traceback.
+    """
+    n = _check_shapes(read, win)
+    sat = SAT_AFFINE
+    d = np.array([abs(j - ETH) for j in range(BAND)], dtype=np.int64)
+    m1 = np.full(BAND, sat, dtype=np.int64)
+    m2 = np.full(BAND, sat, dtype=np.int64)
+    dirs = np.zeros((n, BAND), dtype=np.int64)
+    for i in range(n):
+        match = np.array([read[i] == win[i + j] for j in range(BAND)])
+        m1new = np.empty(BAND, dtype=np.int64)
+        m1dir = np.empty(BAND, dtype=np.int64)
+        for j in range(BAND):
+            ext = (m1[j + 1] if j < BAND - 1 else sat) + W_EX
+            opn = (d[j + 1] if j < BAND - 1 else sat) + W_OP + W_EX
+            m1new[j] = min(ext, opn)
+            m1dir[j] = 1 if ext < opn else 0  # prefer "open" on ties
+        a = np.minimum(m1new, d + W_SUB)
+        m2raw = np.empty(BAND, dtype=np.int64)
+        m2dir = np.empty(BAND, dtype=np.int64)
+        prev = BIG
+        for j in range(BAND):
+            if j == 0:
+                cbase = BIG
+            else:
+                cbase = W_OP + W_EX + (d[j - 1] if match[j - 1] else a[j - 1])
+            m2raw[j] = min(cbase, prev + W_EX)
+            m2dir[j] = 1 if m2raw[j] < cbase else 0  # prefer "open" on ties
+            prev = m2raw[j]
+        dnew = np.empty(BAND, dtype=np.int64)
+        ddir = np.empty(BAND, dtype=np.int64)
+        for j in range(BAND):
+            if match[j]:
+                dnew[j] = d[j]
+                ddir[j] = D_MATCH
+            else:
+                vsub = d[j] + W_SUB
+                dnew[j] = min(vsub, m1new[j], m2raw[j])
+                if vsub <= m1new[j] and vsub <= m2raw[j]:
+                    ddir[j] = D_SUB
+                elif m1new[j] <= m2raw[j]:
+                    ddir[j] = D_M1
+                else:
+                    ddir[j] = D_M2
+        dirs[i] = ddir | (m1dir << 2) | (m2dir << 3)
+        d = np.minimum(dnew, sat)
+        m1 = np.minimum(m1new, sat)
+        m2 = np.minimum(m2raw, sat)
+    return d, dirs
+
+
+def traceback(dirs: np.ndarray, j_start: int):
+    """Reconstruct the edit script from packed directions.
+
+    Starts at DP cell (n, n + j_start) in matrix D and walks back to row 0.
+    Returns ``(ops, j_end)`` where ``ops`` is the edit string from the
+    START of the alignment (characters '=', 'X', 'I', 'D'; 'I' consumes a
+    read base with a gap in the reference, 'D' the converse) and ``j_end``
+    is the band coordinate at row 0 (window start offset = j_end, with a
+    leading anchoring cost of |j_end - eth|).
+
+    Only meaningful for unsaturated results (distance < 31); raises
+    ``ValueError`` if the recorded path escapes the band, which cannot
+    happen for a valid unsaturated path.
+    """
+    n = dirs.shape[0]
+    i, j = n, int(j_start)
+    mat = "D"
+    ops: list[str] = []
+    steps = 0
+    limit = 4 * (n + BAND) + 16
+    while i > 0:
+        steps += 1
+        if steps > limit:
+            raise ValueError("traceback did not terminate (corrupt directions)")
+        if not (0 <= j < BAND):
+            raise ValueError(f"traceback escaped the band at i={i}, j={j}")
+        bits = int(dirs[i - 1][j])
+        if mat == "D":
+            dd = bits & 3
+            if dd == D_MATCH:
+                ops.append("=")
+                i -= 1
+            elif dd == D_SUB:
+                ops.append("X")
+                i -= 1
+            elif dd == D_M1:
+                mat = "M1"
+            else:
+                mat = "M2"
+        elif mat == "M1":
+            ops.append("I")
+            ext = (bits >> 2) & 1
+            i -= 1
+            j += 1
+            if not ext:
+                mat = "D"
+        else:  # M2
+            ops.append("D")
+            ext = (bits >> 3) & 1
+            j -= 1
+            if not ext:
+                mat = "D"
+    if mat != "D":
+        raise ValueError("traceback ended inside a gap matrix (saturated path?)")
+    ops.reverse()
+    return "".join(ops), j
+
+
+def script_cost(ops: str, j_end: int) -> int:
+    """Affine cost of an edit script + the |j_end - eth| anchoring charge.
+
+    Must equal the reported band distance for unsaturated alignments —
+    this is the core traceback-correctness invariant.
+    """
+    cost = abs(j_end - ETH)
+    i = 0
+    while i < len(ops):
+        c = ops[i]
+        if c == "=":
+            i += 1
+        elif c == "X":
+            cost += W_SUB
+            i += 1
+        elif c in ("I", "D"):
+            run = 0
+            while i < len(ops) and ops[i] == c:
+                run += 1
+                i += 1
+            cost += W_OP + run * W_EX
+        else:
+            raise ValueError(f"bad op {c!r}")
+    return cost
+
+
+def apply_script(ops: str, j_end: int, win: np.ndarray, read_len: int) -> np.ndarray:
+    """Apply the edit script to the window to re-derive the read.
+
+    '=' copies a window base, 'X' consumes a window base but emits an
+    (unknown) substituted base, 'I' emits a read base not present in the
+    window, 'D' skips a window base. Returns an int array of length
+    ``read_len`` where substituted/inserted positions are -1. Used by
+    tests to check structural consistency of the alignment.
+    """
+    out: list[int] = []
+    c = int(j_end)  # window cursor at alignment start
+    for op in ops:
+        if op == "=":
+            out.append(int(win[c]))
+            c += 1
+        elif op == "X":
+            out.append(-1)
+            c += 1
+        elif op == "I":
+            out.append(-1)
+        elif op == "D":
+            c += 1
+    assert len(out) == read_len, f"script consumes {len(out)} read bases, want {read_len}"
+    return np.array(out, dtype=np.int64)

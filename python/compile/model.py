@@ -1,0 +1,66 @@
+"""L2: JAX compute graphs composed from the L1 Pallas kernels.
+
+Two graphs, mirroring the two in-crossbar stages of DART-PIM:
+
+  * ``linear_filter``  — pre-alignment filtering. Kernel band + a fused
+    best-of-band epilogue (min distance + its band coordinate), i.e. the
+    paper's step (4) "extract the minimal value from the linear WF buffer
+    rows" runs inside the same lowered module.
+  * ``affine_align``   — read alignment. Kernel band + traceback
+    directions + the same best-of-band epilogue.
+
+Tie-breaking for the argmin is (distance, |j - eth|, j) — encoded into a
+single integer key so the whole selection is one vectorized argmin. This
+matches the Rust-side reference engine bit-for-bit.
+
+Both graphs are pure functions of int32 tensors and are AOT-lowered once
+by aot.py; Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.affine_wf import affine_wf
+from .kernels.linear_wf import linear_wf
+from .params import BAND, ETH
+
+
+def best_of_band(band: jnp.ndarray):
+    """Fused epilogue: (B, BAND) -> (best_dist (B,), best_j (B,)).
+
+    Deterministic tie-break (dist, |j-eth|, j), encoded as
+    key = dist*1024 + |j-eth|*16 + j (dist <= 31, so no field overlap).
+    """
+    j = jnp.arange(BAND, dtype=jnp.int32)
+    key = band * 1024 + jnp.abs(j - ETH) * 16 + j
+    bj = jnp.argmin(key, axis=1).astype(jnp.int32)
+    best = jnp.take_along_axis(band, bj[:, None], axis=1)[:, 0]
+    return best, bj
+
+
+def linear_filter(read: jnp.ndarray, win: jnp.ndarray):
+    """Pre-alignment filter graph.
+
+    Returns (band (B,13), best_dist (B,), best_j (B,)) — all int32.
+
+    Lowered with the full batch as one Pallas block: on the CPU PJRT
+    backend a single wide block beats 32-row grid steps by ~6 %
+    (EXPERIMENTS.md §Perf); the 32-row crossbar geometry lives in the
+    cost model, not the kernel schedule. The affine graph keeps 8-row
+    blocks (wider blocks regressed due to the (B, n, 13) traceback
+    carry).
+    """
+    band = linear_wf(read, win, block=read.shape[0])
+    best, bj = best_of_band(band)
+    return band, best, bj
+
+
+def affine_align(read: jnp.ndarray, win: jnp.ndarray):
+    """Read-alignment graph.
+
+    Returns (band (B,13), best_dist (B,), best_j (B,), dirs (B,n,13)).
+    """
+    band, dirs = affine_wf(read, win)
+    best, bj = best_of_band(band)
+    return band, best, bj, dirs

@@ -1,0 +1,61 @@
+"""Shared DART-PIM algorithm parameters (paper Table III).
+
+These constants define the *numeric semantics* of the banded Wagner-Fischer
+kernels. The PIM bit-width story (3-bit linear cells, 5-bit affine cells)
+lives in the Rust cost model; here the values only matter through the
+saturation thresholds.
+"""
+
+# Read length (bases). Kernels are length-generic; this is the default used
+# for the AOT artifacts (paper: Illumina 150 bp short reads).
+READ_LEN = 150
+
+# Band half-width. The paper computes 2*eth+1 = 13 unsaturated cells around
+# the minimizer-anchored diagonal for BOTH the linear filter and the affine
+# aligner (the affine "eth = 31" is the 5-bit value-saturation threshold,
+# not the band width: 8 crossbar rows of traceback only fit 4b x 13 x 150).
+ETH = 6
+BAND = 2 * ETH + 1  # 13
+
+# Reference window length fed to a banded WF instance: the read may align
+# starting anywhere in the first BAND positions of the window.
+def window_len(read_len: int) -> int:
+    return read_len + 2 * ETH
+
+
+WIN_LEN = window_len(READ_LEN)  # 162
+
+# Saturation values. Linear WF cells are 3-bit (saturate at eth+1 = 7);
+# affine WF cells are 5-bit (saturate at 31). Any saturated value means
+# "too different" and is never a valid mapping distance.
+SAT_LINEAR = ETH + 1  # 7
+SAT_AFFINE = 31
+
+# Edit costs (paper Table III: w_sub = w_ins = w_del = w_op = w_ex = 1).
+W_SUB = 1
+W_INS = 1
+W_DEL = 1
+W_OP = 1
+W_EX = 1
+
+# "Infinity" for the in-row prefix-min scans; large enough to never win a
+# min against any reachable value, small enough to never overflow int32
+# after the +ramp additions.
+BIG = 1 << 20
+
+# Direction encoding for the affine traceback (4 bits per banded cell):
+#   bits [1:0] D-origin:  0 = diagonal match, 1 = substitution,
+#                         2 = came from M1 (gap in reference / insertion),
+#                         3 = came from M2 (gap in read / deletion)
+#   bit  [2]   M1-origin: 1 = extend, 0 = open
+#   bit  [3]   M2-origin: 1 = extend, 0 = open
+D_MATCH = 0
+D_SUB = 1
+D_M1 = 2
+D_M2 = 3
+
+# AOT artifact batch sizes. b32 mirrors one crossbar's 32-row linear WF
+# buffer; b8 mirrors the 8 concurrent affine instances per crossbar. The
+# larger variants are bulk-mode batches for the coordinator's batcher.
+LINEAR_BATCHES = (32, 256)
+AFFINE_BATCHES = (8, 64)

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Make the `compile` package importable regardless of pytest rootdir.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,158 @@
+"""Pallas linear WF kernel vs the serial numpy oracle.
+
+Hypothesis sweeps shapes, random strings, and planted near-matches; the
+kernel must agree with ref.linear_wf_band cell-for-cell, and the rolling
+oracle must agree with the structurally independent full-matrix DP.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.linear_wf import linear_wf, prefix_min_ramp
+from compile.params import BAND, BIG, ETH, SAT_LINEAR, window_len
+
+# Small palette of shapes so jit caches stay warm across hypothesis runs.
+NS = (8, 16, 24, 40)
+BS = (1, 2, 4)
+
+
+def rand_pair(rng, n):
+    read = rng.integers(0, 4, n).astype(np.int32)
+    win = rng.integers(0, 4, window_len(n)).astype(np.int32)
+    return read, win
+
+
+def planted_pair(rng, n, n_sub, n_del, n_ins, shift=None):
+    """Window containing the read at offset ``shift`` with planted edits."""
+    shift = int(rng.integers(0, 2 * ETH + 1)) if shift is None else shift
+    read = rng.integers(0, 4, n).astype(np.int32)
+    seq = list(read)
+    for _ in range(n_del):  # delete read bases from the window copy
+        del seq[int(rng.integers(0, len(seq)))]
+    for _ in range(n_ins):  # insert extra bases into the window copy
+        seq.insert(int(rng.integers(0, len(seq) + 1)), int(rng.integers(0, 4)))
+    for _ in range(n_sub):
+        p = int(rng.integers(0, len(seq)))
+        seq[p] = (seq[p] + 1 + int(rng.integers(0, 3))) % 4
+    m = window_len(n)
+    win = rng.integers(0, 4, m).astype(np.int32)
+    take = min(len(seq), m - shift)
+    win[shift : shift + take] = seq[:take]
+    return read, win
+
+
+def batch(pairs):
+    reads = np.stack([p[0] for p in pairs])
+    wins = np.stack([p[1] for p in pairs])
+    return jnp.asarray(reads), jnp.asarray(wins)
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    n=st.sampled_from(NS),
+    b=st.sampled_from(BS),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_kernel_matches_oracle_random(n, b, seed):
+    rng = np.random.default_rng(seed)
+    pairs = [rand_pair(rng, n) for _ in range(b)]
+    reads, wins = batch(pairs)
+    out = np.asarray(linear_wf(reads, wins, block=b))
+    for i, (read, win) in enumerate(pairs):
+        expect = ref.linear_wf_band(read, win)
+        np.testing.assert_array_equal(out[i], expect)
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    n=st.sampled_from(NS),
+    n_sub=st.integers(0, 4),
+    n_del=st.integers(0, 2),
+    n_ins=st.integers(0, 2),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_kernel_matches_oracle_planted(n, n_sub, n_del, n_ins, seed):
+    rng = np.random.default_rng(seed)
+    read, win = planted_pair(rng, n, n_sub, n_del, n_ins)
+    out = np.asarray(linear_wf(*batch([(read, win)]), block=1))[0]
+    np.testing.assert_array_equal(out, ref.linear_wf_band(read, win))
+    # A planted placement with e total edits and shift s costs at most
+    # e + |s - eth| + boundary effects; with few edits it must pass eth.
+    if n_sub + n_del + n_ins <= 2:
+        assert out.min() <= n_sub + 2 * (n_del + n_ins) + 2 * ETH
+
+
+@settings(deadline=None, max_examples=25)
+@given(n=st.sampled_from((8, 16, 24)), seed=st.integers(0, 2**32 - 1))
+def test_rolling_oracle_matches_full_matrix(n, seed):
+    rng = np.random.default_rng(seed)
+    for maker in (lambda: rand_pair(rng, n), lambda: planted_pair(rng, n, 1, 1, 0)):
+        read, win = maker()
+        np.testing.assert_array_equal(
+            ref.linear_wf_band(read, win), ref.linear_wf_full(read, win)
+        )
+
+
+@settings(deadline=None, max_examples=30)
+@given(n=st.sampled_from(NS), seed=st.integers(0, 2**32 - 1))
+def test_saturation_is_lossless_below_threshold(n, seed):
+    """3-bit clamping never changes any band cell that ends below eth+1
+    (DP values are non-decreasing along any path)."""
+    rng = np.random.default_rng(seed)
+    read, win = planted_pair(rng, n, int(rng.integers(0, 3)), 0, 0)
+    clamped = ref.linear_wf_band(read, win, clamp=True)
+    free = ref.linear_wf_band(read, win, clamp=False)
+    for j in range(BAND):
+        if free[j] <= ETH:
+            assert clamped[j] == free[j]
+        else:
+            assert clamped[j] == SAT_LINEAR
+
+
+def test_prefix_min_ramp_exact():
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, 40, (5, BAND)).astype(np.int32)
+    got = np.asarray(prefix_min_ramp(jnp.asarray(x)))
+    want = np.empty_like(x)
+    for b in range(x.shape[0]):
+        for j in range(BAND):
+            want[b, j] = min(x[b, k] + (j - k) for k in range(j + 1))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_exact_match_is_zero():
+    rng = np.random.default_rng(3)
+    read, win = planted_pair(rng, 40, 0, 0, 0, shift=ETH)
+    out = np.asarray(linear_wf(*batch([(read, win)]), block=1))[0]
+    assert out[ETH] == 0
+    assert out.min() == 0
+
+
+def test_shifted_match_costs_shift():
+    rng = np.random.default_rng(4)
+    for shift in range(2 * ETH + 1):
+        read, win = planted_pair(rng, 40, 0, 0, 0, shift=shift)
+        out = np.asarray(linear_wf(*batch([(read, win)]), block=1))[0]
+        # anchoring charges |shift - eth|; an exact placement at offset
+        # `shift` ends on band diagonal j = shift.
+        assert out[shift] <= abs(shift - ETH)
+
+
+def test_batch_blocks_are_independent():
+    """Grid/blocking must not mix instances: permuting the batch permutes
+    the outputs."""
+    rng = np.random.default_rng(5)
+    pairs = [rand_pair(rng, 24) for _ in range(4)]
+    reads, wins = batch(pairs)
+    out = np.asarray(linear_wf(reads, wins, block=2))
+    perm = np.array([2, 0, 3, 1])
+    out_p = np.asarray(linear_wf(reads[perm], wins[perm], block=2))
+    np.testing.assert_array_equal(out[perm], out_p)
+
+
+def test_rejects_bad_window_length():
+    with pytest.raises(AssertionError):
+        linear_wf(jnp.zeros((1, 20), jnp.int32), jnp.zeros((1, 20), jnp.int32))

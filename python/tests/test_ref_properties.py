@@ -1,0 +1,132 @@
+"""Properties of the serial oracles themselves (independent of the
+kernels): DP laws that must hold for any correct Wagner-Fischer
+implementation. These guard the oracle — if the oracle drifts, the
+kernel parity tests would silently chase it.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.params import BAND, ETH, SAT_AFFINE, SAT_LINEAR, window_len
+
+NS = (8, 16, 24)
+
+
+def rand_pair(rng, n):
+    return (
+        rng.integers(0, 4, n).astype(np.int32),
+        rng.integers(0, 4, window_len(n)).astype(np.int32),
+    )
+
+
+@settings(deadline=None, max_examples=40)
+@given(n=st.sampled_from(NS), seed=st.integers(0, 2**32 - 1))
+def test_band_values_in_range(n, seed):
+    rng = np.random.default_rng(seed)
+    read, win = rand_pair(rng, n)
+    lin = ref.linear_wf_band(read, win)
+    assert lin.min() >= 0 and lin.max() <= SAT_LINEAR
+    aff, dirs = ref.affine_wf_band(read, win)
+    assert aff.min() >= 0 and aff.max() <= SAT_AFFINE
+    assert dirs.min() >= 0 and dirs.max() < 16
+
+
+@settings(deadline=None, max_examples=40)
+@given(n=st.sampled_from(NS), seed=st.integers(0, 2**32 - 1))
+def test_extra_errors_never_decrease_distance(n, seed):
+    """Monotonicity: corrupting one more window base inside the band
+    cannot decrease the banded distance by more than ... it can decrease
+    locally (a corruption may create a chance match elsewhere), but
+    corrupting a base the read currently matches on the center diagonal
+    increases or preserves the center-cell distance."""
+    rng = np.random.default_rng(seed)
+    read = rng.integers(0, 4, n).astype(np.int32)
+    win = rng.integers(0, 4, window_len(n)).astype(np.int32)
+    win[ETH : ETH + n] = read  # exact plant
+    base = ref.linear_wf_band(read, win)
+    assert base[ETH] == 0
+    p = int(rng.integers(0, n))
+    win2 = win.copy()
+    win2[ETH + p] = (win2[ETH + p] + 1) % 4
+    after = ref.linear_wf_band(read, win2)
+    assert after[ETH] >= base[ETH]
+    assert after[ETH] <= 2  # one corruption costs at most a sub (or gap pair)
+
+
+@settings(deadline=None, max_examples=40)
+@given(n=st.sampled_from(NS), seed=st.integers(0, 2**32 - 1))
+def test_identical_strings_have_zero_center(n, seed):
+    rng = np.random.default_rng(seed)
+    read = rng.integers(0, 4, n).astype(np.int32)
+    win = rng.integers(0, 4, window_len(n)).astype(np.int32)
+    win[ETH : ETH + n] = read
+    assert ref.linear_wf_band(read, win)[ETH] == 0
+    band, _ = ref.affine_wf_band(read, win)
+    assert band[ETH] == 0
+
+
+@settings(deadline=None, max_examples=30)
+@given(n=st.sampled_from(NS), seed=st.integers(0, 2**32 - 1))
+def test_band_init_shape_preserved_for_empty_progress(n, seed):
+    """Row 0 of the DP is |j - eth|; a fully-mismatching first character
+    can only grow values (non-decreasing along rows)."""
+    rng = np.random.default_rng(seed)
+    read, win = rand_pair(rng, n)
+    lin = ref.linear_wf_band(read, win, clamp=False)
+    # all values within [0, n + eth] sanity envelope
+    assert lin.min() >= 0
+    assert lin.max() <= n + 2 * ETH + 1
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    n=st.sampled_from(NS),
+    shift=st.integers(0, 2 * ETH),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_anchor_charge_is_exact_for_clean_shifts(n, shift, seed):
+    """A clean placement at window offset s scores exactly |s - eth| on
+    band diagonal s (the anchoring charge, nothing else)."""
+    rng = np.random.default_rng(seed)
+    read = rng.integers(0, 4, n).astype(np.int32)
+    win = rng.integers(0, 4, window_len(n)).astype(np.int32)
+    win[shift : shift + n] = read
+    lin = ref.linear_wf_band(read, win)
+    expect = min(abs(shift - ETH), SAT_LINEAR)
+    assert lin[shift] <= expect
+    aff, dirs = ref.affine_wf_band(read, win)
+    assert aff[shift] <= min(abs(shift - ETH), SAT_AFFINE)
+    # traceback from that diagonal reproduces the shift as j_end
+    if aff[shift] < SAT_AFFINE and aff[shift] == abs(shift - ETH):
+        ops, j_end = ref.traceback(dirs, shift)
+        if ops == "=" * n:
+            assert j_end == shift
+
+
+@settings(deadline=None, max_examples=30)
+@given(n=st.sampled_from(NS), seed=st.integers(0, 2**32 - 1))
+def test_full_matrix_validator_agrees_with_rolling_on_affine_inputs(n, seed):
+    """The independent full-matrix DP agrees with the rolling-buffer
+    oracle on arbitrary inputs (not just planted ones)."""
+    rng = np.random.default_rng(seed)
+    read, win = rand_pair(rng, n)
+    np.testing.assert_array_equal(
+        ref.linear_wf_band(read, win), ref.linear_wf_full(read, win)
+    )
+
+
+def test_apply_script_rejects_wrong_length():
+    import pytest
+
+    with pytest.raises(AssertionError):
+        ref.apply_script("==", 6, np.zeros(30, dtype=np.int64), 5)
+
+
+def test_traceback_rejects_corrupt_dirs():
+    import pytest
+
+    n = 10
+    dirs = np.full((n, BAND), 0b0100 | 2, dtype=np.int64)  # M1 extend forever
+    with pytest.raises(ValueError):
+        ref.traceback(dirs, ETH)

@@ -1,0 +1,49 @@
+//! Bench: regenerates paper Fig. 10 — (a) execution-time breakdown,
+//! (b) energy breakdown, (c) area breakdown — plus the Batched8 affine
+//! ablation and the constructive-vs-paper cost-source ablation called
+//! out in DESIGN.md.
+//!
+//!     cargo bench --bench fig10_breakdown
+
+use dart_pim::eval::figures;
+use dart_pim::pim::xbar_sim::CostSource;
+use dart_pim::pim::DartPimConfig;
+use dart_pim::simulator::report::{build_report, paper_workload_counts};
+use dart_pim::simulator::TimingMode;
+
+fn main() {
+    println!("{}", figures::fig10a());
+    println!("{}", figures::fig10b());
+    println!("{}", figures::fig10c());
+
+    // Ablation 1: affine lock-step accounting (PaperSerial vs Batched8)
+    println!("ablation — affine iteration accounting (maxReads=25k):");
+    let cfg = DartPimConfig::with_max_reads(25_000);
+    let counts = paper_workload_counts(&cfg);
+    for (name, timing) in
+        [("PaperSerial", TimingMode::PaperSerial), ("Batched8", TimingMode::Batched8)]
+    {
+        let r = build_report(&counts, &cfg, CostSource::PaperTable4, timing);
+        println!(
+            "  {:<12} T={:>7.1}s  throughput={:>6.2} Mreads/s",
+            name,
+            r.exec_time_s,
+            r.throughput() / 1e6
+        );
+    }
+
+    // Ablation 2: cost source (published Table IV vs constructive op
+    // sequences)
+    println!("ablation — instance cost source (maxReads=25k):");
+    for (name, cost) in
+        [("PaperTable4", CostSource::PaperTable4), ("Constructive", CostSource::Constructive)]
+    {
+        let r = build_report(&counts, &cfg, cost, TimingMode::PaperSerial);
+        println!(
+            "  {:<12} T={:>7.1}s  E={:>7.1} kJ",
+            name,
+            r.exec_time_s,
+            r.energy.total() / 1e3
+        );
+    }
+}

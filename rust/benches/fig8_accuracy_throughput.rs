@@ -1,0 +1,44 @@
+//! Bench: regenerates paper Fig. 8 (throughput vs accuracy scatter) and
+//! measures our pipeline's accuracy on a live synthetic workload for the
+//! DART-PIM points.
+//!
+//!     cargo bench --bench fig8_accuracy_throughput
+
+use dart_pim::coordinator::{Pipeline, PipelineConfig};
+use dart_pim::eval::accuracy::evaluate_accuracy;
+use dart_pim::eval::figures;
+use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+use dart_pim::index::MinimizerIndex;
+use dart_pim::params::{K, READ_LEN, W};
+use dart_pim::pim::DartPimConfig;
+use dart_pim::runtime::RustEngine;
+
+fn main() {
+    println!("{}", figures::fig8());
+
+    // live accuracy points across the maxReads sweep (the paper's
+    // accuracy knob): mapping accuracy is measured, throughput is the
+    // Eq. 6 model on the measured workload
+    let genome = SynthConfig { len: 500_000, ..Default::default() }.generate();
+    let index = MinimizerIndex::build(genome, K, W, READ_LEN);
+    let reads = ReadSimConfig { n_reads: 1500, ..Default::default() }
+        .simulate(&index.reference, |p| p as u32);
+
+    println!("live synthetic accuracy (n={}):", reads.len());
+    for max_reads in [12_500usize, 25_000, 50_000] {
+        let cfg = PipelineConfig {
+            dart: DartPimConfig { max_reads, low_th: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut p = Pipeline::new(&index, cfg, RustEngine);
+        let (mappings, metrics) = p.map_reads(&reads).unwrap();
+        let rep = evaluate_accuracy(&index, &reads, &mappings, 5);
+        println!(
+            "  maxReads={:<7} accuracy vs truth {:.4}  vs oracle {:.4}  dropped pairs {}",
+            max_reads,
+            rep.accuracy_vs_truth(),
+            rep.accuracy_vs_oracle(),
+            metrics.dropped_pairs
+        );
+    }
+}

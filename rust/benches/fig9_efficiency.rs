@@ -1,0 +1,44 @@
+//! Bench: regenerates paper Fig. 9 — throughput / energy efficiency /
+//! area efficiency for DART-PIM (model) against the five published
+//! comparators, plus a measured-workload variant.
+//!
+//!     cargo bench --bench fig9_efficiency
+
+use dart_pim::eval::figures;
+use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+use dart_pim::index::MinimizerIndex;
+use dart_pim::params::{K, READ_LEN, W};
+use dart_pim::pim::xbar_sim::CostSource;
+use dart_pim::pim::DartPimConfig;
+use dart_pim::simulator::report::{build_report, scale_counts};
+use dart_pim::simulator::{FullSystemSim, TimingMode};
+
+fn main() {
+    // paper-workload model rows + published numbers
+    println!("{}", figures::fig9());
+
+    // measured synthetic workload, projected to 389M reads
+    let genome = SynthConfig { len: 1_000_000, ..Default::default() }.generate();
+    let index = MinimizerIndex::build(genome, K, W, READ_LEN);
+    let reads = ReadSimConfig { n_reads: 4000, ..Default::default() }
+        .simulate(&index.reference, |p| p as u32);
+    println!("measured synthetic workload projected to 389M reads:");
+    println!(
+        "{:<12} {:>14} {:>14} {:>18}",
+        "maxReads", "reads/s", "reads/J", "reads/(s*mm^2)"
+    );
+    for max_reads in [12_500usize, 25_000, 50_000] {
+        let cfg = DartPimConfig { max_reads, low_th: 0, ..Default::default() };
+        let counts = FullSystemSim::new(&index, cfg.clone()).simulate(&reads);
+        let scaled = scale_counts(&counts, 389_000_000, &cfg);
+        let r = build_report(&scaled, &cfg, CostSource::PaperTable4, TimingMode::PaperSerial);
+        println!(
+            "{:<12} {:>14.0} {:>14.1} {:>18.1}",
+            max_reads,
+            r.throughput(),
+            r.energy_efficiency(),
+            r.area_efficiency()
+        );
+    }
+    println!("\n{}", figures::headline());
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerates paper Table IV (single-crossbar WF instance costs)
+//! and times the host-side mirror of the same computation (the Rust
+//! banded WF), giving the host-vs-PIM comparison the paper's §IV
+//! latency-reduction claims are framed against.
+//!
+//!     cargo bench --bench table4_crossbar
+
+use dart_pim::align::banded_affine::affine_wf_band;
+use dart_pim::align::banded_linear::linear_wf_band;
+use dart_pim::eval::figures;
+use dart_pim::params::{window_len, READ_LEN};
+use dart_pim::pim::xbar_sim::{affine_instance_cost, linear_instance_cost, CostSource};
+use dart_pim::util::bench::bench_units;
+use dart_pim::util::SmallRng;
+
+fn main() {
+    println!("{}", figures::table4());
+
+    // PIM-time per instance at the 2 ns cycle (paper §VII-B)
+    let lin = linear_instance_cost(CostSource::PaperTable4);
+    let aff = affine_instance_cost(CostSource::PaperTable4);
+    println!(
+        "PIM instance latency @2ns: linear {:.3} ms, affine {:.3} ms (x32 / x8 instances in parallel per crossbar)\n",
+        lin.total_cycles() as f64 * 2e-9 * 1e3,
+        aff.total_cycles() as f64 * 2e-9 * 1e3
+    );
+
+    // Host mirror timings (for EXPERIMENTS.md §Perf)
+    let mut rng = SmallRng::seed_from_u64(4);
+    let read: Vec<u8> = (0..READ_LEN).map(|_| rng.gen_range(0..4)).collect();
+    let mut win: Vec<u8> = (0..window_len(READ_LEN)).map(|_| rng.gen_range(0..4)).collect();
+    win[6..6 + READ_LEN].copy_from_slice(&read);
+
+    let s = bench_units("host linear_wf_band (1 instance)", 50, 2000, 1.0, &mut || {
+        std::hint::black_box(linear_wf_band(&read, &win));
+    });
+    println!("{s}");
+    let s = bench_units("host affine_wf_band (1 instance)", 20, 500, 1.0, &mut || {
+        std::hint::black_box(affine_wf_band(&read, &win));
+    });
+    println!("{s}");
+}

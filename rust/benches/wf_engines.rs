@@ -1,0 +1,84 @@
+//! Bench: the host hot path — batched WF engine throughput (XLA/PJRT vs
+//! pure Rust) across batch sizes, plus the end-to-end pipeline rate.
+//! This is the §Perf working bench (EXPERIMENTS.md).
+//!
+//!     cargo bench --bench wf_engines
+
+use dart_pim::coordinator::{Pipeline, PipelineConfig};
+use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+use dart_pim::index::MinimizerIndex;
+use dart_pim::params::{window_len, K, READ_LEN, W};
+use dart_pim::pim::DartPimConfig;
+use dart_pim::runtime::{RustEngine, WfEngine, XlaEngine};
+use dart_pim::util::bench::bench_units;
+use dart_pim::util::SmallRng;
+
+fn mk_batch(rng: &mut SmallRng, b: usize) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let reads: Vec<Vec<u8>> =
+        (0..b).map(|_| (0..READ_LEN).map(|_| rng.gen_range(0..4)).collect()).collect();
+    let wins: Vec<Vec<u8>> = reads
+        .iter()
+        .map(|r| {
+            let mut w: Vec<u8> =
+                (0..window_len(READ_LEN)).map(|_| rng.gen_range(0..4)).collect();
+            w[6..6 + READ_LEN].copy_from_slice(r);
+            w
+        })
+        .collect();
+    (reads, wins)
+}
+
+fn engine_suite(name: &str, engine: &mut dyn WfEngine, rng: &mut SmallRng) {
+    for b in [32usize, 256] {
+        let (reads, wins) = mk_batch(rng, b);
+        let rr: Vec<&[u8]> = reads.iter().map(|v| v.as_slice()).collect();
+        let ww: Vec<&[u8]> = wins.iter().map(|v| v.as_slice()).collect();
+        let iters = if b >= 256 { 20 } else { 60 };
+        let s = bench_units(&format!("{name} linear b={b}"), 3, iters, b as f64, &mut || {
+            std::hint::black_box(engine.linear_batch(&rr, &ww).unwrap());
+        });
+        println!("{s}");
+    }
+    for b in [8usize, 64] {
+        let (reads, wins) = mk_batch(rng, b);
+        let rr: Vec<&[u8]> = reads.iter().map(|v| v.as_slice()).collect();
+        let ww: Vec<&[u8]> = wins.iter().map(|v| v.as_slice()).collect();
+        let s = bench_units(&format!("{name} affine b={b}"), 2, 20, b as f64, &mut || {
+            std::hint::black_box(engine.affine_batch(&rr, &ww).unwrap());
+        });
+        println!("{s}");
+    }
+}
+
+fn main() {
+    let mut rng = SmallRng::seed_from_u64(9);
+    println!("== WF engine micro-bench (units = WF instances) ==");
+    engine_suite("rust", &mut RustEngine, &mut rng);
+    match XlaEngine::load_default() {
+        Ok(mut e) => engine_suite("xla ", &mut e, &mut rng),
+        Err(e) => println!("xla engine unavailable ({e}); run `make artifacts`"),
+    }
+
+    println!("\n== end-to-end pipeline (host reads/s) ==");
+    let genome = SynthConfig { len: 500_000, ..Default::default() }.generate();
+    let index = MinimizerIndex::build(genome, K, W, READ_LEN);
+    let reads = ReadSimConfig { n_reads: 2000, ..Default::default() }
+        .simulate(&index.reference, |p| p as u32);
+    let cfg = PipelineConfig {
+        dart: DartPimConfig { low_th: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let s = bench_units("pipeline rust 2k reads", 1, 3, reads.len() as f64, &mut || {
+        let mut p = Pipeline::new(&index, cfg.clone(), RustEngine);
+        std::hint::black_box(p.map_reads(&reads).unwrap());
+    });
+    println!("{s}");
+    if let Ok(engine) = XlaEngine::load_default() {
+        // PJRT client is constructed once; pipeline borrows it per run
+        let mut p = Pipeline::new(&index, cfg.clone(), engine);
+        let s = bench_units("pipeline xla 2k reads", 1, 3, reads.len() as f64, &mut || {
+            std::hint::black_box(p.map_reads(&reads).unwrap());
+        });
+        println!("{s}");
+    }
+}

@@ -1,0 +1,191 @@
+//! Banded affine-gap Wagner-Fischer with traceback directions, mirroring
+//! `python/compile/kernels/affine_wf.py` / `ref.affine_wf_band` exactly
+//! (paper Eqs. 3-5; all costs 1; 5-bit saturation at 31).
+//!
+//! Direction encoding per cell (4 bits, see python params.py):
+//! bits[1:0] D-origin (0 match / 1 sub / 2 from-M1 / 3 from-M2),
+//! bit[2] M1 extend, bit[3] M2 extend. Ties prefer open / sub < M1 < M2.
+
+use crate::params::{BAND, BIG, SAT_AFFINE, W_EX, W_OP, W_SUB, window_len};
+
+use super::banded_linear::init_band;
+
+/// D-origin codes.
+pub const D_MATCH: u8 = 0;
+pub const D_SUB: u8 = 1;
+pub const D_M1: u8 = 2;
+pub const D_M2: u8 = 3;
+
+/// Result of one banded affine WF instance.
+#[derive(Debug, Clone)]
+pub struct AffineResult {
+    /// Final D band row, saturated at 31.
+    pub band: [i32; BAND],
+    /// Packed 4-bit directions, row-major `(read_len, BAND)`.
+    pub dirs: Vec<u8>,
+}
+
+/// Compute banded affine WF for one (read, window) pair.
+pub fn affine_wf_band(read: &[u8], win: &[u8]) -> AffineResult {
+    assert_eq!(win.len(), window_len(read.len()), "bad window length");
+    let n = read.len();
+    let sat = SAT_AFFINE;
+    let mut d = init_band();
+    let mut m1 = [sat; BAND];
+    let mut m2 = [sat; BAND];
+    let mut dirs = vec![0u8; n * BAND];
+
+    let mut m1new = [0i32; BAND];
+    let mut m1dir = [0u8; BAND];
+    let mut m2raw = [0i32; BAND];
+    let mut m2dir = [0u8; BAND];
+    let mut a = [0i32; BAND];
+    let mut matches = [false; BAND];
+
+    for (i, &r) in read.iter().enumerate() {
+        // fixed-length view elides bounds checks in the row loops (§Perf)
+        let g: &[u8; BAND] = win[i..i + BAND].try_into().expect("window geometry");
+        for j in 0..BAND {
+            matches[j] = r == g[j] && r < 4;
+        }
+        // M1 (vertical: consume read base, gap in reference)
+        for j in 0..BAND {
+            let up_m1 = if j < BAND - 1 { m1[j + 1] } else { sat };
+            let up_d = if j < BAND - 1 { d[j + 1] } else { sat };
+            let ext = up_m1 + W_EX;
+            let opn = up_d + W_OP + W_EX;
+            m1new[j] = ext.min(opn);
+            m1dir[j] = u8::from(ext < opn); // prefer open on ties
+            a[j] = m1new[j].min(d[j] + W_SUB);
+        }
+        // M2 (horizontal) via the folded serial chain
+        let mut prev = BIG;
+        for j in 0..BAND {
+            let cbase = if j == 0 {
+                BIG
+            } else {
+                W_OP + W_EX + if matches[j - 1] { d[j - 1] } else { a[j - 1] }
+            };
+            m2raw[j] = cbase.min(prev + W_EX);
+            m2dir[j] = u8::from(m2raw[j] < cbase); // prefer open on ties
+            prev = m2raw[j];
+        }
+        // D with deterministic origin priority: match, then sub<M1<M2.
+        for j in 0..BAND {
+            let (dn, dd) = if matches[j] {
+                (d[j], D_MATCH)
+            } else {
+                let vsub = d[j] + W_SUB;
+                let dn = vsub.min(m1new[j]).min(m2raw[j]);
+                let dd = if vsub <= m1new[j] && vsub <= m2raw[j] {
+                    D_SUB
+                } else if m1new[j] <= m2raw[j] {
+                    D_M1
+                } else {
+                    D_M2
+                };
+                (dn, dd)
+            };
+            dirs[i * BAND + j] = dd | (m1dir[j] << 2) | (m2dir[j] << 3);
+            d[j] = dn.min(sat);
+        }
+        for j in 0..BAND {
+            m1[j] = m1new[j].min(sat);
+            m2[j] = m2raw[j].min(sat);
+        }
+    }
+    AffineResult { band: d, dirs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::banded_linear::{best_of_band, linear_wf_band};
+    use crate::params::ETH;
+    
+    use crate::util::SmallRng;
+
+    fn planted_with_gap(
+        rng: &mut SmallRng,
+        n: usize,
+        gap_len: usize,
+        gap_is_del: bool,
+    ) -> (Vec<u8>, Vec<u8>) {
+        let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
+        let mut seq: Vec<u8> = read.clone();
+        let p = n / 2;
+        if gap_is_del {
+            // window lacks `gap_len` read bases => read insertion
+            seq.drain(p..p + gap_len);
+        } else {
+            for _ in 0..gap_len {
+                seq.insert(p, rng.gen_range(0..4));
+            }
+        }
+        let m = window_len(n);
+        let mut win: Vec<u8> = (0..m).map(|_| rng.gen_range(0..4)).collect();
+        let take = seq.len().min(m - ETH);
+        win[ETH..ETH + take].copy_from_slice(&seq[..take]);
+        (read, win)
+    }
+
+    #[test]
+    fn exact_match_is_zero() {
+        let mut rng = SmallRng::seed_from_u64(10);
+        let read: Vec<u8> = (0..60).map(|_| rng.gen_range(0..4)).collect();
+        let mut win: Vec<u8> = (0..window_len(60)).map(|_| rng.gen_range(0..4)).collect();
+        win[ETH..ETH + 60].copy_from_slice(&read);
+        let res = affine_wf_band(&read, &win);
+        assert_eq!(res.band[ETH], 0);
+        // all direction codes on the diagonal are matches
+        for i in 0..60 {
+            assert_eq!(res.dirs[i * BAND + ETH] & 3, D_MATCH);
+        }
+    }
+
+    #[test]
+    fn gap_costs_open_plus_extend() {
+        let mut rng = SmallRng::seed_from_u64(11);
+        for gap in 1..=4usize {
+            for del in [true, false] {
+                let (read, win) = planted_with_gap(&mut rng, 60, gap, del);
+                let res = affine_wf_band(&read, &win);
+                let (best, _) = best_of_band(&res.band);
+                assert!(
+                    best <= (W_OP + gap as i32 * W_EX),
+                    "gap={gap} del={del} best={best}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn affine_never_beats_linear_minus_opens() {
+        // affine distance >= linear distance (affine charges extra opens)
+        let mut rng = SmallRng::seed_from_u64(12);
+        for _ in 0..20 {
+            let (read, win) = planted_with_gap(&mut rng, 40, 2, true);
+            let lin = best_of_band(&linear_wf_band(&read, &win)).0;
+            let aff = best_of_band(&affine_wf_band(&read, &win).band).0;
+            assert!(aff >= lin.min(SAT_AFFINE), "aff={aff} lin={lin}");
+        }
+    }
+
+    #[test]
+    fn random_pairs_saturate() {
+        let mut rng = SmallRng::seed_from_u64(13);
+        let read: Vec<u8> = (0..150).map(|_| rng.gen_range(0..4)).collect();
+        let win: Vec<u8> = (0..window_len(150)).map(|_| rng.gen_range(0..4)).collect();
+        let res = affine_wf_band(&read, &win);
+        assert!(res.band.iter().all(|&d| d >= SAT_AFFINE - 4), "band={:?}", res.band);
+    }
+
+    #[test]
+    fn dirs_fit_four_bits() {
+        let mut rng = SmallRng::seed_from_u64(14);
+        let (read, win) = planted_with_gap(&mut rng, 50, 2, false);
+        let res = affine_wf_band(&read, &win);
+        assert!(res.dirs.iter().all(|&b| b < 16));
+        assert_eq!(res.dirs.len(), 50 * BAND);
+    }
+}

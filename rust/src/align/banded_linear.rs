@@ -1,0 +1,161 @@
+//! Banded linear Wagner-Fischer (the pre-alignment filter), mirroring
+//! `python/compile/kernels/linear_wf.py` / `ref.linear_wf_band` exactly.
+//!
+//! Band coordinate `j in [0, 2*eth]` maps DP cell `(i, c)` with
+//! `c = i + j`; the window has length `read_len + 2*eth`; the read is
+//! anchored at window offset `eth` (init `|j - eth|`); values saturate at
+//! `eth + 1` at end-of-row.
+
+use crate::params::{BAND, BIG, ETH, SAT_LINEAR, window_len};
+
+/// Compute the final band row for one (read, window) pair.
+///
+/// Panics if `win.len() != read.len() + 2*eth`.
+pub fn linear_wf_band(read: &[u8], win: &[u8]) -> [i32; BAND] {
+    assert_eq!(win.len(), window_len(read.len()), "bad window length");
+    let mut wfd = init_band();
+    let mut raw = [0i32; BAND];
+    for (i, &r) in read.iter().enumerate() {
+        // fixed-length view lets the compiler elide bounds checks (§Perf)
+        let g: &[u8; BAND] = win[i..i + BAND].try_into().expect("window geometry");
+        let mut left = BIG;
+        let mut all_sat = true;
+        for j in 0..BAND {
+            let mm = i32::from(r != g[j] || r >= 4);
+            let top = if j < BAND - 1 { wfd[j + 1] } else { SAT_LINEAR } + 1;
+            let diag = wfd[j] + mm;
+            raw[j] = diag.min(top).min(left + 1);
+            left = raw[j];
+            all_sat &= raw[j] >= SAT_LINEAR;
+        }
+        for j in 0..BAND {
+            wfd[j] = raw[j].min(SAT_LINEAR);
+        }
+        // All-saturated is a fixed point of the recurrence (every
+        // successor is min(sat+mm, sat+1, ·) >= sat), so the remaining
+        // rows cannot change the output — early exit (§Perf opt 2). The
+        // final band is all-SAT either way, so outputs are identical to
+        // the full computation (and to the XLA kernel, which has no
+        // data-dependent control flow).
+        if all_sat {
+            return [SAT_LINEAR; BAND];
+        }
+    }
+    wfd
+}
+
+/// The anchored initial band row `|j - eth|`.
+pub fn init_band() -> [i32; BAND] {
+    let mut b = [0i32; BAND];
+    for (j, v) in b.iter_mut().enumerate() {
+        *v = (j as i32 - ETH as i32).abs();
+    }
+    b
+}
+
+/// Best distance in a band row with the deterministic tie-break
+/// (distance, |j - eth|, j) — identical to the L2 `best_of_band`
+/// epilogue's key encoding.
+pub fn best_of_band(band: &[i32; BAND]) -> (i32, usize) {
+    let mut best_key = i32::MAX;
+    let mut best = (0i32, 0usize);
+    for (j, &d) in band.iter().enumerate() {
+        let key = d * 1024 + (j as i32 - ETH as i32).abs() * 16 + j as i32;
+        if key < best_key {
+            best_key = key;
+            best = (d, j);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::encode_seq;
+    
+    use crate::util::SmallRng;
+
+    fn rand_pair(rng: &mut SmallRng, n: usize) -> (Vec<u8>, Vec<u8>) {
+        let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
+        let win: Vec<u8> = (0..window_len(n)).map(|_| rng.gen_range(0..4)).collect();
+        (read, win)
+    }
+
+    /// Planted window: read at `shift` with `subs` substitutions.
+    pub(crate) fn planted(rng: &mut SmallRng, n: usize, shift: usize, subs: usize) -> (Vec<u8>, Vec<u8>) {
+        let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
+        let mut win: Vec<u8> = (0..window_len(n)).map(|_| rng.gen_range(0..4)).collect();
+        win[shift..shift + n].copy_from_slice(&read);
+        for _ in 0..subs {
+            let p = rng.gen_range(shift..shift + n);
+            win[p] = (win[p] + rng.gen_range(1..4u8)) % 4;
+        }
+        (read, win)
+    }
+
+    #[test]
+    fn exact_match_is_zero_at_center() {
+        let mut rng = SmallRng::seed_from_u64(1);
+        let (read, win) = planted(&mut rng, 40, ETH, 0);
+        let band = linear_wf_band(&read, &win);
+        assert_eq!(band[ETH], 0);
+    }
+
+    #[test]
+    fn substitutions_count() {
+        let mut rng = SmallRng::seed_from_u64(2);
+        for subs in 0..=4 {
+            let (read, win) = planted(&mut rng, 60, ETH, subs);
+            let band = linear_wf_band(&read, &win);
+            // planted subs can coincide or be mimicked by chance; bound only
+            assert!(band[ETH] <= subs as i32, "subs={subs} got {}", band[ETH]);
+        }
+    }
+
+    #[test]
+    fn shift_costs_anchor_penalty() {
+        let mut rng = SmallRng::seed_from_u64(3);
+        for shift in 0..BAND {
+            let (read, win) = planted(&mut rng, 50, shift, 0);
+            let band = linear_wf_band(&read, &win);
+            assert!(band[shift] <= (shift as i32 - ETH as i32).abs());
+        }
+    }
+
+    #[test]
+    fn random_pairs_saturate() {
+        let mut rng = SmallRng::seed_from_u64(4);
+        let (read, win) = rand_pair(&mut rng, 150);
+        let band = linear_wf_band(&read, &win);
+        assert!(band.iter().all(|&d| d == SAT_LINEAR), "random 150bp pair must saturate");
+    }
+
+    #[test]
+    fn n_bases_never_match() {
+        let read = encode_seq(b"NNNN");
+        let win = encode_seq(b"NNNNNNNNNNNNNNNN");
+        let band = linear_wf_band(&read, &win);
+        assert!(band.iter().all(|&d| d > 0));
+    }
+
+    #[test]
+    fn band_values_bounded() {
+        let mut rng = SmallRng::seed_from_u64(5);
+        for _ in 0..20 {
+            let (read, win) = rand_pair(&mut rng, 30);
+            for d in linear_wf_band(&read, &win) {
+                assert!((0..=SAT_LINEAR).contains(&d));
+            }
+        }
+    }
+
+    #[test]
+    fn best_of_band_tie_breaks_match_python() {
+        // mirrors python/tests/test_affine_kernel.py::test_best_of_band_tie_breaks
+        let mk = |vals: [i32; BAND]| best_of_band(&vals);
+        assert_eq!(mk([5, 3, 3, 9, 9, 9, 9, 9, 9, 9, 9, 9, 9]), (3, 2));
+        assert_eq!(mk([9, 9, 9, 9, 9, 2, 9, 2, 9, 9, 9, 9, 9]), (2, 5));
+        assert_eq!(mk([9, 9, 9, 9, 9, 9, 0, 9, 9, 9, 9, 9, 9]), (0, 6));
+    }
+}

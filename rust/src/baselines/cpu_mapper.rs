@@ -1,0 +1,122 @@
+//! Exhaustive CPU ground-truth mapper (the BWA-MEM stand-in, DESIGN.md
+//! §6): seed with the minimizer index, then run an unbanded affine
+//! semi-global alignment against the full segment of *every* PL and keep
+//! the global best. No banding, no saturation, no maxReads caps — the
+//! accuracy oracle DART-PIM is measured against (paper §VII-A).
+
+use crate::align::full_dp::semi_global_affine;
+use crate::genome::encode::Seq;
+use crate::index::MinimizerIndex;
+use crate::seeding::seeder::all_seed_hits;
+
+/// One mapping decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mapping {
+    /// 0-based reference position of the read's first aligned base.
+    pub pos: i64,
+    /// Alignment cost (affine, unit costs).
+    pub dist: i32,
+}
+
+/// The exhaustive mapper.
+pub struct CpuMapper<'a> {
+    pub index: &'a MinimizerIndex,
+}
+
+impl<'a> CpuMapper<'a> {
+    pub fn new(index: &'a MinimizerIndex) -> Self {
+        CpuMapper { index }
+    }
+
+    /// Map one read: best (dist, then leftmost pos) over all PLs.
+    /// Returns `None` when seeding yields no candidate at all.
+    pub fn map(&self, read: &Seq) -> Option<Mapping> {
+        let mut best: Option<Mapping> = None;
+        let mut evaluated = std::collections::HashSet::new();
+        for hit in all_seed_hits(self.index, read) {
+            // distinct segments only: one evaluation per occurrence
+            if !evaluated.insert(hit.ref_pos) {
+                continue;
+            }
+            let seg = self.index.segment(hit.ref_pos);
+            let sg = semi_global_affine(read, &seg);
+            let seg_start = hit.ref_pos as i64
+                - ((self.index.read_len - self.index.k) + crate::params::ETH) as i64;
+            let m = Mapping { pos: seg_start + sg.start as i64, dist: sg.dist };
+            best = match best {
+                None => Some(m),
+                Some(b) if (m.dist, m.pos) < (b.dist, b.pos) => Some(m),
+                b => b,
+            };
+        }
+        best
+    }
+
+    /// Map a batch, preserving order.
+    pub fn map_all(&self, reads: &[Seq]) -> Vec<Option<Mapping>> {
+        reads.iter().map(|r| self.map(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::synth::{ReadSimConfig, SynthConfig};
+    use crate::params::{K, READ_LEN, W};
+
+    fn setup() -> MinimizerIndex {
+        let g = SynthConfig { len: 100_000, ..Default::default() }.generate();
+        MinimizerIndex::build(g, K, W, READ_LEN)
+    }
+
+    #[test]
+    fn error_free_reads_map_exactly() {
+        let idx = setup();
+        let reads = ReadSimConfig {
+            n_reads: 40,
+            sub_rate: 0.0,
+            ins_rate: 0.0,
+            del_rate: 0.0,
+            ..Default::default()
+        }
+        .simulate(&idx.reference, |p| p as u32);
+        let mapper = CpuMapper::new(&idx);
+        let mut exact = 0;
+        for r in &reads {
+            let m = mapper.map(&r.seq).expect("error-free read must map");
+            assert_eq!(m.dist, 0, "error-free read has a zero-cost alignment");
+            if m.pos == r.truth_pos as i64 {
+                exact += 1;
+            }
+        }
+        // repeats can legitimately produce equal-cost alternates
+        assert!(exact >= 36, "exact = {exact}/40");
+    }
+
+    #[test]
+    fn noisy_reads_map_near_truth() {
+        let idx = setup();
+        let reads = ReadSimConfig { n_reads: 60, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        let mapper = CpuMapper::new(&idx);
+        let mut near = 0;
+        for r in &reads {
+            if let Some(m) = mapper.map(&r.seq) {
+                if (m.pos - r.truth_pos as i64).abs() <= 5 {
+                    near += 1;
+                }
+            }
+        }
+        assert!(near as f64 / reads.len() as f64 > 0.9, "near = {near}/60");
+    }
+
+    #[test]
+    fn garbage_reads_do_not_map_well() {
+        let idx = setup();
+        let mut rng = crate::util::SmallRng::seed_from_u64(99);
+        let junk: Seq = (0..READ_LEN).map(|_| rng.gen_range(0..4)).collect();
+        if let Some(m) = CpuMapper::new(&idx).map(&junk) {
+            assert!(m.dist > 10, "random read should align poorly, dist={}", m.dist);
+        }
+    }
+}

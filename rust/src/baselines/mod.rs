@@ -1,0 +1,17 @@
+//! Comparator systems.
+//!
+//! * [`published`] — the five systems the paper compares against
+//!   (minimap2, NVIDIA Parabricks, GenASM, SeGraM, GenVoM) with their
+//!   paper-reported throughput / energy / area / accuracy, plus the
+//!   paper's own DART-PIM rows. Figures 8/9 are regenerated from these
+//!   (the paper itself uses reported numbers for the comparators).
+//! * [`cpu_mapper`] — our live software baseline: an exhaustive
+//!   seed-and-extend mapper (lossless seeding + unbanded affine DP over
+//!   every PL). Plays the role BWA-MEM plays in the paper's accuracy
+//!   study (§VII-A) and anchors the end-to-end example's accuracy check.
+
+pub mod cpu_mapper;
+pub mod published;
+
+pub use cpu_mapper::{CpuMapper, Mapping};
+pub use published::{published_systems, PublishedSystem, DATASET_READS};

@@ -1,0 +1,164 @@
+//! Paper-reported comparison numbers (§VII, Figs. 8/9).
+//!
+//! All figures refer to the paper's dataset: 389 M Illumina reads of
+//! 150 bp against GRCh38. Execution times and powers are the paper's
+//! §VII-C/§VII-D values; areas §VII-E.
+
+/// Reads in the paper's dataset.
+pub const DATASET_READS: u64 = 389_000_000;
+
+/// One comparator system as reported by the paper.
+#[derive(Debug, Clone)]
+pub struct PublishedSystem {
+    pub name: &'static str,
+    /// End-to-end execution time for the 389 M-read dataset (s).
+    pub exec_time_s: f64,
+    /// Total energy (J).
+    pub energy_j: f64,
+    /// Chip area (mm²).
+    pub area_mm2: f64,
+    /// Mapping accuracy (fraction; the paper's BWA-MEM-agreement metric
+    /// for DART-PIM, reported metrics for the others).
+    pub accuracy: f64,
+}
+
+impl PublishedSystem {
+    pub fn throughput(&self) -> f64 {
+        DATASET_READS as f64 / self.exec_time_s
+    }
+
+    pub fn energy_per_read(&self) -> f64 {
+        self.energy_j / DATASET_READS as f64
+    }
+
+    pub fn reads_per_joule(&self) -> f64 {
+        DATASET_READS as f64 / self.energy_j
+    }
+
+    pub fn area_efficiency(&self) -> f64 {
+        self.throughput() / self.area_mm2
+    }
+}
+
+/// The five comparators (paper §VI/§VII).
+pub fn published_systems() -> Vec<PublishedSystem> {
+    vec![
+        PublishedSystem {
+            name: "minimap2 (CPU)",
+            exec_time_s: 19_785.0, // 5.5 h on Xeon E5-2683 v4
+            energy_j: 2.4e6,       // 120 W average
+            area_mm2: 2_362.0,
+            accuracy: 0.999,
+        },
+        PublishedSystem {
+            name: "Parabricks (GPU)",
+            exec_time_s: 495.0, // 8.3 min on DGX A100
+            energy_j: 2.4e6,    // 4850 W average
+            area_mm2: 46_352.0, // 8x A100 + HBM stacks
+            accuracy: 0.999,
+        },
+        PublishedSystem {
+            name: "GenASM",
+            exec_time_s: 29_154.0, // scaled to 150 bp reads
+            energy_j: 94.2e3,      // 3.23 W
+            area_mm2: 10.7,
+            accuracy: 0.966,
+        },
+        PublishedSystem {
+            name: "SeGraM",
+            exec_time_s: 22_426.0, // 1.3x GenASM throughput
+            energy_j: 543e3,       // 24.2 W
+            area_mm2: 27.8,
+            accuracy: 0.966,
+        },
+        PublishedSystem {
+            name: "GenVoM",
+            exec_time_s: 39.2, // scaled to 150 bp reads
+            energy_j: 1.4e3,   // 35.3 W
+            area_mm2: 298.0,
+            accuracy: 0.912,
+        },
+    ]
+}
+
+/// Paper-reported DART-PIM rows (for parity checks against our model).
+pub fn paper_dartpim_rows() -> Vec<(usize, PublishedSystem)> {
+    vec![
+        (
+            12_500,
+            PublishedSystem {
+                name: "DART-PIM (12.5k, paper)",
+                exec_time_s: 43.8,
+                energy_j: 20.8e3,
+                area_mm2: 8_170.0,
+                accuracy: 0.997,
+            },
+        ),
+        (
+            25_000,
+            PublishedSystem {
+                name: "DART-PIM (25k, paper)",
+                exec_time_s: 87.2, // 227x faster than minimap2
+                energy_j: 26.5e3,  // 90.6x better energy than minimap2
+                area_mm2: 8_170.0,
+                accuracy: 0.998,
+            },
+        ),
+        (
+            50_000,
+            PublishedSystem {
+                name: "DART-PIM (50k, paper)",
+                exec_time_s: 174.0,
+                energy_j: 34.9e3,
+                area_mm2: 8_170.0,
+                accuracy: 0.998,
+            },
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_ratios_hold() {
+        // The abstract's headline numbers at maxReads = 25k.
+        let rows = paper_dartpim_rows();
+        let dart = &rows.iter().find(|(m, _)| *m == 25_000).unwrap().1;
+        let systems = published_systems();
+        let by = |n: &str| systems.iter().find(|s| s.name.starts_with(n)).unwrap();
+        let t = |s: &PublishedSystem| dart.throughput() / s.throughput();
+        assert!((t(by("Parabricks")) - 5.7).abs() < 0.3, "Parabricks speedup {}", t(by("Parabricks")));
+        assert!((t(by("SeGraM")) - 257.0).abs() / 257.0 < 0.05, "SeGraM speedup {}", t(by("SeGraM")));
+        assert!((t(by("minimap2")) - 227.0).abs() / 227.0 < 0.05);
+        assert!((t(by("GenASM")) - 334.0).abs() / 334.0 < 0.05);
+        let e = |s: &PublishedSystem| dart.reads_per_joule() / s.reads_per_joule();
+        assert!((e(by("Parabricks")) - 90.6).abs() / 90.6 < 0.05, "Parabricks energy {}", e(by("Parabricks")));
+        assert!((e(by("SeGraM")) - 20.7).abs() / 20.7 < 0.05);
+        assert!((e(by("GenASM")) - 3.6).abs() / 3.6 < 0.1);
+    }
+
+    #[test]
+    fn area_efficiencies_match_paper() {
+        // §VII-E: GenASM 1247, SeGraM 623, minimap2 8.3, Parabricks 16.9
+        let systems = published_systems();
+        let by = |n: &str| systems.iter().find(|s| s.name.starts_with(n)).unwrap();
+        assert!((by("GenASM").area_efficiency() - 1247.0).abs() / 1247.0 < 0.05);
+        assert!((by("SeGraM").area_efficiency() - 623.0).abs() / 623.0 < 0.05);
+        assert!((by("minimap2").area_efficiency() - 8.3).abs() / 8.3 < 0.05);
+        assert!((by("Parabricks").area_efficiency() - 16.9).abs() / 16.9 < 0.05);
+    }
+
+    #[test]
+    fn dartpim_area_efficiency_range() {
+        // §VII-E: 1086 reads/mm²/s (12.5k) .. 273 (50k)
+        let rows = paper_dartpim_rows();
+        let eff = |m: usize| {
+            let r = &rows.iter().find(|(mm, _)| *mm == m).unwrap().1;
+            r.area_efficiency()
+        };
+        assert!((eff(12_500) - 1086.0).abs() / 1086.0 < 0.05, "{}", eff(12_500));
+        assert!((eff(50_000) - 273.0).abs() / 273.0 < 0.05, "{}", eff(50_000));
+    }
+}

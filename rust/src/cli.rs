@@ -1,0 +1,510 @@
+//! Hand-rolled CLI (this offline build has no clap — DESIGN.md §6).
+//!
+//! Subcommands:
+//!   synth     — generate a synthetic reference + read set
+//!   map       — run the DART-PIM pipeline end to end
+//!   evaluate  — map + accuracy vs oracle and simulated truth
+//!   simulate  — full-system simulation + Eq. 6/7 report (+ paper-scale
+//!               projection)
+//!   figures   — regenerate the paper's tables/figures
+//!   crossbar  — single-crossbar simulator (Table IV, row allocation)
+//!   config    — print the architecture configuration (Tables II/III)
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{FilterPolicy, Pipeline, PipelineConfig};
+use crate::eval::figures;
+use crate::genome::fasta::{load_fasta, save_fasta, FastaRecord};
+use crate::genome::fastq::{load_fastq, save_fastq, FastqRecord};
+use crate::genome::mutate::MutateConfig;
+use crate::genome::synth::{ReadSimConfig, SynthConfig};
+use crate::genome::ReadRecord;
+use crate::index::MinimizerIndex;
+use crate::params::{K, READ_LEN, W};
+use crate::pim::xbar_sim::{self, CostSource};
+use crate::pim::DartPimConfig;
+use crate::runtime::{RustEngine, XlaEngine};
+use crate::simulator::report::{build_report, scale_counts};
+use crate::simulator::{FullSystemSim, TimingMode};
+use crate::util::json::Json;
+
+/// Parsed `--key value` options + positionals.
+pub struct Args {
+    pub cmd: String,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut opts = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    opts.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected positional argument {a:?}");
+            }
+        }
+        Ok(Args { cmd, opts, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+pub const USAGE: &str = "\
+dart-pim — DNA read mapping with a digital-PIM model (DART-PIM reproduction)
+
+USAGE: dart-pim <command> [--key value ...]
+
+COMMANDS
+  synth     --out-dir D [--len 2000000] [--reads 10000] [--seed 1]
+            [--snp-rate 0.001] [--sub-rate 0.004]
+  index     --ref R.fasta --out index.bin [--read-len 150]
+  map       --ref R.fasta --reads R.fastq [--engine xla|rust]
+            (or --index index.bin instead of --ref)
+            [--max-reads 25000] [--low-th 3] [--batch 256] [--min-only]
+            [--revcomp] [--out mappings.tsv]
+  evaluate  --ref R.fasta --reads R.fastq --truth truth.tsv
+            [--engine xla|rust] [--tolerance 5]
+  simulate  --ref R.fasta --reads R.fastq [--max-reads 25000]
+            [--low-th 3] [--scale 389000000] [--batched-affine]
+            [--constructive]
+  figures   [--fig 8|9|10a|10b|10c|table4|motivation|headline|all]
+  crossbar
+  config
+";
+
+/// Entry point; returns the process exit code.
+pub fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.cmd.as_str() {
+        "synth" => cmd_synth(&args),
+        "index" => cmd_index(&args),
+        "map" => cmd_map(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "simulate" => cmd_simulate(&args),
+        "figures" => cmd_figures(&args),
+        "crossbar" => cmd_crossbar(),
+        "config" => cmd_config(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn dart_config(args: &Args) -> Result<DartPimConfig> {
+    Ok(DartPimConfig {
+        max_reads: args.get_usize("max-reads", 25_000)?,
+        low_th: args.get_usize("low-th", 3)?,
+        ..Default::default()
+    })
+}
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let out_dir = std::path::PathBuf::from(args.get("out-dir").context("--out-dir required")?);
+    std::fs::create_dir_all(&out_dir)?;
+    let len = args.get_usize("len", 2_000_000)?;
+    let n_reads = args.get_usize("reads", 10_000)?;
+    let seed = args.get_usize("seed", 1)? as u64;
+    let genome = SynthConfig { len, seed, ..Default::default() }.generate();
+    let donor = MutateConfig {
+        snp_rate: args.get_f64("snp-rate", 1e-3)?,
+        seed: seed ^ 0x5eed,
+        ..Default::default()
+    }
+    .apply(&genome);
+    let reads = ReadSimConfig {
+        n_reads,
+        sub_rate: args.get_f64("sub-rate", 0.004)?,
+        seed: seed ^ 0x0EAD,
+        ..Default::default()
+    }
+    .simulate(&donor.seq, |p| donor.to_ref(p));
+
+    save_fasta(out_dir.join("ref.fasta"), &[FastaRecord { name: "synthetic".into(), seq: genome }])?;
+    let records: Vec<FastqRecord> = reads
+        .iter()
+        .map(|r| FastqRecord::with_const_qual(format!("read{}", r.id), r.seq.clone(), b'I'))
+        .collect();
+    save_fastq(out_dir.join("reads.fastq"), &records)?;
+    let mut truth = String::from("read_id\ttruth_pos\terrors\n");
+    for r in &reads {
+        truth.push_str(&format!("{}\t{}\t{}\n", r.id, r.truth_pos, r.errors));
+    }
+    std::fs::write(out_dir.join("truth.tsv"), truth)?;
+    println!(
+        "wrote {}: {} bp reference ({} SNPs, {} indels in donor), {} reads",
+        out_dir.display(),
+        len,
+        donor.n_snps,
+        donor.n_indels,
+        n_reads
+    );
+    Ok(())
+}
+
+fn cmd_index(args: &Args) -> Result<()> {
+    let ref_path = args.get("ref").context("--ref required")?;
+    let out = args.get("out").context("--out required")?;
+    let read_len = args.get_usize("read-len", READ_LEN)?;
+    let fasta = load_fasta(ref_path)?;
+    anyhow::ensure!(!fasta.is_empty(), "empty reference FASTA");
+    let reference = fasta.into_iter().next().unwrap().seq;
+    let index = MinimizerIndex::build(reference, K, W, read_len);
+    crate::index::save_index(out, &index)?;
+    let stats = index.stats(3);
+    println!(
+        "indexed {} bp -> {} ({} minimizers, {} occurrences)",
+        index.reference.len(),
+        out,
+        stats.n_minimizers,
+        stats.n_occurrences
+    );
+    Ok(())
+}
+
+pub fn load_inputs(args: &Args) -> Result<(MinimizerIndex, Vec<ReadRecord>)> {
+    let reads_path = args.get("reads").context("--reads required")?;
+    let fastq = load_fastq(reads_path)?;
+    anyhow::ensure!(!fastq.is_empty(), "empty FASTQ");
+    let read_len = fastq[0].seq.len();
+    let index = if let Some(idx_path) = args.get("index") {
+        let idx = crate::index::load_index(idx_path)?;
+        anyhow::ensure!(
+            idx.read_len == read_len,
+            "index was built for {} bp reads, FASTQ has {} bp",
+            idx.read_len,
+            read_len
+        );
+        idx
+    } else {
+        let ref_path = args.get("ref").context("--ref or --index required")?;
+        let fasta = load_fasta(ref_path)?;
+        anyhow::ensure!(!fasta.is_empty(), "empty reference FASTA");
+        let reference = fasta.into_iter().next().unwrap().seq;
+        MinimizerIndex::build(reference, K, W, read_len)
+    };
+    let reads: Vec<ReadRecord> = fastq
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| ReadRecord { id: i as u32, seq: r.seq, truth_pos: 0, errors: 0 })
+        .collect();
+    Ok((index, reads))
+}
+
+
+fn load_truth(path: &str, n: usize) -> Result<Vec<u32>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut truth = vec![0u32; n];
+    for line in text.lines().skip(1) {
+        let mut it = line.split('\t');
+        let id: usize = it.next().context("truth id")?.parse()?;
+        let pos: u32 = it.next().context("truth pos")?.parse()?;
+        if id < n {
+            truth[id] = pos;
+        }
+    }
+    Ok(truth)
+}
+
+fn run_pipeline(
+    args: &Args,
+    index: &MinimizerIndex,
+    reads: &[ReadRecord],
+) -> Result<(Vec<Option<crate::coordinator::FinalMapping>>, crate::coordinator::metrics::Metrics)> {
+    anyhow::ensure!(
+        index.read_len == READ_LEN || args.get("engine") != Some("xla"),
+        "the AOT artifacts target {}bp reads; use --engine rust for other lengths",
+        READ_LEN
+    );
+    let cfg = PipelineConfig {
+        dart: dart_config(args)?,
+        batch_size: args.get_usize("batch", 256)?,
+        filter_policy: if args.flag("min-only") {
+            FilterPolicy::MinOnly
+        } else {
+            FilterPolicy::AllPassing
+        },
+        handle_revcomp: args.flag("revcomp"),
+    };
+    match args.get("engine").unwrap_or("xla") {
+        "rust" => {
+            let mut p = Pipeline::new(index, cfg, RustEngine);
+            p.map_reads(reads)
+        }
+        "xla" => {
+            let engine = XlaEngine::load_default()?;
+            eprintln!("engine: xla (PJRT {}, {} artifacts)", engine.platform(), engine.manifest().artifacts.len());
+            let mut p = Pipeline::new(index, cfg, engine);
+            p.map_reads(reads)
+        }
+        other => bail!("unknown engine {other:?} (xla|rust)"),
+    }
+}
+
+fn cmd_map(args: &Args) -> Result<()> {
+    let (index, reads) = load_inputs(args)?;
+    let (mappings, metrics) = run_pipeline(args, &index, &reads)?;
+    eprintln!("{}", metrics.summary());
+    let mut out = String::from("read_id\tpos\tstrand\tdist\tcigar\tcandidates\n");
+    for m in mappings.iter().flatten() {
+        out.push_str(&format!(
+            "{}\t{}\t{}\t{}\t{}\t{}\n",
+            m.read_id,
+            m.pos,
+            if m.reverse { '-' } else { '+' },
+            m.dist,
+            m.cigar,
+            m.candidates
+        ));
+    }
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, out)?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{out}"),
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let (index, mut reads) = load_inputs(args)?;
+    let truth = load_truth(args.get("truth").context("--truth required")?, reads.len())?;
+    for r in reads.iter_mut() {
+        r.truth_pos = truth[r.id as usize];
+    }
+    let tol = args.get_usize("tolerance", 5)? as i64;
+    let (mappings, metrics) = run_pipeline(args, &index, &reads)?;
+    let rep = crate::eval::evaluate_accuracy(&index, &reads, &mappings, tol);
+    println!("{}", metrics.summary());
+    println!(
+        "accuracy vs oracle (±{tol}): {:.4}  exact: {:.4}  | vs truth (±{tol}): {:.4}  mapped: {}/{}",
+        rep.accuracy_vs_oracle(),
+        rep.oracle_exact as f64 / rep.oracle_mapped.max(1) as f64,
+        rep.accuracy_vs_truth(),
+        rep.mapped,
+        rep.n_reads
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let (index, reads) = load_inputs(args)?;
+    let cfg = dart_config(args)?;
+    let sim = FullSystemSim::new(&index, cfg.clone());
+    let counts = sim.simulate(&reads);
+    let cost = if args.flag("constructive") { CostSource::Constructive } else { CostSource::PaperTable4 };
+    let timing = if args.flag("batched-affine") { TimingMode::Batched8 } else { TimingMode::PaperSerial };
+    let report = build_report(&counts, &cfg, cost, timing);
+    println!("measured workload: {} reads, PLs/read={:.1}, pass={:.2}%, riscv share={:.3}%",
+        counts.n_reads, counts.pls_per_read(), 100.0 * counts.pass_rate(),
+        100.0 * counts.riscv_affine_share());
+    println!(
+        "simulated: T={:.4}s (dpmem {:.4}, riscv {:.4}, readout {:.4})  E={:.3}J  {:.0} reads/s",
+        report.exec_time_s, report.t_dpmem_s, report.t_riscv_s, report.t_readout_s,
+        report.energy.total(), report.throughput()
+    );
+    let scale = args.get_usize("scale", 0)?;
+    if scale > 0 {
+        let scaled = scale_counts(&counts, scale as u64, &cfg);
+        let r = build_report(&scaled, &cfg, cost, timing);
+        println!(
+            "projected to {scale} reads: T={:.1}s  E={:.1}kJ  {:.2} Mreads/s  {:.0}W avg",
+            r.exec_time_s,
+            r.energy.total() / 1e3,
+            r.throughput() / 1e6,
+            r.avg_power_w()
+        );
+    }
+    let j = Json::obj(vec![
+        ("exec_time_s", report.exec_time_s.into()),
+        ("energy_j", report.energy.total().into()),
+        ("throughput", report.throughput().into()),
+        ("pls_per_read", counts.pls_per_read().into()),
+        ("pass_rate", counts.pass_rate().into()),
+    ]);
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, j.pretty())?;
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let which = args.get("fig").unwrap_or("all");
+    let mut out = String::new();
+    if matches!(which, "table4" | "all") {
+        out.push_str(&figures::table4());
+        out.push('\n');
+    }
+    if matches!(which, "8" | "all") {
+        out.push_str(&figures::fig8());
+        out.push('\n');
+    }
+    if matches!(which, "9" | "all") {
+        out.push_str(&figures::fig9());
+        out.push('\n');
+    }
+    if matches!(which, "10a" | "all") {
+        out.push_str(&figures::fig10a());
+        out.push('\n');
+    }
+    if matches!(which, "10b" | "all") {
+        out.push_str(&figures::fig10b());
+        out.push('\n');
+    }
+    if matches!(which, "10c" | "all") {
+        out.push_str(&figures::fig10c());
+        out.push('\n');
+    }
+    if matches!(which, "headline" | "all") {
+        out.push_str(&figures::headline());
+        out.push('\n');
+    }
+    if matches!(which, "motivation" | "all") {
+        out.push_str(&crate::eval::datavolume::render(
+            &crate::eval::datavolume::paper_volume(),
+            "paper (§II)",
+        ));
+    }
+    anyhow::ensure!(!out.is_empty(), "unknown figure {which:?}");
+    print!("{out}");
+    Ok(())
+}
+
+fn cmd_crossbar() -> Result<()> {
+    print!("{}", figures::table4());
+    let lin = xbar_sim::linear_row_allocation(READ_LEN, 1024);
+    let aff = xbar_sim::affine_row_allocation(READ_LEN, 1024);
+    println!("\nrow allocation (bits of 1024):");
+    println!(
+        "  linear: segment {} + read {} + band {} + temps {}",
+        lin.segment_bits, lin.read_bits, lin.band_bits, lin.temp_bits
+    );
+    println!(
+        "  affine: window {} + read {} + bands {} + temps {}; traceback {} bits / instance",
+        aff.segment_bits,
+        aff.read_bits,
+        aff.band_bits,
+        aff.temp_bits,
+        xbar_sim::traceback_bits(READ_LEN)
+    );
+    Ok(())
+}
+
+fn cmd_config() -> Result<()> {
+    let c = DartPimConfig::default();
+    println!("{c:#?}");
+    println!(
+        "derived: {} crossbars, {} GB, {} RISC-V cores, {} reads/FIFO, {} affine instances/crossbar",
+        c.total_xbars(),
+        c.total_capacity_bytes() >> 30,
+        c.total_riscv(),
+        c.fifo_capacity_reads(),
+        c.affine_instances()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_opts_and_flags() {
+        let a = Args::parse(&argv("map --ref r.fa --reads r.fq --min-only --batch 64")).unwrap();
+        assert_eq!(a.cmd, "map");
+        assert_eq!(a.get("ref"), Some("r.fa"));
+        assert_eq!(a.get_usize("batch", 0).unwrap(), 64);
+        assert!(a.flag("min-only"));
+        assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn rejects_positionals_and_bad_ints() {
+        assert!(Args::parse(&argv("map positional")).is_err());
+        let a = Args::parse(&argv("map --batch abc")).unwrap();
+        assert!(a.get_usize("batch", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&argv("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn figures_command_runs() {
+        run(&argv("figures --fig table4")).unwrap();
+        run(&argv("crossbar")).unwrap();
+        run(&argv("config")).unwrap();
+    }
+
+    #[test]
+    fn synth_map_evaluate_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("dartpim-cli-{}", std::process::id()));
+        let d = dir.to_str().unwrap();
+        run(&argv(&format!("synth --out-dir {d} --len 60000 --reads 40"))).unwrap();
+        run(&argv(&format!(
+            "map --ref {d}/ref.fasta --reads {d}/reads.fastq --engine rust --low-th 0 --out {d}/map.tsv"
+        )))
+        .unwrap();
+        let tsv = std::fs::read_to_string(dir.join("map.tsv")).unwrap();
+        assert!(tsv.lines().count() > 30, "most reads should map:\n{tsv}");
+        run(&argv(&format!(
+            "evaluate --ref {d}/ref.fasta --reads {d}/reads.fastq --truth {d}/truth.tsv --engine rust --low-th 0"
+        )))
+        .unwrap();
+        run(&argv(&format!(
+            "simulate --ref {d}/ref.fasta --reads {d}/reads.fastq --low-th 0 --scale 389000000"
+        )))
+        .unwrap();
+        // offline indexing: build once, map from the saved index
+        run(&argv(&format!("index --ref {d}/ref.fasta --out {d}/ref.idx"))).unwrap();
+        run(&argv(&format!(
+            "map --index {d}/ref.idx --reads {d}/reads.fastq --engine rust --low-th 0 --out {d}/map2.tsv"
+        )))
+        .unwrap();
+        let a = std::fs::read_to_string(dir.join("map.tsv")).unwrap();
+        let b = std::fs::read_to_string(dir.join("map2.tsv")).unwrap();
+        assert_eq!(a, b, "mapping from a loaded index must be identical");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

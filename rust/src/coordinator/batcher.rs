@@ -1,0 +1,159 @@
+//! Batching: packs (read, window) work items into engine-sized batches.
+//!
+//! In hardware the chip controllers broadcast one MAGIC op sequence to
+//! every crossbar at once — a "lock-step round" over thousands of rows.
+//! Host-side, the equivalent is packing many crossbars' row loads into a
+//! single PJRT execution; the batcher accumulates work items and flushes
+//! them at the artifact batch size (the engine pads partial batches).
+
+use crate::params::window_len;
+
+/// Provenance of one WF instance (flows through to the results).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkTag {
+    pub read_id: u32,
+    /// Dense id of the routed (read, minimizer) pair this instance
+    /// belongs to (MinOnly filtering groups by it).
+    pub pair_id: u32,
+    /// Reference occurrence (k-mer start) this instance aligns against.
+    pub ref_pos: u32,
+    /// Minimizer offset within the read.
+    pub read_offset: u32,
+    /// Potential location (ref_pos - read_offset).
+    pub pl: i64,
+    /// Crossbar that owns this instance (metrics / bottleneck analysis).
+    pub xbar: u32,
+    /// Reverse-complement orientation of the read.
+    pub reverse: bool,
+}
+
+/// One batch ready for the engine. Reads are borrowed from the input
+/// read set (zero-copy — §Perf opt 1); windows are owned (computed per
+/// instance).
+pub struct Batch<'a> {
+    pub tags: Vec<WorkTag>,
+    pub reads: Vec<&'a [u8]>,
+    pub wins: Vec<Vec<u8>>,
+}
+
+impl<'a> Batch<'a> {
+    pub fn len(&self) -> usize {
+        self.tags.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tags.is_empty()
+    }
+}
+
+/// Accumulates work items; yields full batches eagerly.
+pub struct Batcher<'a> {
+    target: usize,
+    read_len: usize,
+    pending: Batch<'a>,
+}
+
+impl<'a> Batcher<'a> {
+    /// `target` is the flush size (use the largest artifact batch for
+    /// throughput; smaller for latency).
+    pub fn new(target: usize, read_len: usize) -> Self {
+        assert!(target >= 1);
+        Batcher {
+            target,
+            read_len,
+            pending: Batch { tags: Vec::new(), reads: Vec::new(), wins: Vec::new() },
+        }
+    }
+
+    /// Add one work item; returns a full batch when the target is hit.
+    pub fn push(&mut self, tag: WorkTag, read: &'a [u8], win: Vec<u8>) -> Option<Batch<'a>> {
+        debug_assert_eq!(read.len(), self.read_len);
+        debug_assert_eq!(win.len(), window_len(self.read_len));
+        self.pending.tags.push(tag);
+        self.pending.reads.push(read);
+        self.pending.wins.push(win);
+        if self.pending.len() >= self.target {
+            Some(self.take())
+        } else {
+            None
+        }
+    }
+
+    /// Flush whatever is pending (end of stream).
+    pub fn flush(&mut self) -> Option<Batch<'a>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.take())
+        }
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    fn take(&mut self) -> Batch<'a> {
+        std::mem::replace(
+            &mut self.pending,
+            Batch { tags: Vec::new(), reads: Vec::new(), wins: Vec::new() },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{window_len, READ_LEN};
+
+    const READ: [u8; READ_LEN] = [0u8; READ_LEN];
+
+    fn item(i: u32) -> (WorkTag, &'static [u8], Vec<u8>) {
+        (
+            WorkTag { read_id: i, pair_id: i, ref_pos: i * 10, read_offset: 0, pl: i as i64 * 10, xbar: i, reverse: false },
+            &READ,
+            vec![1u8; window_len(READ_LEN)],
+        )
+    }
+
+    #[test]
+    fn flushes_at_target() {
+        let mut b = Batcher::new(3, READ_LEN);
+        let (t, r, w) = item(0);
+        assert!(b.push(t, r, w).is_none());
+        let (t, r, w) = item(1);
+        assert!(b.push(t, r, w).is_none());
+        let (t, r, w) = item(2);
+        let batch = b.push(t, r, w).expect("full batch");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.tags[1].read_id, 1);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn flush_drains_partial() {
+        let mut b = Batcher::new(100, READ_LEN);
+        for i in 0..5 {
+            let (t, r, w) = item(i);
+            assert!(b.push(t, r, w).is_none());
+        }
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.len(), 5);
+        assert!(b.flush().is_none(), "second flush is empty");
+    }
+
+    #[test]
+    fn preserves_order_and_provenance() {
+        let mut b = Batcher::new(4, READ_LEN);
+        let mut out = Vec::new();
+        for i in 0..10 {
+            let (t, r, w) = item(i);
+            if let Some(batch) = b.push(t, r, w) {
+                out.extend(batch.tags.iter().map(|t| t.read_id));
+            }
+        }
+        if let Some(batch) = b.flush() {
+            out.extend(batch.tags.iter().map(|t| t.read_id));
+        }
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,142 @@
+//! Per-crossbar Reads FIFO (paper Fig. 6 step 1, §V-C).
+//!
+//! Each crossbar's FIFO holds up to 480 queued (read, offset) entries
+//! (160 rows x 3 reads). When any FIFO fills, the crossbar signals the
+//! PIM controller, the read stream pauses, and filtering runs — that is
+//! the backpressure boundary the scheduler polls. Independently, the
+//! lifetime maxReads cap bounds the total reads any crossbar accepts
+//! (paper §V-A: latency/accuracy knob).
+
+use std::collections::VecDeque;
+
+/// Push outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushResult {
+    Accepted,
+    /// FIFO at capacity — backpressure: run a filtering round first.
+    Full,
+    /// Lifetime maxReads cap reached — entry dropped permanently.
+    CapExceeded,
+}
+
+/// One queued entry: a read waiting to be filtered on this crossbar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FifoEntry {
+    pub read_id: u32,
+    /// Minimizer offset within the read (address offset sent alongside
+    /// the read — paper §V-D step 1).
+    pub read_offset: u32,
+}
+
+/// Bounded FIFO with a lifetime admission cap.
+#[derive(Debug, Clone)]
+pub struct ReadsFifo {
+    queue: VecDeque<FifoEntry>,
+    capacity: usize,
+    max_reads: usize,
+    accepted_total: usize,
+    dropped_total: usize,
+}
+
+impl ReadsFifo {
+    pub fn new(capacity: usize, max_reads: usize) -> Self {
+        ReadsFifo {
+            queue: VecDeque::with_capacity(capacity.min(1024)),
+            capacity,
+            max_reads,
+            accepted_total: 0,
+            dropped_total: 0,
+        }
+    }
+
+    /// Admission per paper policy: cap first, then capacity.
+    pub fn push(&mut self, e: FifoEntry) -> PushResult {
+        if self.accepted_total >= self.max_reads {
+            self.dropped_total += 1;
+            return PushResult::CapExceeded;
+        }
+        if self.queue.len() >= self.capacity {
+            return PushResult::Full;
+        }
+        self.queue.push_back(e);
+        self.accepted_total += 1;
+        PushResult::Accepted
+    }
+
+    /// Next read for a linear WF iteration.
+    pub fn pop(&mut self) -> Option<FifoEntry> {
+        self.queue.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.queue.len() >= self.capacity
+    }
+
+    pub fn accepted_total(&self) -> usize {
+        self.accepted_total
+    }
+
+    pub fn dropped_total(&self) -> usize {
+        self.dropped_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(id: u32) -> FifoEntry {
+        FifoEntry { read_id: id, read_offset: 0 }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut f = ReadsFifo::new(4, 100);
+        for i in 0..3 {
+            assert_eq!(f.push(e(i)), PushResult::Accepted);
+        }
+        assert_eq!(f.pop().unwrap().read_id, 0);
+        assert_eq!(f.pop().unwrap().read_id, 1);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn capacity_backpressure_is_not_a_drop() {
+        let mut f = ReadsFifo::new(2, 100);
+        assert_eq!(f.push(e(0)), PushResult::Accepted);
+        assert_eq!(f.push(e(1)), PushResult::Accepted);
+        assert_eq!(f.push(e(2)), PushResult::Full);
+        assert!(f.is_full());
+        assert_eq!(f.dropped_total(), 0, "Full is retryable, not a drop");
+        f.pop();
+        assert_eq!(f.push(e(2)), PushResult::Accepted);
+    }
+
+    #[test]
+    fn max_reads_cap_drops_permanently() {
+        let mut f = ReadsFifo::new(10, 3);
+        for i in 0..3 {
+            assert_eq!(f.push(e(i)), PushResult::Accepted);
+        }
+        f.pop();
+        // capacity available, but the lifetime cap is spent
+        assert_eq!(f.push(e(9)), PushResult::CapExceeded);
+        assert_eq!(f.accepted_total(), 3);
+        assert_eq!(f.dropped_total(), 1);
+    }
+
+    #[test]
+    fn paper_geometry() {
+        let cfg = crate::pim::DartPimConfig::default();
+        let f = ReadsFifo::new(cfg.fifo_capacity_reads(), cfg.max_reads);
+        assert_eq!(f.capacity, 480);
+    }
+}

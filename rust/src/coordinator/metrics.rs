@@ -1,0 +1,124 @@
+//! Pipeline metrics: counters gathered during a real mapping run, and
+//! their conversion into [`crate::simulator::SimCounts`] so the paper's
+//! Eq. 6/7 reports can be generated from measured (not estimated)
+//! workload statistics.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::simulator::SimCounts;
+
+/// Counters for one pipeline run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub n_reads: u64,
+    pub routed_pairs: u64,
+    pub riscv_pairs: u64,
+    pub dropped_pairs: u64,
+    pub linear_instances: u64,
+    pub affine_instances: u64,
+    pub riscv_linear_instances: u64,
+    pub riscv_affine_instances: u64,
+    pub filter_passed: u64,
+    pub reads_with_candidates: u64,
+    pub linear_batches: u64,
+    pub affine_batches: u64,
+    pub traceback_failures: u64,
+    /// Per-crossbar routed pair counts (bottleneck analysis).
+    pub pairs_per_xbar: HashMap<u32, u64>,
+    /// Per-crossbar affine instance counts.
+    pub affine_per_xbar: HashMap<u32, u64>,
+    /// Wall-clock stage timings (host side).
+    pub t_seed: Duration,
+    pub t_linear: Duration,
+    pub t_affine: Duration,
+    pub t_traceback: Duration,
+    pub t_total: Duration,
+}
+
+impl Metrics {
+    /// Convert measured counters into simulator counts (the bridge from
+    /// the live run to Eq. 6/7 projections).
+    pub fn to_sim_counts(&self) -> SimCounts {
+        SimCounts {
+            n_reads: self.n_reads,
+            routed_pairs: self.routed_pairs,
+            dropped_pairs: self.dropped_pairs,
+            riscv_pairs: self.riscv_pairs,
+            linear_instances: self.linear_instances,
+            affine_instances: self.affine_instances,
+            riscv_linear_instances: self.riscv_linear_instances,
+            riscv_affine_instances: self.riscv_affine_instances,
+            k_linear: self.pairs_per_xbar.values().copied().max().unwrap_or(0),
+            bottleneck_affine: self.affine_per_xbar.values().copied().max().unwrap_or(0),
+            active_xbars: self.pairs_per_xbar.len() as u64,
+            reads_with_candidates: self.reads_with_candidates,
+        }
+    }
+
+    /// Host-side mapping throughput (reads/s).
+    pub fn host_throughput(&self) -> f64 {
+        if self.t_total.is_zero() {
+            return 0.0;
+        }
+        self.n_reads as f64 / self.t_total.as_secs_f64()
+    }
+
+    /// Filter pass rate over crossbar linear instances.
+    pub fn pass_rate(&self) -> f64 {
+        if self.linear_instances == 0 {
+            return 0.0;
+        }
+        self.filter_passed as f64 / self.linear_instances as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "reads={} pairs={} (riscv {}, dropped {}) linJ={} affJ={} pass={:.1}% \
+             batches={}L/{}A host={:.1} reads/s",
+            self.n_reads,
+            self.routed_pairs,
+            self.riscv_pairs,
+            self.dropped_pairs,
+            self.linear_instances,
+            self.affine_instances,
+            100.0 * self.pass_rate(),
+            self.linear_batches,
+            self.affine_batches,
+            self.host_throughput(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_counts_bridge() {
+        let mut m = Metrics { n_reads: 10, routed_pairs: 80, linear_instances: 500, ..Default::default() };
+        m.pairs_per_xbar.insert(1, 30);
+        m.pairs_per_xbar.insert(2, 50);
+        m.affine_per_xbar.insert(2, 7);
+        let c = m.to_sim_counts();
+        assert_eq!(c.k_linear, 50);
+        assert_eq!(c.bottleneck_affine, 7);
+        assert_eq!(c.active_xbars, 2);
+        assert_eq!(c.n_reads, 10);
+    }
+
+    #[test]
+    fn rates() {
+        let m = Metrics {
+            n_reads: 4,
+            linear_instances: 100,
+            filter_passed: 25,
+            t_total: Duration::from_secs(2),
+            ..Default::default()
+        };
+        assert!((m.pass_rate() - 0.25).abs() < 1e-12);
+        assert!((m.host_throughput() - 2.0).abs() < 1e-12);
+        assert!(m.summary().contains("pass=25.0%"));
+    }
+}

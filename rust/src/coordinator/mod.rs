@@ -1,0 +1,29 @@
+//! L3 coordinator — the paper's system contribution, host-side.
+//!
+//! DART-PIM's online flow (Fig. 6 steps 1-7) maps onto:
+//!
+//! * [`router`]   — minimizer -> crossbar / RISC-V assignment and
+//!                  per-read routing (steps 1-2, Fig. 7b)
+//! * [`fifo`]     — per-crossbar Reads FIFO with capacity backpressure
+//!                  and the maxReads lifetime cap (step 1)
+//! * [`batcher`]  — packs (read, window) work items into engine batches;
+//!                  the lock-step broadcast across crossbars becomes one
+//!                  PJRT call over many instances (steps 3, 6)
+//! * [`state`]    — per-read best-so-far PL aggregation, the main
+//!                  RISC-V's bookkeeping (step 7)
+//! * [`metrics`]  — counters that feed the full-system simulator's
+//!                  Eq. 6/7 reports
+//! * [`pipeline`] — the single-threaded end-to-end mapper
+//! * [`scheduler`]— the threaded driver (stage threads + channels;
+//!                  std::thread + mpsc — this offline build has no tokio)
+
+pub mod batcher;
+pub mod fifo;
+pub mod metrics;
+pub mod pipeline;
+pub mod router;
+pub mod scheduler;
+pub mod state;
+
+pub use pipeline::{FilterPolicy, FinalMapping, Pipeline, PipelineConfig};
+pub use router::{Router, Target};

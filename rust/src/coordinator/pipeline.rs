@@ -1,0 +1,483 @@
+//! The end-to-end mapping pipeline (paper Fig. 6, host realization):
+//! seed/route -> FIFO admission -> batched linear filter -> batched
+//! affine alignment -> traceback -> best-so-far aggregation.
+//!
+//! The pipeline is engine-agnostic ([`WfEngine`]): the production path
+//! runs the AOT-compiled Pallas kernels through PJRT
+//! ([`crate::runtime::XlaEngine`]); lowTh (RISC-V-offload) pairs always
+//! run on the scalar Rust path, mirroring the paper's heterogeneous
+//! split.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::align::traceback::{script_cost, traceback};
+use crate::align::Cigar;
+use crate::genome::ReadRecord;
+use crate::index::MinimizerIndex;
+use crate::params::{ETH, SAT_AFFINE};
+use crate::pim::DartPimConfig;
+use crate::runtime::{RustEngine, WfEngine};
+
+use super::batcher::{Batch, Batcher, WorkTag};
+use super::fifo::{FifoEntry, PushResult, ReadsFifo};
+use super::metrics::Metrics;
+use super::router::{Router, Target};
+use super::state::{AffineOutcome, BestSoFar};
+
+/// Which filtered instances advance to affine alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FilterPolicy {
+    /// Every instance with linear distance <= eth (matches the paper's
+    /// measured affine workload; default).
+    #[default]
+    AllPassing,
+    /// Only the minimum-distance instance of each routed pair (paper
+    /// Fig. 6 step 4's literal description; ablation).
+    MinOnly,
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub dart: DartPimConfig,
+    /// Engine flush size (use the largest artifact batch).
+    pub batch_size: usize,
+    pub filter_policy: FilterPolicy,
+    /// Also try the reverse-complement orientation of every read
+    /// (real sequencers emit both strands; the paper elides this, but a
+    /// practical mapper needs it — extension feature, DESIGN.md §7).
+    pub handle_revcomp: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            dart: DartPimConfig::default(),
+            batch_size: 256,
+            filter_policy: FilterPolicy::AllPassing,
+            handle_revcomp: false,
+        }
+    }
+}
+
+/// Final mapping decision for one read.
+#[derive(Debug, Clone)]
+pub struct FinalMapping {
+    pub read_id: u32,
+    pub pos: i64,
+    pub dist: i32,
+    pub cigar: Cigar,
+    pub candidates: u32,
+    /// true if the read mapped in reverse-complement orientation.
+    pub reverse: bool,
+}
+
+/// The mapper.
+pub struct Pipeline<'a, E: WfEngine> {
+    pub index: &'a MinimizerIndex,
+    pub router: Router,
+    pub cfg: PipelineConfig,
+    engine: E,
+    riscv_engine: RustEngine,
+}
+
+impl<'a, E: WfEngine> Pipeline<'a, E> {
+    pub fn new(index: &'a MinimizerIndex, cfg: PipelineConfig, engine: E) -> Self {
+        let router = Router::new(index, &cfg.dart);
+        Pipeline { index, router, cfg, engine, riscv_engine: RustEngine }
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    /// Map a read set end to end. Returns per-read decisions (indexed by
+    /// read id) and run metrics.
+    pub fn map_reads(&mut self, reads: &[ReadRecord]) -> Result<(Vec<Option<FinalMapping>>, Metrics)> {
+        let t_start = Instant::now();
+        let mut metrics = Metrics { n_reads: reads.len() as u64, ..Default::default() };
+        let mut best = BestSoFar::new(reads.len());
+        let mut fifos: HashMap<u32, ReadsFifo> = HashMap::new();
+
+        // ---- Stage 1+2: seed, route, admit, build linear work ----
+        let t0 = Instant::now();
+        // reverse-complement orientations, materialized once per read so
+        // the zero-copy batches can borrow them (empty when disabled)
+        let rc_seqs: Vec<crate::genome::encode::Seq> = if self.cfg.handle_revcomp {
+            reads.iter().map(|r| crate::genome::revcomp(&r.seq)).collect()
+        } else {
+            Vec::new()
+        };
+        let mut linear_batcher = Batcher::new(self.cfg.batch_size, self.index.read_len);
+        let mut linear_batches: Vec<Batch<'_>> = Vec::new();
+        let mut riscv_items: Vec<(WorkTag, &[u8])> = Vec::new();
+        let mut next_pair = 0u32;
+        let mut oriented: Vec<(&[u8], bool)> = Vec::with_capacity(2);
+        for read in reads {
+            oriented.clear();
+            oriented.push((read.seq.as_slice(), false));
+            if self.cfg.handle_revcomp {
+                oriented.push((rc_seqs[read.id as usize].as_slice(), true));
+            }
+            for &(seq, reverse) in &oriented {
+            for pair in self.router.route(self.index, read.id, seq) {
+                let pair_id = next_pair;
+                next_pair += 1;
+                let occs = self.index.occurrences(pair.kmer);
+                match pair.target {
+                    Target::Riscv => {
+                        metrics.riscv_pairs += 1;
+                        for &pos in occs {
+                            riscv_items.push((
+                                WorkTag {
+                                    read_id: read.id,
+                                    pair_id,
+                                    ref_pos: pos,
+                                    read_offset: pair.read_offset,
+                                    pl: pos as i64 - pair.read_offset as i64,
+                                    xbar: u32::MAX, // RISC-V pool, not a crossbar
+                                    reverse,
+                                },
+                                seq,
+                            ));
+                        }
+                    }
+                    Target::Xbar { first, count } => {
+                        // FIFO admission on the owning crossbar
+                        let fifo = fifos.entry(first).or_insert_with(|| {
+                            ReadsFifo::new(
+                                self.cfg.dart.fifo_capacity_reads(),
+                                self.cfg.dart.max_reads,
+                            )
+                        });
+                        let entry =
+                            FifoEntry { read_id: read.id, read_offset: pair.read_offset };
+                        match fifo.push(entry) {
+                            PushResult::CapExceeded => {
+                                metrics.dropped_pairs += 1;
+                                continue;
+                            }
+                            PushResult::Full => {
+                                // batch-mode backpressure: the entry is
+                                // consumed immediately below, so the FIFO
+                                // drains as fast as it fills
+                                fifo.pop();
+                                if fifo.push(entry) == PushResult::CapExceeded {
+                                    metrics.dropped_pairs += 1;
+                                    continue;
+                                }
+                            }
+                            PushResult::Accepted => {}
+                        }
+                        fifo.pop(); // consumed by this round's linear iteration
+                        metrics.routed_pairs += 1;
+                        *metrics.pairs_per_xbar.entry(first).or_default() += 1;
+                        for sub in 1..count {
+                            *metrics.pairs_per_xbar.entry(first + sub).or_default() += 1;
+                        }
+                        for (i, &pos) in occs.iter().enumerate() {
+                            let tag = WorkTag {
+                                read_id: read.id,
+                                pair_id,
+                                ref_pos: pos,
+                                read_offset: pair.read_offset,
+                                pl: pos as i64 - pair.read_offset as i64,
+                                // which of the minimizer's crossbars
+                                // holds this occurrence's segment row
+                                xbar: first + (i / self.cfg.dart.linear_rows) as u32,
+                                reverse,
+                            };
+                            let win = self.index.window_for(pos, pair.read_offset as usize);
+                            metrics.linear_instances += 1;
+                            if let Some(b) = linear_batcher.push(tag, seq, win) {
+                                linear_batches.push(b);
+                            }
+                        }
+                    }
+                }
+            }
+            }
+        }
+        if let Some(b) = linear_batcher.flush() {
+            linear_batches.push(b);
+        }
+        metrics.t_seed = t0.elapsed();
+
+        // ---- Stage 3: batched linear filter ----
+        let t0 = Instant::now();
+        // pair_id -> (best dist, tag, window) for MinOnly
+        let mut pair_best: HashMap<u32, (i32, WorkTag, Vec<u8>)> = HashMap::new();
+        let mut affine_batcher = Batcher::new(self.cfg.batch_size, self.index.read_len);
+        let mut affine_batches: Vec<Batch<'_>> = Vec::new();
+        for batch in &mut linear_batches {
+            let ww: Vec<&[u8]> = batch.wins.iter().map(|v| v.as_slice()).collect();
+            let out = self.engine.linear_batch(&batch.reads, &ww)?;
+            drop(ww);
+            metrics.linear_batches += 1;
+            for i in 0..batch.tags.len() {
+                let tag = batch.tags[i];
+                if out.best[i] > ETH as i32 {
+                    continue; // filtered out
+                }
+                metrics.filter_passed += 1;
+                match self.cfg.filter_policy {
+                    FilterPolicy::AllPassing => {
+                        metrics.affine_instances += 1;
+                        *metrics.affine_per_xbar.entry(tag.xbar).or_default() += 1;
+                        // window moves to the affine stage (each is used
+                        // at most once — §Perf opt 1)
+                        let win = std::mem::take(&mut batch.wins[i]);
+                        if let Some(b) = affine_batcher.push(tag, batch.reads[i], win) {
+                            affine_batches.push(b);
+                        }
+                    }
+                    FilterPolicy::MinOnly => {
+                        let e = pair_best.entry(tag.pair_id);
+                        match e {
+                            std::collections::hash_map::Entry::Occupied(mut o) => {
+                                if out.best[i] < o.get().0 {
+                                    *o.get_mut() =
+                                        (out.best[i], tag, std::mem::take(&mut batch.wins[i]));
+                                }
+                            }
+                            std::collections::hash_map::Entry::Vacant(v) => {
+                                v.insert((out.best[i], tag, std::mem::take(&mut batch.wins[i])));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if self.cfg.filter_policy == FilterPolicy::MinOnly {
+            let mut winners: Vec<(i32, WorkTag, Vec<u8>)> = pair_best.into_values().collect();
+            winners.sort_by_key(|(_, t, _)| (t.read_id, t.pair_id));
+            for (_, tag, win) in winners {
+                metrics.affine_instances += 1;
+                *metrics.affine_per_xbar.entry(tag.xbar).or_default() += 1;
+                let seq: &[u8] = if tag.reverse {
+                    &rc_seqs[tag.read_id as usize]
+                } else {
+                    &reads[tag.read_id as usize].seq
+                };
+                if let Some(b) = affine_batcher.push(tag, seq, win) {
+                    affine_batches.push(b);
+                }
+            }
+        }
+        if let Some(b) = affine_batcher.flush() {
+            affine_batches.push(b);
+        }
+        metrics.t_linear = t0.elapsed();
+
+        // ---- Stage 4: batched affine alignment + traceback ----
+        let t0 = Instant::now();
+        for batch in &affine_batches {
+            let ww: Vec<&[u8]> = batch.wins.iter().map(|v| v.as_slice()).collect();
+            let out = self.engine.affine_batch(&batch.reads, &ww)?;
+            metrics.affine_batches += 1;
+            let tt = Instant::now();
+            for (i, tag) in batch.tags.iter().enumerate() {
+                if let Some(outcome) = self.decode_affine(
+                    tag,
+                    out.best[i],
+                    out.best_j[i] as usize,
+                    &out.dirs[i],
+                    batch.reads[i],
+                    &mut metrics,
+                ) {
+                    best.update(outcome);
+                }
+            }
+            metrics.t_traceback += tt.elapsed();
+        }
+        metrics.t_affine = t0.elapsed();
+
+        // ---- RISC-V offload path (scalar Rust engine) ----
+        for (tag, seq) in riscv_items {
+            let win = self.index.window_for(tag.ref_pos, tag.read_offset as usize);
+            metrics.riscv_linear_instances += 1;
+            let lin = self.riscv_engine.linear_batch(&[seq], &[&win])?;
+            if lin.best[0] > ETH as i32 {
+                continue;
+            }
+            metrics.riscv_affine_instances += 1;
+            let aff = self.riscv_engine.affine_batch(&[seq], &[&win])?;
+            if let Some(outcome) = self.decode_affine(
+                &tag,
+                aff.best[0],
+                aff.best_j[0] as usize,
+                &aff.dirs[0],
+                seq,
+                &mut metrics,
+            ) {
+                best.update(outcome);
+            }
+        }
+
+        // ---- Finalize ----
+        metrics.reads_with_candidates = best.mapped_count() as u64;
+        metrics.t_total = t_start.elapsed();
+        let mappings = best
+            .into_mappings()
+            .into_iter()
+            .enumerate()
+            .map(|(id, m)| {
+                m.map(|b| FinalMapping {
+                    read_id: id as u32,
+                    pos: b.pos,
+                    dist: b.dist,
+                    cigar: b.cigar,
+                    candidates: b.candidates,
+                    reverse: b.reverse,
+                })
+            })
+            .collect();
+        Ok((mappings, metrics))
+    }
+
+    /// Turn one affine result into an outcome (traceback + position
+    /// refinement). None for saturated or irrecoverable paths.
+    fn decode_affine(
+        &self,
+        tag: &WorkTag,
+        dist: i32,
+        best_j: usize,
+        dirs: &[u8],
+        read: &[u8],
+        metrics: &mut Metrics,
+    ) -> Option<AffineOutcome> {
+        if dist >= SAT_AFFINE {
+            return None;
+        }
+        match traceback(dirs, read.len(), best_j) {
+            Ok(aln) => {
+                debug_assert_eq!(script_cost(&aln.ops, aln.j_end), dist, "cost identity");
+                Some(AffineOutcome {
+                    read_id: tag.read_id,
+                    pos: aln.refined_pos(tag.pl),
+                    dist,
+                    cigar: Cigar::from_ops(&aln.ops),
+                    reverse: tag.reverse,
+                })
+            }
+            Err(_) => {
+                metrics.traceback_failures += 1;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::synth::{ReadSimConfig, SynthConfig};
+    use crate::params::{K, READ_LEN, W};
+
+    fn setup(n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
+        let g = SynthConfig { len: 80_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = ReadSimConfig { n_reads, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        (idx, reads)
+    }
+
+    /// Small synthetic genomes have few high-frequency minimizers, so
+    /// pin lowTh = 0 to exercise the crossbar path (on human-scale data
+    /// the mean minimizer frequency is ~12 and the default lowTh = 3
+    /// sends only 0.16 % of work to the RISC-V side).
+    fn cfg() -> PipelineConfig {
+        PipelineConfig {
+            dart: crate::pim::DartPimConfig { low_th: 0, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn maps_simulated_reads_near_truth() {
+        let (idx, reads) = setup(60);
+        let mut p = Pipeline::new(&idx, cfg(), RustEngine);
+        let (mappings, metrics) = p.map_reads(&reads).unwrap();
+        assert_eq!(mappings.len(), 60);
+        let mut near = 0;
+        for r in &reads {
+            if let Some(m) = &mappings[r.id as usize] {
+                if (m.pos - r.truth_pos as i64).abs() <= 5 {
+                    near += 1;
+                }
+            }
+        }
+        assert!(near >= 54, "near = {near}/60; metrics: {}", metrics.summary());
+        assert!(metrics.linear_instances > 0);
+        assert!(metrics.affine_instances > 0);
+        assert_eq!(metrics.traceback_failures, 0);
+    }
+
+    #[test]
+    fn cigar_and_distance_consistency() {
+        let (idx, reads) = setup(30);
+        let mut p = Pipeline::new(&idx, PipelineConfig::default(), RustEngine);
+        let (mappings, _) = p.map_reads(&reads).unwrap();
+        for m in mappings.into_iter().flatten() {
+            assert_eq!(m.cigar.read_len() as usize, READ_LEN);
+            assert!(m.dist <= 2 * ETH as i32 + 1 + SAT_AFFINE); // sane
+            assert!(m.candidates >= 1);
+        }
+    }
+
+    #[test]
+    fn min_only_policy_reduces_affine_work() {
+        let (idx, reads) = setup(40);
+        let all = {
+            let mut p = Pipeline::new(&idx, cfg(), RustEngine);
+            p.map_reads(&reads).unwrap().1
+        };
+        let min_only = {
+            let c = PipelineConfig { filter_policy: FilterPolicy::MinOnly, ..cfg() };
+            let mut p = Pipeline::new(&idx, c, RustEngine);
+            p.map_reads(&reads).unwrap().1
+        };
+        assert!(min_only.affine_instances <= all.affine_instances);
+        assert!(min_only.affine_instances >= 1);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (idx, reads) = setup(25);
+        let run = || {
+            let mut p = Pipeline::new(&idx, PipelineConfig::default(), RustEngine);
+            p.map_reads(&reads).unwrap().0
+        };
+        let a = run();
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            match (x, y) {
+                (None, None) => {}
+                (Some(x), Some(y)) => {
+                    assert_eq!((x.pos, x.dist, x.cigar.to_string()), (y.pos, y.dist, y.cigar.to_string()))
+                }
+                _ => panic!("mapping presence differs between runs"),
+            }
+        }
+    }
+
+    #[test]
+    fn metrics_bridge_to_simulator() {
+        let (idx, reads) = setup(30);
+        let mut p = Pipeline::new(&idx, PipelineConfig::default(), RustEngine);
+        let (_, metrics) = p.map_reads(&reads).unwrap();
+        let counts = metrics.to_sim_counts();
+        let report = crate::simulator::report::build_report(
+            &counts,
+            &p.cfg.dart,
+            crate::pim::xbar_sim::CostSource::PaperTable4,
+            crate::simulator::TimingMode::PaperSerial,
+        );
+        assert!(report.exec_time_s > 0.0);
+        assert!(report.energy.total() > 0.0);
+        assert!(report.throughput() > 0.0);
+    }
+}

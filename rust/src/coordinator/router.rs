@@ -1,0 +1,177 @@
+//! Routing: which crossbar (or the RISC-V pool) evaluates a (read,
+//! minimizer) pair (paper §V-C; Figs. 5/7).
+//!
+//! The assignment is the offline-indexing one: each reference minimizer
+//! with frequency above lowTh owns `ceil(occ / 32)` crossbars; the rest
+//! are computed by the DP-RISC-V cores. The PIM controller hierarchy
+//! forwards a read only toward chips/banks owning its minimizers — here
+//! that is a flat map lookup plus [`crate::pim::controller::addr_of`]
+//! for the hierarchical address.
+
+use std::collections::HashMap;
+
+use crate::index::MinimizerIndex;
+use crate::pim::DartPimConfig;
+use crate::seeding::{seed_read, ReadSeed};
+
+/// Where a pair executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// First crossbar id + number of crossbars for this minimizer.
+    Xbar { first: u32, count: u32 },
+    /// lowTh minimizer -> DP-RISC-V pool.
+    Riscv,
+}
+
+/// One routed work unit: a read paired with one of its minimizers.
+#[derive(Debug, Clone)]
+pub struct RoutedPair {
+    pub read_id: u32,
+    pub kmer: u64,
+    pub read_offset: u32,
+    pub n_occurrences: usize,
+    pub target: Target,
+}
+
+/// The routing table.
+pub struct Router {
+    assignment: HashMap<u64, (u32, u32)>,
+    pub xbars_used: u32,
+    low_th: usize,
+}
+
+impl Router {
+    /// Build from the offline index (deterministic layout).
+    pub fn new(index: &MinimizerIndex, cfg: &DartPimConfig) -> Self {
+        let mut assignment = HashMap::new();
+        let mut next = 0u32;
+        let mut minis: Vec<(u64, usize)> = index.iter().map(|(m, o)| (m, o.len())).collect();
+        minis.sort_unstable();
+        for (m, occ) in minis {
+            if occ > cfg.low_th {
+                let n = occ.div_ceil(cfg.linear_rows) as u32;
+                assignment.insert(m, (next, n));
+                next += n;
+            }
+        }
+        Router { assignment, xbars_used: next, low_th: cfg.low_th }
+    }
+
+    /// Target of one minimizer (None if it does not occur in the
+    /// reference at all — such pairs produce no work).
+    pub fn target_of(&self, seed: &ReadSeed) -> Option<Target> {
+        if seed.n_occurrences == 0 {
+            return None;
+        }
+        Some(match self.assignment.get(&seed.kmer) {
+            Some(&(first, count)) => Target::Xbar { first, count },
+            None => {
+                debug_assert!(seed.n_occurrences <= self.low_th);
+                Target::Riscv
+            }
+        })
+    }
+
+    /// Route one read: seed it and target every productive minimizer.
+    pub fn route(&self, index: &MinimizerIndex, read_id: u32, read: &[u8]) -> Vec<RoutedPair> {
+        seed_read(index, read)
+            .into_iter()
+            .filter_map(|seed| {
+                self.target_of(&seed).map(|target| RoutedPair {
+                    read_id,
+                    kmer: seed.kmer,
+                    read_offset: seed.read_offset,
+                    n_occurrences: seed.n_occurrences,
+                    target,
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::synth::{ReadSimConfig, SynthConfig};
+    use crate::params::{K, READ_LEN, W};
+
+    fn setup() -> (MinimizerIndex, Vec<crate::genome::ReadRecord>, Router) {
+        let g = SynthConfig { len: 100_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads =
+            ReadSimConfig { n_reads: 50, ..Default::default() }.simulate(&idx.reference, |p| p as u32);
+        let router = Router::new(&idx, &DartPimConfig::default());
+        (idx, reads, router)
+    }
+
+    #[test]
+    fn routing_is_deterministic() {
+        let (idx, reads, router) = setup();
+        let router2 = Router::new(&idx, &DartPimConfig::default());
+        for r in &reads {
+            let a = router.route(&idx, r.id, &r.seq);
+            let b = router2.route(&idx, r.id, &r.seq);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.target, y.target);
+                assert_eq!(x.kmer, y.kmer);
+            }
+        }
+    }
+
+    #[test]
+    fn targets_respect_low_th() {
+        let (idx, reads, router) = setup();
+        let cfg = DartPimConfig::default();
+        for r in &reads {
+            for p in router.route(&idx, r.id, &r.seq) {
+                match p.target {
+                    Target::Riscv => assert!(p.n_occurrences <= cfg.low_th),
+                    Target::Xbar { count, .. } => {
+                        assert!(p.n_occurrences > cfg.low_th);
+                        assert_eq!(count as usize, p.n_occurrences.div_ceil(cfg.linear_rows));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn crossbar_ranges_do_not_overlap() {
+        let (idx, _, router) = setup();
+        let mut spans: Vec<(u32, u32)> = idx
+            .iter()
+            .filter_map(|(m, o)| {
+                let seed = ReadSeed { kmer: m, read_offset: 0, n_occurrences: o.len() };
+                match router.target_of(&seed) {
+                    Some(Target::Xbar { first, count }) => Some((first, first + count)),
+                    _ => None,
+                }
+            })
+            .collect();
+        spans.sort_unstable();
+        for w in spans.windows(2) {
+            assert!(w[0].1 <= w[1].0, "overlapping crossbar ranges {w:?}");
+        }
+        if let Some(&(_, end)) = spans.last() {
+            assert_eq!(end, router.xbars_used);
+        }
+    }
+
+    #[test]
+    fn routed_pairs_fit_hardware() {
+        let (idx, reads, router) = setup();
+        let cfg = DartPimConfig::default();
+        for r in &reads {
+            for p in router.route(&idx, r.id, &r.seq) {
+                if let Target::Xbar { first, count } = p.target {
+                    assert!(((first + count) as usize) <= cfg.total_xbars());
+                    // hierarchical address decodes for every sub-crossbar
+                    for x in first..first + count {
+                        let _ = crate::pim::controller::addr_of(&cfg, x as usize);
+                    }
+                }
+            }
+        }
+    }
+}

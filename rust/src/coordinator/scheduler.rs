@@ -1,0 +1,188 @@
+//! Threaded streaming driver (std::thread + mpsc; this offline build has
+//! no tokio — DESIGN.md §6).
+//!
+//! Stage threads mirror the hardware's concurrency: a *producer* streams
+//! and routes reads (the sequencer + main RISC-V), a *compute* thread
+//! owns the WF engine and processes batches (the PIM module), and the
+//! caller's thread aggregates results (the main RISC-V's best-so-far
+//! bookkeeping). Chunked hand-off bounds memory like the Reads FIFO
+//! bounds the hardware stream.
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::genome::ReadRecord;
+use crate::index::MinimizerIndex;
+use crate::runtime::WfEngine;
+
+use super::metrics::Metrics;
+use super::pipeline::{FinalMapping, Pipeline, PipelineConfig};
+
+/// Chunked streaming run: reads flow producer -> compute in chunks of
+/// `chunk`; per-chunk results merge in arrival order (the per-read
+/// best-so-far state makes the merge order-insensitive).
+pub fn run_streaming<E, F>(
+    index: &MinimizerIndex,
+    cfg: PipelineConfig,
+    engine_factory: F,
+    reads: Vec<ReadRecord>,
+    chunk: usize,
+) -> Result<(Vec<Option<FinalMapping>>, Metrics)>
+where
+    E: WfEngine,
+    F: FnOnce() -> Result<E> + Send,
+{
+    assert!(chunk >= 1);
+    let n_reads = reads.len();
+    let (tx_work, rx_work) = mpsc::sync_channel::<Vec<ReadRecord>>(2); // bounded: backpressure
+    let (tx_res, rx_res) = mpsc::channel::<(Vec<Option<FinalMapping>>, Metrics)>();
+
+    thread::scope(|s| -> Result<()> {
+        // producer: chunk the stream (ids stay global)
+        s.spawn(move || {
+            let mut reads = reads;
+            while !reads.is_empty() {
+                let rest = reads.split_off(reads.len().min(chunk));
+                let head = std::mem::replace(&mut reads, rest);
+                if tx_work.send(head).is_err() {
+                    return; // compute side hung up
+                }
+            }
+        });
+
+        // compute: owns the engine and a pipeline per chunk
+        let idx = &*index;
+        s.spawn(move || {
+            // the engine is constructed on its owning thread (the PJRT
+            // client is not Send)
+            let Ok(engine) = engine_factory() else { return };
+            let mut pipeline = Pipeline::new(idx, cfg, engine);
+            while let Ok(chunk_reads) = rx_work.recv() {
+                // re-id within the chunk, then restore global ids
+                let base = chunk_reads.first().map(|r| r.id).unwrap_or(0);
+                let local: Vec<ReadRecord> = chunk_reads
+                    .iter()
+                    .map(|r| ReadRecord { id: r.id - base, ..r.clone() })
+                    .collect();
+                match pipeline.map_reads(&local) {
+                    Ok((mut mappings, metrics)) => {
+                        for m in mappings.iter_mut().flatten() {
+                            m.read_id += base;
+                        }
+                        if tx_res.send((mappings, metrics)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => return, // drop the channel; caller sees shortfall
+                }
+            }
+        });
+        Ok(())
+    })?;
+
+    // aggregate
+    let mut all: Vec<Option<FinalMapping>> = vec![None; n_reads];
+    let mut total = Metrics::default();
+    let mut chunks = 0usize;
+    let mut covered = 0usize;
+    while let Ok((mappings, m)) = rx_res.recv() {
+        chunks += 1;
+        covered += mappings.len();
+        for fm in mappings.into_iter().flatten() {
+            let id = fm.read_id as usize;
+            all[id] = Some(fm);
+        }
+        merge_metrics(&mut total, m);
+    }
+    if covered != n_reads {
+        return Err(anyhow!("compute stage failed after {covered}/{n_reads} reads ({chunks} chunks)"));
+    }
+    Ok((all, total))
+}
+
+fn merge_metrics(into: &mut Metrics, m: Metrics) {
+    into.n_reads += m.n_reads;
+    into.routed_pairs += m.routed_pairs;
+    into.riscv_pairs += m.riscv_pairs;
+    into.dropped_pairs += m.dropped_pairs;
+    into.linear_instances += m.linear_instances;
+    into.affine_instances += m.affine_instances;
+    into.riscv_linear_instances += m.riscv_linear_instances;
+    into.riscv_affine_instances += m.riscv_affine_instances;
+    into.filter_passed += m.filter_passed;
+    into.reads_with_candidates += m.reads_with_candidates;
+    into.linear_batches += m.linear_batches;
+    into.affine_batches += m.affine_batches;
+    into.traceback_failures += m.traceback_failures;
+    for (k, v) in m.pairs_per_xbar {
+        *into.pairs_per_xbar.entry(k).or_default() += v;
+    }
+    for (k, v) in m.affine_per_xbar {
+        *into.affine_per_xbar.entry(k).or_default() += v;
+    }
+    into.t_seed += m.t_seed;
+    into.t_linear += m.t_linear;
+    into.t_affine += m.t_affine;
+    into.t_traceback += m.t_traceback;
+    into.t_total += m.t_total;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::synth::{ReadSimConfig, SynthConfig};
+    use crate::params::{K, READ_LEN, W};
+    use crate::runtime::RustEngine;
+
+    fn setup(n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
+        let g = SynthConfig { len: 60_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = ReadSimConfig { n_reads, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        (idx, reads)
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        let (idx, reads) = setup(40);
+        let (batch, _) = {
+            let mut p = Pipeline::new(&idx, PipelineConfig::default(), RustEngine);
+            p.map_reads(&reads).unwrap()
+        };
+        let (streamed, metrics) =
+            run_streaming(&idx, PipelineConfig::default(), || Ok(RustEngine), reads.clone(), 7).unwrap();
+        assert_eq!(metrics.n_reads, 40);
+        for (a, b) in batch.iter().zip(&streamed) {
+            match (a, b) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!((a.pos, a.dist), (b.pos, b.dist));
+                }
+                _ => panic!("batch vs streaming presence mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_of_one_works() {
+        let (idx, reads) = setup(5);
+        let cfg = PipelineConfig {
+            dart: crate::pim::DartPimConfig { low_th: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let (m, metrics) = run_streaming(&idx, cfg, || Ok(RustEngine), reads, 1).unwrap();
+        assert_eq!(m.len(), 5);
+        assert!(metrics.linear_batches >= 5);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let (idx, _) = setup(1);
+        let (m, metrics) =
+            run_streaming(&idx, PipelineConfig::default(), || Ok(RustEngine), Vec::new(), 8).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(metrics.n_reads, 0);
+    }
+}

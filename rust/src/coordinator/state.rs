@@ -1,0 +1,131 @@
+//! Best-so-far mapping state (paper Fig. 6 step 7): the main RISC-V
+//! keeps, per read, the minimal-distance PL seen so far across all
+//! crossbars' affine results, with a deterministic tie-break so the
+//! outcome is independent of arrival order.
+
+use crate::align::Cigar;
+
+/// One affine result delivered to the aggregator.
+#[derive(Debug, Clone)]
+pub struct AffineOutcome {
+    pub read_id: u32,
+    /// Refined mapping position (PL + traceback start offset).
+    pub pos: i64,
+    pub dist: i32,
+    pub cigar: Cigar,
+    /// Reverse-complement orientation.
+    pub reverse: bool,
+}
+
+/// Final per-read decision.
+#[derive(Debug, Clone)]
+pub struct BestMapping {
+    pub pos: i64,
+    pub dist: i32,
+    pub cigar: Cigar,
+    /// How many candidate outcomes were considered.
+    pub candidates: u32,
+    pub reverse: bool,
+}
+
+/// Order-independent aggregation: smaller (dist, pos) wins.
+#[derive(Debug, Default)]
+pub struct BestSoFar {
+    slots: Vec<Option<BestMapping>>,
+}
+
+impl BestSoFar {
+    pub fn new(n_reads: usize) -> Self {
+        BestSoFar { slots: vec![None; n_reads] }
+    }
+
+    /// Fold one outcome in.
+    pub fn update(&mut self, o: AffineOutcome) {
+        let slot = &mut self.slots[o.read_id as usize];
+        match slot {
+            None => {
+                *slot = Some(BestMapping {
+                    pos: o.pos,
+                    dist: o.dist,
+                    cigar: o.cigar,
+                    candidates: 1,
+                    reverse: o.reverse,
+                })
+            }
+            Some(b) => {
+                b.candidates += 1;
+                // forward orientation wins ties (deterministic)
+                if (o.dist, o.pos, o.reverse) < (b.dist, b.pos, b.reverse) {
+                    b.pos = o.pos;
+                    b.dist = o.dist;
+                    b.cigar = o.cigar;
+                    b.reverse = o.reverse;
+                }
+            }
+        }
+    }
+
+    /// Final mapping of one read.
+    pub fn get(&self, read_id: u32) -> Option<&BestMapping> {
+        self.slots.get(read_id as usize).and_then(|s| s.as_ref())
+    }
+
+    /// Consume into the per-read decision vector.
+    pub fn into_mappings(self) -> Vec<Option<BestMapping>> {
+        self.slots
+    }
+
+    pub fn mapped_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn o(read_id: u32, pos: i64, dist: i32) -> AffineOutcome {
+        AffineOutcome { read_id, pos, dist, cigar: Cigar(vec![]), reverse: false }
+    }
+
+    #[test]
+    fn keeps_minimum() {
+        let mut s = BestSoFar::new(2);
+        s.update(o(0, 100, 5));
+        s.update(o(0, 50, 2));
+        s.update(o(0, 70, 9));
+        let b = s.get(0).unwrap();
+        assert_eq!((b.pos, b.dist, b.candidates), (50, 2, 3));
+        assert!(s.get(1).is_none());
+        assert_eq!(s.mapped_count(), 1);
+    }
+
+    #[test]
+    fn tie_break_leftmost() {
+        let mut s = BestSoFar::new(1);
+        s.update(o(0, 100, 3));
+        s.update(o(0, 40, 3));
+        assert_eq!(s.get(0).unwrap().pos, 40);
+    }
+
+    #[test]
+    fn order_independent_property() {
+        check("best-so-far order independence", 0xBE57, 50, |rng| {
+            let n = rng.gen_range(1..20usize);
+            let outcomes: Vec<AffineOutcome> = (0..n)
+                .map(|_| o(0, rng.gen_range(0..1000i64), rng.gen_range(0..30i32)))
+                .collect();
+            let mut forward = BestSoFar::new(1);
+            for oc in outcomes.iter().cloned() {
+                forward.update(oc);
+            }
+            let mut reverse = BestSoFar::new(1);
+            for oc in outcomes.iter().rev().cloned() {
+                reverse.update(oc);
+            }
+            let (f, r) = (forward.get(0).unwrap(), reverse.get(0).unwrap());
+            assert_eq!((f.pos, f.dist), (r.pos, r.dist));
+        });
+    }
+}

@@ -1,0 +1,127 @@
+//! Accuracy evaluation (paper §VII-A).
+//!
+//! The paper measures the fraction of DART-PIM mappings that exactly
+//! match BWA-MEM's. Our oracle is the exhaustive CPU mapper
+//! ([`crate::baselines::CpuMapper`]); we additionally report agreement
+//! with the simulated read origins (possible because our reads are
+//! synthetic), which the paper could not measure directly.
+
+use crate::baselines::CpuMapper;
+use crate::coordinator::FinalMapping;
+use crate::genome::ReadRecord;
+use crate::index::MinimizerIndex;
+
+/// Accuracy summary.
+#[derive(Debug, Clone)]
+pub struct AccuracyReport {
+    pub n_reads: usize,
+    pub mapped: usize,
+    /// Agreement with the oracle mapper's position (exact).
+    pub oracle_exact: usize,
+    /// Agreement with the oracle within +-tolerance.
+    pub oracle_near: usize,
+    /// Oracle itself produced a mapping.
+    pub oracle_mapped: usize,
+    /// Agreement with the simulated origin within +-tolerance.
+    pub truth_near: usize,
+    pub tolerance: i64,
+}
+
+impl AccuracyReport {
+    /// The paper's §VII-A metric: fraction of our mappings that match
+    /// the oracle (over reads where both mapped).
+    pub fn accuracy_vs_oracle(&self) -> f64 {
+        if self.oracle_mapped == 0 {
+            return 0.0;
+        }
+        self.oracle_near as f64 / self.oracle_mapped as f64
+    }
+
+    /// Fraction of all reads mapped within tolerance of their origin.
+    pub fn accuracy_vs_truth(&self) -> f64 {
+        if self.n_reads == 0 {
+            return 0.0;
+        }
+        self.truth_near as f64 / self.n_reads as f64
+    }
+}
+
+/// Compare pipeline mappings against the oracle and the simulated truth.
+pub fn evaluate_accuracy(
+    index: &MinimizerIndex,
+    reads: &[ReadRecord],
+    mappings: &[Option<FinalMapping>],
+    tolerance: i64,
+) -> AccuracyReport {
+    assert_eq!(reads.len(), mappings.len());
+    let oracle = CpuMapper::new(index);
+    let mut r = AccuracyReport {
+        n_reads: reads.len(),
+        mapped: 0,
+        oracle_exact: 0,
+        oracle_near: 0,
+        oracle_mapped: 0,
+        truth_near: 0,
+        tolerance,
+    };
+    for read in reads {
+        let ours = &mappings[read.id as usize];
+        let oracle_m = oracle.map(&read.seq);
+        if let Some(o) = &oracle_m {
+            r.oracle_mapped += 1;
+            if let Some(m) = ours {
+                if m.pos == o.pos {
+                    r.oracle_exact += 1;
+                }
+                if (m.pos - o.pos).abs() <= tolerance {
+                    r.oracle_near += 1;
+                }
+            }
+        }
+        if let Some(m) = ours {
+            r.mapped += 1;
+            if (m.pos - read.truth_pos as i64).abs() <= tolerance {
+                r.truth_near += 1;
+            }
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Pipeline, PipelineConfig};
+    use crate::genome::synth::{ReadSimConfig, SynthConfig};
+    use crate::params::{K, READ_LEN, W};
+    use crate::pim::DartPimConfig;
+    use crate::runtime::RustEngine;
+
+    #[test]
+    fn pipeline_accuracy_is_high_on_synthetic_data() {
+        let g = SynthConfig { len: 80_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = ReadSimConfig { n_reads: 50, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        let cfg = PipelineConfig {
+            dart: DartPimConfig { low_th: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut p = Pipeline::new(&idx, cfg, RustEngine);
+        let (mappings, _) = p.map_reads(&reads).unwrap();
+        let rep = evaluate_accuracy(&idx, &reads, &mappings, 5);
+        assert!(rep.accuracy_vs_truth() > 0.9, "vs truth: {}", rep.accuracy_vs_truth());
+        assert!(rep.accuracy_vs_oracle() > 0.9, "vs oracle: {}", rep.accuracy_vs_oracle());
+        assert!(rep.oracle_exact <= rep.oracle_near);
+        assert!(rep.mapped <= rep.n_reads);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let g = SynthConfig { len: 30_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let rep = evaluate_accuracy(&idx, &[], &[], 5);
+        assert_eq!(rep.accuracy_vs_truth(), 0.0);
+        assert_eq!(rep.accuracy_vs_oracle(), 0.0);
+    }
+}

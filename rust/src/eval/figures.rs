@@ -1,0 +1,253 @@
+//! Rendering of the paper's tables and figures as aligned-text tables
+//! (consumed by the CLI `figures` subcommand and the bench harnesses).
+//!
+//! Figure data comes from two sources, always labelled: the paper's own
+//! reported numbers (`baselines::published`) and our model
+//! (`simulator::report` over either the paper workload statistics or a
+//! measured synthetic run).
+
+use crate::baselines::published::{paper_dartpim_rows, published_systems, DATASET_READS};
+use crate::pim::area::{AreaBreakdown, AreaModel};
+use crate::pim::xbar_sim::{affine_instance_cost, linear_instance_cost, CostSource};
+use crate::pim::DartPimConfig;
+use crate::simulator::report::{build_report, paper_workload_counts};
+use crate::simulator::{SystemReport, TimingMode};
+
+/// DART-PIM model rows across the maxReads sweep, paper workload.
+pub fn dartpim_model_reports() -> Vec<(usize, SystemReport)> {
+    [12_500usize, 25_000, 50_000]
+        .into_iter()
+        .map(|m| {
+            let cfg = DartPimConfig::with_max_reads(m);
+            let counts = paper_workload_counts(&cfg);
+            (m, build_report(&counts, &cfg, CostSource::PaperTable4, TimingMode::PaperSerial))
+        })
+        .collect()
+}
+
+/// Model accuracies per maxReads (paper §VII-A).
+pub fn paper_accuracy(max_reads: usize) -> f64 {
+    match max_reads {
+        12_500 => 0.997,
+        _ => 0.998,
+    }
+}
+
+/// Table IV: per-instance cycle and switch counts, constructive vs
+/// published.
+pub fn table4() -> String {
+    let mut s = String::new();
+    s.push_str("Table IV — single-crossbar WF instance costs\n");
+    s.push_str(&format!(
+        "{:<28} {:>14} {:>14} {:>12} {:>14}\n",
+        "", "MAGIC cycles", "MAGIC switches", "write cycles", "write switches"
+    ));
+    for (name, cost) in [
+        ("linear WF (paper)", linear_instance_cost(CostSource::PaperTable4)),
+        ("linear WF (constructive)", linear_instance_cost(CostSource::Constructive)),
+        ("affine WF (paper)", affine_instance_cost(CostSource::PaperTable4)),
+        ("affine WF (constructive)", affine_instance_cost(CostSource::Constructive)),
+    ] {
+        s.push_str(&format!(
+            "{:<28} {:>14} {:>14} {:>12} {:>14}\n",
+            name, cost.magic_cycles, cost.magic_switches, cost.write_cycles, cost.write_switches
+        ));
+    }
+    s
+}
+
+/// Fig. 8: throughput vs accuracy scatter (reads/s, fraction).
+pub fn fig8() -> String {
+    let mut s = String::new();
+    s.push_str("Fig. 8 — throughput vs accuracy\n");
+    s.push_str(&format!("{:<28} {:>16} {:>10}\n", "system", "reads/s", "accuracy"));
+    for sys in published_systems() {
+        s.push_str(&format!("{:<28} {:>16.0} {:>10.3}\n", sys.name, sys.throughput(), sys.accuracy));
+    }
+    for (m, r) in dartpim_model_reports() {
+        s.push_str(&format!(
+            "{:<28} {:>16.0} {:>10.3}\n",
+            format!("DART-PIM (model, {}k)", m / 1000),
+            r.throughput(),
+            paper_accuracy(m)
+        ));
+    }
+    s
+}
+
+/// Fig. 9: throughput / energy efficiency / area efficiency.
+pub fn fig9() -> String {
+    let mut s = String::new();
+    s.push_str("Fig. 9 — throughput, energy efficiency, area efficiency (389M reads)\n");
+    s.push_str(&format!(
+        "{:<28} {:>14} {:>14} {:>18}\n",
+        "system", "reads/s", "reads/J", "reads/(s*mm^2)"
+    ));
+    for sys in published_systems() {
+        s.push_str(&format!(
+            "{:<28} {:>14.0} {:>14.1} {:>18.1}\n",
+            sys.name,
+            sys.throughput(),
+            sys.reads_per_joule(),
+            sys.area_efficiency()
+        ));
+    }
+    for (m, paper) in paper_dartpim_rows() {
+        s.push_str(&format!(
+            "{:<28} {:>14.0} {:>14.1} {:>18.1}\n",
+            paper.name,
+            paper.throughput(),
+            paper.reads_per_joule(),
+            paper.area_efficiency()
+        ));
+        let _ = m;
+    }
+    for (m, r) in dartpim_model_reports() {
+        s.push_str(&format!(
+            "{:<28} {:>14.0} {:>14.1} {:>18.1}\n",
+            format!("DART-PIM (model, {}k)", m / 1000),
+            r.throughput(),
+            r.energy_efficiency(),
+            r.area_efficiency()
+        ));
+    }
+    s
+}
+
+/// Fig. 10a: execution-time breakdown across maxReads.
+pub fn fig10a() -> String {
+    let mut s = String::new();
+    s.push_str("Fig. 10a — execution time breakdown (s), 389M reads\n");
+    s.push_str(&format!(
+        "{:<12} {:>10} {:>10} {:>10} {:>10}  (paper total)\n",
+        "maxReads", "DP-mem", "RISC-V", "readout", "total"
+    ));
+    let paper = [(12_500usize, 43.8), (25_000, 87.2), (50_000, 174.0)];
+    for ((m, r), (_, paper_t)) in dartpim_model_reports().into_iter().zip(paper) {
+        s.push_str(&format!(
+            "{:<12} {:>10.1} {:>10.1} {:>10.1} {:>10.1}  ({:.1})\n",
+            m, r.t_dpmem_s, r.t_riscv_s, r.t_readout_s, r.exec_time_s, paper_t
+        ));
+    }
+    s
+}
+
+/// Fig. 10b: energy breakdown across maxReads.
+pub fn fig10b() -> String {
+    let mut s = String::new();
+    s.push_str("Fig. 10b — energy breakdown (kJ), 389M reads\n");
+    s.push_str(&format!(
+        "{:<10} {:>10} {:>10} {:>10} {:>8} {:>10} {:>8} {:>9}\n",
+        "maxReads", "crossbars", "ctrl", "periph", "riscv", "transfer", "total", "avg W"
+    ));
+    for (m, r) in dartpim_model_reports() {
+        let e = &r.energy;
+        s.push_str(&format!(
+            "{:<10} {:>10.1} {:>10.1} {:>10.1} {:>8.2} {:>10.3} {:>8.1} {:>9.0}\n",
+            m,
+            e.crossbars / 1e3,
+            e.controllers / 1e3,
+            e.peripherals / 1e3,
+            e.riscv / 1e3,
+            (e.transfer_in + e.transfer_out) / 1e3,
+            e.total() / 1e3,
+            r.avg_power_w()
+        ));
+    }
+    s
+}
+
+/// Fig. 10c: area breakdown.
+pub fn fig10c() -> String {
+    let a: AreaBreakdown = AreaModel::default().breakdown(&DartPimConfig::default());
+    let mut s = String::new();
+    s.push_str("Fig. 10c — area breakdown (mm²)\n");
+    s.push_str(&format!(
+        "crossbars {:.0}  controllers {:.1}  peripherals {:.1}  riscv {:.1}  total {:.0} (paper: 8170)\n",
+        a.crossbars,
+        a.controllers,
+        a.peripherals,
+        a.riscv,
+        a.total()
+    ));
+    s.push_str(&format!("crossbar share: {:.1}% (paper: 96.9%)\n", 100.0 * a.crossbars / a.total()));
+    s
+}
+
+/// Headline comparison (abstract): speedups/energy vs Parabricks & SeGraM.
+pub fn headline() -> String {
+    let reports = dartpim_model_reports();
+    let (_, r25) = reports.iter().find(|(m, _)| *m == 25_000).unwrap();
+    let systems = published_systems();
+    let by = |n: &str| systems.iter().find(|s| s.name.starts_with(n)).unwrap();
+    let mut s = String::new();
+    s.push_str("Headline (maxReads=25k, model vs paper-reported baselines):\n");
+    for name in ["Parabricks", "SeGraM", "minimap2", "GenASM", "GenVoM"] {
+        let sys = by(name);
+        s.push_str(&format!(
+            "  vs {:<12} throughput {:>7.1}x   energy {:>7.1}x\n",
+            name,
+            r25.throughput() / sys.throughput(),
+            r25.energy_efficiency() / sys.reads_per_joule(),
+        ));
+    }
+    s.push_str(&format!(
+        "  (paper: 5.7x / 257x throughput vs Parabricks / SeGraM; 92x / 27x energy)\n"
+    ));
+    s.push_str(&format!("  model: {:.1} Mreads/s, {:.1} s, {:.1} kJ, {:.0} W\n",
+        r25.throughput() / 1e6,
+        DATASET_READS as f64 / r25.throughput(),
+        r25.energy.total() / 1e3,
+        r25.avg_power_w()));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render() {
+        for t in [table4(), fig8(), fig9(), fig10a(), fig10b(), fig10c(), headline()] {
+            assert!(t.len() > 50, "table too short:\n{t}");
+        }
+    }
+
+    #[test]
+    fn table4_contains_published_numbers() {
+        let t = table4();
+        assert!(t.contains("254585") || t.contains("254,585") || t.contains("254585"));
+        assert!(t.contains("1288281"));
+    }
+
+    #[test]
+    fn fig9_has_all_systems() {
+        let t = fig9();
+        for name in ["minimap2", "Parabricks", "GenASM", "SeGraM", "GenVoM", "DART-PIM (model, 25k)"] {
+            assert!(t.contains(name), "missing {name} in:\n{t}");
+        }
+    }
+
+    #[test]
+    fn headline_speedup_in_paper_range() {
+        let reports = dartpim_model_reports();
+        let (_, r) = reports.iter().find(|(m, _)| *m == 25_000).unwrap();
+        let systems = published_systems();
+        let parabricks = systems.iter().find(|s| s.name.starts_with("Parabricks")).unwrap();
+        let speedup = r.throughput() / parabricks.throughput();
+        // paper: 5.7x; our Eq. 6 model lands ~11% high (no scheduling
+        // overhead term) — assert the shape holds
+        assert!((4.5..=8.0).contains(&speedup), "speedup = {speedup}");
+        let segram = systems.iter().find(|s| s.name.starts_with("SeGraM")).unwrap();
+        let speedup = r.throughput() / segram.throughput();
+        assert!((200.0..=350.0).contains(&speedup), "SeGraM speedup = {speedup}");
+    }
+
+    #[test]
+    fn fig10a_scales_linearly_with_max_reads() {
+        let reports = dartpim_model_reports();
+        let t = |m: usize| reports.iter().find(|(mm, _)| *mm == m).unwrap().1.exec_time_s;
+        let ratio = t(50_000) / t(12_500);
+        assert!((3.5..=4.5).contains(&ratio), "ratio = {ratio}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Evaluation harness: regenerates every table and figure of the paper's
+//! §VII (see DESIGN.md §7 for the experiment index).
+//!
+//! * [`accuracy`]   — §VII-A: agreement with the ground-truth mapper and
+//!                    with the simulated read origins.
+//! * [`figures`]    — text/CSV renderings of Fig. 8 (throughput vs
+//!                    accuracy), Fig. 9 (throughput / energy / area
+//!                    efficiency), Fig. 10 (breakdowns), Table IV.
+//! * [`datavolume`] — §II's motivation numbers (PLs per read, the ~100x
+//!                    seeding data blowup).
+
+pub mod accuracy;
+pub mod datavolume;
+pub mod figures;
+
+pub use accuracy::{evaluate_accuracy, AccuracyReport};

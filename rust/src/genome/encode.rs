@@ -1,0 +1,139 @@
+//! 2-bit DNA base encoding.
+//!
+//! Bases are stored one code per byte (`0..=3` = A, C, G, T; `4` = N /
+//! padding). The PIM cost model accounts for the paper's physical 2-bit
+//! packing; in-host we trade 4x memory for simple indexing.
+
+/// Base codes.
+pub const BASE_A: u8 = 0;
+pub const BASE_C: u8 = 1;
+pub const BASE_G: u8 = 2;
+pub const BASE_T: u8 = 3;
+/// Unknown / padding (never matches anything, including itself, in WF).
+pub const BASE_N: u8 = 4;
+
+/// A DNA sequence as base codes.
+pub type Seq = Vec<u8>;
+
+/// Encode one ASCII base character (case-insensitive); unknown -> N.
+#[inline]
+pub fn encode_base(c: u8) -> u8 {
+    match c {
+        b'A' | b'a' => BASE_A,
+        b'C' | b'c' => BASE_C,
+        b'G' | b'g' => BASE_G,
+        b'T' | b't' => BASE_T,
+        _ => BASE_N,
+    }
+}
+
+/// Decode one base code to ASCII.
+#[inline]
+pub fn decode_base(code: u8) -> u8 {
+    match code {
+        BASE_A => b'A',
+        BASE_C => b'C',
+        BASE_G => b'G',
+        BASE_T => b'T',
+        _ => b'N',
+    }
+}
+
+/// Encode an ASCII string to base codes.
+pub fn encode_seq(s: &[u8]) -> Seq {
+    s.iter().map(|&c| encode_base(c)).collect()
+}
+
+/// Decode base codes to an ASCII string.
+pub fn decode_seq(seq: &[u8]) -> String {
+    seq.iter().map(|&c| decode_base(c) as char).collect()
+}
+
+/// Complement of one base code (N maps to N).
+#[inline]
+pub fn complement(code: u8) -> u8 {
+    match code {
+        BASE_A => BASE_T,
+        BASE_C => BASE_G,
+        BASE_G => BASE_C,
+        BASE_T => BASE_A,
+        other => other,
+    }
+}
+
+/// Reverse complement.
+pub fn revcomp(seq: &[u8]) -> Seq {
+    seq.iter().rev().map(|&c| complement(c)).collect()
+}
+
+/// Pack up to 32 base codes into a `u64`, 2 bits each, first base in the
+/// high bits (lexicographic order preserved). Panics on N.
+pub fn pack_2bit(seq: &[u8]) -> u64 {
+    assert!(seq.len() <= 32, "pack_2bit supports up to 32 bases");
+    let mut v: u64 = 0;
+    for &c in seq {
+        assert!(c < 4, "cannot 2-bit-pack an N base");
+        v = (v << 2) | c as u64;
+    }
+    v
+}
+
+/// Inverse of [`pack_2bit`] for a known length.
+pub fn unpack_2bit(mut v: u64, len: usize) -> Seq {
+    let mut out = vec![0u8; len];
+    for i in (0..len).rev() {
+        out[i] = (v & 3) as u8;
+        v >>= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = b"ACGTacgtNX";
+        let codes = encode_seq(s);
+        assert_eq!(codes, vec![0, 1, 2, 3, 0, 1, 2, 3, 4, 4]);
+        assert_eq!(decode_seq(&codes), "ACGTACGTNN");
+    }
+
+    #[test]
+    fn revcomp_involution() {
+        let s = encode_seq(b"ACGTTGCA");
+        assert_eq!(revcomp(&revcomp(&s)), s);
+    }
+
+    #[test]
+    fn revcomp_known() {
+        assert_eq!(decode_seq(&revcomp(&encode_seq(b"AACGT"))), "ACGTT");
+    }
+
+    #[test]
+    fn complement_n_preserved() {
+        assert_eq!(complement(BASE_N), BASE_N);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let s = encode_seq(b"ACGTTTGACGGA");
+        assert_eq!(unpack_2bit(pack_2bit(&s), s.len()), s);
+    }
+
+    #[test]
+    fn pack_is_lexicographic() {
+        // AA.. < AC.. < TT for equal lengths
+        let a = pack_2bit(&encode_seq(b"AAC"));
+        let b = pack_2bit(&encode_seq(b"ACA"));
+        let c = pack_2bit(&encode_seq(b"TTT"));
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pack_rejects_n() {
+        pack_2bit(&[BASE_N]);
+    }
+}

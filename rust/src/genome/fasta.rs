@@ -1,0 +1,107 @@
+//! Minimal FASTA reader/writer (multi-record, wrapped or unwrapped).
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use super::encode::{decode_seq, encode_seq, Seq};
+
+/// One FASTA record: header (without `>`) + encoded sequence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FastaRecord {
+    pub name: String,
+    pub seq: Seq,
+}
+
+/// Parse FASTA from any reader.
+pub fn read_fasta<R: Read>(r: R) -> io::Result<Vec<FastaRecord>> {
+    let mut records = Vec::new();
+    let mut name: Option<String> = None;
+    let mut seq: Vec<u8> = Vec::new();
+    for line in BufReader::new(r).lines() {
+        let line = line?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(h) = line.strip_prefix('>') {
+            if let Some(n) = name.take() {
+                records.push(FastaRecord { name: n, seq: encode_seq(&seq) });
+                seq.clear();
+            }
+            name = Some(h.split_whitespace().next().unwrap_or("").to_string());
+        } else {
+            if name.is_none() {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "FASTA sequence data before any '>' header",
+                ));
+            }
+            seq.extend_from_slice(line.as_bytes());
+        }
+    }
+    if let Some(n) = name {
+        records.push(FastaRecord { name: n, seq: encode_seq(&seq) });
+    }
+    Ok(records)
+}
+
+/// Load a FASTA file.
+pub fn load_fasta<P: AsRef<Path>>(path: P) -> io::Result<Vec<FastaRecord>> {
+    read_fasta(std::fs::File::open(path)?)
+}
+
+/// Write records to FASTA, 80 columns.
+pub fn write_fasta<W: Write>(w: &mut W, records: &[FastaRecord]) -> io::Result<()> {
+    for rec in records {
+        writeln!(w, ">{}", rec.name)?;
+        let text = decode_seq(&rec.seq);
+        for chunk in text.as_bytes().chunks(80) {
+            w.write_all(chunk)?;
+            writeln!(w)?;
+        }
+    }
+    Ok(())
+}
+
+/// Save records to a FASTA file.
+pub fn save_fasta<P: AsRef<Path>>(path: P, records: &[FastaRecord]) -> io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_fasta(&mut f, records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let recs = vec![
+            FastaRecord { name: "chr1".into(), seq: encode_seq(b"ACGTACGTAC") },
+            FastaRecord { name: "chr2".into(), seq: encode_seq(&vec![b'G'; 200]) },
+        ];
+        let mut buf = Vec::new();
+        write_fasta(&mut buf, &recs).unwrap();
+        let back = read_fasta(&buf[..]).unwrap();
+        assert_eq!(back, recs);
+    }
+
+    #[test]
+    fn parses_wrapped_and_headers_with_descriptions() {
+        let text = b">seq1 some description\nACGT\nACGT\n\n>seq2\nTTTT\n";
+        let recs = read_fasta(&text[..]).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].name, "seq1");
+        assert_eq!(recs[0].seq.len(), 8);
+        assert_eq!(recs[1].name, "seq2");
+    }
+
+    #[test]
+    fn rejects_headerless_data() {
+        assert!(read_fasta(&b"ACGT\n"[..]).is_err());
+    }
+
+    #[test]
+    fn empty_input_is_empty() {
+        assert!(read_fasta(&b""[..]).unwrap().is_empty());
+    }
+}

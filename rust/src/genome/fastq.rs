@@ -1,0 +1,115 @@
+//! Minimal FASTQ reader/writer (4-line records).
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use super::encode::{decode_seq, encode_seq, Seq};
+
+/// One FASTQ record. Quality is kept verbatim (synthetic reads carry a
+/// constant quality; the mapper itself is quality-agnostic, as is the
+/// paper's pipeline).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FastqRecord {
+    pub name: String,
+    pub seq: Seq,
+    pub qual: Vec<u8>,
+}
+
+impl FastqRecord {
+    pub fn with_const_qual(name: String, seq: Seq, q: u8) -> Self {
+        let qual = vec![q; seq.len()];
+        FastqRecord { name, seq, qual }
+    }
+}
+
+/// Parse FASTQ from any reader.
+pub fn read_fastq<R: Read>(r: R) -> io::Result<Vec<FastqRecord>> {
+    let mut lines = BufReader::new(r).lines();
+    let mut out = Vec::new();
+    loop {
+        let header = match lines.next() {
+            None => break,
+            Some(l) => l?,
+        };
+        if header.trim().is_empty() {
+            continue;
+        }
+        let seq = lines.next().ok_or_else(|| truncated())??;
+        let plus = lines.next().ok_or_else(|| truncated())??;
+        let qual = lines.next().ok_or_else(|| truncated())??;
+        if !header.starts_with('@') || !plus.starts_with('+') {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "malformed FASTQ record"));
+        }
+        if seq.len() != qual.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "FASTQ sequence/quality length mismatch",
+            ));
+        }
+        out.push(FastqRecord {
+            name: header[1..].split_whitespace().next().unwrap_or("").to_string(),
+            seq: encode_seq(seq.trim_end().as_bytes()),
+            qual: qual.trim_end().as_bytes().to_vec(),
+        });
+    }
+    Ok(out)
+}
+
+fn truncated() -> io::Error {
+    io::Error::new(io::ErrorKind::UnexpectedEof, "truncated FASTQ record")
+}
+
+/// Load a FASTQ file.
+pub fn load_fastq<P: AsRef<Path>>(path: P) -> io::Result<Vec<FastqRecord>> {
+    read_fastq(std::fs::File::open(path)?)
+}
+
+/// Write FASTQ records.
+pub fn write_fastq<W: Write>(w: &mut W, records: &[FastqRecord]) -> io::Result<()> {
+    for rec in records {
+        writeln!(w, "@{}", rec.name)?;
+        writeln!(w, "{}", decode_seq(&rec.seq))?;
+        writeln!(w, "+")?;
+        w.write_all(&rec.qual)?;
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Save FASTQ records to a file.
+pub fn save_fastq<P: AsRef<Path>>(path: P, records: &[FastqRecord]) -> io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_fastq(&mut f, records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let recs = vec![
+            FastqRecord::with_const_qual("r0".into(), encode_seq(b"ACGT"), b'I'),
+            FastqRecord::with_const_qual("r1".into(), encode_seq(b"TTGCA"), b'I'),
+        ];
+        let mut buf = Vec::new();
+        write_fastq(&mut buf, &recs).unwrap();
+        assert_eq!(read_fastq(&buf[..]).unwrap(), recs);
+    }
+
+    #[test]
+    fn rejects_length_mismatch() {
+        assert!(read_fastq(&b"@r\nACGT\n+\nII\n"[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        assert!(read_fastq(&b"@r\nACGT\n"[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_markers() {
+        assert!(read_fastq(&b"r\nACGT\n+\nIIII\n"[..]).is_err());
+        assert!(read_fastq(&b"@r\nACGT\nx\nIIII\n"[..]).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Genomics substrate: base encoding, FASTA/FASTQ I/O, and synthetic
+//! genome / read-set generation (the stand-in for GRCh38 + HG002 —
+//! DESIGN.md §6 documents the substitution).
+
+pub mod encode;
+pub mod fasta;
+pub mod fastq;
+pub mod mutate;
+pub mod synth;
+
+pub use encode::{decode_seq, encode_seq, revcomp, Seq, BASE_A, BASE_C, BASE_G, BASE_N, BASE_T};
+pub use synth::{ReadRecord, ReadSimConfig, SynthConfig};

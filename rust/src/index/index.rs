@@ -1,0 +1,262 @@
+//! The minimizer index: minimizer k-mer -> all reference occurrences,
+//! plus segment extraction (the data a crossbar stores at indexing time).
+
+use std::collections::HashMap;
+
+use super::minimizer::minimizers;
+use crate::genome::encode::{Seq, BASE_N};
+use crate::params::{segment_len, ETH};
+
+/// Offline minimizer index of a reference genome (paper §V-B).
+///
+/// Unlike a classical hash-table mapper, DART-PIM materializes the
+/// reference *segments* themselves into the crossbars; here the index
+/// stores occurrence positions and extracts segments on demand (the
+/// 17x storage blowup is accounted for in [`IndexStats`] and the PIM
+/// area/energy models, not duplicated in host memory).
+pub struct MinimizerIndex {
+    /// minimizer k-mer -> sorted occurrence positions (k-mer start).
+    occurrences: HashMap<u64, Vec<u32>>,
+    /// The reference genome (base codes).
+    pub reference: Seq,
+    /// k-mer length / window size used at build time.
+    pub k: usize,
+    pub w: usize,
+    /// Read length the segment geometry is built for.
+    pub read_len: usize,
+}
+
+/// Summary statistics of an index (drives Fig. 8-10 workload modelling
+/// and the §II data-volume motivation numbers).
+#[derive(Debug, Clone)]
+pub struct IndexStats {
+    pub n_minimizers: usize,
+    pub n_occurrences: usize,
+    pub max_occurrences: usize,
+    pub mean_occurrences: f64,
+    /// Minimizers with occurrence count <= lowTh are offloaded to the
+    /// DP-RISC-V cores (paper §V-A).
+    pub low_freq_minimizers: usize,
+    /// Bytes of segment data a DART-PIM deployment would replicate into
+    /// crossbars (2 bits/base), vs. the hash-table footprint.
+    pub segment_storage_bytes: usize,
+    pub hashtable_storage_bytes: usize,
+}
+
+impl MinimizerIndex {
+    /// Reassemble from deserialized parts (see [`super::io`]).
+    pub(crate) fn from_parts(
+        occurrences: HashMap<u64, Vec<u32>>,
+        reference: Seq,
+        k: usize,
+        w: usize,
+        read_len: usize,
+    ) -> Self {
+        MinimizerIndex { occurrences, reference, k, w, read_len }
+    }
+
+    /// Build the index over `reference`.
+    pub fn build(reference: Seq, k: usize, w: usize, read_len: usize) -> Self {
+        let mut occurrences: HashMap<u64, Vec<u32>> = HashMap::new();
+        for m in minimizers(&reference, k, w) {
+            occurrences.entry(m.kmer).or_default().push(m.pos);
+        }
+        for v in occurrences.values_mut() {
+            v.sort_unstable();
+            v.dedup();
+        }
+        MinimizerIndex { occurrences, reference, k, w, read_len }
+    }
+
+    /// Occurrence positions of a minimizer (empty if absent).
+    pub fn occurrences(&self, kmer: u64) -> &[u32] {
+        self.occurrences.get(&kmer).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Number of distinct minimizers.
+    pub fn n_minimizers(&self) -> usize {
+        self.occurrences.len()
+    }
+
+    /// Iterate over (minimizer, occurrence list).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &[u32])> {
+        self.occurrences.iter().map(|(k, v)| (*k, v.as_slice()))
+    }
+
+    /// Segment length for this geometry: `2(rl + eth) - k`.
+    pub fn seg_len(&self) -> usize {
+        segment_len(self.read_len)
+    }
+
+    /// Extract the reference segment for a minimizer occurrence at `pos`
+    /// (k-mer start). The segment spans
+    /// `[pos - (rl - k) - eth, pos + rl + eth)` — the union of banded WF
+    /// windows over all in-read minimizer offsets — clamped to the
+    /// reference with N padding so geometry is uniform at the boundaries.
+    pub fn segment(&self, pos: u32) -> Seq {
+        let sl = self.seg_len();
+        let lead = (self.read_len - self.k) + ETH;
+        let start = pos as i64 - lead as i64;
+        let mut out = vec![BASE_N; sl];
+        for (i, slot) in out.iter_mut().enumerate() {
+            let p = start + i as i64;
+            if p >= 0 && (p as usize) < self.reference.len() {
+                *slot = self.reference[p as usize];
+            }
+        }
+        out
+    }
+
+    /// The banded-WF window for a read whose minimizer sits at read
+    /// offset `q`, taken from a segment returned by [`Self::segment`]:
+    /// `segment[(rl - k) - q .. + rl + 2*eth)`.
+    pub fn window_of_segment<'a>(&self, segment: &'a [u8], q: usize) -> &'a [u8] {
+        let off = (self.read_len - self.k) - q;
+        &segment[off..off + crate::params::window_len(self.read_len)]
+    }
+
+    /// Mapped reference position implied by occurrence `pos` and read
+    /// minimizer offset `q` (the PL, potential location).
+    pub fn potential_location(&self, pos: u32, q: usize) -> i64 {
+        pos as i64 - q as i64
+    }
+
+    /// Banded-WF window for (occurrence `pos`, read minimizer offset
+    /// `q`), extracted directly from the reference (equivalent to
+    /// `window_of_segment(&segment(pos), q)` without materializing the
+    /// 300-base segment — the host-side fast path; the PIM cost model
+    /// still charges for the replicated segments).
+    pub fn window_for(&self, pos: u32, q: usize) -> Seq {
+        let wl = crate::params::window_len(self.read_len);
+        let start = self.potential_location(pos, q) - ETH as i64;
+        let mut out = vec![BASE_N; wl];
+        let lo = start.max(0) as usize;
+        let hi = ((start + wl as i64).min(self.reference.len() as i64)).max(0) as usize;
+        if lo < hi {
+            let off = (lo as i64 - start) as usize;
+            out[off..off + (hi - lo)].copy_from_slice(&self.reference[lo..hi]);
+        }
+        out
+    }
+
+    /// Compute index statistics.
+    pub fn stats(&self, low_th: usize) -> IndexStats {
+        let n_minimizers = self.occurrences.len();
+        let n_occurrences: usize = self.occurrences.values().map(|v| v.len()).sum();
+        let max_occurrences = self.occurrences.values().map(|v| v.len()).max().unwrap_or(0);
+        let low_freq_minimizers =
+            self.occurrences.values().filter(|v| v.len() <= low_th).count();
+        IndexStats {
+            n_minimizers,
+            n_occurrences,
+            max_occurrences,
+            mean_occurrences: if n_minimizers == 0 {
+                0.0
+            } else {
+                n_occurrences as f64 / n_minimizers as f64
+            },
+            low_freq_minimizers,
+            segment_storage_bytes: n_occurrences * self.seg_len() / 4, // 2 bits/base
+            hashtable_storage_bytes: n_occurrences * 4 + n_minimizers * 12,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::synth::SynthConfig;
+    use crate::params::{window_len, K, READ_LEN};
+
+    fn index() -> MinimizerIndex {
+        let g = SynthConfig { len: 60_000, ..Default::default() }.generate();
+        MinimizerIndex::build(g, K, crate::params::W, READ_LEN)
+    }
+
+    #[test]
+    fn occurrences_point_at_their_kmer() {
+        let idx = index();
+        let mut checked = 0;
+        for (kmer, occs) in idx.iter().take(50) {
+            for &p in occs {
+                let packed =
+                    crate::index::kmer::pack_kmer(&idx.reference[p as usize..p as usize + K]);
+                assert_eq!(packed, Some(kmer));
+                checked += 1;
+            }
+        }
+        assert!(checked > 0);
+    }
+
+    #[test]
+    fn segment_geometry() {
+        let idx = index();
+        assert_eq!(idx.seg_len(), 2 * (READ_LEN + ETH) - K); // 300 for rl=150
+        let (_, occs) = idx.iter().next().unwrap();
+        let seg = idx.segment(occs[0]);
+        assert_eq!(seg.len(), idx.seg_len());
+    }
+
+    #[test]
+    fn segment_contains_reference_around_occurrence() {
+        let idx = index();
+        // pick an occurrence far from the boundary
+        let pos = idx
+            .iter()
+            .flat_map(|(_, o)| o.iter().copied())
+            .find(|&p| p > 400 && (p as usize) < idx.reference.len() - 400)
+            .unwrap();
+        let seg = idx.segment(pos);
+        let lead = (READ_LEN - K) + ETH;
+        // the k-mer itself sits at offset `lead` in the segment
+        assert_eq!(
+            &seg[lead..lead + K],
+            &idx.reference[pos as usize..pos as usize + K]
+        );
+    }
+
+    #[test]
+    fn window_slicing_matches_pl_semantics() {
+        let idx = index();
+        let pos = idx
+            .iter()
+            .flat_map(|(_, o)| o.iter().copied())
+            .find(|&p| p > 400 && (p as usize) < idx.reference.len() - 400)
+            .unwrap();
+        let seg = idx.segment(pos);
+        for q in [0usize, 50, READ_LEN - K] {
+            let win = idx.window_of_segment(&seg, q);
+            assert_eq!(win.len(), window_len(READ_LEN));
+            // window start in reference coords = PL - eth
+            let pl = idx.potential_location(pos, q);
+            let win_start = pl - ETH as i64;
+            assert_eq!(win[0], idx.reference[win_start as usize]);
+            assert_eq!(
+                win[window_len(READ_LEN) - 1],
+                idx.reference[(win_start as usize) + window_len(READ_LEN) - 1]
+            );
+        }
+    }
+
+    #[test]
+    fn boundary_segments_are_n_padded() {
+        let idx = index();
+        let first = idx.iter().flat_map(|(_, o)| o.iter().copied()).min().unwrap();
+        if (first as usize) < (READ_LEN - K) + ETH {
+            let seg = idx.segment(first);
+            assert_eq!(seg[0], BASE_N);
+        }
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let idx = index();
+        let s = idx.stats(3);
+        assert_eq!(s.n_minimizers, idx.n_minimizers());
+        assert!(s.n_occurrences >= s.n_minimizers);
+        assert!(s.max_occurrences >= 1);
+        assert!(s.low_freq_minimizers <= s.n_minimizers);
+        // the paper's 17x storage blowup argument: segments >> hashtable
+        assert!(s.segment_storage_bytes > s.hashtable_storage_bytes);
+    }
+}

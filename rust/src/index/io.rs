@@ -1,0 +1,186 @@
+//! Binary serialization of the minimizer index — the artifact the
+//! paper's *offline* indexing stage produces once per reference genome
+//! (§V-B). Simple length-prefixed little-endian format with a magic tag
+//! and a geometry header; refuses to load indexes built for a different
+//! k/W/read-length geometry.
+
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::index::MinimizerIndex;
+
+const MAGIC: &[u8; 8] = b"DARTPIM1";
+
+fn w_u64<W: Write>(w: &mut W, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn w_u32<W: Write>(w: &mut W, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn r_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Serialize the index.
+pub fn write_index<W: Write>(w: &mut W, idx: &MinimizerIndex) -> io::Result<()> {
+    w.write_all(MAGIC)?;
+    w_u64(w, idx.k as u64)?;
+    w_u64(w, idx.w as u64)?;
+    w_u64(w, idx.read_len as u64)?;
+    w_u64(w, idx.reference.len() as u64)?;
+    w.write_all(&idx.reference)?;
+    let entries: Vec<(u64, &[u32])> = {
+        let mut v: Vec<(u64, &[u32])> = idx.iter().collect();
+        v.sort_unstable_by_key(|(m, _)| *m);
+        v
+    };
+    w_u64(w, entries.len() as u64)?;
+    for (m, occs) in entries {
+        w_u64(w, m)?;
+        w_u32(w, occs.len() as u32)?;
+        for &p in occs {
+            w_u32(w, p)?;
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize an index, validating the geometry header.
+pub fn read_index<R: Read>(r: &mut R) -> io::Result<MinimizerIndex> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("not a DART-PIM index file"));
+    }
+    let k = r_u64(r)? as usize;
+    let w = r_u64(r)? as usize;
+    let read_len = r_u64(r)? as usize;
+    if k == 0 || k > 32 || w == 0 || read_len < k {
+        return Err(bad("implausible index geometry"));
+    }
+    let ref_len = r_u64(r)? as usize;
+    let mut reference = vec![0u8; ref_len];
+    r.read_exact(&mut reference)?;
+    if reference.iter().any(|&c| c > 4) {
+        return Err(bad("invalid base codes in reference"));
+    }
+    let n = r_u64(r)? as usize;
+    let mut occurrences = std::collections::HashMap::with_capacity(n);
+    for _ in 0..n {
+        let m = r_u64(r)?;
+        let cnt = r_u32(r)? as usize;
+        let mut v = Vec::with_capacity(cnt);
+        for _ in 0..cnt {
+            let p = r_u32(r)?;
+            if p as usize + k > ref_len {
+                return Err(bad("occurrence out of reference bounds"));
+            }
+            v.push(p);
+        }
+        occurrences.insert(m, v);
+    }
+    Ok(MinimizerIndex::from_parts(occurrences, reference, k, w, read_len))
+}
+
+/// Save to a file.
+pub fn save_index<P: AsRef<Path>>(path: P, idx: &MinimizerIndex) -> io::Result<()> {
+    let mut f = BufWriter::new(std::fs::File::create(path)?);
+    write_index(&mut f, idx)
+}
+
+/// Load from a file.
+pub fn load_index<P: AsRef<Path>>(path: P) -> io::Result<MinimizerIndex> {
+    let mut f = BufReader::new(std::fs::File::open(path)?);
+    read_index(&mut f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::synth::SynthConfig;
+    use crate::params::{K, READ_LEN, W};
+
+    fn index() -> MinimizerIndex {
+        let g = SynthConfig { len: 30_000, ..Default::default() }.generate();
+        MinimizerIndex::build(g, K, W, READ_LEN)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let idx = index();
+        let mut buf = Vec::new();
+        write_index(&mut buf, &idx).unwrap();
+        let back = read_index(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.k, idx.k);
+        assert_eq!(back.w, idx.w);
+        assert_eq!(back.read_len, idx.read_len);
+        assert_eq!(back.reference, idx.reference);
+        assert_eq!(back.n_minimizers(), idx.n_minimizers());
+        for (m, occs) in idx.iter() {
+            assert_eq!(back.occurrences(m), occs);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage_and_truncation() {
+        assert!(read_index(&mut &b"NOTANIDX"[..]).is_err());
+        let idx = index();
+        let mut buf = Vec::new();
+        write_index(&mut buf, &idx).unwrap();
+        let cut = buf.len() / 2;
+        assert!(read_index(&mut &buf[..cut]).is_err(), "truncated file must fail");
+        buf[3] = b'X';
+        assert!(read_index(&mut buf.as_slice()).is_err(), "bad magic must fail");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let idx = index();
+        let path = std::env::temp_dir().join(format!("dartpim-idx-{}.bin", std::process::id()));
+        save_index(&path, &idx).unwrap();
+        let back = load_index(&path).unwrap();
+        assert_eq!(back.reference, idx.reference);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn loaded_index_maps_identically() {
+        use crate::coordinator::{Pipeline, PipelineConfig};
+        use crate::genome::synth::ReadSimConfig;
+        use crate::pim::DartPimConfig;
+        use crate::runtime::RustEngine;
+        let idx = index();
+        let reads = ReadSimConfig { n_reads: 20, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        let mut buf = Vec::new();
+        write_index(&mut buf, &idx).unwrap();
+        let loaded = read_index(&mut buf.as_slice()).unwrap();
+        let cfg = || PipelineConfig {
+            dart: DartPimConfig { low_th: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let (a, _) = Pipeline::new(&idx, cfg(), RustEngine).map_reads(&reads).unwrap();
+        let (b, _) = Pipeline::new(&loaded, cfg(), RustEngine).map_reads(&reads).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            match (x, y) {
+                (None, None) => {}
+                (Some(x), Some(y)) => assert_eq!((x.pos, x.dist), (y.pos, y.dist)),
+                _ => panic!("presence mismatch"),
+            }
+        }
+    }
+}

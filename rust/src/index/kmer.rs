@@ -1,0 +1,107 @@
+//! k-mer packing and hashing.
+
+/// Pack a k-mer (base codes, no N) into a `u64`, 2 bits per base.
+/// Returns `None` if any base is N/padding.
+#[inline]
+pub fn pack_kmer(seq: &[u8]) -> Option<u64> {
+    debug_assert!(seq.len() <= 32);
+    let mut v: u64 = 0;
+    for &c in seq {
+        if c >= 4 {
+            return None;
+        }
+        v = (v << 2) | c as u64;
+    }
+    Some(v)
+}
+
+/// Invertible 64-bit mix (splitmix64 finalizer). Used to order k-mers for
+/// minimizer selection so that the minimum is pseudo-random rather than
+/// biased toward poly-A (the standard minimizer-robustness trick, cf.
+/// minimap2's hash).
+#[inline]
+pub fn kmer_hash(v: u64) -> u64 {
+    let mut z = v.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Rolling k-mer iterator over a sequence: yields `(pos, packed)` for
+/// every N-free k-mer window.
+pub struct KmerIter<'a> {
+    seq: &'a [u8],
+    k: usize,
+    pos: usize,
+    cur: u64,
+    valid: usize, // number of consecutive non-N bases ending at pos-1
+    mask: u64,
+}
+
+impl<'a> KmerIter<'a> {
+    pub fn new(seq: &'a [u8], k: usize) -> Self {
+        assert!(k >= 1 && k <= 32);
+        KmerIter { seq, k, pos: 0, cur: 0, valid: 0, mask: (1u64 << (2 * k)) - 1 }
+    }
+}
+
+impl<'a> Iterator for KmerIter<'a> {
+    type Item = (u32, u64);
+
+    fn next(&mut self) -> Option<(u32, u64)> {
+        while self.pos < self.seq.len() {
+            let c = self.seq[self.pos];
+            self.pos += 1;
+            if c >= 4 {
+                self.valid = 0;
+                self.cur = 0;
+                continue;
+            }
+            self.cur = ((self.cur << 2) | c as u64) & self.mask;
+            self.valid += 1;
+            if self.valid >= self.k {
+                return Some(((self.pos - self.k) as u32, self.cur));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::encode_seq;
+
+    #[test]
+    fn pack_matches_manual() {
+        let s = encode_seq(b"ACGT");
+        assert_eq!(pack_kmer(&s), Some(0b00_01_10_11));
+        assert_eq!(pack_kmer(&encode_seq(b"ACNG")), None);
+    }
+
+    #[test]
+    fn rolling_matches_direct() {
+        let s = encode_seq(b"ACGTTGCAGT");
+        let k = 4;
+        let rolled: Vec<_> = KmerIter::new(&s, k).collect();
+        let direct: Vec<_> = (0..=s.len() - k)
+            .filter_map(|i| pack_kmer(&s[i..i + k]).map(|v| (i as u32, v)))
+            .collect();
+        assert_eq!(rolled, direct);
+    }
+
+    #[test]
+    fn rolling_skips_n_windows() {
+        let s = encode_seq(b"ACGTNACGT");
+        let got: Vec<u32> = KmerIter::new(&s, 4).map(|(p, _)| p).collect();
+        assert_eq!(got, vec![0, 5]); // windows overlapping the N are dropped
+    }
+
+    #[test]
+    fn hash_is_deterministic_and_spreads() {
+        let a = kmer_hash(0);
+        let b = kmer_hash(1);
+        assert_ne!(a, b);
+        assert_eq!(a, kmer_hash(0));
+    }
+}

@@ -1,0 +1,143 @@
+//! Minimizer selection (Roberts et al. scheme, paper §II).
+//!
+//! A window of `W` consecutive k-mers (W + k − 1 bases) is represented by
+//! its minimum-hash k-mer. Consecutive windows usually share their
+//! minimizer, so the per-sequence minimizer set is sparse (~2/(W+1)
+//! density). Selection uses a monotone deque for O(n) total time.
+
+use super::kmer::{kmer_hash, KmerIter};
+
+/// One selected minimizer occurrence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Minimizer {
+    /// Start position of the k-mer in the sequence.
+    pub pos: u32,
+    /// Packed 2-bit k-mer value (the minimizer id used for routing).
+    pub kmer: u64,
+}
+
+/// Select minimizers of `seq` with k-mer length `k` and window of `w`
+/// k-mers. Deduplicates consecutive repeats (same (pos, kmer) chosen by
+/// adjacent windows is reported once). Ties within a window are broken
+/// toward the *rightmost* position (minimap2 convention).
+pub fn minimizers(seq: &[u8], k: usize, w: usize) -> Vec<Minimizer> {
+    assert!(w >= 1);
+    let mut out: Vec<Minimizer> = Vec::new();
+    // Monotone deque of (pos, kmer, hash), increasing hash front-to-back.
+    let mut deque: std::collections::VecDeque<(u32, u64, u64)> = Default::default();
+    let mut n_kmers = 0usize;
+    let mut last_reported: Option<(u32, u64)> = None;
+    for (pos, kmer) in KmerIter::new(seq, k) {
+        let h = kmer_hash(kmer);
+        // Note: KmerIter skips N-interrupted regions; positions restart
+        // monotonically, so stale entries are evicted by the window check.
+        while let Some(&(_, _, bh)) = deque.back() {
+            if bh >= h {
+                deque.pop_back(); // rightmost tie-break: >= evicts equals
+            } else {
+                break;
+            }
+        }
+        deque.push_back((pos, kmer, h));
+        n_kmers += 1;
+        // Evict k-mers that fell out of the current window of w k-mers
+        // (window = k-mer start positions in [pos-w+1, pos]).
+        while let Some(&(fp, _, _)) = deque.front() {
+            if fp + (w as u32) <= pos {
+                deque.pop_front();
+            } else {
+                break;
+            }
+        }
+        if n_kmers >= w {
+            let &(mp, mk, _) = deque.front().expect("deque non-empty within a window");
+            if last_reported != Some((mp, mk)) {
+                out.push(Minimizer { pos: mp, kmer: mk });
+                last_reported = Some((mp, mk));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::encode_seq;
+    use crate::genome::synth::SynthConfig;
+
+    /// Brute-force oracle: min-hash per window, rightmost tie-break.
+    fn brute(seq: &[u8], k: usize, w: usize) -> Vec<Minimizer> {
+        let kmers: Vec<(u32, u64)> = KmerIter::new(seq, k).collect();
+        let mut out = Vec::new();
+        let mut last = None;
+        // only valid for N-free sequences (contiguous kmer positions)
+        for win in kmers.windows(w) {
+            let m = win
+                .iter()
+                .map(|&(p, v)| (kmer_hash(v), p, v))
+                .fold(None::<(u64, u32, u64)>, |acc, x| match acc {
+                    None => Some(x),
+                    Some(a) => Some(if x.0 < a.0 || (x.0 == a.0 && x.1 > a.1) { x } else { a }),
+                })
+                .unwrap();
+            if last != Some((m.1, m.2)) {
+                out.push(Minimizer { pos: m.1, kmer: m.2 });
+                last = Some((m.1, m.2));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_bruteforce_on_random_sequences() {
+        for seed in 0..5u64 {
+            let g = SynthConfig { len: 2000, seed, repeat_fraction: 0.2, ..Default::default() }
+                .generate();
+            for (k, w) in [(5, 4), (12, 19), (8, 11)] {
+                assert_eq!(minimizers(&g, k, w), brute(&g, k, w), "k={k} w={w} seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn density_is_about_2_over_w_plus_1() {
+        let g = SynthConfig { len: 200_000, repeat_fraction: 0.0, ..Default::default() }.generate();
+        let (k, w) = (12, 19);
+        let m = minimizers(&g, k, w);
+        let density = m.len() as f64 / g.len() as f64;
+        let expect = 2.0 / (w as f64 + 1.0);
+        assert!((density - expect).abs() / expect < 0.15, "density={density} expect≈{expect}");
+    }
+
+    #[test]
+    fn identical_windows_share_minimizers() {
+        // a repeated block yields the same minimizer k-mers in both copies
+        let unit = SynthConfig { len: 400, repeat_fraction: 0.0, ..Default::default() }.generate();
+        let mut g = unit.clone();
+        g.extend_from_slice(&unit);
+        let m = minimizers(&g, 12, 19);
+        let first: std::collections::HashSet<u64> =
+            m.iter().filter(|mm| (mm.pos as usize) < 300).map(|mm| mm.kmer).collect();
+        let second: std::collections::HashSet<u64> =
+            m.iter().filter(|mm| (mm.pos as usize) >= 400 && (mm.pos as usize) < 700).map(|mm| mm.kmer).collect();
+        let shared = first.intersection(&second).count();
+        assert!(shared * 2 >= first.len(), "repeat copies should share most minimizers");
+    }
+
+    #[test]
+    fn short_sequence_yields_nothing() {
+        let g = encode_seq(b"ACGTACGT");
+        assert!(minimizers(&g, 12, 19).is_empty());
+    }
+
+    #[test]
+    fn positions_are_valid_kmer_starts() {
+        let g = SynthConfig { len: 5000, ..Default::default() }.generate();
+        for m in minimizers(&g, 12, 19) {
+            assert!((m.pos as usize) + 12 <= g.len());
+            let packed = crate::index::kmer::pack_kmer(&g[m.pos as usize..m.pos as usize + 12]);
+            assert_eq!(packed, Some(m.kmer));
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Minimizer indexing of the reference genome (paper §II, §V-B).
+//!
+//! The offline stage of DART-PIM: select minimizers (k = 12, W = 30) over
+//! the reference and record, per minimizer, every occurrence position
+//! plus the surrounding *reference segment* (2(rl+eth)−k bases) that a
+//! crossbar stores verbatim.
+
+pub mod io;
+pub mod kmer;
+pub mod minimizer;
+#[allow(clippy::module_inception)]
+pub mod index;
+
+pub use index::{IndexStats, MinimizerIndex};
+pub use io::{load_index, save_index};
+pub use kmer::{kmer_hash, pack_kmer};
+pub use minimizer::{minimizers, Minimizer};

@@ -1,0 +1,75 @@
+//! # DART-PIM — DNA read mapping with digital processing-in-memory
+//!
+//! Reproduction of *"DART-PIM: DNA read mApping acceleRaTor Using
+//! Processing-In-Memory"* (arXiv/CS.AR 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** — banded Wagner-Fischer Pallas kernels (the paper's
+//!   in-crossbar-row compute), authored in `python/compile/kernels/` and
+//!   AOT-lowered to HLO text.
+//! * **L2** — JAX filter/align graphs with fused best-of-band epilogues
+//!   (`python/compile/model.py`).
+//! * **L3** — this crate: the coordinator (routing, FIFOs, batching,
+//!   best-so-far state), the genomics substrate (FASTA/FASTQ, synthesis,
+//!   minimizer indexing, seeding, reference aligners), the PIM cost /
+//!   energy / area models, and the paper's four evaluation simulators.
+//!
+//! Python never runs at request time: the [`runtime`] module loads the
+//! HLO artifacts through the PJRT CPU client (`xla` crate) and executes
+//! them from the hot path.
+//!
+//! Start with [`coordinator::pipeline::Pipeline`] (end-to-end mapping) or
+//! the `examples/` directory. `DESIGN.md` maps every paper table/figure
+//! to the module and bench that regenerates it.
+
+pub mod align;
+pub mod cli;
+pub mod baselines;
+pub mod coordinator;
+pub mod eval;
+pub mod genome;
+pub mod index;
+pub mod pim;
+pub mod runtime;
+pub mod seeding;
+pub mod simulator;
+pub mod util;
+
+/// Algorithm parameters shared with the Python layer (paper Table III).
+/// Must match `python/compile/params.py`; the manifest consumed by
+/// [`runtime::artifacts`] cross-checks them at startup.
+pub mod params {
+    /// Default read length in bases (Illumina short reads).
+    pub const READ_LEN: usize = 150;
+    /// Minimizer length `k`.
+    pub const K: usize = 12;
+    /// Minimizer window length `W` (k-mers per window).
+    pub const W: usize = 30;
+    /// Band half-width (linear error threshold `eth`).
+    pub const ETH: usize = 6;
+    /// Band width `2*eth + 1`.
+    pub const BAND: usize = 2 * ETH + 1;
+    /// Linear WF saturation (3-bit cells): `eth + 1`.
+    pub const SAT_LINEAR: i32 = (ETH as i32) + 1;
+    /// Affine WF saturation (5-bit cells).
+    pub const SAT_AFFINE: i32 = 31;
+    /// Edit costs (all 1 in the paper).
+    pub const W_SUB: i32 = 1;
+    pub const W_INS: i32 = 1;
+    pub const W_DEL: i32 = 1;
+    pub const W_OP: i32 = 1;
+    pub const W_EX: i32 = 1;
+    /// "Infinity" for in-row scans; matches python params.BIG.
+    pub const BIG: i32 = 1 << 20;
+
+    /// Reference window length for a banded WF instance.
+    pub const fn window_len(read_len: usize) -> usize {
+        read_len + 2 * ETH
+    }
+
+    /// Indexed reference segment length per minimizer occurrence:
+    /// `2*(rl + eth) - k` (paper §V-B; 300 for 150 bp reads).
+    pub const fn segment_len(read_len: usize) -> usize {
+        2 * (read_len + ETH) - K
+    }
+}

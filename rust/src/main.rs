@@ -1,0 +1,10 @@
+//! dart-pim CLI entrypoint (the "leader" binary): synthesis, mapping,
+//! simulation, and figure regeneration. See `dart-pim help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dart_pim::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,128 @@
+//! DART-PIM architecture + algorithm configuration (paper Tables II/III).
+
+/// Full DART-PIM configuration. Defaults reproduce the paper's evaluated
+/// system exactly.
+#[derive(Debug, Clone)]
+pub struct DartPimConfig {
+    // ---- Table II: architecture ----
+    /// PIM modules (DRAM-rank analogue).
+    pub n_modules: usize,
+    /// Memory chips per PIM module.
+    pub chips_per_module: usize,
+    /// Banks per chip.
+    pub banks_per_chip: usize,
+    /// Crossbars per bank.
+    pub xbars_per_bank: usize,
+    /// Crossbar geometry (bits).
+    pub xbar_cols: usize,
+    pub xbar_rows: usize,
+    /// RISC-V cores per chip.
+    pub riscv_per_chip: usize,
+    /// L1 cache per chip (bytes).
+    pub cache_per_chip: usize,
+    /// RISC-V <-> memory bus width (bits).
+    pub bus_bits: usize,
+
+    // ---- Table III: crossbar partition + policies ----
+    /// Reads FIFO rows (3 reads per row).
+    pub fifo_rows: usize,
+    /// Linear WF buffer rows (concurrent linear instances).
+    pub linear_rows: usize,
+    /// Affine WF buffer rows (8 rows per instance).
+    pub affine_rows: usize,
+    /// Rows per affine instance (1 compute + 7 traceback).
+    pub affine_rows_per_instance: usize,
+    /// Minimizer-frequency threshold below which WF work is offloaded to
+    /// the DP-RISC-V cores.
+    pub low_th: usize,
+    /// Maximum reads routed to any single crossbar (accuracy/time knob;
+    /// paper evaluates 12.5k / 25k / 50k).
+    pub max_reads: usize,
+
+    // ---- Timing (Table V) ----
+    /// MAGIC / write cycle time in seconds (2 ns, conservatively scaled).
+    pub t_clk: f64,
+}
+
+impl Default for DartPimConfig {
+    fn default() -> Self {
+        DartPimConfig {
+            n_modules: 1,
+            chips_per_module: 32,
+            banks_per_chip: 512,
+            xbars_per_bank: 512,
+            xbar_cols: 1024,
+            xbar_rows: 256,
+            riscv_per_chip: 4,
+            cache_per_chip: 128 << 10,
+            bus_bits: 512,
+            fifo_rows: 160,
+            linear_rows: 32,
+            affine_rows: 64,
+            affine_rows_per_instance: 8,
+            low_th: 3,
+            max_reads: 25_000,
+            t_clk: 2e-9,
+        }
+    }
+}
+
+impl DartPimConfig {
+    /// Preset with a given maxReads (the paper's sweep values).
+    pub fn with_max_reads(max_reads: usize) -> Self {
+        DartPimConfig { max_reads, ..Default::default() }
+    }
+
+    /// Total crossbars in the system (8M in the paper config).
+    pub fn total_xbars(&self) -> usize {
+        self.n_modules * self.chips_per_module * self.banks_per_chip * self.xbars_per_bank
+    }
+
+    /// Total RISC-V cores (128 in the paper config).
+    pub fn total_riscv(&self) -> usize {
+        self.n_modules * self.chips_per_module * self.riscv_per_chip
+    }
+
+    /// Total memory capacity in bytes (crossbar bits / 8).
+    pub fn total_capacity_bytes(&self) -> usize {
+        self.total_xbars() * self.xbar_cols * self.xbar_rows / 8
+    }
+
+    /// Reads the FIFO can hold (3 per row — paper Fig. 6).
+    pub fn fifo_capacity_reads(&self) -> usize {
+        self.fifo_rows * 3
+    }
+
+    /// Concurrent affine instances per crossbar.
+    pub fn affine_instances(&self) -> usize {
+        self.affine_rows / self.affine_rows_per_instance
+    }
+
+    /// Sanity: the three buffers exactly fill the crossbar rows.
+    pub fn rows_consistent(&self) -> bool {
+        self.fifo_rows + self.linear_rows + self.affine_rows == self.xbar_rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configuration() {
+        let c = DartPimConfig::default();
+        assert_eq!(c.total_xbars(), 8 * 1024 * 1024); // 8M crossbars
+        assert_eq!(c.total_capacity_bytes(), 256 << 30); // 256 GB (Table II)
+        assert_eq!(c.total_riscv(), 128);
+        assert_eq!(c.fifo_capacity_reads(), 480);
+        assert_eq!(c.affine_instances(), 8);
+        assert!(c.rows_consistent());
+    }
+
+    #[test]
+    fn max_reads_presets() {
+        for m in [12_500, 25_000, 50_000] {
+            assert_eq!(DartPimConfig::with_max_reads(m).max_reads, m);
+        }
+    }
+}

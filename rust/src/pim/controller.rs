@@ -1,0 +1,119 @@
+//! Controller hierarchy (paper Fig. 5, Table VI): one PIM controller,
+//! per-chip controllers, per-bank controllers, per-crossbar controllers.
+//! All crossbars execute identical op sequences, so controllers are
+//! simple broadcast machines; this module models their counts and power
+//! roll-up, and provides the broadcast fan-out used by the coordinator.
+
+use super::config::DartPimConfig;
+
+/// Per-unit controller power (W), Table VI (synthesized, TSMC 28 nm).
+#[derive(Debug, Clone)]
+pub struct ControllerPower {
+    pub xbar_w: f64,
+    pub bank_w: f64,
+    pub chip_w: f64,
+    pub pim_w: f64,
+    /// Peripheral decode-and-drive unit power (W) per bank.
+    pub decode_drive_w: f64,
+}
+
+impl Default for ControllerPower {
+    fn default() -> Self {
+        ControllerPower {
+            xbar_w: 9.43e-6,
+            bank_w: 0.42e-3,
+            chip_w: 9.4e-3,
+            pim_w: 0.5e-3,
+            decode_drive_w: 129.1e-6,
+        }
+    }
+}
+
+/// Controller counts for a configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ControllerCounts {
+    pub pim: usize,
+    pub chip: usize,
+    pub bank: usize,
+    pub xbar: usize,
+}
+
+/// Hierarchical address of one crossbar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct XbarAddr {
+    pub chip: u32,
+    pub bank: u32,
+    pub xbar: u32,
+}
+
+pub fn counts(cfg: &DartPimConfig) -> ControllerCounts {
+    ControllerCounts {
+        pim: cfg.n_modules,
+        chip: cfg.n_modules * cfg.chips_per_module,
+        bank: cfg.n_modules * cfg.chips_per_module * cfg.banks_per_chip,
+        xbar: cfg.total_xbars(),
+    }
+}
+
+/// Aggregate controller power (the paper quotes 86 W).
+pub fn total_power(cfg: &DartPimConfig, p: &ControllerPower) -> f64 {
+    let c = counts(cfg);
+    c.pim as f64 * p.pim_w
+        + c.chip as f64 * p.chip_w
+        + c.bank as f64 * p.bank_w
+        + c.xbar as f64 * p.xbar_w
+}
+
+/// Decompose a flat crossbar id into its hierarchical address (routing:
+/// the PIM controller forwards a read only to chips/banks owning its
+/// minimizers — paper §V-C).
+pub fn addr_of(cfg: &DartPimConfig, flat: usize) -> XbarAddr {
+    assert!(flat < cfg.total_xbars(), "crossbar id out of range");
+    let per_chip = cfg.banks_per_chip * cfg.xbars_per_bank;
+    XbarAddr {
+        chip: (flat / per_chip) as u32,
+        bank: ((flat % per_chip) / cfg.xbars_per_bank) as u32,
+        xbar: (flat % cfg.xbars_per_bank) as u32,
+    }
+}
+
+/// Inverse of [`addr_of`].
+pub fn flat_of(cfg: &DartPimConfig, addr: XbarAddr) -> usize {
+    (addr.chip as usize * cfg.banks_per_chip + addr.bank as usize) * cfg.xbars_per_bank
+        + addr.xbar as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_table_ii() {
+        let c = counts(&DartPimConfig::default());
+        assert_eq!(c, ControllerCounts { pim: 1, chip: 32, bank: 16_384, xbar: 8 * 1024 * 1024 });
+    }
+
+    #[test]
+    fn power_matches_paper_86w() {
+        let p = total_power(&DartPimConfig::default(), &ControllerPower::default());
+        assert!((p - 86.0).abs() / 86.0 < 0.02, "controllers power = {p}");
+    }
+
+    #[test]
+    fn addr_roundtrip() {
+        let cfg = DartPimConfig::default();
+        for flat in [0usize, 1, 511, 512, 262_143, 262_144, 8 * 1024 * 1024 - 1] {
+            let a = addr_of(&cfg, flat);
+            assert_eq!(flat_of(&cfg, a), flat);
+            assert!((a.chip as usize) < 32);
+            assert!((a.bank as usize) < 512);
+            assert!((a.xbar as usize) < 512);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn addr_bounds_checked() {
+        addr_of(&DartPimConfig::default(), 8 * 1024 * 1024);
+    }
+}

@@ -1,0 +1,168 @@
+//! Energy model (paper Tables V/VI, Eq. 7; Fig. 10b).
+//!
+//! Crossbar compute energy is switch-count based (90 fJ per MAGIC or
+//! write switch, conservatively scaled from RACER); data transfer uses
+//! CONCEPT's per-bit costs; controllers / peripherals / RISC-V contribute
+//! power x execution-time.
+
+use super::config::DartPimConfig;
+use super::xbar_sim::InstanceCost;
+
+/// Per-event energy constants.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// Energy per MAGIC switch (J) — Table V: 90 fJ.
+    pub e_magic: f64,
+    /// Energy per write switch (J) — Table V: 90 fJ.
+    pub e_write: f64,
+    /// DP-RISC-V -> DP-memory write transfer (J/bit) — Table VI: 11.7 pJ.
+    pub e_xfer_write: f64,
+    /// DP-memory -> DP-RISC-V read transfer (J/bit) — Table VI: 5.64 pJ.
+    pub e_xfer_read: f64,
+    /// Single RISC-V core power (W) — Table VI: 40 mW (AndesCore AX25).
+    pub p_riscv_core: f64,
+    /// Single RISC-V cache power (W) — Table VI: 8 mW.
+    pub p_riscv_cache: f64,
+    /// Aggregate controller power (W) — paper §VII-D: 86 W.
+    pub p_controllers: f64,
+    /// Memory peripheral power (W) — paper §VII-D (RACER, scaled): 5.7 W.
+    pub p_peripherals: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            e_magic: 90e-15,
+            e_write: 90e-15,
+            e_xfer_write: 11.7e-12,
+            e_xfer_read: 5.64e-12,
+            p_riscv_core: 40e-3,
+            p_riscv_cache: 8e-3,
+            p_controllers: 86.0,
+            p_peripherals: 5.7,
+        }
+    }
+}
+
+/// Energy breakdown for a full run (Fig. 10b categories), in joules.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyBreakdown {
+    pub crossbars: f64,
+    pub controllers: f64,
+    pub peripherals: f64,
+    pub riscv: f64,
+    pub transfer_in: f64,
+    pub transfer_out: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.crossbars
+            + self.controllers
+            + self.peripherals
+            + self.riscv
+            + self.transfer_in
+            + self.transfer_out
+    }
+
+    /// Average power over an execution time.
+    pub fn avg_power(&self, exec_time_s: f64) -> f64 {
+        self.total() / exec_time_s
+    }
+}
+
+impl EnergyModel {
+    /// Energy of one WF instance (switch counts x per-switch energy).
+    pub fn instance_energy(&self, cost: &InstanceCost) -> f64 {
+        self.e_magic * cost.magic_switches as f64 + self.e_write * cost.write_switches as f64
+    }
+
+    /// Eq. 7: total crossbar compute energy for `j_linear` linear and
+    /// `j_affine` affine instances.
+    pub fn crossbars_energy(
+        &self,
+        linear: &InstanceCost,
+        affine: &InstanceCost,
+        j_linear: u64,
+        j_affine: u64,
+    ) -> f64 {
+        self.instance_energy(linear) * j_linear as f64
+            + self.instance_energy(affine) * j_affine as f64
+    }
+
+    /// Full-system energy breakdown.
+    ///
+    /// * `bits_in` — read data written into DP-memory over the run.
+    /// * `bits_out` — result data read out of DP-memory.
+    /// * `riscv_busy_s` — aggregate busy time across all RISC-V cores.
+    /// * `exec_time_s` — wall-clock execution time (controller /
+    ///   peripheral energy is power x time).
+    #[allow(clippy::too_many_arguments)]
+    pub fn breakdown(
+        &self,
+        cfg: &DartPimConfig,
+        linear: &InstanceCost,
+        affine: &InstanceCost,
+        j_linear: u64,
+        j_affine: u64,
+        bits_in: f64,
+        bits_out: f64,
+        riscv_busy_s: f64,
+        exec_time_s: f64,
+    ) -> EnergyBreakdown {
+        let n_riscv = cfg.total_riscv() as f64;
+        EnergyBreakdown {
+            crossbars: self.crossbars_energy(linear, affine, j_linear, j_affine),
+            controllers: self.p_controllers * exec_time_s,
+            peripherals: self.p_peripherals * exec_time_s,
+            // cores idle/busy modelled at constant power (paper uses the
+            // AX25 nominal power for all cores over the run)
+            riscv: n_riscv * (self.p_riscv_core + self.p_riscv_cache) * exec_time_s.max(riscv_busy_s / n_riscv),
+            transfer_in: self.e_xfer_write * bits_in,
+            transfer_out: self.e_xfer_read * bits_out,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::xbar_sim::{PAPER_AFFINE, PAPER_LINEAR};
+
+    #[test]
+    fn paper_instance_energies() {
+        let m = EnergyModel::default();
+        // paper §VII-B: 509,883 switches x 90 fJ = 45.9 nJ (linear)
+        let e_lin = m.instance_energy(&PAPER_LINEAR);
+        assert!((e_lin - 45.9e-9).abs() / 45.9e-9 < 0.01, "e_lin={e_lin}");
+        // 2,549,416 x 90 fJ = 229 nJ (affine)
+        let e_aff = m.instance_energy(&PAPER_AFFINE);
+        assert!((e_aff - 229e-9).abs() / 229e-9 < 0.01, "e_aff={e_aff}");
+    }
+
+    #[test]
+    fn eq7_is_linear_in_instances() {
+        let m = EnergyModel::default();
+        let e1 = m.crossbars_energy(&PAPER_LINEAR, &PAPER_AFFINE, 1000, 10);
+        let e2 = m.crossbars_energy(&PAPER_LINEAR, &PAPER_AFFINE, 2000, 20);
+        assert!((e2 / e1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn riscv_power_matches_paper() {
+        // 128 cores x (40 + 8) mW = 6.1 W (paper §VII-D)
+        let m = EnergyModel::default();
+        let p = 128.0 * (m.p_riscv_core + m.p_riscv_cache);
+        assert!((p - 6.144).abs() < 0.05);
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let m = EnergyModel::default();
+        let cfg = DartPimConfig::default();
+        let b = m.breakdown(&cfg, &PAPER_LINEAR, &PAPER_AFFINE, 1_000_000, 10_000, 1e9, 1e9, 10.0, 100.0);
+        let s = b.crossbars + b.controllers + b.peripherals + b.riscv + b.transfer_in + b.transfer_out;
+        assert!((b.total() - s).abs() < 1e-9);
+        assert!(b.avg_power(100.0) > 0.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! Digital-PIM hardware model of DART-PIM (paper §IV-§V).
+//!
+//! This is the substrate the paper evaluates on — memristive crossbars
+//! executing MAGIC NOR sequences — reproduced as a set of explicit,
+//! constructive cost models:
+//!
+//! * [`config`]   — architecture + algorithm parameters (Tables II/III)
+//! * [`magic`]    — MAGIC-NOR composite-op cycle costs (Table I)
+//! * [`xbar_sim`] — single-crossbar cycle/switch accounting for one
+//!                  linear / affine WF instance (Table IV), plus the
+//!                  crossbar row bit-allocation check (Fig. 3/6)
+//! * [`energy`]   — switching/transfer/controller energy (Tables V/VI,
+//!                  Eq. 7; Fig. 10b)
+//! * [`area`]     — component areas (Table VI; Fig. 10c)
+//! * [`controller`] — the controller hierarchy (PIM/chip/bank/crossbar)
+//!                  with power/area roll-ups
+
+pub mod area;
+pub mod config;
+pub mod controller;
+pub mod energy;
+pub mod magic;
+pub mod xbar_sim;
+
+pub use config::DartPimConfig;
+pub use xbar_sim::{affine_instance_cost, linear_instance_cost, InstanceCost};

@@ -1,0 +1,305 @@
+//! Single-crossbar simulator: cycle and switch accounting for one
+//! linear / affine WF instance (reproduces paper Table IV), plus the
+//! crossbar row bit-allocation of Figs. 3/6.
+//!
+//! Two cost sources are provided:
+//!
+//! * [`CostSource::Constructive`] — build the explicit MAGIC op sequence
+//!   per WF cell from Table I (see [`super::magic`]) and sum. For the
+//!   linear WF this reproduces the paper's per-cell 37b+19 exactly
+//!   (254,585 MAGIC cycles); for the affine WF the paper does not publish
+//!   its op sequence and our construction lands within ~20 % of the
+//!   published total (EXPERIMENTS.md, Table IV row).
+//! * [`CostSource::PaperTable4`] — the published Table IV numbers
+//!   verbatim; used by default for system-level projections (Figs. 9/10)
+//!   so those reproduce the paper's arithmetic.
+
+use super::magic::{min_with_writeback, MagicOp};
+use crate::params::{window_len, BAND, READ_LEN};
+
+/// Bit widths of WF cells (paper §III: 3-bit linear, 5-bit affine).
+pub const B_LINEAR: usize = 3;
+pub const B_AFFINE: usize = 5;
+
+/// Where instance costs come from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CostSource {
+    /// Explicit op-sequence construction from Table I.
+    Constructive,
+    /// Published Table IV numbers.
+    #[default]
+    PaperTable4,
+}
+
+/// Cycle/switch cost of one WF instance on one crossbar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InstanceCost {
+    pub magic_cycles: u64,
+    pub magic_switches: u64,
+    pub write_cycles: u64,
+    pub write_switches: u64,
+}
+
+impl InstanceCost {
+    pub fn total_cycles(&self) -> u64 {
+        self.magic_cycles + self.write_cycles
+    }
+
+    pub fn total_switches(&self) -> u64 {
+        self.magic_switches + self.write_switches
+    }
+}
+
+/// MAGIC op sequence for one *linear* WF cell (paper Algorithm 1),
+/// bit-width `b`. Total = 37b + 19.
+pub fn linear_cell_ops(b: usize) -> Vec<MagicOp> {
+    let mut seq = Vec::new();
+    seq.extend(min_with_writeback(b)); // X = min(D_top, D_left)            13b
+    seq.extend(min_with_writeback(b)); // Y = min(X, D_diag)                13b
+    seq.push(MagicOp::AddConst(b)); //    Z = Y + 1                          5b
+    seq.push(MagicOp::Raw(6)); //         S1 = saturation detect (2 ANDs)     6
+    seq.push(MagicOp::Mux(b)); //         MUX1 = S1 ? Y : Z               3b+1
+    seq.push(MagicOp::Raw(11)); //        S2 = match detect (2 XNOR + AND)   11
+    seq.push(MagicOp::Mux(b)); //         D_ij = S2 ? D_diag : MUX1       3b+1
+    seq
+}
+
+/// MAGIC op sequence for one *affine* WF cell (Eqs. 3-5 + traceback),
+/// bit-width `b`. Constructive — see module docs.
+pub fn affine_cell_ops(b: usize) -> Vec<MagicOp> {
+    let mut seq = Vec::new();
+    // M1 = min(M1_up + w_ex, D_up + w_op + w_ex), direction bit kept
+    seq.push(MagicOp::AddConst(b));
+    seq.push(MagicOp::AddConst(b));
+    seq.extend(min_with_writeback(b));
+    seq.push(MagicOp::Raw(2)); // M1 direction copy (1+1)
+    // A = min(M1, D + w_sub)
+    seq.push(MagicOp::AddConst(b));
+    seq.extend(min_with_writeback(b));
+    // M2 = min(cbase, M2_left + w_ex); cbase = (match ? D : A) + (w_op+w_ex)
+    seq.push(MagicOp::Raw(11)); // match detect (2 XNOR + AND on 2-bit codes)
+    seq.push(MagicOp::Mux(b)); // cbase select
+    seq.push(MagicOp::AddConst(b)); // + w_op + w_ex
+    seq.extend(min_with_writeback(b)); // chain min
+    seq.push(MagicOp::Raw(2)); // M2 direction copy
+    // D = match ? D_diag : min(A, M2)
+    seq.extend(min_with_writeback(b));
+    seq.push(MagicOp::Mux(b));
+    seq.push(MagicOp::Raw(6)); // D-origin 2-bit encode from select lines
+    // 5-bit saturation of M1 and M2 (D saturates through the final mux)
+    seq.extend(min_with_writeback(b));
+    seq.extend(min_with_writeback(b));
+    // traceback: copy the packed 4 direction bits to the traceback rows
+    seq.push(MagicOp::Copy(4));
+    seq
+}
+
+/// Paper-reported residual cycles outside the per-cell loop for a linear
+/// instance: first row/column init + the step-(4) minimum extraction
+/// across the 32 linear-buffer rows (paper §VII-B: 254,585 - 1950*130).
+pub const LINEAR_INIT_CYCLES: u64 = 1_085;
+/// Same residual scaled by bit-width for the affine instance
+/// (constructive mode; the paper does not break this out).
+pub const AFFINE_INIT_CYCLES: u64 = LINEAR_INIT_CYCLES * B_AFFINE as u64 / B_LINEAR as u64;
+
+/// Input-data write bits for one linear instance: the read (2 bits/base)
+/// broadcast into the row + band-buffer initialization.
+fn linear_data_bits(read_len: usize) -> u64 {
+    (2 * read_len + BAND * B_LINEAR) as u64
+}
+
+/// Input-data write bits for one affine instance: read + the aligned
+/// window sub-segment copied from the linear stage + 3 band buffers.
+fn affine_data_bits(read_len: usize) -> u64 {
+    (2 * read_len + 2 * window_len(read_len) + 3 * BAND * B_AFFINE) as u64
+}
+
+/// Row-parallel write width (bits initialized per write cycle): MAGIC
+/// output cells are re-initialized in batches across the row.
+pub const WRITE_WIDTH: u64 = 64;
+
+/// Published Table IV (linear WF row).
+pub const PAPER_LINEAR: InstanceCost = InstanceCost {
+    magic_cycles: 254_585,
+    magic_switches: 254_384,
+    write_cycles: 4_035,
+    write_switches: 255_499,
+};
+
+/// Published Table IV (affine WF row).
+pub const PAPER_AFFINE: InstanceCost = InstanceCost {
+    magic_cycles: 1_288_281,
+    magic_switches: 1_271_921,
+    write_cycles: 20_418,
+    write_switches: 1_277_495,
+};
+
+fn constructive(cell_cycles: u64, init: u64, data_bits: u64, read_len: usize) -> InstanceCost {
+    let cells = (BAND * read_len) as u64;
+    let magic_cycles = cells * cell_cycles + init;
+    // Every MAGIC gate output cell is initialized before use (one switch
+    // each, WRITE_WIDTH per cycle); plus the input data writes.
+    let write_switches = magic_cycles + data_bits;
+    let write_cycles = write_switches.div_ceil(WRITE_WIDTH);
+    InstanceCost {
+        magic_cycles,
+        // upper bound: every MAGIC cycle switches its output cell
+        magic_switches: magic_cycles,
+        write_cycles,
+        write_switches,
+    }
+}
+
+/// Cost of one linear WF instance (read_len = 150 unless noted).
+pub fn linear_instance_cost(src: CostSource) -> InstanceCost {
+    match src {
+        CostSource::PaperTable4 => PAPER_LINEAR,
+        CostSource::Constructive => constructive(
+            MagicOp::total(&linear_cell_ops(B_LINEAR)) as u64,
+            LINEAR_INIT_CYCLES,
+            linear_data_bits(READ_LEN),
+            READ_LEN,
+        ),
+    }
+}
+
+/// Cost of one affine WF instance.
+pub fn affine_instance_cost(src: CostSource) -> InstanceCost {
+    match src {
+        CostSource::PaperTable4 => PAPER_AFFINE,
+        CostSource::Constructive => constructive(
+            MagicOp::total(&affine_cell_ops(B_AFFINE)) as u64,
+            AFFINE_INIT_CYCLES,
+            affine_data_bits(READ_LEN),
+            READ_LEN,
+        ),
+    }
+}
+
+/// Crossbar-row bit allocation (Fig. 3 for the linear buffer, Fig. 6 for
+/// the affine buffer). Asserted to fit the 1024-bit row.
+#[derive(Debug, Clone)]
+pub struct RowAllocation {
+    pub segment_bits: usize,
+    pub read_bits: usize,
+    pub band_bits: usize,
+    pub temp_bits: usize,
+    pub row_bits: usize,
+}
+
+impl RowAllocation {
+    pub fn used(&self) -> usize {
+        self.segment_bits + self.read_bits + self.band_bits
+    }
+
+    pub fn fits(&self) -> bool {
+        // the paper requires >= ~80 temp bits for intermediates
+        self.used() + 80 <= self.row_bits
+    }
+}
+
+/// Linear-buffer row: full reference segment + read + 13x3b band.
+pub fn linear_row_allocation(read_len: usize, row_bits: usize) -> RowAllocation {
+    RowAllocation {
+        segment_bits: 2 * crate::params::segment_len(read_len),
+        read_bits: 2 * read_len,
+        band_bits: BAND * B_LINEAR,
+        temp_bits: row_bits.saturating_sub(
+            2 * crate::params::segment_len(read_len) + 2 * read_len + BAND * B_LINEAR,
+        ),
+        row_bits,
+    }
+}
+
+/// Affine compute row: aligned window sub-segment + read + 3 bands x 5b.
+pub fn affine_row_allocation(read_len: usize, row_bits: usize) -> RowAllocation {
+    RowAllocation {
+        segment_bits: 2 * window_len(read_len),
+        read_bits: 2 * read_len,
+        band_bits: 3 * BAND * B_AFFINE,
+        temp_bits: row_bits
+            .saturating_sub(2 * window_len(read_len) + 2 * read_len + 3 * BAND * B_AFFINE),
+        row_bits,
+    }
+}
+
+/// Traceback storage demand in bits for one affine instance (4 bits per
+/// banded cell) — fits the 8-row affine instance allocation (7 dedicated
+/// traceback rows + the compute row's spare bits).
+pub fn traceback_bits(read_len: usize) -> usize {
+    4 * BAND * read_len
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_cell_is_37b_plus_19() {
+        for b in [3usize, 4, 5, 8] {
+            assert_eq!(MagicOp::total(&linear_cell_ops(b)), 37 * b + 19);
+        }
+    }
+
+    #[test]
+    fn linear_constructive_reproduces_table4_cycles_exactly() {
+        let c = linear_instance_cost(CostSource::Constructive);
+        // 1950 cells x 130 cycles + 1085 init = 254,585 (paper §VII-B)
+        assert_eq!(c.magic_cycles, PAPER_LINEAR.magic_cycles);
+    }
+
+    #[test]
+    fn linear_constructive_close_to_table4_switches_and_writes() {
+        let c = linear_instance_cost(CostSource::Constructive);
+        let p = PAPER_LINEAR;
+        let pct = |a: u64, b: u64| (a as f64 - b as f64).abs() / b as f64;
+        assert!(pct(c.magic_switches, p.magic_switches) < 0.002);
+        assert!(pct(c.write_switches, p.write_switches) < 0.003);
+        assert!(pct(c.write_cycles, p.write_cycles) < 0.02);
+    }
+
+    #[test]
+    fn affine_constructive_within_20pct_of_table4() {
+        let c = affine_instance_cost(CostSource::Constructive);
+        let p = PAPER_AFFINE;
+        let ratio = c.magic_cycles as f64 / p.magic_cycles as f64;
+        assert!((0.8..=1.2).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn paper_mode_is_verbatim() {
+        assert_eq!(linear_instance_cost(CostSource::PaperTable4), PAPER_LINEAR);
+        assert_eq!(affine_instance_cost(CostSource::PaperTable4), PAPER_AFFINE);
+        assert_eq!(PAPER_LINEAR.total_cycles(), 258_620); // paper text
+        assert_eq!(PAPER_AFFINE.total_cycles(), 1_308_699);
+    }
+
+    #[test]
+    fn rows_fit_1024_bits() {
+        let lin = linear_row_allocation(READ_LEN, 1024);
+        assert!(lin.fits(), "linear row: {lin:?}");
+        assert_eq!(lin.segment_bits, 600); // 300 bases (paper §V-B)
+        let aff = affine_row_allocation(READ_LEN, 1024);
+        assert!(aff.fits(), "affine row: {aff:?}");
+    }
+
+    #[test]
+    fn traceback_fits_the_eight_row_instance() {
+        // 4 b/cell x 13 x 150 = 7800 bits ≈ 7.6 rows — matching the
+        // paper's "7x more rows than used for computation" (the last
+        // ~600 bits overflow into the compute row's spare region; the
+        // paper's figure of exactly 7 dedicated rows assumes the D-origin
+        // bits of pure-match rows are elided).
+        let bits = traceback_bits(READ_LEN);
+        assert_eq!(bits, 7800);
+        assert!(bits <= 8 * 1024, "must fit the 8-row instance allocation");
+        assert!(bits > 6 * 1024, "needs ~7 traceback rows, as the paper states");
+    }
+
+    #[test]
+    fn affine_cost_dominates_linear() {
+        let l = linear_instance_cost(CostSource::Constructive);
+        let a = affine_instance_cost(CostSource::Constructive);
+        assert!(a.magic_cycles > 3 * l.magic_cycles);
+    }
+}

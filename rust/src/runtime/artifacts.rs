@@ -1,0 +1,169 @@
+//! Artifact manifest: shapes and file names of the AOT-lowered HLO
+//! modules, written by `python/compile/aot.py`. Parsed with the in-crate
+//! JSON parser and cross-checked against this crate's algorithm
+//! parameters at startup (a mismatch means the Python and Rust layers
+//! were built from different geometry and all numerics would be garbage).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json;
+
+/// One lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// "linear_wf" or "affine_wf".
+    pub kind: String,
+    pub batch: usize,
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub read_len: usize,
+    pub win_len: usize,
+    pub band: usize,
+    pub eth: usize,
+    pub sat_linear: i32,
+    pub sat_affine: i32,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let get = |k: &str| -> Result<usize> {
+            v.get(k).and_then(|x| x.as_usize()).with_context(|| format!("manifest missing {k}"))
+        };
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts").and_then(|x| x.as_arr()).context("manifest artifacts")? {
+            let s = |k: &str| -> Result<String> {
+                Ok(a.get(k).and_then(|x| x.as_str()).with_context(|| format!("artifact {k}"))?.to_string())
+            };
+            artifacts.push(ArtifactEntry {
+                name: s("name")?,
+                kind: s("kind")?,
+                batch: a.get("batch").and_then(|x| x.as_usize()).context("artifact batch")?,
+                path: dir.join(s("file")?),
+            });
+        }
+        let m = ArtifactManifest {
+            read_len: get("read_len")?,
+            win_len: get("win_len")?,
+            band: get("band")?,
+            eth: get("eth")?,
+            sat_linear: get("sat_linear")? as i32,
+            sat_affine: get("sat_affine")? as i32,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-check against crate::params.
+    pub fn validate(&self) -> Result<()> {
+        use crate::params::*;
+        if self.band != BAND || self.eth != ETH {
+            bail!("manifest band/eth {}/{} != crate {}/{}", self.band, self.eth, BAND, ETH);
+        }
+        if self.win_len != window_len(self.read_len) {
+            bail!("manifest win_len {} inconsistent with read_len {}", self.win_len, self.read_len);
+        }
+        if self.sat_linear != SAT_LINEAR || self.sat_affine != SAT_AFFINE {
+            bail!("manifest saturation constants differ from crate params");
+        }
+        if self.artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        for a in &self.artifacts {
+            if !a.path.exists() {
+                bail!("artifact file missing: {}", a.path.display());
+            }
+        }
+        Ok(())
+    }
+
+    /// Batch variants available for a kind, ascending.
+    pub fn batches(&self, kind: &str) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.artifacts.iter().filter(|a| a.kind == kind).map(|a| a.batch).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The entry for (kind, batch).
+    pub fn entry(&self, kind: &str, batch: usize) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.kind == kind && a.batch == batch)
+    }
+
+    /// Smallest variant whose batch >= n, or the largest variant.
+    pub fn variant_for(&self, kind: &str, n: usize) -> Option<&ArtifactEntry> {
+        let mut candidates: Vec<&ArtifactEntry> =
+            self.artifacts.iter().filter(|a| a.kind == kind).collect();
+        candidates.sort_by_key(|a| a.batch);
+        candidates.iter().find(|a| a.batch >= n).copied().or(candidates.last().copied())
+    }
+}
+
+/// Default artifacts directory: `$DART_PIM_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("DART_PIM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn real_manifest_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = real_manifest_dir() else { return };
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.read_len, crate::params::READ_LEN);
+        assert_eq!(m.batches("linear_wf"), vec![32, 256]);
+        assert_eq!(m.batches("affine_wf"), vec![8, 64]);
+    }
+
+    #[test]
+    fn variant_selection() {
+        let Some(dir) = real_manifest_dir() else { return };
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.variant_for("linear_wf", 1).unwrap().batch, 32);
+        assert_eq!(m.variant_for("linear_wf", 32).unwrap().batch, 32);
+        assert_eq!(m.variant_for("linear_wf", 33).unwrap().batch, 256);
+        assert_eq!(m.variant_for("linear_wf", 9999).unwrap().batch, 256);
+        assert!(m.variant_for("nonexistent", 1).is_none());
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(ArtifactManifest::load("/nonexistent/dir").is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_manifest() {
+        let tmp = std::env::temp_dir().join(format!("dartpim-test-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(
+            tmp.join("manifest.json"),
+            r#"{"read_len": 150, "win_len": 99, "band": 13, "eth": 6,
+                "sat_linear": 7, "sat_affine": 31, "artifacts": []}"#,
+        )
+        .unwrap();
+        assert!(ArtifactManifest::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,153 @@
+//! The WF engine abstraction + the pure-Rust reference engine.
+//!
+//! Both engines implement identical numerics (band values, best-of-band
+//! tie-breaks, packed traceback directions); the XLA engine runs the
+//! AOT-compiled Pallas kernels, the Rust engine runs the in-crate
+//! mirrors. The coordinator is engine-agnostic.
+
+use anyhow::{ensure, Result};
+
+use crate::align::banded_affine::affine_wf_band;
+use crate::align::banded_linear::{best_of_band, linear_wf_band};
+use crate::params::BAND;
+
+/// Results of one batched linear-filter call.
+#[derive(Debug, Clone)]
+pub struct LinearBatch {
+    /// Final band row per instance.
+    pub band: Vec<[i32; BAND]>,
+    /// Best distance per instance (saturated => filtered out).
+    pub best: Vec<i32>,
+    /// Band coordinate of the best distance.
+    pub best_j: Vec<u32>,
+}
+
+/// Results of one batched affine-alignment call.
+#[derive(Debug, Clone)]
+pub struct AffineBatch {
+    pub band: Vec<[i32; BAND]>,
+    pub best: Vec<i32>,
+    pub best_j: Vec<u32>,
+    /// Packed 4-bit traceback directions, row-major (read_len, BAND).
+    pub dirs: Vec<Vec<u8>>,
+}
+
+/// A batched Wagner-Fischer compute engine.
+///
+/// Not `Send`: the PJRT client is single-threaded by construction; the
+/// scheduler constructs engines on their owning thread via a factory.
+pub trait WfEngine {
+    fn name(&self) -> &'static str;
+
+    /// Pre-alignment filter: banded linear WF over (read, window) pairs.
+    /// All reads must share one length; windows must be read_len + 2*eth.
+    fn linear_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<LinearBatch>;
+
+    /// Read alignment: banded affine WF with traceback directions.
+    fn affine_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<AffineBatch>;
+}
+
+pub(crate) fn check_batch(reads: &[&[u8]], wins: &[&[u8]]) -> Result<usize> {
+    ensure!(!reads.is_empty(), "empty batch");
+    ensure!(reads.len() == wins.len(), "reads/windows length mismatch");
+    let n = reads[0].len();
+    for (r, w) in reads.iter().zip(wins) {
+        ensure!(r.len() == n, "mixed read lengths in batch");
+        ensure!(w.len() == crate::params::window_len(n), "bad window length");
+    }
+    Ok(n)
+}
+
+/// Pure-Rust engine (reference numerics; also models the DP-RISC-V
+/// offload path, which runs the same WF in scalar code).
+#[derive(Debug, Default, Clone)]
+pub struct RustEngine;
+
+impl WfEngine for RustEngine {
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+
+    fn linear_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<LinearBatch> {
+        check_batch(reads, wins)?;
+        let mut out = LinearBatch {
+            band: Vec::with_capacity(reads.len()),
+            best: Vec::with_capacity(reads.len()),
+            best_j: Vec::with_capacity(reads.len()),
+        };
+        for (r, w) in reads.iter().zip(wins) {
+            let band = linear_wf_band(r, w);
+            let (d, j) = best_of_band(&band);
+            out.band.push(band);
+            out.best.push(d);
+            out.best_j.push(j as u32);
+        }
+        Ok(out)
+    }
+
+    fn affine_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<AffineBatch> {
+        check_batch(reads, wins)?;
+        let mut out = AffineBatch {
+            band: Vec::with_capacity(reads.len()),
+            best: Vec::with_capacity(reads.len()),
+            best_j: Vec::with_capacity(reads.len()),
+            dirs: Vec::with_capacity(reads.len()),
+        };
+        for (r, w) in reads.iter().zip(wins) {
+            let res = affine_wf_band(r, w);
+            let (d, j) = best_of_band(&res.band);
+            out.band.push(res.band);
+            out.best.push(d);
+            out.best_j.push(j as u32);
+            out.dirs.push(res.dirs);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SmallRng;
+
+    fn mk_batch(rng: &mut SmallRng, b: usize, n: usize) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+        let reads: Vec<Vec<u8>> =
+            (0..b).map(|_| (0..n).map(|_| rng.gen_range(0..4)).collect()).collect();
+        let wins: Vec<Vec<u8>> = reads
+            .iter()
+            .map(|r| {
+                let mut w: Vec<u8> =
+                    (0..crate::params::window_len(n)).map(|_| rng.gen_range(0..4)).collect();
+                w[crate::params::ETH..crate::params::ETH + n].copy_from_slice(r);
+                w
+            })
+            .collect();
+        (reads, wins)
+    }
+
+    #[test]
+    fn rust_engine_round_trip() {
+        let mut rng = SmallRng::seed_from_u64(40);
+        let (reads, wins) = mk_batch(&mut rng, 4, 30);
+        let rr: Vec<&[u8]> = reads.iter().map(|v| v.as_slice()).collect();
+        let ww: Vec<&[u8]> = wins.iter().map(|v| v.as_slice()).collect();
+        let mut e = RustEngine;
+        let lin = e.linear_batch(&rr, &ww).unwrap();
+        assert_eq!(lin.best, vec![0, 0, 0, 0], "planted exact matches");
+        let aff = e.affine_batch(&rr, &ww).unwrap();
+        assert_eq!(aff.best, vec![0, 0, 0, 0]);
+        assert!(aff.dirs.iter().all(|d| d.len() == 30 * BAND));
+    }
+
+    #[test]
+    fn batch_validation() {
+        let mut e = RustEngine;
+        assert!(e.linear_batch(&[], &[]).is_err());
+        let r = vec![0u8; 20];
+        let w = vec![0u8; 20]; // wrong window length
+        assert!(e.linear_batch(&[&r], &[&w]).is_err());
+        let w2 = vec![0u8; 32];
+        let r2 = vec![0u8; 10];
+        assert!(e.linear_batch(&[&r, &r2], &[&w2, &w2]).is_err(), "mixed read lengths");
+    }
+}

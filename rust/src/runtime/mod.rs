@@ -1,0 +1,20 @@
+//! Execution runtime: the AOT bridge between the Rust coordinator and
+//! the JAX/Pallas-authored WF compute graphs.
+//!
+//! `make artifacts` lowers the L2 graphs once to HLO text
+//! (`artifacts/*.hlo.txt` + `manifest.json`); [`artifacts`] loads the
+//! manifest, [`xla_engine`] compiles each variant on the PJRT CPU client
+//! and executes batches from the hot path. Python never runs at request
+//! time.
+//!
+//! [`engine::RustEngine`] is the bit-identical pure-Rust mirror (also the
+//! RISC-V-offload compute path); `tests/engine_parity.rs` holds the two
+//! engines to exact agreement.
+
+pub mod artifacts;
+pub mod engine;
+pub mod xla_engine;
+
+pub use artifacts::ArtifactManifest;
+pub use engine::{AffineBatch, LinearBatch, RustEngine, WfEngine};
+pub use xla_engine::XlaEngine;

@@ -1,0 +1,233 @@
+//! PJRT-backed WF engine: loads the AOT-lowered HLO text artifacts and
+//! executes them on the XLA CPU client (adapting the pattern from
+//! /opt/xla-example/load_hlo).
+//!
+//! One compiled executable per (kind, batch) variant; batches are padded
+//! to the nearest variant with all-zero instances (their outputs are
+//! discarded). Interchange is HLO *text* — see `python/compile/aot.py`
+//! for why serialized protos are rejected by xla_extension 0.5.1.
+
+use anyhow::{Context, Result};
+
+use super::artifacts::ArtifactManifest;
+use super::engine::{check_batch, AffineBatch, LinearBatch, WfEngine};
+use crate::params::{window_len, BAND};
+
+struct Variant {
+    batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The XLA/PJRT engine.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    linear: Vec<Variant>,
+    affine: Vec<Variant>,
+    /// PJRT executions performed (metrics).
+    pub calls: u64,
+}
+
+impl XlaEngine {
+    /// Load every artifact in `dir` and compile it on the CPU PJRT
+    /// client. Fails fast on any geometry mismatch.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = ArtifactManifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut linear = Vec::new();
+        let mut affine = Vec::new();
+        for entry in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.path.to_str().context("artifact path not UTF-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", entry.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                client.compile(&comp).with_context(|| format!("compiling {}", entry.name))?;
+            let v = Variant { batch: entry.batch, exe };
+            match entry.kind.as_str() {
+                "linear_wf" => linear.push(v),
+                "affine_wf" => affine.push(v),
+                other => anyhow::bail!("unknown artifact kind {other}"),
+            }
+        }
+        linear.sort_by_key(|v| v.batch);
+        affine.sort_by_key(|v| v.batch);
+        anyhow::ensure!(!linear.is_empty() && !affine.is_empty(), "missing artifact kinds");
+        Ok(XlaEngine { client, manifest, linear, affine, calls: 0 })
+    }
+
+    /// Load from the default artifacts directory
+    /// (`$DART_PIM_ARTIFACTS` or `./artifacts`).
+    pub fn load_default() -> Result<Self> {
+        Self::load(super::artifacts::default_dir())
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Smallest variant batch >= n (or the largest available).
+    fn pick(variants: &[Variant], n: usize) -> usize {
+        variants
+            .iter()
+            .find(|v| v.batch >= n)
+            .unwrap_or_else(|| variants.last().expect("non-empty"))
+            .batch
+    }
+
+    /// Pack a batch (padded to `batch` instances) into two i32 literals.
+    fn pack(
+        reads: &[&[u8]],
+        wins: &[&[u8]],
+        n: usize,
+        batch: usize,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let m = window_len(n);
+        let mut r = vec![0i32; batch * n];
+        let mut w = vec![0i32; batch * m];
+        for (i, (rd, wn)) in reads.iter().zip(wins).enumerate() {
+            for (j, &b) in rd.iter().enumerate() {
+                r[i * n + j] = b as i32;
+            }
+            for (j, &b) in wn.iter().enumerate() {
+                w[i * m + j] = b as i32;
+            }
+        }
+        // one-copy literal creation (no vec1 + reshape round trip) —
+        // §Perf opt 3
+        let as_bytes = |v: &[i32]| unsafe {
+            std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+        };
+        let lr = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &[batch, n],
+            as_bytes(&r),
+        )?;
+        let lw = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &[batch, m],
+            as_bytes(&w),
+        )?;
+        Ok((lr, lw))
+    }
+
+    /// Execute one variant and decompose the output tuple.
+    fn exec(
+        &mut self,
+        is_linear: bool,
+        batch: usize,
+        lr: xla::Literal,
+        lw: xla::Literal,
+    ) -> Result<Vec<xla::Literal>> {
+        self.calls += 1;
+        let variants = if is_linear { &self.linear } else { &self.affine };
+        let exe = &variants
+            .iter()
+            .find(|v| v.batch == batch)
+            .context("variant disappeared")?
+            .exe;
+        let result = exe.execute::<xla::Literal>(&[lr, lw])?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    fn check_read_len(&self, n: usize) -> Result<()> {
+        anyhow::ensure!(
+            n == self.manifest.read_len,
+            "artifacts were lowered for read_len {}, got {n}",
+            self.manifest.read_len
+        );
+        Ok(())
+    }
+
+    fn unpack_band(lit: &xla::Literal, b: usize) -> Result<Vec<[i32; BAND]>> {
+        let flat = lit.to_vec::<i32>()?;
+        anyhow::ensure!(flat.len() == b * BAND, "band shape mismatch");
+        Ok((0..b)
+            .map(|i| {
+                let mut row = [0i32; BAND];
+                row.copy_from_slice(&flat[i * BAND..(i + 1) * BAND]);
+                row
+            })
+            .collect())
+    }
+}
+
+impl WfEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn linear_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<LinearBatch> {
+        let n = check_batch(reads, wins)?;
+        self.check_read_len(n)?;
+        let b = reads.len();
+        let largest = self.linear.last().expect("non-empty").batch;
+        if b > largest {
+            // split oversized batches across the largest variant
+            let mut out = LinearBatch { band: vec![], best: vec![], best_j: vec![] };
+            for (cr, cw) in reads.chunks(largest).zip(wins.chunks(largest)) {
+                let part = self.linear_batch(cr, cw)?;
+                out.band.extend(part.band);
+                out.best.extend(part.best);
+                out.best_j.extend(part.best_j);
+            }
+            return Ok(out);
+        }
+        let batch = Self::pick(&self.linear, b);
+        let (lr, lw) = Self::pack(reads, wins, n, batch)?;
+        let outs = self.exec(true, batch, lr, lw)?;
+        anyhow::ensure!(outs.len() == 3, "linear graph returns 3 outputs");
+        let band = Self::unpack_band(&outs[0], batch)?;
+        let best = outs[1].to_vec::<i32>()?;
+        let best_j = outs[2].to_vec::<i32>()?;
+        Ok(LinearBatch {
+            band: band.into_iter().take(b).collect(),
+            best: best.into_iter().take(b).collect(),
+            best_j: best_j.into_iter().take(b).map(|j| j as u32).collect(),
+        })
+    }
+
+    fn affine_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<AffineBatch> {
+        let n = check_batch(reads, wins)?;
+        self.check_read_len(n)?;
+        let b = reads.len();
+        let largest = self.affine.last().expect("non-empty").batch;
+        if b > largest {
+            let mut out =
+                AffineBatch { band: vec![], best: vec![], best_j: vec![], dirs: vec![] };
+            for (cr, cw) in reads.chunks(largest).zip(wins.chunks(largest)) {
+                let part = self.affine_batch(cr, cw)?;
+                out.band.extend(part.band);
+                out.best.extend(part.best);
+                out.best_j.extend(part.best_j);
+                out.dirs.extend(part.dirs);
+            }
+            return Ok(out);
+        }
+        let batch = Self::pick(&self.affine, b);
+        let (lr, lw) = Self::pack(reads, wins, n, batch)?;
+        let outs = self.exec(false, batch, lr, lw)?;
+        anyhow::ensure!(outs.len() == 4, "affine graph returns 4 outputs");
+        let band = Self::unpack_band(&outs[0], batch)?;
+        let best = outs[1].to_vec::<i32>()?;
+        let best_j = outs[2].to_vec::<i32>()?;
+        let dirs_flat = outs[3].to_vec::<i32>()?;
+        anyhow::ensure!(dirs_flat.len() == batch * n * BAND, "dirs shape mismatch");
+        let dirs: Vec<Vec<u8>> = (0..b)
+            .map(|i| {
+                dirs_flat[i * n * BAND..(i + 1) * n * BAND].iter().map(|&v| v as u8).collect()
+            })
+            .collect();
+        Ok(AffineBatch {
+            band: band.into_iter().take(b).collect(),
+            best: best.into_iter().take(b).collect(),
+            best_j: best_j.into_iter().take(b).map(|j| j as u32).collect(),
+            dirs,
+        })
+    }
+}

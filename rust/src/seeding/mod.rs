@@ -1,0 +1,6 @@
+//! Online seeding (paper §V-C): a read's minimizers select the crossbars
+//! (and reference occurrences) that will evaluate it.
+
+pub mod seeder;
+
+pub use seeder::{seed_read, ReadSeed, SeedHit};

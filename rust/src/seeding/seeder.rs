@@ -1,0 +1,133 @@
+//! Read seeding: extract a read's minimizers and resolve them against the
+//! reference index into potential locations (PLs).
+
+use crate::index::{minimizers, MinimizerIndex};
+
+/// One read minimizer resolved against the index.
+#[derive(Debug, Clone)]
+pub struct ReadSeed {
+    /// The minimizer k-mer (routing key — selects the crossbar).
+    pub kmer: u64,
+    /// Offset of the minimizer within the read (`q`).
+    pub read_offset: u32,
+    /// Number of reference occurrences (0 if the minimizer is absent
+    /// from the reference).
+    pub n_occurrences: usize,
+}
+
+/// A potential location with its provenance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SeedHit {
+    /// Reference position of the minimizer occurrence (k-mer start).
+    pub ref_pos: u32,
+    /// Minimizer offset within the read.
+    pub read_offset: u32,
+    /// Implied mapping position (`ref_pos - read_offset`), may be
+    /// negative near the reference start.
+    pub pl: i64,
+}
+
+/// Seed a read: unique minimizers with their index occurrence counts.
+///
+/// Duplicate minimizer k-mers within one read are collapsed to their
+/// first occurrence (the paper routes one Reads-FIFO entry per (read,
+/// minimizer) pair; a duplicate would re-route the same pair).
+pub fn seed_read(index: &MinimizerIndex, read: &[u8]) -> Vec<ReadSeed> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for m in minimizers(read, index.k, index.w) {
+        if seen.insert(m.kmer) {
+            out.push(ReadSeed {
+                kmer: m.kmer,
+                read_offset: m.pos,
+                n_occurrences: index.occurrences(m.kmer).len(),
+            });
+        }
+    }
+    out
+}
+
+/// Expand a read's seeds into the full PL set (used by the exhaustive
+/// ground-truth mapper and the data-volume motivation study; the PIM
+/// pipeline never materializes this list — that is the point of the
+/// paper).
+pub fn all_seed_hits(index: &MinimizerIndex, read: &[u8]) -> Vec<SeedHit> {
+    let mut hits = Vec::new();
+    for seed in seed_read(index, read) {
+        for &p in index.occurrences(seed.kmer) {
+            hits.push(SeedHit {
+                ref_pos: p,
+                read_offset: seed.read_offset,
+                pl: p as i64 - seed.read_offset as i64,
+            });
+        }
+    }
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::synth::{ReadSimConfig, SynthConfig};
+    use crate::index::MinimizerIndex;
+    use crate::params::{K, READ_LEN, W};
+
+    fn setup() -> (MinimizerIndex, Vec<crate::genome::ReadRecord>) {
+        let g = SynthConfig { len: 80_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = ReadSimConfig { n_reads: 30, sub_rate: 0.002, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        (idx, reads)
+    }
+
+    #[test]
+    fn reads_have_seeds_and_unique_kmers() {
+        let (idx, reads) = setup();
+        for r in &reads {
+            let seeds = seed_read(&idx, &r.seq);
+            assert!(!seeds.is_empty(), "150bp read should contain minimizers");
+            let kmers: std::collections::HashSet<u64> = seeds.iter().map(|s| s.kmer).collect();
+            assert_eq!(kmers.len(), seeds.len());
+        }
+    }
+
+    #[test]
+    fn clean_reads_seed_their_true_position() {
+        let g = SynthConfig { len: 80_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = ReadSimConfig {
+            n_reads: 40,
+            sub_rate: 0.0,
+            ins_rate: 0.0,
+            del_rate: 0.0,
+            ..Default::default()
+        }
+        .simulate(&idx.reference, |p| p as u32);
+        for r in &reads {
+            let hits = all_seed_hits(&idx, &r.seq);
+            assert!(
+                hits.iter().any(|h| h.pl == r.truth_pos as i64),
+                "error-free read must have a PL at its origin"
+            );
+        }
+    }
+
+    #[test]
+    fn seed_offsets_are_within_read() {
+        let (idx, reads) = setup();
+        for r in &reads {
+            for s in seed_read(&idx, &r.seq) {
+                assert!((s.read_offset as usize) + idx.k <= r.seq.len());
+            }
+        }
+    }
+
+    #[test]
+    fn pl_arithmetic() {
+        let (idx, reads) = setup();
+        let r = &reads[0];
+        for h in all_seed_hits(&idx, &r.seq) {
+            assert_eq!(h.pl, h.ref_pos as i64 - h.read_offset as i64);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! The paper's evaluation simulators (§VI):
+//!
+//! * [`full_system`] — routes a real workload through the crossbar
+//!   assignment (minimizer -> crossbar, lowTh RISC-V offload, maxReads
+//!   capping), counts WF instances (J_L/J_A of Eq. 7) and lock-step
+//!   iterations (K_L/K_A of Eq. 6).
+//! * [`riscv`]  — DP-RISC-V latency/occupancy model (GEM5 stand-in:
+//!   the paper's measured 88 µs/affine-instance constant).
+//! * [`report`] — turns counts into execution time / energy / area
+//!   efficiency reports and projects them to the paper's 389 M-read
+//!   dataset (Figs. 9/10).
+//!
+//! The single-crossbar and controller "simulators" live in [`crate::pim`].
+
+pub mod full_system;
+pub mod report;
+pub mod riscv;
+
+pub use full_system::{FullSystemSim, SimCounts, TimingMode};
+pub use report::SystemReport;

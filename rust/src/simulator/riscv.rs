@@ -1,0 +1,63 @@
+//! DP-RISC-V model (paper §VI item 3, Table VI).
+//!
+//! The paper simulates AndesCore AX25 cores in GEM5 and reports a single
+//! calibrated constant — 88 µs per affine WF instance — plus the policy
+//! split: minimizers with reference frequency <= lowTh are computed on
+//! the cores (0.16 % of affine instances on the human dataset).
+
+/// RISC-V timing model.
+#[derive(Debug, Clone)]
+pub struct RiscvModel {
+    /// Seconds per affine WF instance on one core (Table VI: 88 µs).
+    pub affine_instance_s: f64,
+    /// Linear WF is ~5x cheaper than affine on the cores (cycle ratio of
+    /// the two algorithms; used only when lowTh routing sends the filter
+    /// there too).
+    pub linear_instance_s: f64,
+    /// Number of cores.
+    pub n_cores: usize,
+}
+
+impl Default for RiscvModel {
+    fn default() -> Self {
+        RiscvModel { affine_instance_s: 88e-6, linear_instance_s: 88e-6 / 5.0, n_cores: 128 }
+    }
+}
+
+impl RiscvModel {
+    /// Wall-clock time to process the RISC-V share, all cores parallel.
+    pub fn exec_time(&self, linear_instances: u64, affine_instances: u64) -> f64 {
+        (linear_instances as f64 * self.linear_instance_s
+            + affine_instances as f64 * self.affine_instance_s)
+            / self.n_cores as f64
+    }
+
+    /// Aggregate busy core-seconds (for energy accounting).
+    pub fn busy_core_seconds(&self, linear_instances: u64, affine_instances: u64) -> f64 {
+        self.exec_time(linear_instances, affine_instances) * self.n_cores as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example() {
+        // paper §VII-C: 0.16 % of affine instances in 19.4 s on 128 cores
+        // => 19.4 * 128 / 88e-6 = 28.2 M instances
+        let m = RiscvModel::default();
+        let inst = (19.4 * 128.0 / 88e-6) as u64;
+        let t = m.exec_time(0, inst);
+        assert!((t - 19.4).abs() < 0.1, "t={t}");
+    }
+
+    #[test]
+    fn scales_inverse_with_cores() {
+        let m = RiscvModel { n_cores: 64, ..Default::default() };
+        let t64 = m.exec_time(0, 1_000_000);
+        let m128 = RiscvModel::default();
+        let t128 = m128.exec_time(0, 1_000_000);
+        assert!((t64 / t128 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,97 @@
+//! Micro-bench timer (stand-in for criterion in this offline build):
+//! warmup + timed iterations with mean / p50 / p95 reporting.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    /// Optional work units per iteration (for throughput lines).
+    pub units_per_iter: f64,
+}
+
+impl BenchStats {
+    /// Units per second at the mean latency.
+    pub fn throughput(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            return f64::INFINITY;
+        }
+        self.units_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<36} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95",
+            self.name, self.mean, self.p50, self.p95
+        )?;
+        if self.units_per_iter > 0.0 {
+            write!(f, "  {:>12.1} units/s", self.throughput())?;
+        }
+        Ok(())
+    }
+}
+
+/// Run `body` with `warmup` unmeasured and `iters` measured iterations.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut body: impl FnMut()) -> BenchStats {
+    bench_units(name, warmup, iters, 0.0, &mut body)
+}
+
+/// Like [`bench`] but reports throughput in `units` per iteration.
+pub fn bench_units(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    units: f64,
+    body: &mut dyn FnMut(),
+) -> BenchStats {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        body();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        body();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        p95: samples[(iters * 95 / 100).min(iters - 1)],
+        units_per_iter: units,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let s = bench("noop-ish", 1, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn throughput_uses_units() {
+        let s = bench_units("t", 0, 5, 100.0, &mut || {
+            std::thread::sleep(Duration::from_millis(1))
+        });
+        assert!(s.throughput() > 0.0 && s.throughput() < 1_000_000.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Small in-crate utilities standing in for unavailable third-party
+//! crates (offline build — see Cargo.toml note): a seeded RNG, a JSON
+//! writer, a property-test helper, and a micro-bench timer.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use rng::SmallRng;

@@ -1,0 +1,58 @@
+//! Property-test helper (stand-in for the proptest crate): run a check
+//! over many seeded random cases and report the first failing seed so
+//! failures are reproducible with `check_one`.
+
+use super::rng::SmallRng;
+
+/// Run `body` for `cases` seeds derived from `base_seed`. On failure the
+/// panic message names the failing seed.
+pub fn check(name: &str, base_seed: u64, cases: usize, mut body: impl FnMut(&mut SmallRng)) {
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = SmallRng::seed_from_u64(seed);
+            body(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_one(seed: u64, mut body: impl FnMut(&mut SmallRng)) {
+    let mut rng = SmallRng::seed_from_u64(seed);
+    body(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_clean_properties() {
+        check("sum-commutes", 1, 50, |rng| {
+            let a: u32 = rng.gen_range(0..1000);
+            let b: u32 = rng.gen_range(0..1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 2, 3, |_| panic!("boom"));
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()).unwrap_or_default());
+        assert!(msg.contains("always-fails") && msg.contains("seed"), "msg={msg}");
+    }
+}

@@ -1,0 +1,211 @@
+//! Integration: the full pipeline on donor-derived reads (SNPs + indels
+//! between donor and reference, sequencing errors on top), checking
+//! accuracy, metrics coherence, maxReads accuracy degradation, and the
+//! simulator bridge. Uses the Rust engine for speed; engine equivalence
+//! is covered by engine_parity.rs.
+
+use dart_pim::coordinator::scheduler::run_streaming;
+use dart_pim::coordinator::{FilterPolicy, Pipeline, PipelineConfig};
+use dart_pim::eval::accuracy::evaluate_accuracy;
+use dart_pim::genome::mutate::MutateConfig;
+use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+use dart_pim::genome::ReadRecord;
+use dart_pim::index::MinimizerIndex;
+use dart_pim::params::{K, READ_LEN, W};
+use dart_pim::pim::xbar_sim::CostSource;
+use dart_pim::pim::DartPimConfig;
+use dart_pim::runtime::RustEngine;
+use dart_pim::simulator::report::build_report;
+use dart_pim::simulator::TimingMode;
+
+fn workload(n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
+    let genome = SynthConfig { len: 400_000, ..Default::default() }.generate();
+    let donor = MutateConfig::default().apply(&genome);
+    let idx = MinimizerIndex::build(genome, K, W, READ_LEN);
+    let reads =
+        ReadSimConfig { n_reads, ..Default::default() }.simulate(&donor.seq, |p| donor.to_ref(p));
+    (idx, reads)
+}
+
+fn cfg() -> PipelineConfig {
+    PipelineConfig {
+        dart: DartPimConfig { low_th: 1, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn donor_reads_map_accurately() {
+    let (idx, reads) = workload(800);
+    let mut p = Pipeline::new(&idx, cfg(), RustEngine);
+    let (mappings, metrics) = p.map_reads(&reads).unwrap();
+    let rep = evaluate_accuracy(&idx, &reads[..300], &mappings[..300], 5);
+    assert!(rep.accuracy_vs_truth() > 0.95, "truth accuracy {}", rep.accuracy_vs_truth());
+    assert!(rep.accuracy_vs_oracle() > 0.97, "oracle accuracy {}", rep.accuracy_vs_oracle());
+    assert_eq!(metrics.traceback_failures, 0);
+    // metrics coherence
+    assert_eq!(metrics.n_reads, 800);
+    assert!(metrics.filter_passed >= metrics.affine_instances);
+    assert!(metrics.affine_instances > 0 || metrics.riscv_affine_instances > 0);
+    let candidates: u64 =
+        mappings.iter().flatten().map(|m| m.candidates as u64).sum();
+    assert!(
+        candidates <= metrics.affine_instances + metrics.riscv_affine_instances,
+        "candidate outcomes cannot exceed affine instances"
+    );
+}
+
+#[test]
+fn tighter_max_reads_only_loses_accuracy() {
+    let (idx, reads) = workload(600);
+    let accuracy = |max_reads: usize| {
+        let c = PipelineConfig {
+            dart: DartPimConfig { max_reads, low_th: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let mut p = Pipeline::new(&idx, c, RustEngine);
+        let (mappings, metrics) = p.map_reads(&reads).unwrap();
+        let mut near = 0usize;
+        for r in &reads {
+            if let Some(m) = &mappings[r.id as usize] {
+                if (m.pos - r.truth_pos as i64).abs() <= 5 {
+                    near += 1;
+                }
+            }
+        }
+        (near as f64 / reads.len() as f64, metrics.dropped_pairs)
+    };
+    let (acc_tight, dropped_tight) = accuracy(2);
+    let (acc_loose, dropped_loose) = accuracy(25_000);
+    assert_eq!(dropped_loose, 0);
+    assert!(dropped_tight > 0, "cap of 2 must drop pairs");
+    assert!(acc_tight <= acc_loose + 1e-9, "tight {acc_tight} loose {acc_loose}");
+    assert!(acc_loose > 0.95);
+}
+
+#[test]
+fn filter_policies_agree_on_best_distance() {
+    // MinOnly evaluates fewer candidates but the winning distance can
+    // never improve; mapped positions of unambiguous reads agree.
+    let (idx, reads) = workload(300);
+    let run = |policy| {
+        let c = PipelineConfig { filter_policy: policy, ..cfg() };
+        Pipeline::new(&idx, c, RustEngine).map_reads(&reads).unwrap().0
+    };
+    let all = run(FilterPolicy::AllPassing);
+    let min_only = run(FilterPolicy::MinOnly);
+    let mut agree = 0;
+    let mut total = 0;
+    for (a, m) in all.iter().zip(&min_only) {
+        if let (Some(a), Some(m)) = (a, m) {
+            total += 1;
+            assert!(m.dist >= a.dist, "MinOnly cannot find better alignments");
+            if a.pos == m.pos {
+                agree += 1;
+            }
+        }
+    }
+    assert!(total > 250);
+    assert!(agree as f64 / total as f64 > 0.95, "agree {agree}/{total}");
+}
+
+#[test]
+fn streaming_matches_batch_on_donor_workload() {
+    let (idx, reads) = workload(300);
+    let (batch, _) = Pipeline::new(&idx, cfg(), RustEngine).map_reads(&reads).unwrap();
+    let (streamed, _) =
+        run_streaming(&idx, cfg(), || Ok(RustEngine), reads.clone(), 64).unwrap();
+    for (a, b) in batch.iter().zip(&streamed) {
+        match (a, b) {
+            (None, None) => {}
+            (Some(a), Some(b)) => assert_eq!((a.pos, a.dist), (b.pos, b.dist)),
+            _ => panic!("presence mismatch"),
+        }
+    }
+}
+
+#[test]
+fn measured_workload_produces_sane_hardware_report() {
+    let (idx, reads) = workload(400);
+    let mut p = Pipeline::new(&idx, cfg(), RustEngine);
+    let (_, metrics) = p.map_reads(&reads).unwrap();
+    let counts = metrics.to_sim_counts();
+    for timing in [TimingMode::PaperSerial, TimingMode::Batched8] {
+        for cost in [CostSource::PaperTable4, CostSource::Constructive] {
+            let r = build_report(&counts, &p.cfg.dart, cost, timing);
+            assert!(r.exec_time_s > 0.0 && r.exec_time_s.is_finite());
+            assert!(r.energy.total() > 0.0);
+            assert!(r.area.total() > 8000.0 && r.area.total() < 8500.0);
+            assert!(r.throughput() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn reverse_complement_reads_map_when_enabled() {
+    let (idx, mut reads) = workload(200);
+    // flip half the reads to the reverse strand (their origin stays put)
+    for r in reads.iter_mut() {
+        if r.id % 2 == 1 {
+            r.seq = dart_pim::genome::revcomp(&r.seq);
+        }
+    }
+    // without revcomp handling, flipped reads are effectively unmappable
+    let (plain, _) = Pipeline::new(&idx, cfg(), RustEngine).map_reads(&reads).unwrap();
+    let flipped_mapped_plain = reads
+        .iter()
+        .filter(|r| r.id % 2 == 1)
+        .filter(|r| {
+            plain[r.id as usize]
+                .as_ref()
+                .is_some_and(|m| (m.pos - r.truth_pos as i64).abs() <= 5)
+        })
+        .count();
+
+    let rc_cfg = PipelineConfig { handle_revcomp: true, ..cfg() };
+    let (mapped, metrics) = Pipeline::new(&idx, rc_cfg, RustEngine).map_reads(&reads).unwrap();
+    assert_eq!(metrics.traceback_failures, 0);
+    let mut fwd_ok = 0;
+    let mut rev_ok = 0;
+    for r in &reads {
+        if let Some(m) = &mapped[r.id as usize] {
+            if (m.pos - r.truth_pos as i64).abs() <= 5 {
+                if r.id % 2 == 1 {
+                    assert!(m.reverse, "flipped read must report reverse strand");
+                    rev_ok += 1;
+                } else {
+                    assert!(!m.reverse, "forward read must report forward strand");
+                    fwd_ok += 1;
+                }
+            }
+        }
+    }
+    assert!(fwd_ok >= 90, "forward reads: {fwd_ok}/100");
+    assert!(rev_ok >= 90, "reverse reads: {rev_ok}/100");
+    assert!(
+        rev_ok > flipped_mapped_plain,
+        "revcomp handling must recover strand-flipped reads ({rev_ok} vs {flipped_mapped_plain})"
+    );
+}
+
+#[test]
+fn revcomp_does_not_change_forward_results() {
+    let (idx, reads) = workload(150);
+    let (plain, _) = Pipeline::new(&idx, cfg(), RustEngine).map_reads(&reads).unwrap();
+    let rc_cfg = PipelineConfig { handle_revcomp: true, ..cfg() };
+    let (both, _) = Pipeline::new(&idx, rc_cfg, RustEngine).map_reads(&reads).unwrap();
+    let mut same = 0;
+    let mut total = 0;
+    for (a, b) in plain.iter().zip(&both) {
+        if let (Some(a), Some(b)) = (a, b) {
+            total += 1;
+            if a.pos == b.pos && a.dist == b.dist && !b.reverse {
+                same += 1;
+            }
+        }
+    }
+    // forward reads keep their forward mappings (a rare palindromic
+    // repeat may legitimately tie; allow a sliver)
+    assert!(total > 140);
+    assert!(same as f64 / total as f64 > 0.98, "{same}/{total}");
+}

@@ -1,0 +1,184 @@
+//! Cross-module property tests: the algorithmic invariants the
+//! reproduction rests on, exercised at full read length with seeded
+//! random workloads (in-crate property harness; see util::proptest).
+
+use dart_pim::align::banded_affine::affine_wf_band;
+use dart_pim::align::banded_linear::{best_of_band, linear_wf_band};
+use dart_pim::align::full_dp::{semi_global_affine, semi_global_linear};
+use dart_pim::align::traceback::{script_consistent, script_cost, traceback};
+use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+use dart_pim::index::MinimizerIndex;
+use dart_pim::params::{window_len, BAND, ETH, K, READ_LEN, SAT_AFFINE, SAT_LINEAR, W};
+use dart_pim::util::proptest::check;
+use dart_pim::util::SmallRng;
+
+/// Random (read, window) pair; optionally plant the read with edits.
+fn pair(rng: &mut SmallRng, n: usize, plant: bool) -> (Vec<u8>, Vec<u8>, usize) {
+    let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
+    let mut win: Vec<u8> = (0..window_len(n)).map(|_| rng.gen_range(0..4)).collect();
+    let mut edits = 0;
+    if plant {
+        let shift = rng.gen_range(0..BAND);
+        let mut seq = read.clone();
+        edits = rng.gen_range(0..5usize);
+        for _ in 0..edits {
+            match rng.gen_range(0..3u8) {
+                0 => {
+                    let p = rng.gen_range(0..seq.len());
+                    seq[p] = (seq[p] + rng.gen_range(1..4u8)) % 4;
+                }
+                1 => {
+                    let p = rng.gen_range(0..seq.len());
+                    seq.remove(p);
+                }
+                _ => {
+                    let p = rng.gen_range(0..=seq.len());
+                    seq.insert(p, rng.gen_range(0..4));
+                }
+            }
+        }
+        let take = seq.len().min(win.len() - shift);
+        win[shift..shift + take].copy_from_slice(&seq[..take]);
+    }
+    (read, win, edits)
+}
+
+#[test]
+fn linear_band_never_beats_unbanded_dp() {
+    // The band can only restrict the alignment space: an unsaturated
+    // banded result is lower-bounded by the unbanded semi-global
+    // distance over the same window.
+    check("band >= unbanded", 0x1001, 120, |rng| {
+        let plant = rng.gen_bool(0.7);
+        let (read, win, _) = pair(rng, READ_LEN, plant);
+        let (band_best, _) = best_of_band(&linear_wf_band(&read, &win));
+        let full = semi_global_linear(&read, &win).dist;
+        if band_best < SAT_LINEAR {
+            assert!(
+                band_best >= full,
+                "banded {band_best} < unbanded {full} — band cannot find cheaper alignments"
+            );
+        }
+    });
+}
+
+#[test]
+fn affine_dominates_linear() {
+    // Affine gap costs >= linear gap costs (open adds w_op), so the
+    // affine band distance is >= the linear band distance wherever both
+    // are unsaturated.
+    check("affine >= linear", 0x1002, 120, |rng| {
+        let plant = rng.gen_bool(0.8);
+        let (read, win, _) = pair(rng, READ_LEN, plant);
+        let (lin, _) = best_of_band(&linear_wf_band(&read, &win));
+        let (aff, _) = best_of_band(&affine_wf_band(&read, &win).band);
+        if lin < SAT_LINEAR && aff < SAT_AFFINE {
+            assert!(aff >= lin, "affine {aff} < linear {lin}");
+        }
+    });
+}
+
+#[test]
+fn affine_band_brackets_unbanded_gotoh() {
+    check("affine band brackets gotoh", 0x1003, 80, |rng| {
+        let read: Vec<u8> = (0..READ_LEN).map(|_| rng.gen_range(0..4)).collect();
+        let mut seq = read.clone();
+        for _ in 0..rng.gen_range(0..3usize) {
+            let p = rng.gen_range(0..seq.len());
+            seq[p] = (seq[p] + rng.gen_range(1..4u8)) % 4;
+        }
+        let mut win: Vec<u8> =
+            (0..window_len(READ_LEN)).map(|_| rng.gen_range(0..4)).collect();
+        win[ETH..ETH + READ_LEN].copy_from_slice(&seq[..READ_LEN]);
+        let (aff, _) = best_of_band(&affine_wf_band(&read, &win).band);
+        let gotoh = semi_global_affine(&read, &win).dist;
+        if aff < SAT_AFFINE && gotoh <= ETH as i32 {
+            // the band restricts, the anchor charges at most |shift|<=eth
+            assert!(aff >= gotoh && aff <= gotoh + ETH as i32, "aff {aff} vs gotoh {gotoh}");
+        }
+    });
+}
+
+#[test]
+fn traceback_identities_at_full_read_length() {
+    check("traceback cost+consistency @150bp", 0x1004, 100, |rng| {
+        let (read, win, _) = pair(rng, READ_LEN, true);
+        let res = affine_wf_band(&read, &win);
+        let (dist, j) = best_of_band(&res.band);
+        if dist >= SAT_AFFINE {
+            return;
+        }
+        let aln = traceback(&res.dirs, read.len(), j).expect("unsaturated traceback");
+        assert_eq!(script_cost(&aln.ops, aln.j_end), dist, "cost identity");
+        assert!(script_consistent(&aln.ops, aln.j_end, &read, &win), "structural consistency");
+    });
+}
+
+#[test]
+fn window_extraction_paths_agree() {
+    // index.window_for (host fast path) == window_of_segment(segment)
+    // (the paper's crossbar data layout) for every occurrence.
+    let g = SynthConfig { len: 50_000, ..Default::default() }.generate();
+    let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+    let mut checked = 0;
+    for (_, occs) in idx.iter().take(300) {
+        for &pos in occs {
+            let seg = idx.segment(pos);
+            for q in [0usize, 17, 77, READ_LEN - K] {
+                let a = idx.window_of_segment(&seg, q);
+                let b = idx.window_for(pos, q);
+                assert_eq!(a, &b[..], "window mismatch at pos={pos} q={q}");
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 100);
+}
+
+#[test]
+fn unsaturated_filter_passes_are_genuine() {
+    // Every banded pass (distance <= eth) is a true near-match: the
+    // unbanded distance cannot exceed it — the property that justifies
+    // the paper's 3-bit saturation.
+    check("passes are genuine", 0x1005, 100, |rng| {
+        let plant = rng.gen_bool(0.6);
+        let (read, win, _) = pair(rng, 60, plant);
+        let (best, _) = best_of_band(&linear_wf_band(&read, &win));
+        if best <= ETH as i32 {
+            let full = semi_global_linear(&read, &win).dist;
+            assert!(full <= best, "full {full} > banded {best}");
+        }
+    });
+}
+
+#[test]
+fn simulated_reads_always_have_inband_truth_windows() {
+    // Read-simulator + indexing geometry: for an error-free read, the
+    // window built from any of its minimizer occurrences at the truth
+    // position has banded distance 0 on the anchor diagonal.
+    let g = SynthConfig { len: 60_000, ..Default::default() }.generate();
+    let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+    let reads = ReadSimConfig {
+        n_reads: 30,
+        sub_rate: 0.0,
+        ins_rate: 0.0,
+        del_rate: 0.0,
+        ..Default::default()
+    }
+    .simulate(&idx.reference, |p| p as u32);
+    for r in &reads {
+        let mut found_zero = false;
+        for seed in dart_pim::seeding::seed_read(&idx, &r.seq) {
+            for &pos in idx.occurrences(seed.kmer) {
+                if pos as i64 - seed.read_offset as i64 == r.truth_pos as i64 {
+                    let win = idx.window_for(pos, seed.read_offset as usize);
+                    let (d, j) = best_of_band(&linear_wf_band(&r.seq, &win));
+                    assert_eq!(d, 0, "error-free read truth window must be exact");
+                    assert_eq!(j, ETH, "exact match sits on the anchor diagonal");
+                    found_zero = true;
+                }
+            }
+        }
+        assert!(found_zero, "read {} never saw its truth window", r.id);
+    }
+}
