@@ -1,0 +1,26 @@
+# Convenience targets. The Rust workspace itself needs only cargo (no
+# network, no XLA) — see README.md.
+
+PYTHON ?= python3
+
+.PHONY: build test fmt clippy artifacts python-test
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt --all --check
+
+clippy:
+	cargo clippy --workspace --all-targets -- -D warnings
+
+# Lower the L2 JAX graphs to HLO text artifacts for the `pjrt` engine
+# (requires jax; consumed from rust/artifacts by runtime::artifacts).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../rust/artifacts
+
+python-test:
+	$(PYTHON) -m pytest python/tests -q

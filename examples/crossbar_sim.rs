@@ -9,8 +9,8 @@ use dart_pim::eval::figures;
 use dart_pim::pim::energy::EnergyModel;
 use dart_pim::pim::magic::MagicOp;
 use dart_pim::pim::xbar_sim::{
-    affine_cell_ops, affine_instance_cost, linear_cell_ops, linear_instance_cost,
-    affine_row_allocation, linear_row_allocation, traceback_bits, CostSource, B_AFFINE, B_LINEAR,
+    affine_cell_ops, affine_instance_cost, affine_row_allocation, linear_cell_ops,
+    linear_instance_cost, linear_row_allocation, traceback_bits, CostSource, B_AFFINE, B_LINEAR,
 };
 use dart_pim::params::READ_LEN;
 

@@ -8,7 +8,8 @@
 //!   exhaustive CPU oracle and the simulated origins -> full-system
 //!   Eq. 6/7 report + projection to the paper's 389 M-read scale.
 //!
-//!     make artifacts && cargo run --release --example e2e_mapping
+//! `cargo run --release --example e2e_mapping` (add `--features pjrt`
+//! plus `make artifacts` for the XLA engine path).
 //!
 //! Flags: --reads N (default 20000), --len BP (default 2000000),
 //!        --engine xla|rust (default xla), --oracle N (default 2000).
@@ -24,7 +25,7 @@ use dart_pim::index::MinimizerIndex;
 use dart_pim::params::{K, READ_LEN, W};
 use dart_pim::pim::xbar_sim::CostSource;
 use dart_pim::pim::DartPimConfig;
-use dart_pim::runtime::{RustEngine, XlaEngine};
+use dart_pim::runtime::RustEngine;
 use dart_pim::simulator::report::{build_report, scale_counts};
 use dart_pim::simulator::TimingMode;
 
@@ -44,6 +45,44 @@ fn arg_s(name: &str, default: &str) -> String {
         .and_then(|i| argv.get(i + 1))
         .cloned()
         .unwrap_or_else(|| default.to_string())
+}
+
+type MapResult =
+    (Vec<Option<dart_pim::coordinator::FinalMapping>>, dart_pim::coordinator::metrics::Metrics);
+
+#[cfg(feature = "pjrt")]
+fn map_with_engine(
+    kind: &str,
+    index: &MinimizerIndex,
+    cfg: PipelineConfig,
+    reads: &[dart_pim::genome::ReadRecord],
+) -> anyhow::Result<MapResult> {
+    if kind == "rust" {
+        println!("engine: rust");
+        return Pipeline::new(index, cfg, RustEngine).map_reads(reads);
+    }
+    let engine = dart_pim::runtime::XlaEngine::load_default()?;
+    println!(
+        "engine: xla/PJRT ({}), {} compiled variants",
+        engine.platform(),
+        engine.manifest().artifacts.len()
+    );
+    Pipeline::new(index, cfg, engine).map_reads(reads)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn map_with_engine(
+    kind: &str,
+    index: &MinimizerIndex,
+    cfg: PipelineConfig,
+    reads: &[dart_pim::genome::ReadRecord],
+) -> anyhow::Result<MapResult> {
+    if kind != "rust" {
+        println!("engine: rust (this build has no `pjrt` feature; --engine {kind} unavailable)");
+    } else {
+        println!("engine: rust");
+    }
+    Pipeline::new(index, cfg, RustEngine).map_reads(reads)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -91,14 +130,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let t1 = Instant::now();
-    let (mappings, metrics) = if engine_kind == "rust" {
-        println!("engine: rust");
-        Pipeline::new(&index, cfg.clone(), RustEngine).map_reads(&reads)?
-    } else {
-        let engine = XlaEngine::load_default()?;
-        println!("engine: xla/PJRT ({}), {} compiled variants", engine.platform(), engine.manifest().artifacts.len());
-        Pipeline::new(&index, cfg.clone(), engine).map_reads(&reads)?
-    };
+    let (mappings, metrics) = map_with_engine(&engine_kind, &index, cfg.clone(), &reads)?;
     println!("mapping done in {:.1?}: {}", t1.elapsed(), metrics.summary());
     println!(
         "stage times: seed {:.2?}, linear {:.2?}, affine {:.2?} (traceback {:.2?})",

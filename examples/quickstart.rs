@@ -1,17 +1,51 @@
 //! Quickstart: map a handful of simulated reads end to end through the
-//! DART-PIM pipeline with the AOT-compiled Pallas kernels.
+//! DART-PIM pipeline.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//! `cargo run --release --example quickstart`
 //!
-//! Falls back to the pure-Rust engine (identical numerics) if the
-//! artifacts have not been built.
+//! The default (hermetic) build runs the pure-Rust WF engine. With the
+//! `pjrt` feature and AOT artifacts built (`make artifacts`), the
+//! same pipeline executes the compiled Pallas kernels instead — the
+//! numerics are identical (tests/engine_parity.rs).
 
 use dart_pim::coordinator::{Pipeline, PipelineConfig};
 use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
 use dart_pim::index::MinimizerIndex;
 use dart_pim::params::{K, READ_LEN, W};
 use dart_pim::pim::DartPimConfig;
-use dart_pim::runtime::{RustEngine, XlaEngine};
+use dart_pim::runtime::RustEngine;
+
+type MapResult =
+    (Vec<Option<dart_pim::coordinator::FinalMapping>>, dart_pim::coordinator::metrics::Metrics);
+
+/// Run the pipeline on the best engine this build provides.
+#[cfg(feature = "pjrt")]
+fn run_mapping(
+    index: &MinimizerIndex,
+    cfg: PipelineConfig,
+    reads: &[dart_pim::genome::ReadRecord],
+) -> anyhow::Result<MapResult> {
+    match dart_pim::runtime::XlaEngine::load_default() {
+        Ok(engine) => {
+            println!("engine: xla/PJRT ({})", engine.platform());
+            Pipeline::new(index, cfg, engine).map_reads(reads)
+        }
+        Err(e) => {
+            println!("engine: rust (artifacts unavailable: {e})");
+            Pipeline::new(index, cfg, RustEngine).map_reads(reads)
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_mapping(
+    index: &MinimizerIndex,
+    cfg: PipelineConfig,
+    reads: &[dart_pim::genome::ReadRecord],
+) -> anyhow::Result<MapResult> {
+    println!("engine: rust (hermetic default build; `--features pjrt` enables XLA)");
+    Pipeline::new(index, cfg, RustEngine).map_reads(reads)
+}
 
 fn main() -> anyhow::Result<()> {
     // 1. A small synthetic reference genome (stands in for GRCh38).
@@ -37,16 +71,7 @@ fn main() -> anyhow::Result<()> {
         dart: DartPimConfig { low_th: 0, ..Default::default() },
         ..Default::default()
     };
-    let (mappings, metrics) = match XlaEngine::load_default() {
-        Ok(engine) => {
-            println!("engine: xla/PJRT ({})", engine.platform());
-            Pipeline::new(&index, cfg, engine).map_reads(&reads)?
-        }
-        Err(e) => {
-            println!("engine: rust (artifacts unavailable: {e})");
-            Pipeline::new(&index, cfg, RustEngine).map_reads(&reads)?
-        }
-    };
+    let (mappings, metrics) = run_mapping(&index, cfg, &reads)?;
     println!("metrics: {}", metrics.summary());
 
     // 5. Check against the simulated origins.

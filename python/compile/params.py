@@ -10,6 +10,14 @@ saturation thresholds.
 # for the AOT artifacts (paper: Illumina 150 bp short reads).
 READ_LEN = 150
 
+# Minimizer geometry (paper Table III): k-mer length and window size (in
+# k-mers). Only the Rust indexing layer consumes these, but they are
+# declared here so this file is the single source of truth for every
+# Table III value; rust/tests/params_parity.rs cross-checks them against
+# dart_pim::params.
+K = 12
+W = 30
+
 # Band half-width. The paper computes 2*eth+1 = 13 unsaturated cells around
 # the minimizer-anchored diagonal for BOTH the linear filter and the affine
 # aligner (the affine "eth = 31" is the 5-bit value-saturation threshold,
@@ -24,6 +32,11 @@ def window_len(read_len: int) -> int:
 
 
 WIN_LEN = window_len(READ_LEN)  # 162
+
+# Indexed reference segment length per minimizer occurrence (paper §V-B):
+# the union of banded WF windows over all in-read minimizer offsets.
+# Kept as plain arithmetic so the Rust parity test can evaluate it.
+SEGMENT_LEN = 2 * (READ_LEN + ETH) - K  # 300 for 150 bp reads
 
 # Saturation values. Linear WF cells are 3-bit (saturate at eth+1 = 7);
 # affine WF cells are 5-bit (saturate at 31). Any saturated value means

@@ -10,6 +10,11 @@ validated through two invariants:
                       read at every '=' position
 """
 
+import pytest
+
+pytest.importorskip("jax")
+pytest.importorskip("hypothesis")
+
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st

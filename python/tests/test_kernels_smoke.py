@@ -1,0 +1,81 @@
+"""Hypothesis-free smoke parity: Pallas kernels vs the numpy oracle.
+
+The full property suites (test_linear_kernel / test_affine_kernel) need
+the ``hypothesis`` package, which minimal CI runners may not ship. This
+module needs only numpy + jax and pins fixed seeds, so any runner that
+can execute Pallas at all gets end-to-end kernel coverage.
+"""
+
+import pytest
+
+pytest.importorskip("jax")
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+from compile.kernels.affine_wf import affine_wf
+from compile.kernels.linear_wf import linear_wf
+from compile.params import BAND, ETH, window_len
+
+NS = (8, 24)
+SEEDS = (0, 1, 2)
+
+
+def _pair(rng, n, planted):
+    read = rng.integers(0, 4, n).astype(np.int32)
+    win = rng.integers(0, 4, window_len(n)).astype(np.int32)
+    if planted:
+        shift = int(rng.integers(0, 2 * ETH + 1))
+        take = min(n, window_len(n) - shift)
+        win[shift : shift + take] = read[:take]
+        # shift + p < n + 2*ETH == window_len(n) always, so this is in range
+        for _ in range(int(rng.integers(0, 3))):
+            p = int(rng.integers(0, n))
+            win[shift + p] ^= 1
+    return read, win
+
+
+def _batch(rng, b, n, planted):
+    pairs = [_pair(rng, n, planted) for _ in range(b)]
+    reads = jnp.asarray(np.stack([p[0] for p in pairs]))
+    wins = jnp.asarray(np.stack([p[1] for p in pairs]))
+    return pairs, reads, wins
+
+
+def test_linear_kernel_matches_oracle_fixed_seeds():
+    for seed in SEEDS:
+        for n in NS:
+            for planted in (False, True):
+                rng = np.random.default_rng(seed)
+                pairs, reads, wins = _batch(rng, 4, n, planted)
+                got = np.asarray(linear_wf(reads, wins))
+                for i, (read, win) in enumerate(pairs):
+                    want = ref.linear_wf_band(read, win)
+                    np.testing.assert_array_equal(
+                        got[i], want, err_msg=f"seed={seed} n={n} planted={planted} i={i}"
+                    )
+
+
+def test_affine_kernel_matches_oracle_fixed_seeds():
+    for seed in SEEDS:
+        for n in NS:
+            rng = np.random.default_rng(seed + 100)
+            pairs, reads, wins = _batch(rng, 2, n, True)
+            band, dirs = affine_wf(reads, wins)
+            band, dirs = np.asarray(band), np.asarray(dirs)
+            assert band.shape == (2, BAND)
+            assert dirs.shape == (2, n, BAND)
+            for i, (read, win) in enumerate(pairs):
+                want_band, want_dirs = ref.affine_wf_band(read, win)
+                np.testing.assert_array_equal(band[i], want_band, err_msg=f"band i={i} n={n}")
+                np.testing.assert_array_equal(dirs[i], want_dirs, err_msg=f"dirs i={i} n={n}")
+
+
+def test_exact_plant_scores_zero():
+    rng = np.random.default_rng(7)
+    read = rng.integers(0, 4, 16).astype(np.int32)
+    win = rng.integers(0, 4, window_len(16)).astype(np.int32)
+    win[ETH : ETH + 16] = read
+    band = np.asarray(linear_wf(jnp.asarray(read[None, :]), jnp.asarray(win[None, :])))
+    assert band[0, ETH] == 0

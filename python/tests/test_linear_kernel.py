@@ -5,9 +5,13 @@ kernel must agree with ref.linear_wf_band cell-for-cell, and the rolling
 oracle must agree with the structurally independent full-matrix DP.
 """
 
+import pytest
+
+pytest.importorskip("jax")
+pytest.importorskip("hypothesis")
+
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

@@ -3,6 +3,11 @@
 import json
 import os
 
+import pytest
+
+pytest.importorskip("jax")
+pytest.importorskip("hypothesis")  # helpers come from test_linear_kernel
+
 import jax
 import jax.numpy as jnp
 import numpy as np

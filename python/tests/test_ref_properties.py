@@ -5,6 +5,10 @@ kernel parity tests would silently chase it.
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

@@ -9,7 +9,9 @@ use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
 use dart_pim::index::MinimizerIndex;
 use dart_pim::params::{window_len, K, READ_LEN, W};
 use dart_pim::pim::DartPimConfig;
-use dart_pim::runtime::{RustEngine, WfEngine, XlaEngine};
+use dart_pim::runtime::{RustEngine, WfEngine};
+#[cfg(feature = "pjrt")]
+use dart_pim::runtime::XlaEngine;
 use dart_pim::util::bench::bench_units;
 use dart_pim::util::SmallRng;
 
@@ -50,14 +52,24 @@ fn engine_suite(name: &str, engine: &mut dyn WfEngine, rng: &mut SmallRng) {
     }
 }
 
+#[cfg(feature = "pjrt")]
+fn xla_engine_suite(rng: &mut SmallRng) {
+    match XlaEngine::load_default() {
+        Ok(mut e) => engine_suite("xla ", &mut e, rng),
+        Err(e) => println!("xla engine unavailable ({e}); run `make artifacts`"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn xla_engine_suite(_rng: &mut SmallRng) {
+    println!("xla engine not compiled in (enable with `--features pjrt`)");
+}
+
 fn main() {
     let mut rng = SmallRng::seed_from_u64(9);
     println!("== WF engine micro-bench (units = WF instances) ==");
     engine_suite("rust", &mut RustEngine, &mut rng);
-    match XlaEngine::load_default() {
-        Ok(mut e) => engine_suite("xla ", &mut e, &mut rng),
-        Err(e) => println!("xla engine unavailable ({e}); run `make artifacts`"),
-    }
+    xla_engine_suite(&mut rng);
 
     println!("\n== end-to-end pipeline (host reads/s) ==");
     let genome = SynthConfig { len: 500_000, ..Default::default() }.generate();
@@ -73,6 +85,7 @@ fn main() {
         std::hint::black_box(p.map_reads(&reads).unwrap());
     });
     println!("{s}");
+    #[cfg(feature = "pjrt")]
     if let Ok(engine) = XlaEngine::load_default() {
         // PJRT client is constructed once; pipeline borrows it per run
         let mut p = Pipeline::new(&index, cfg.clone(), engine);

@@ -102,7 +102,7 @@ mod tests {
     use super::*;
     use crate::align::banded_linear::{best_of_band, linear_wf_band};
     use crate::params::ETH;
-    
+
     use crate::util::SmallRng;
 
     fn planted_with_gap(

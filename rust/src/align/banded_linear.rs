@@ -73,7 +73,7 @@ pub fn best_of_band(band: &[i32; BAND]) -> (i32, usize) {
 mod tests {
     use super::*;
     use crate::genome::encode_seq;
-    
+
     use crate::util::SmallRng;
 
     fn rand_pair(rng: &mut SmallRng, n: usize) -> (Vec<u8>, Vec<u8>) {

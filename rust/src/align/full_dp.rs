@@ -163,7 +163,7 @@ pub fn semi_global_affine(read: &[u8], seg: &[u8]) -> SemiGlobalHit {
 mod tests {
     use super::*;
     use crate::genome::encode_seq;
-    
+
     use crate::util::SmallRng;
 
     #[test]

@@ -199,7 +199,7 @@ mod tests {
     use crate::align::banded_affine::affine_wf_band;
     use crate::align::banded_linear::best_of_band;
     use crate::params::{window_len, SAT_AFFINE};
-    
+
     use crate::util::SmallRng;
 
     fn planted(rng: &mut SmallRng, n: usize, subs: usize, dels: usize, inss: usize) -> (Vec<u8>, Vec<u8>) {

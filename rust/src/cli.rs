@@ -25,7 +25,9 @@ use crate::index::MinimizerIndex;
 use crate::params::{K, READ_LEN, W};
 use crate::pim::xbar_sim::{self, CostSource};
 use crate::pim::DartPimConfig;
-use crate::runtime::{RustEngine, XlaEngine};
+use crate::runtime::RustEngine;
+#[cfg(feature = "pjrt")]
+use crate::runtime::XlaEngine;
 use crate::simulator::report::{build_report, scale_counts};
 use crate::simulator::{FullSystemSim, TimingMode};
 use crate::util::json::Json;
@@ -226,7 +228,6 @@ pub fn load_inputs(args: &Args) -> Result<(MinimizerIndex, Vec<ReadRecord>)> {
     Ok((index, reads))
 }
 
-
 fn load_truth(path: &str, n: usize) -> Result<Vec<u32>> {
     let text = std::fs::read_to_string(path)?;
     let mut truth = vec![0u32; n];
@@ -261,17 +262,30 @@ fn run_pipeline(
         },
         handle_revcomp: args.flag("revcomp"),
     };
-    match args.get("engine").unwrap_or("xla") {
+    // Default engine: the PJRT path when it is compiled in, the pure-Rust
+    // reference engine otherwise (identical numerics; see engine_parity).
+    let default_engine = if cfg!(feature = "pjrt") { "xla" } else { "rust" };
+    match args.get("engine").unwrap_or(default_engine) {
         "rust" => {
             let mut p = Pipeline::new(index, cfg, RustEngine);
             p.map_reads(reads)
         }
+        #[cfg(feature = "pjrt")]
         "xla" => {
             let engine = XlaEngine::load_default()?;
-            eprintln!("engine: xla (PJRT {}, {} artifacts)", engine.platform(), engine.manifest().artifacts.len());
+            eprintln!(
+                "engine: xla (PJRT {}, {} artifacts)",
+                engine.platform(),
+                engine.manifest().artifacts.len()
+            );
             let mut p = Pipeline::new(index, cfg, engine);
             p.map_reads(reads)
         }
+        #[cfg(not(feature = "pjrt"))]
+        "xla" => bail!(
+            "this build has no XLA/PJRT support (rebuild with `--features pjrt`); \
+             use --engine rust"
+        ),
         other => bail!("unknown engine {other:?} (xla|rust)"),
     }
 }

@@ -123,82 +123,82 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
                 oriented.push((rc_seqs[read.id as usize].as_slice(), true));
             }
             for &(seq, reverse) in &oriented {
-            for pair in self.router.route(self.index, read.id, seq) {
-                let pair_id = next_pair;
-                next_pair += 1;
-                let occs = self.index.occurrences(pair.kmer);
-                match pair.target {
-                    Target::Riscv => {
-                        metrics.riscv_pairs += 1;
-                        for &pos in occs {
-                            riscv_items.push((
-                                WorkTag {
+                for pair in self.router.route(self.index, read.id, seq) {
+                    let pair_id = next_pair;
+                    next_pair += 1;
+                    let occs = self.index.occurrences(pair.kmer);
+                    match pair.target {
+                        Target::Riscv => {
+                            metrics.riscv_pairs += 1;
+                            for &pos in occs {
+                                riscv_items.push((
+                                    WorkTag {
+                                        read_id: read.id,
+                                        pair_id,
+                                        ref_pos: pos,
+                                        read_offset: pair.read_offset,
+                                        pl: pos as i64 - pair.read_offset as i64,
+                                        xbar: u32::MAX, // RISC-V pool, not a crossbar
+                                        reverse,
+                                    },
+                                    seq,
+                                ));
+                            }
+                        }
+                        Target::Xbar { first, count } => {
+                            // FIFO admission on the owning crossbar
+                            let fifo = fifos.entry(first).or_insert_with(|| {
+                                ReadsFifo::new(
+                                    self.cfg.dart.fifo_capacity_reads(),
+                                    self.cfg.dart.max_reads,
+                                )
+                            });
+                            let entry =
+                                FifoEntry { read_id: read.id, read_offset: pair.read_offset };
+                            match fifo.push(entry) {
+                                PushResult::CapExceeded => {
+                                    metrics.dropped_pairs += 1;
+                                    continue;
+                                }
+                                PushResult::Full => {
+                                    // batch-mode backpressure: the entry is
+                                    // consumed immediately below, so the FIFO
+                                    // drains as fast as it fills
+                                    fifo.pop();
+                                    if fifo.push(entry) == PushResult::CapExceeded {
+                                        metrics.dropped_pairs += 1;
+                                        continue;
+                                    }
+                                }
+                                PushResult::Accepted => {}
+                            }
+                            fifo.pop(); // consumed by this round's linear iteration
+                            metrics.routed_pairs += 1;
+                            *metrics.pairs_per_xbar.entry(first).or_default() += 1;
+                            for sub in 1..count {
+                                *metrics.pairs_per_xbar.entry(first + sub).or_default() += 1;
+                            }
+                            for (i, &pos) in occs.iter().enumerate() {
+                                let tag = WorkTag {
                                     read_id: read.id,
                                     pair_id,
                                     ref_pos: pos,
                                     read_offset: pair.read_offset,
                                     pl: pos as i64 - pair.read_offset as i64,
-                                    xbar: u32::MAX, // RISC-V pool, not a crossbar
+                                    // which of the minimizer's crossbars
+                                    // holds this occurrence's segment row
+                                    xbar: first + (i / self.cfg.dart.linear_rows) as u32,
                                     reverse,
-                                },
-                                seq,
-                            ));
-                        }
-                    }
-                    Target::Xbar { first, count } => {
-                        // FIFO admission on the owning crossbar
-                        let fifo = fifos.entry(first).or_insert_with(|| {
-                            ReadsFifo::new(
-                                self.cfg.dart.fifo_capacity_reads(),
-                                self.cfg.dart.max_reads,
-                            )
-                        });
-                        let entry =
-                            FifoEntry { read_id: read.id, read_offset: pair.read_offset };
-                        match fifo.push(entry) {
-                            PushResult::CapExceeded => {
-                                metrics.dropped_pairs += 1;
-                                continue;
-                            }
-                            PushResult::Full => {
-                                // batch-mode backpressure: the entry is
-                                // consumed immediately below, so the FIFO
-                                // drains as fast as it fills
-                                fifo.pop();
-                                if fifo.push(entry) == PushResult::CapExceeded {
-                                    metrics.dropped_pairs += 1;
-                                    continue;
+                                };
+                                let win = self.index.window_for(pos, pair.read_offset as usize);
+                                metrics.linear_instances += 1;
+                                if let Some(b) = linear_batcher.push(tag, seq, win) {
+                                    linear_batches.push(b);
                                 }
-                            }
-                            PushResult::Accepted => {}
-                        }
-                        fifo.pop(); // consumed by this round's linear iteration
-                        metrics.routed_pairs += 1;
-                        *metrics.pairs_per_xbar.entry(first).or_default() += 1;
-                        for sub in 1..count {
-                            *metrics.pairs_per_xbar.entry(first + sub).or_default() += 1;
-                        }
-                        for (i, &pos) in occs.iter().enumerate() {
-                            let tag = WorkTag {
-                                read_id: read.id,
-                                pair_id,
-                                ref_pos: pos,
-                                read_offset: pair.read_offset,
-                                pl: pos as i64 - pair.read_offset as i64,
-                                // which of the minimizer's crossbars
-                                // holds this occurrence's segment row
-                                xbar: first + (i / self.cfg.dart.linear_rows) as u32,
-                                reverse,
-                            };
-                            let win = self.index.window_for(pos, pair.read_offset as usize);
-                            metrics.linear_instances += 1;
-                            if let Some(b) = linear_batcher.push(tag, seq, win) {
-                                linear_batches.push(b);
                             }
                         }
                     }
                 }
-            }
             }
         }
         if let Some(b) = linear_batcher.flush() {

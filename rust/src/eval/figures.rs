@@ -191,14 +191,14 @@ pub fn headline() -> String {
             r25.energy_efficiency() / sys.reads_per_joule(),
         ));
     }
+    s.push_str("  (paper: 5.7x / 257x throughput vs Parabricks / SeGraM; 92x / 27x energy)\n");
     s.push_str(&format!(
-        "  (paper: 5.7x / 257x throughput vs Parabricks / SeGraM; 92x / 27x energy)\n"
-    ));
-    s.push_str(&format!("  model: {:.1} Mreads/s, {:.1} s, {:.1} kJ, {:.0} W\n",
+        "  model: {:.1} Mreads/s, {:.1} s, {:.1} kJ, {:.0} W\n",
         r25.throughput() / 1e6,
         DATASET_READS as f64 / r25.throughput(),
         r25.energy.total() / 1e3,
-        r25.avg_power_w()));
+        r25.avg_power_w()
+    ));
     s
 }
 

@@ -6,7 +6,6 @@
 //! to the reference; read ground truth is always expressed in reference
 //! coordinates.
 
-
 use crate::util::SmallRng;
 
 use super::encode::Seq;

@@ -7,7 +7,6 @@
 //! indels) over a SNP-diverged donor genome. All generation is seeded and
 //! reproducible.
 
-
 use crate::util::SmallRng;
 
 use super::encode::Seq;

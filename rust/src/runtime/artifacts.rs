@@ -112,11 +112,19 @@ impl ArtifactManifest {
     }
 }
 
-/// Default artifacts directory: `$DART_PIM_ARTIFACTS` or `./artifacts`.
+/// Default artifacts directory: `$DART_PIM_ARTIFACTS`, else `./artifacts`
+/// when it holds a manifest, else the crate-local `rust/artifacts/` that
+/// `make artifacts` populates (compile-time path — correct for binaries
+/// run on the machine that built them, which is the dev/CI case).
 pub fn default_dir() -> PathBuf {
-    std::env::var_os("DART_PIM_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| PathBuf::from("artifacts"))
+    if let Some(dir) = std::env::var_os("DART_PIM_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let cwd_local = PathBuf::from("artifacts");
+    if cwd_local.join("manifest.json").exists() {
+        return cwd_local;
+    }
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
 }
 
 #[cfg(test)]

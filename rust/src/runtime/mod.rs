@@ -1,11 +1,13 @@
 //! Execution runtime: the AOT bridge between the Rust coordinator and
 //! the JAX/Pallas-authored WF compute graphs.
 //!
-//! `make artifacts` lowers the L2 graphs once to HLO text
+//! `make artifacts` (python -m compile.aot) lowers the L2 graphs once to HLO text
 //! (`artifacts/*.hlo.txt` + `manifest.json`); [`artifacts`] loads the
-//! manifest, [`xla_engine`] compiles each variant on the PJRT CPU client
-//! and executes batches from the hot path. Python never runs at request
-//! time.
+//! manifest, `xla_engine` (behind the off-by-default `pjrt` cargo
+//! feature) compiles each variant on the PJRT CPU client and executes
+//! batches from the hot path. Python never runs at request time. The
+//! default build is hermetic: no XLA toolchain is required, and the
+//! coordinator runs on [`engine::RustEngine`].
 //!
 //! [`engine::RustEngine`] is the bit-identical pure-Rust mirror (also the
 //! RISC-V-offload compute path); `tests/engine_parity.rs` holds the two
@@ -13,8 +15,10 @@
 
 pub mod artifacts;
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod xla_engine;
 
 pub use artifacts::ArtifactManifest;
 pub use engine::{AffineBatch, LinearBatch, RustEngine, WfEngine};
+#[cfg(feature = "pjrt")]
 pub use xla_engine::XlaEngine;

@@ -1,0 +1,258 @@
+//! Rust ↔ Python parameter parity.
+//!
+//! `python/compile/params.py` is the single source of truth for the
+//! paper's Table III values on the Python/Pallas side; `dart_pim::params`
+//! mirrors it on the Rust side. The AOT manifest cross-check
+//! (`runtime::artifacts::ArtifactManifest::validate`) only runs under the
+//! `pjrt` feature with artifacts built, so this test keeps the two layers
+//! honest in the default hermetic build: it parses the Python module's
+//! top-level integer assignments with a tiny expression evaluator (no
+//! Python interpreter needed) and compares every shared constant.
+
+use std::collections::HashMap;
+
+/// Evaluate `+`, `-`, `*`, `<<`, parentheses, integer literals, and
+/// previously bound names. Returns None for anything fancier (function
+/// defs, calls, strings, tuples) — those lines are simply skipped.
+fn eval_expr(src: &str, env: &HashMap<String, i64>) -> Option<i64> {
+    let tokens = tokenize(src)?;
+    let mut p = Parser { tokens, pos: 0 };
+    let v = p.shift_expr(env)?;
+    (p.pos == p.tokens.len()).then_some(v)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Num(i64),
+    Name(String),
+    Plus,
+    Minus,
+    Star,
+    Shl,
+    LParen,
+    RParen,
+}
+
+fn tokenize(src: &str) -> Option<Vec<Tok>> {
+    let mut out = Vec::new();
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            ' ' | '\t' => i += 1,
+            '0'..='9' => {
+                let start = i;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                out.push(Tok::Num(b[start..i].iter().collect::<String>().parse().ok()?));
+            }
+            'A'..='Z' | 'a'..='z' | '_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.push(Tok::Name(b[start..i].iter().collect()));
+            }
+            '+' => {
+                out.push(Tok::Plus);
+                i += 1;
+            }
+            '-' => {
+                out.push(Tok::Minus);
+                i += 1;
+            }
+            '*' => {
+                out.push(Tok::Star);
+                i += 1;
+            }
+            '<' => {
+                if b.get(i + 1) == Some(&'<') {
+                    out.push(Tok::Shl);
+                    i += 2;
+                } else {
+                    return None;
+                }
+            }
+            '(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            _ => return None, // strings, calls with '.', etc. — skip line
+        }
+    }
+    Some(out)
+}
+
+struct Parser {
+    tokens: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.tokens.get(self.pos)
+    }
+
+    // shift := additive ('<<' additive)*
+    fn shift_expr(&mut self, env: &HashMap<String, i64>) -> Option<i64> {
+        let mut v = self.additive(env)?;
+        while self.peek() == Some(&Tok::Shl) {
+            self.pos += 1;
+            let rhs = self.additive(env)?;
+            v <<= rhs;
+        }
+        Some(v)
+    }
+
+    // additive := term (('+'|'-') term)*
+    fn additive(&mut self, env: &HashMap<String, i64>) -> Option<i64> {
+        let mut v = self.term(env)?;
+        loop {
+            match self.peek() {
+                Some(Tok::Plus) => {
+                    self.pos += 1;
+                    v += self.term(env)?;
+                }
+                Some(Tok::Minus) => {
+                    self.pos += 1;
+                    v -= self.term(env)?;
+                }
+                _ => return Some(v),
+            }
+        }
+    }
+
+    // term := atom ('*' atom)*
+    fn term(&mut self, env: &HashMap<String, i64>) -> Option<i64> {
+        let mut v = self.atom(env)?;
+        while self.peek() == Some(&Tok::Star) {
+            self.pos += 1;
+            v *= self.atom(env)?;
+        }
+        Some(v)
+    }
+
+    fn atom(&mut self, env: &HashMap<String, i64>) -> Option<i64> {
+        match self.peek()?.clone() {
+            Tok::Num(n) => {
+                self.pos += 1;
+                Some(n)
+            }
+            Tok::Name(name) => {
+                self.pos += 1;
+                env.get(&name).copied() // a call like f(x) fails at ')' parity
+            }
+            Tok::Minus => {
+                self.pos += 1;
+                Some(-self.atom(env)?)
+            }
+            Tok::LParen => {
+                self.pos += 1;
+                let v = self.shift_expr(env)?;
+                if self.peek() == Some(&Tok::RParen) {
+                    self.pos += 1;
+                    Some(v)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Parse `NAME = <int expr>` top-level assignments from Python source.
+fn parse_python_consts(src: &str) -> HashMap<String, i64> {
+    let mut env = HashMap::new();
+    for line in src.lines() {
+        // top-level only: skip indented lines (function bodies)
+        if line.starts_with(' ') || line.starts_with('\t') {
+            continue;
+        }
+        let line = line.split('#').next().unwrap_or("");
+        let Some((lhs, rhs)) = line.split_once('=') else { continue };
+        let name = lhs.trim();
+        if !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') || name.is_empty() {
+            continue; // `==` comparisons, annotations, etc.
+        }
+        if let Some(v) = eval_expr(rhs.trim(), &env) {
+            env.insert(name.to_string(), v);
+        }
+    }
+    env
+}
+
+fn python_params() -> HashMap<String, i64> {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../python/compile/params.py");
+    let src = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read {path}: {e} — the Python layer moved?"));
+    parse_python_consts(&src)
+}
+
+#[test]
+fn python_layer_agrees_with_rust_params() {
+    use dart_pim::params as p;
+    let py = python_params();
+    let get = |k: &str| -> i64 { *py.get(k).unwrap_or_else(|| panic!("params.py lost {k}")) };
+
+    assert_eq!(get("READ_LEN"), p::READ_LEN as i64);
+    assert_eq!(get("K"), p::K as i64);
+    assert_eq!(get("W"), p::W as i64);
+    assert_eq!(get("ETH"), p::ETH as i64);
+    assert_eq!(get("BAND"), p::BAND as i64);
+    assert_eq!(get("SAT_LINEAR"), p::SAT_LINEAR as i64);
+    assert_eq!(get("SAT_AFFINE"), p::SAT_AFFINE as i64);
+    assert_eq!(get("W_SUB"), p::W_SUB as i64);
+    assert_eq!(get("W_INS"), p::W_INS as i64);
+    assert_eq!(get("W_DEL"), p::W_DEL as i64);
+    assert_eq!(get("W_OP"), p::W_OP as i64);
+    assert_eq!(get("W_EX"), p::W_EX as i64);
+    assert_eq!(get("BIG"), p::BIG as i64);
+    assert_eq!(get("SEGMENT_LEN"), p::segment_len(p::READ_LEN) as i64);
+}
+
+#[test]
+fn derived_geometry_matches() {
+    use dart_pim::params as p;
+    let py = python_params();
+    // BAND must be derived identically: 2*eth + 1.
+    assert_eq!(py["BAND"], 2 * py["ETH"] + 1);
+    assert_eq!(p::BAND, 2 * p::ETH + 1);
+    // Segment length: 2*(rl + eth) - k on both sides (300 for 150 bp).
+    assert_eq!(py["SEGMENT_LEN"], 2 * (py["READ_LEN"] + py["ETH"]) - py["K"]);
+    assert_eq!(p::segment_len(150), 300);
+    // Linear saturation is eth + 1 on both sides.
+    assert_eq!(py["SAT_LINEAR"], py["ETH"] + 1);
+    assert_eq!(p::SAT_LINEAR, p::ETH as i32 + 1);
+}
+
+#[test]
+fn traceback_direction_codes_match() {
+    use dart_pim::align::banded_affine::{D_M1, D_M2, D_MATCH, D_SUB};
+    let py = python_params();
+    assert_eq!(py["D_MATCH"], D_MATCH as i64);
+    assert_eq!(py["D_SUB"], D_SUB as i64);
+    assert_eq!(py["D_M1"], D_M1 as i64);
+    assert_eq!(py["D_M2"], D_M2 as i64);
+}
+
+#[test]
+fn evaluator_handles_the_forms_params_py_uses() {
+    let mut env = HashMap::new();
+    env.insert("ETH".to_string(), 6);
+    assert_eq!(eval_expr("2 * ETH + 1", &env), Some(13));
+    assert_eq!(eval_expr("1 << 20", &env), Some(1 << 20));
+    assert_eq!(eval_expr("ETH + 1", &env), Some(7));
+    assert_eq!(eval_expr("2 * (150 + ETH) - 12", &env), Some(300));
+    assert_eq!(eval_expr("-5 + 2", &env), Some(-3));
+    // non-integer constructs are rejected, not mis-evaluated
+    assert_eq!(eval_expr("window_len(READ_LEN)", &env), None);
+    assert_eq!(eval_expr("(32, 256)", &env), None);
+    assert_eq!(eval_expr("\"text\"", &env), None);
+}

@@ -1,0 +1,253 @@
+//! Hermetic stand-in for the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! The build environments this repository targets have no network access
+//! to crates.io (see the Cargo.toml note at the workspace root), so the
+//! API subset DART-PIM uses is vendored here as a path dependency:
+//!
+//! * [`Error`] — an error with a context chain (no backtraces),
+//! * [`Result`] — `Result<T, Error>` alias,
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`,
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros.
+//!
+//! Semantics intentionally mirror anyhow 1.x: `{:#}` formatting prints
+//! the full cause chain separated by `": "`, `Debug` prints the message
+//! plus a `Caused by:` list, and any `std::error::Error + Send + Sync`
+//! converts into [`Error`] keeping its source chain. Swapping back to
+//! the real crate is a one-line Cargo.toml change; no call sites would
+//! need to move.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// An error with a chain of context messages (most recent first).
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate over the message chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The outermost message (the deepest cause is at the chain's end).
+    pub fn root_cause(&self) -> &Error {
+        let mut cur = self;
+        while let Some(s) = &cur.source {
+            cur = s;
+        }
+        cur
+    }
+}
+
+/// Iterator over an error's context chain.
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Flatten the std source chain into nested context frames so the
+        // alternate / Debug renderings show the full story.
+        let mut messages = Vec::new();
+        let mut src: Option<&(dyn StdError + 'static)> = e.source();
+        while let Some(s) = src {
+            messages.push(s.to_string());
+            src = s.source();
+        }
+        let mut inner = None;
+        for msg in messages.into_iter().rev() {
+            inner = Some(Box::new(Error { msg, source: inner }));
+        }
+        Error { msg: e.to_string(), source: inner }
+    }
+}
+
+/// `Result<T, anyhow::Error>` (second parameter overridable, as in anyhow).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T>: Sized {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (inline captures work).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                concat!("Condition failed: `", stringify!($cond), "`")
+            ));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn context_chains_render_like_anyhow() {
+        let e: Error = Err::<(), _>(io_err()).context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: file missing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:") && dbg.contains("file missing"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u32>.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        let e = None::<u32>.with_context(|| format!("k={}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "k=7");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        let e = anyhow!("plain {}", "args");
+        assert_eq!(e.to_string(), "plain args");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let n: u32 = "12".parse()?;
+            Ok(n)
+        }
+        assert_eq!(f().unwrap(), 12);
+        fn g() -> Result<u32> {
+            let n: u32 = "nope".parse()?;
+            Ok(n)
+        }
+        assert!(g().is_err());
+    }
+
+    #[test]
+    fn chain_and_root_cause() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        let msgs: Vec<String> = e.chain().map(|x| x.to_string()).collect();
+        assert_eq!(msgs, vec!["outer".to_string(), "file missing".to_string()]);
+        assert_eq!(e.root_cause().to_string(), "file missing");
+    }
+}

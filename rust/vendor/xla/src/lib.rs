@@ -1,0 +1,153 @@
+//! Type-checking stub of the `xla` crate (the PJRT bindings the real
+//! deployment uses, cf. LaurentMazare's `xla-rs`).
+//!
+//! The real crate links a C++ XLA distribution through a build script,
+//! which no hermetic build environment here provides. This stub exposes
+//! the exact API surface `dart_pim::runtime::xla_engine` consumes so that
+//! `cargo check --features pjrt` type-checks the engine end to end, while
+//! every runtime entry point returns [`Error`] — `XlaEngine::load` then
+//! fails cleanly and callers fall back to the pure-Rust `WfEngine`
+//! (which is held to bit-identical numerics by `tests/engine_parity.rs`
+//! when real artifacts and a real PJRT build are present).
+//!
+//! Swapping in the real bindings is a Cargo.toml change only: replace the
+//! `xla` path dependency at the workspace root with the registry/git
+//! crate; no engine code changes.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (a message-carrying enum upstream).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` alias mirroring the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} is unavailable — this build vendors a PJRT stub (no XLA \
+         distribution in the build environment); use the pure-Rust engine"
+    )))
+}
+
+/// Element types of XLA literals (subset).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    S32,
+    F32,
+    U8,
+}
+
+/// An XLA literal (host tensor). Stub: never instantiable with data.
+#[derive(Debug)]
+pub struct Literal {}
+
+impl Literal {
+    /// Mirrors `Literal::create_from_shape_and_untyped_data`.
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Self> {
+        unavailable("Literal creation")
+    }
+
+    /// Mirrors `Literal::to_vec`.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal readback")
+    }
+
+    /// Mirrors `Literal::to_tuple` (decompose a tuple literal).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal tuple decomposition")
+    }
+}
+
+/// A parsed HLO module proto.
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    /// Mirrors `HloModuleProto::from_text_file` (HLO text parsing).
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("HLO text parsing")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    /// Mirrors `XlaComputation::from_proto` (infallible upstream).
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation {}
+    }
+}
+
+/// A device buffer holding one execution output.
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    /// Mirrors `PjRtBuffer::to_literal_sync`.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("buffer readback")
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Mirrors `PjRtLoadedExecutable::execute`.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("execution")
+    }
+}
+
+/// The PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    /// Mirrors `PjRtClient::cpu`. Always fails in the stub, so engine
+    /// construction errors out before any compute is attempted.
+    pub fn cpu() -> Result<Self> {
+        unavailable("PJRT CPU client")
+    }
+
+    /// Mirrors `PjRtClient::platform_name`.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Mirrors `PjRtClient::compile`.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compilation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_fails_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &[0; 4])
+            .is_err());
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("stub"), "{err}");
+    }
+}
