@@ -1,0 +1,82 @@
+//! Bench: sharded-pipeline throughput scaling — end-to-end `map_reads`
+//! reads/s at 1/2/4 worker threads on a synthetic workload, recorded to
+//! `BENCH_pipeline.json` at the repository root so future PRs have a
+//! perf trajectory to compare against.
+//!
+//!     cargo bench --bench pipeline_scaling
+//!
+//! The workload mirrors the wf_engines end-to-end case (500 kbp
+//! reference, 2000 simulated 150 bp reads, lowTh = 0 so all work takes
+//! the crossbar path). Output at every thread count is byte-identical
+//! (held by tests/shard_determinism.rs); only the wall-clock changes.
+
+use dart_pim::coordinator::{Pipeline, PipelineConfig};
+use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+use dart_pim::index::MinimizerIndex;
+use dart_pim::params::{K, READ_LEN, W};
+use dart_pim::pim::DartPimConfig;
+use dart_pim::runtime::RustEngine;
+use dart_pim::util::bench::bench_units;
+use dart_pim::util::json::Json;
+
+const GENOME_LEN: usize = 500_000;
+const N_READS: usize = 2000;
+const THREADS: [usize; 3] = [1, 2, 4];
+
+fn main() {
+    let genome = SynthConfig { len: GENOME_LEN, ..Default::default() }.generate();
+    let index = MinimizerIndex::build(genome, K, W, READ_LEN);
+    let reads = ReadSimConfig { n_reads: N_READS, ..Default::default() }
+        .simulate(&index.reference, |p| p as u32);
+    let base = PipelineConfig {
+        dart: DartPimConfig { low_th: 0, ..Default::default() },
+        ..Default::default()
+    };
+
+    println!("== sharded pipeline scaling ({N_READS} reads, {GENOME_LEN} bp ref) ==");
+    let loads = index.shard_loads(*THREADS.last().unwrap());
+    println!("occurrence shard loads at t=4: {loads:?}");
+
+    let mut rates: Vec<f64> = Vec::new();
+    for &threads in &THREADS {
+        let cfg = PipelineConfig { threads, ..base.clone() };
+        let s = bench_units(
+            &format!("pipeline rust t={threads}"),
+            1,
+            5,
+            reads.len() as f64,
+            &mut || {
+                let mut p = Pipeline::new(&index, cfg.clone(), RustEngine);
+                std::hint::black_box(p.map_reads(&reads).unwrap());
+            },
+        );
+        println!("{s}");
+        rates.push(s.throughput());
+    }
+    let speedup: Vec<f64> = rates.iter().map(|r| r / rates[0].max(1e-12)).collect();
+    println!(
+        "speedup vs 1 thread: {}",
+        speedup.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(" ")
+    );
+
+    let j = Json::obj(vec![
+        ("bench", Json::Str("pipeline_scaling".into())),
+        ("measured", Json::Bool(true)),
+        (
+            "workload",
+            Json::obj(vec![
+                ("genome_len", GENOME_LEN.into()),
+                ("n_reads", N_READS.into()),
+                ("read_len", READ_LEN.into()),
+                ("low_th", 0usize.into()),
+                ("engine", Json::Str("rust".into())),
+            ]),
+        ),
+        ("threads", Json::Arr(THREADS.iter().map(|&t| t.into()).collect())),
+        ("reads_per_s", Json::Arr(rates.iter().map(|&r| r.into()).collect())),
+        ("speedup_vs_1", Json::Arr(speedup.iter().map(|&s| s.into()).collect())),
+    ]);
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pipeline.json");
+    std::fs::write(out, j.pretty()).expect("write BENCH_pipeline.json");
+    println!("wrote {out}");
+}

@@ -80,11 +80,22 @@ fn main() {
         dart: DartPimConfig { low_th: 0, ..Default::default() },
         ..Default::default()
     };
-    let s = bench_units("pipeline rust 2k reads", 1, 3, reads.len() as f64, &mut || {
-        let mut p = Pipeline::new(&index, cfg.clone(), RustEngine);
-        std::hint::black_box(p.map_reads(&reads).unwrap());
-    });
-    println!("{s}");
+    // sharded scaling: minimizer-hash partition across worker threads
+    // (see benches/pipeline_scaling.rs for the recorded baseline)
+    for threads in [1usize, 2, 4] {
+        let c = PipelineConfig { threads, ..cfg.clone() };
+        let s = bench_units(
+            &format!("pipeline rust 2k reads t={threads}"),
+            1,
+            3,
+            reads.len() as f64,
+            &mut || {
+                let mut p = Pipeline::new(&index, c.clone(), RustEngine);
+                std::hint::black_box(p.map_reads(&reads).unwrap());
+            },
+        );
+        println!("{s}");
+    }
     #[cfg(feature = "pjrt")]
     if let Ok(engine) = XlaEngine::load_default() {
         // PJRT client is constructed once; pipeline borrows it per run

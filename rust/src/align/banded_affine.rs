@@ -10,10 +10,13 @@ use crate::params::{BAND, BIG, SAT_AFFINE, W_EX, W_OP, W_SUB, window_len};
 
 use super::banded_linear::init_band;
 
-/// D-origin codes.
+/// D-origin code: diagonal match.
 pub const D_MATCH: u8 = 0;
+/// D-origin code: diagonal substitution.
 pub const D_SUB: u8 = 1;
+/// D-origin code: from the M1 (insertion) layer.
 pub const D_M1: u8 = 2;
+/// D-origin code: from the M2 (deletion) layer.
 pub const D_M2: u8 = 3;
 
 /// Result of one banded affine WF instance.

@@ -4,7 +4,10 @@ use super::traceback::EditOp;
 
 /// Run-length-encoded alignment.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct Cigar(pub Vec<(u32, u8)>);
+pub struct Cigar(
+    /// `(count, op)` runs; ops are the extended SAM codes `= X I D`.
+    pub Vec<(u32, u8)>,
+);
 
 impl Cigar {
     /// Compress an op sequence.

@@ -27,8 +27,16 @@ pub enum EditOp {
 /// corrupted direction data (e.g. a runtime mismatch).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum TracebackError {
-    EscapedBand { i: usize, j: i64 },
+    /// The walk left the band at row `i`, band coordinate `j`.
+    EscapedBand {
+        /// Row (read position) where the walk escaped.
+        i: usize,
+        /// Band coordinate at the escape point.
+        j: i64,
+    },
+    /// The walk reached row 0 while still inside a gap layer.
     EndedInGap,
+    /// The walk exceeded the maximum possible number of steps.
     NotTerminating,
 }
 

@@ -20,10 +20,12 @@ pub struct Mapping {
 
 /// The exhaustive mapper.
 pub struct CpuMapper<'a> {
+    /// The minimizer index used for seeding.
     pub index: &'a MinimizerIndex,
 }
 
 impl<'a> CpuMapper<'a> {
+    /// Mapper over `index`.
     pub fn new(index: &'a MinimizerIndex) -> Self {
         CpuMapper { index }
     }

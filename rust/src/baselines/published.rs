@@ -10,6 +10,7 @@ pub const DATASET_READS: u64 = 389_000_000;
 /// One comparator system as reported by the paper.
 #[derive(Debug, Clone)]
 pub struct PublishedSystem {
+    /// System name as the paper labels it.
     pub name: &'static str,
     /// End-to-end execution time for the 389 M-read dataset (s).
     pub exec_time_s: f64,
@@ -23,18 +24,22 @@ pub struct PublishedSystem {
 }
 
 impl PublishedSystem {
+    /// Reads per second over the 389 M-read dataset.
     pub fn throughput(&self) -> f64 {
         DATASET_READS as f64 / self.exec_time_s
     }
 
+    /// Joules per read.
     pub fn energy_per_read(&self) -> f64 {
         self.energy_j / DATASET_READS as f64
     }
 
+    /// Reads mapped per joule (Fig. 9 energy-efficiency column).
     pub fn reads_per_joule(&self) -> f64 {
         DATASET_READS as f64 / self.energy_j
     }
 
+    /// Throughput per mm² (Fig. 9 area-efficiency column).
     pub fn area_efficiency(&self) -> f64 {
         self.throughput() / self.area_mm2
     }

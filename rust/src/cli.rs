@@ -14,7 +14,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{FilterPolicy, Pipeline, PipelineConfig};
+use crate::coordinator::{default_threads, FilterPolicy, Pipeline, PipelineConfig};
 use crate::eval::figures;
 use crate::genome::fasta::{load_fasta, save_fasta, FastaRecord};
 use crate::genome::fastq::{load_fastq, save_fastq, FastqRecord};
@@ -34,12 +34,15 @@ use crate::util::json::Json;
 
 /// Parsed `--key value` options + positionals.
 pub struct Args {
+    /// The subcommand (first argv token; "help" when absent).
     pub cmd: String,
     opts: HashMap<String, String>,
     flags: Vec<String>,
 }
 
 impl Args {
+    /// Parse `argv` (without the program name) into command + options +
+    /// flags. Rejects bare positionals.
     pub fn parse(argv: &[String]) -> Result<Args> {
         let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
         let mut opts = HashMap::new();
@@ -62,10 +65,12 @@ impl Args {
         Ok(Args { cmd, opts, flags })
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// `--key` as an integer, with a default when absent.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -73,6 +78,7 @@ impl Args {
         }
     }
 
+    /// `--key` as a float, with a default when absent.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -80,11 +86,13 @@ impl Args {
         }
     }
 
+    /// True when the boolean flag `--key` was passed.
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
 }
 
+/// The `dart-pim help` text.
 pub const USAGE: &str = "\
 dart-pim — DNA read mapping with a digital-PIM model (DART-PIM reproduction)
 
@@ -97,15 +105,21 @@ COMMANDS
   map       --ref R.fasta --reads R.fastq [--engine xla|rust]
             (or --index index.bin instead of --ref)
             [--max-reads 25000] [--low-th 3] [--batch 256] [--min-only]
-            [--revcomp] [--out mappings.tsv]
+            [--revcomp] [--threads 1] [--out mappings.tsv]
   evaluate  --ref R.fasta --reads R.fastq --truth truth.tsv
-            [--engine xla|rust] [--tolerance 5]
+            [--engine xla|rust] [--tolerance 5] [--threads 1]
   simulate  --ref R.fasta --reads R.fastq [--max-reads 25000]
             [--low-th 3] [--scale 389000000] [--batched-affine]
-            [--constructive]
+            [--constructive] [--threads 1]
   figures   [--fig 8|9|10a|10b|10c|table4|motivation|headline|all]
   crossbar
   config
+
+`--threads N` shards work across N worker threads (minimizer-hash
+partition; output is byte-identical for any N). The default is 1, or
+the DART_PIM_THREADS environment variable when set. --engine xla is
+always single-threaded (the PJRT client cannot be shared across
+threads); combining it with --threads N > 1 warns and runs with 1.
 ";
 
 /// Entry point; returns the process exit code.
@@ -199,6 +213,8 @@ fn cmd_index(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Load the reference (or prebuilt index) and read set named by
+/// `--ref`/`--index` and `--reads`.
 pub fn load_inputs(args: &Args) -> Result<(MinimizerIndex, Vec<ReadRecord>)> {
     let reads_path = args.get("reads").context("--reads required")?;
     let fastq = load_fastq(reads_path)?;
@@ -261,6 +277,7 @@ fn run_pipeline(
             FilterPolicy::AllPassing
         },
         handle_revcomp: args.flag("revcomp"),
+        threads: args.get_usize("threads", default_threads())?,
     };
     // Default engine: the PJRT path when it is compiled in, the pure-Rust
     // reference engine otherwise (identical numerics; see engine_parity).
@@ -272,6 +289,16 @@ fn run_pipeline(
         }
         #[cfg(feature = "pjrt")]
         "xla" => {
+            if cfg.threads > 1 {
+                // worker shards own RustEngines (the PJRT client is not
+                // Send); don't let the banner claim PJRT ran the work
+                eprintln!(
+                    "--engine xla is single-threaded (PJRT client); \
+                     ignoring --threads {} and running on one thread",
+                    cfg.threads
+                );
+            }
+            let cfg = PipelineConfig { threads: 1, ..cfg };
             let engine = XlaEngine::load_default()?;
             eprintln!(
                 "engine: xla (PJRT {}, {} artifacts)",
@@ -340,8 +367,9 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     let (index, reads) = load_inputs(args)?;
     let cfg = dart_config(args)?;
+    let threads = args.get_usize("threads", default_threads())?;
     let sim = FullSystemSim::new(&index, cfg.clone());
-    let counts = sim.simulate(&reads);
+    let counts = sim.simulate_threaded(&reads, threads);
     let cost = if args.flag("constructive") { CostSource::Constructive } else { CostSource::PaperTable4 };
     let timing = if args.flag("batched-affine") { TimingMode::Batched8 } else { TimingMode::PaperSerial };
     let report = build_report(&counts, &cfg, cost, timing);
@@ -519,6 +547,13 @@ mod tests {
         let a = std::fs::read_to_string(dir.join("map.tsv")).unwrap();
         let b = std::fs::read_to_string(dir.join("map2.tsv")).unwrap();
         assert_eq!(a, b, "mapping from a loaded index must be identical");
+        // sharded mapping must produce byte-identical TSV output
+        run(&argv(&format!(
+            "map --ref {d}/ref.fasta --reads {d}/reads.fastq --engine rust --low-th 0 --threads 3 --out {d}/map3.tsv"
+        )))
+        .unwrap();
+        let c = std::fs::read_to_string(dir.join("map3.tsv")).unwrap();
+        assert_eq!(a, c, "sharded mapping must be byte-identical");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -11,6 +11,7 @@ use crate::params::window_len;
 /// Provenance of one WF instance (flows through to the results).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WorkTag {
+    /// Read this instance belongs to.
     pub read_id: u32,
     /// Dense id of the routed (read, minimizer) pair this instance
     /// belongs to (MinOnly filtering groups by it).
@@ -31,16 +32,21 @@ pub struct WorkTag {
 /// read set (zero-copy — §Perf opt 1); windows are owned (computed per
 /// instance).
 pub struct Batch<'a> {
+    /// Provenance of each instance.
     pub tags: Vec<WorkTag>,
+    /// Read sequences, borrowed from the input read set.
     pub reads: Vec<&'a [u8]>,
+    /// Reference windows, owned (extracted per instance).
     pub wins: Vec<Vec<u8>>,
 }
 
 impl<'a> Batch<'a> {
+    /// Number of instances in the batch.
     pub fn len(&self) -> usize {
         self.tags.len()
     }
 
+    /// True when the batch holds no instances.
     pub fn is_empty(&self) -> bool {
         self.tags.is_empty()
     }
@@ -88,6 +94,7 @@ impl<'a> Batcher<'a> {
         }
     }
 
+    /// Instances accumulated but not yet flushed.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }

@@ -12,6 +12,7 @@ use std::collections::VecDeque;
 /// Push outcome.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PushResult {
+    /// Entry admitted to the queue.
     Accepted,
     /// FIFO at capacity — backpressure: run a filtering round first.
     Full,
@@ -22,6 +23,7 @@ pub enum PushResult {
 /// One queued entry: a read waiting to be filtered on this crossbar.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FifoEntry {
+    /// Read waiting to be filtered on this crossbar.
     pub read_id: u32,
     /// Minimizer offset within the read (address offset sent alongside
     /// the read — paper §V-D step 1).
@@ -39,6 +41,7 @@ pub struct ReadsFifo {
 }
 
 impl ReadsFifo {
+    /// FIFO with queue `capacity` and lifetime admission cap `max_reads`.
     pub fn new(capacity: usize, max_reads: usize) -> Self {
         ReadsFifo {
             queue: VecDeque::with_capacity(capacity.min(1024)),
@@ -68,22 +71,27 @@ impl ReadsFifo {
         self.queue.pop_front()
     }
 
+    /// Entries currently queued.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// True when no entries are queued.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
 
+    /// True when the queue is at capacity (backpressure boundary).
     pub fn is_full(&self) -> bool {
         self.queue.len() >= self.capacity
     }
 
+    /// Entries admitted over the FIFO's lifetime.
     pub fn accepted_total(&self) -> usize {
         self.accepted_total
     }
 
+    /// Entries dropped by the lifetime cap.
     pub fn dropped_total(&self) -> usize {
         self.dropped_total
     }

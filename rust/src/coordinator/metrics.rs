@@ -2,41 +2,125 @@
 //! their conversion into [`crate::simulator::SimCounts`] so the paper's
 //! Eq. 6/7 reports can be generated from measured (not estimated)
 //! workload statistics.
+//!
+//! Metrics are mergeable ([`Metrics::merge`]): shard workers and
+//! streaming chunks each produce a partial `Metrics`, and the driver
+//! folds them into one. Workload counters (what was routed, filtered,
+//! aligned) are sharding-invariant — [`Metrics::invariant_counters`]
+//! collects exactly that subset, which the determinism suite holds
+//! byte-identical across thread counts. Batch-shape counters
+//! (`linear_batches`/`affine_batches`) and wall-clock timings legitimately
+//! depend on how the run was partitioned and are excluded.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::time::Duration;
 
 use crate::simulator::SimCounts;
 
-/// Counters for one pipeline run.
+/// Counters for one pipeline run (or one shard / streaming chunk of it).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
+    /// Reads presented to the pipeline.
     pub n_reads: u64,
+    /// (read, minimizer) pairs admitted to crossbars.
     pub routed_pairs: u64,
+    /// Pairs routed to the DP-RISC-V pool (lowTh minimizers).
     pub riscv_pairs: u64,
+    /// Pairs dropped by the per-crossbar maxReads cap.
     pub dropped_pairs: u64,
+    /// Linear WF instances built for the crossbar path.
     pub linear_instances: u64,
+    /// Affine WF instances that advanced past the filter.
     pub affine_instances: u64,
+    /// Linear WF instances run by the RISC-V offload path.
     pub riscv_linear_instances: u64,
+    /// Affine WF instances run by the RISC-V offload path.
     pub riscv_affine_instances: u64,
+    /// Linear instances whose distance passed the eth filter.
     pub filter_passed: u64,
+    /// Reads with at least one surviving affine candidate.
     pub reads_with_candidates: u64,
+    /// Engine calls made by the linear filter stage (depends on
+    /// batch size and shard count — not a workload invariant).
     pub linear_batches: u64,
+    /// Engine calls made by the affine alignment stage (ditto).
     pub affine_batches: u64,
+    /// Affine results whose traceback could not be reconstructed.
     pub traceback_failures: u64,
     /// Per-crossbar routed pair counts (bottleneck analysis).
     pub pairs_per_xbar: HashMap<u32, u64>,
     /// Per-crossbar affine instance counts.
     pub affine_per_xbar: HashMap<u32, u64>,
-    /// Wall-clock stage timings (host side).
+    /// Wall-clock of seed/route/admission/batch building (host side; for
+    /// merged metrics, the sum over shards' stage clocks).
     pub t_seed: Duration,
+    /// Wall-clock of the batched linear filter stage.
     pub t_linear: Duration,
+    /// Wall-clock of the batched affine alignment stage.
     pub t_affine: Duration,
+    /// Wall-clock of traceback decoding (inside the affine stage).
     pub t_traceback: Duration,
+    /// End-to-end wall-clock of the run.
     pub t_total: Duration,
 }
 
 impl Metrics {
+    /// Fold another (shard or chunk) `Metrics` into this one: counters
+    /// and per-crossbar maps add, stage clocks sum (so merged timings
+    /// are aggregate CPU time, not wall-clock, when shards overlap).
+    pub fn merge(&mut self, m: Metrics) {
+        self.n_reads += m.n_reads;
+        self.routed_pairs += m.routed_pairs;
+        self.riscv_pairs += m.riscv_pairs;
+        self.dropped_pairs += m.dropped_pairs;
+        self.linear_instances += m.linear_instances;
+        self.affine_instances += m.affine_instances;
+        self.riscv_linear_instances += m.riscv_linear_instances;
+        self.riscv_affine_instances += m.riscv_affine_instances;
+        self.filter_passed += m.filter_passed;
+        self.reads_with_candidates += m.reads_with_candidates;
+        self.linear_batches += m.linear_batches;
+        self.affine_batches += m.affine_batches;
+        self.traceback_failures += m.traceback_failures;
+        for (k, v) in m.pairs_per_xbar {
+            *self.pairs_per_xbar.entry(k).or_default() += v;
+        }
+        for (k, v) in m.affine_per_xbar {
+            *self.affine_per_xbar.entry(k).or_default() += v;
+        }
+        self.t_seed += m.t_seed;
+        self.t_linear += m.t_linear;
+        self.t_affine += m.t_affine;
+        self.t_traceback += m.t_traceback;
+        self.t_total += m.t_total;
+    }
+
+    /// The sharding-invariant workload counters as a flat ordered map
+    /// (including the per-crossbar distributions). Two runs of the same
+    /// read set at different `threads` settings must produce equal maps;
+    /// batch-shape counters and timings are deliberately excluded.
+    pub fn invariant_counters(&self) -> BTreeMap<String, u64> {
+        let mut m = BTreeMap::new();
+        m.insert("n_reads".to_string(), self.n_reads);
+        m.insert("routed_pairs".to_string(), self.routed_pairs);
+        m.insert("riscv_pairs".to_string(), self.riscv_pairs);
+        m.insert("dropped_pairs".to_string(), self.dropped_pairs);
+        m.insert("linear_instances".to_string(), self.linear_instances);
+        m.insert("affine_instances".to_string(), self.affine_instances);
+        m.insert("riscv_linear_instances".to_string(), self.riscv_linear_instances);
+        m.insert("riscv_affine_instances".to_string(), self.riscv_affine_instances);
+        m.insert("filter_passed".to_string(), self.filter_passed);
+        m.insert("reads_with_candidates".to_string(), self.reads_with_candidates);
+        m.insert("traceback_failures".to_string(), self.traceback_failures);
+        for (k, v) in &self.pairs_per_xbar {
+            m.insert(format!("xbar{k}:pairs"), *v);
+        }
+        for (k, v) in &self.affine_per_xbar {
+            m.insert(format!("xbar{k}:affine"), *v);
+        }
+        m
+    }
+
     /// Convert measured counters into simulator counts (the bridge from
     /// the live run to Eq. 6/7 projections).
     pub fn to_sim_counts(&self) -> SimCounts {
@@ -120,5 +204,30 @@ mod tests {
         assert!((m.pass_rate() - 0.25).abs() < 1e-12);
         assert!((m.host_throughput() - 2.0).abs() < 1e-12);
         assert!(m.summary().contains("pass=25.0%"));
+    }
+
+    #[test]
+    fn merge_sums_counters_and_maps() {
+        let mut a = Metrics { n_reads: 2, routed_pairs: 5, ..Default::default() };
+        a.pairs_per_xbar.insert(1, 3);
+        let mut b = Metrics { n_reads: 3, routed_pairs: 7, ..Default::default() };
+        b.pairs_per_xbar.insert(1, 2);
+        b.pairs_per_xbar.insert(9, 4);
+        b.t_seed = Duration::from_millis(5);
+        a.merge(b);
+        assert_eq!(a.n_reads, 5);
+        assert_eq!(a.routed_pairs, 12);
+        assert_eq!(a.pairs_per_xbar[&1], 5);
+        assert_eq!(a.pairs_per_xbar[&9], 4);
+        assert_eq!(a.t_seed, Duration::from_millis(5));
+    }
+
+    #[test]
+    fn invariant_counters_exclude_batch_shape() {
+        let m =
+            Metrics { n_reads: 1, linear_batches: 42, affine_batches: 17, ..Default::default() };
+        let c = m.invariant_counters();
+        assert_eq!(c["n_reads"], 1);
+        assert!(!c.keys().any(|k| k.contains("batch")));
     }
 }

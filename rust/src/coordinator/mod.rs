@@ -9,13 +9,25 @@
 //! * [`batcher`]  — packs (read, window) work items into engine batches;
 //!                  the lock-step broadcast across crossbars becomes one
 //!                  PJRT call over many instances (steps 3, 6)
+//! * [`shard`]    — per-shard execution of steps 2-6: the minimizer-hash
+//!                  partition that mirrors the per-crossbar data
+//!                  organization (§V-B), and the worker that runs FIFO
+//!                  admission, filtering, alignment, and traceback over
+//!                  one shard's disjoint slice
 //! * [`state`]    — per-read best-so-far PL aggregation, the main
-//!                  RISC-V's bookkeeping (step 7)
-//! * [`metrics`]  — counters that feed the full-system simulator's
-//!                  Eq. 6/7 reports
-//! * [`pipeline`] — the single-threaded end-to-end mapper
-//! * [`scheduler`]— the threaded driver (stage threads + channels;
-//!                  std::thread + mpsc — this offline build has no tokio)
+//!                  RISC-V's bookkeeping (step 7), with the deterministic
+//!                  tie-break that makes the shard merge order-free
+//! * [`metrics`]  — mergeable counters that feed the full-system
+//!                  simulator's Eq. 6/7 reports
+//! * [`pipeline`] — the end-to-end mapper: single-threaded on the
+//!                  configured engine, or sharded across worker threads
+//!                  (`PipelineConfig::threads`) with byte-identical output
+//! * [`scheduler`]— the chunked streaming driver (producer/compute stage
+//!                  threads + channels; std::thread + mpsc — this offline
+//!                  build has no tokio)
+//!
+//! See `ARCHITECTURE.md` at the repository root for the dataflow diagram
+//! and the threading/determinism contract.
 
 pub mod batcher;
 pub mod fifo;
@@ -23,7 +35,8 @@ pub mod metrics;
 pub mod pipeline;
 pub mod router;
 pub mod scheduler;
+pub mod shard;
 pub mod state;
 
-pub use pipeline::{FilterPolicy, FinalMapping, Pipeline, PipelineConfig};
+pub use pipeline::{default_threads, FilterPolicy, FinalMapping, Pipeline, PipelineConfig};
 pub use router::{Router, Target};

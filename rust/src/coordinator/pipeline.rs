@@ -1,30 +1,39 @@
 //! The end-to-end mapping pipeline (paper Fig. 6, host realization):
-//! seed/route -> FIFO admission -> batched linear filter -> batched
-//! affine alignment -> traceback -> best-so-far aggregation.
+//! seed/route -> shard partition -> FIFO admission -> batched linear
+//! filter -> batched affine alignment -> traceback -> best-so-far
+//! aggregation.
 //!
 //! The pipeline is engine-agnostic ([`WfEngine`]): the production path
-//! runs the AOT-compiled Pallas kernels through PJRT
-//! ([`crate::runtime::XlaEngine`]); lowTh (RISC-V-offload) pairs always
-//! run on the scalar Rust path, mirroring the paper's heterogeneous
-//! split.
+//! runs the AOT-compiled Pallas kernels through PJRT (the
+//! `runtime::XlaEngine` behind the `pjrt` feature); lowTh
+//! (RISC-V-offload) pairs always run on the scalar Rust path, mirroring
+//! the paper's heterogeneous split.
+//!
+//! # Sharded execution
+//!
+//! With [`PipelineConfig::threads`] > 1, routed pairs are partitioned by
+//! minimizer hash across worker threads (std::thread + mpsc), each
+//! owning a [`RustEngine`], its own batchers, and the Reads FIFOs of its
+//! private crossbar slice — the host mirror of the paper's per-crossbar
+//! data organization (§V-B). Output is byte-identical for every thread
+//! count; see [`super::shard`] for the determinism contract.
 
-use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::align::traceback::{script_cost, traceback};
 use crate::align::Cigar;
+use crate::genome::encode::Seq;
 use crate::genome::ReadRecord;
-use crate::index::MinimizerIndex;
-use crate::params::{ETH, SAT_AFFINE};
+use crate::index::{shard_of, MinimizerIndex};
 use crate::pim::DartPimConfig;
 use crate::runtime::{RustEngine, WfEngine};
 
-use super::batcher::{Batch, Batcher, WorkTag};
-use super::fifo::{FifoEntry, PushResult, ReadsFifo};
 use super::metrics::Metrics;
-use super::router::{Router, Target};
+use super::router::Router;
+use super::shard::{run_shard, ShardItem, ShardWorker};
 use super::state::{AffineOutcome, BestSoFar};
 
 /// Which filtered instances advance to affine alignment.
@@ -39,17 +48,44 @@ pub enum FilterPolicy {
     MinOnly,
 }
 
+/// Worker-thread count used when a [`PipelineConfig`] does not pin one:
+/// the `DART_PIM_THREADS` environment variable when it parses to a
+/// positive integer (CI runs the whole suite under `DART_PIM_THREADS=4`),
+/// else 1.
+pub fn default_threads() -> usize {
+    std::env::var("DART_PIM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
+/// Number of [`ShardItem`]s streamed to a worker per channel send.
+const SHARD_CHUNK: usize = 512;
+/// Bounded depth of each worker's item channel (backpressure, like the
+/// hardware Reads FIFO bounds the read stream).
+const CHANNEL_DEPTH: usize = 4;
+
 /// Pipeline configuration.
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
+    /// Architecture configuration (Tables II/III) driving routing,
+    /// FIFO geometry, and the maxReads cap.
     pub dart: DartPimConfig,
     /// Engine flush size (use the largest artifact batch).
     pub batch_size: usize,
+    /// Which filtered instances advance to affine alignment.
     pub filter_policy: FilterPolicy,
     /// Also try the reverse-complement orientation of every read
     /// (real sequencers emit both strands; the paper elides this, but a
     /// practical mapper needs it — extension feature, DESIGN.md §7).
     pub handle_revcomp: bool,
+    /// Worker shards for [`Pipeline::map_reads`]. 1 = run in the calling
+    /// thread on the pipeline's own engine; N > 1 = partition routed
+    /// pairs by minimizer hash across N worker threads, each owning a
+    /// [`RustEngine`]. Output is byte-identical for every value.
+    /// Defaults to [`default_threads`].
+    pub threads: usize,
 }
 
 impl Default for PipelineConfig {
@@ -59,6 +95,7 @@ impl Default for PipelineConfig {
             batch_size: 256,
             filter_policy: FilterPolicy::AllPassing,
             handle_revcomp: false,
+            threads: default_threads(),
         }
     }
 }
@@ -66,255 +103,178 @@ impl Default for PipelineConfig {
 /// Final mapping decision for one read.
 #[derive(Debug, Clone)]
 pub struct FinalMapping {
+    /// The read this decision belongs to.
     pub read_id: u32,
+    /// Refined mapping position in reference coordinates.
     pub pos: i64,
+    /// Affine alignment cost.
     pub dist: i32,
+    /// Winning alignment.
     pub cigar: Cigar,
+    /// How many candidate outcomes were considered.
     pub candidates: u32,
     /// true if the read mapped in reverse-complement orientation.
     pub reverse: bool,
 }
 
 /// The mapper.
+///
+/// # Example — threaded mapping entry point
+///
+/// ```
+/// use dart_pim::coordinator::{Pipeline, PipelineConfig};
+/// use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+/// use dart_pim::index::MinimizerIndex;
+/// use dart_pim::params::{K, READ_LEN, W};
+/// use dart_pim::runtime::RustEngine;
+///
+/// let genome = SynthConfig { len: 30_000, ..Default::default() }.generate();
+/// let index = MinimizerIndex::build(genome, K, W, READ_LEN);
+/// let reads = ReadSimConfig { n_reads: 4, ..Default::default() }
+///     .simulate(&index.reference, |p| p as u32);
+///
+/// // two worker shards; results are byte-identical to threads: 1
+/// let cfg = PipelineConfig { threads: 2, ..Default::default() };
+/// let mut pipeline = Pipeline::new(&index, cfg, RustEngine);
+/// let (mappings, metrics) = pipeline.map_reads(&reads).unwrap();
+/// assert_eq!(mappings.len(), 4);
+/// assert_eq!(metrics.n_reads, 4);
+/// ```
 pub struct Pipeline<'a, E: WfEngine> {
+    /// The offline minimizer index being mapped against.
     pub index: &'a MinimizerIndex,
+    /// Minimizer -> crossbar / RISC-V routing table.
     pub router: Router,
+    /// Run configuration.
     pub cfg: PipelineConfig,
     engine: E,
-    riscv_engine: RustEngine,
 }
 
 impl<'a, E: WfEngine> Pipeline<'a, E> {
+    /// Build a pipeline over `index` with the given engine (the engine
+    /// is only used by the single-threaded path; worker shards own
+    /// [`RustEngine`]s).
     pub fn new(index: &'a MinimizerIndex, cfg: PipelineConfig, engine: E) -> Self {
         let router = Router::new(index, &cfg.dart);
-        Pipeline { index, router, cfg, engine, riscv_engine: RustEngine }
+        Pipeline { index, router, cfg, engine }
     }
 
+    /// Name of the engine driving the single-threaded path.
     pub fn engine_name(&self) -> &'static str {
         self.engine.name()
     }
 
     /// Map a read set end to end. Returns per-read decisions (indexed by
     /// read id) and run metrics.
-    pub fn map_reads(&mut self, reads: &[ReadRecord]) -> Result<(Vec<Option<FinalMapping>>, Metrics)> {
+    ///
+    /// With `cfg.threads` > 1 the routed pairs are executed by worker
+    /// shards; mappings, CIGARs, and workload counters are byte-identical
+    /// to the single-threaded path (see
+    /// [`Metrics::invariant_counters`]).
+    pub fn map_reads(
+        &mut self,
+        reads: &[ReadRecord],
+    ) -> Result<(Vec<Option<FinalMapping>>, Metrics)> {
         let t_start = Instant::now();
+        let n_shards = self.cfg.threads.max(1);
         let mut metrics = Metrics { n_reads: reads.len() as u64, ..Default::default() };
         let mut best = BestSoFar::new(reads.len());
-        let mut fifos: HashMap<u32, ReadsFifo> = HashMap::new();
 
-        // ---- Stage 1+2: seed, route, admit, build linear work ----
-        let t0 = Instant::now();
         // reverse-complement orientations, materialized once per read so
         // the zero-copy batches can borrow them (empty when disabled)
-        let rc_seqs: Vec<crate::genome::encode::Seq> = if self.cfg.handle_revcomp {
+        let rc_seqs: Vec<Seq> = if self.cfg.handle_revcomp {
             reads.iter().map(|r| crate::genome::revcomp(&r.seq)).collect()
         } else {
             Vec::new()
         };
-        let mut linear_batcher = Batcher::new(self.cfg.batch_size, self.index.read_len);
-        let mut linear_batches: Vec<Batch<'_>> = Vec::new();
-        let mut riscv_items: Vec<(WorkTag, &[u8])> = Vec::new();
-        let mut next_pair = 0u32;
-        let mut oriented: Vec<(&[u8], bool)> = Vec::with_capacity(2);
-        for read in reads {
-            oriented.clear();
-            oriented.push((read.seq.as_slice(), false));
-            if self.cfg.handle_revcomp {
-                oriented.push((rc_seqs[read.id as usize].as_slice(), true));
-            }
-            for &(seq, reverse) in &oriented {
-                for pair in self.router.route(self.index, read.id, seq) {
-                    let pair_id = next_pair;
-                    next_pair += 1;
-                    let occs = self.index.occurrences(pair.kmer);
-                    match pair.target {
-                        Target::Riscv => {
-                            metrics.riscv_pairs += 1;
-                            for &pos in occs {
-                                riscv_items.push((
-                                    WorkTag {
-                                        read_id: read.id,
-                                        pair_id,
-                                        ref_pos: pos,
-                                        read_offset: pair.read_offset,
-                                        pl: pos as i64 - pair.read_offset as i64,
-                                        xbar: u32::MAX, // RISC-V pool, not a crossbar
-                                        reverse,
-                                    },
-                                    seq,
-                                ));
-                            }
-                        }
-                        Target::Xbar { first, count } => {
-                            // FIFO admission on the owning crossbar
-                            let fifo = fifos.entry(first).or_insert_with(|| {
-                                ReadsFifo::new(
-                                    self.cfg.dart.fifo_capacity_reads(),
-                                    self.cfg.dart.max_reads,
-                                )
-                            });
-                            let entry =
-                                FifoEntry { read_id: read.id, read_offset: pair.read_offset };
-                            match fifo.push(entry) {
-                                PushResult::CapExceeded => {
-                                    metrics.dropped_pairs += 1;
-                                    continue;
-                                }
-                                PushResult::Full => {
-                                    // batch-mode backpressure: the entry is
-                                    // consumed immediately below, so the FIFO
-                                    // drains as fast as it fills
-                                    fifo.pop();
-                                    if fifo.push(entry) == PushResult::CapExceeded {
-                                        metrics.dropped_pairs += 1;
-                                        continue;
-                                    }
-                                }
-                                PushResult::Accepted => {}
-                            }
-                            fifo.pop(); // consumed by this round's linear iteration
-                            metrics.routed_pairs += 1;
-                            *metrics.pairs_per_xbar.entry(first).or_default() += 1;
-                            for sub in 1..count {
-                                *metrics.pairs_per_xbar.entry(first + sub).or_default() += 1;
-                            }
-                            for (i, &pos) in occs.iter().enumerate() {
-                                let tag = WorkTag {
-                                    read_id: read.id,
-                                    pair_id,
-                                    ref_pos: pos,
-                                    read_offset: pair.read_offset,
-                                    pl: pos as i64 - pair.read_offset as i64,
-                                    // which of the minimizer's crossbars
-                                    // holds this occurrence's segment row
-                                    xbar: first + (i / self.cfg.dart.linear_rows) as u32,
-                                    reverse,
-                                };
-                                let win = self.index.window_for(pos, pair.read_offset as usize);
-                                metrics.linear_instances += 1;
-                                if let Some(b) = linear_batcher.push(tag, seq, win) {
-                                    linear_batches.push(b);
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        if let Some(b) = linear_batcher.flush() {
-            linear_batches.push(b);
-        }
-        metrics.t_seed = t0.elapsed();
 
-        // ---- Stage 3: batched linear filter ----
-        let t0 = Instant::now();
-        // pair_id -> (best dist, tag, window) for MinOnly
-        let mut pair_best: HashMap<u32, (i32, WorkTag, Vec<u8>)> = HashMap::new();
-        let mut affine_batcher = Batcher::new(self.cfg.batch_size, self.index.read_len);
-        let mut affine_batches: Vec<Batch<'_>> = Vec::new();
-        for batch in &mut linear_batches {
-            let ww: Vec<&[u8]> = batch.wins.iter().map(|v| v.as_slice()).collect();
-            let out = self.engine.linear_batch(&batch.reads, &ww)?;
-            drop(ww);
-            metrics.linear_batches += 1;
-            for i in 0..batch.tags.len() {
-                let tag = batch.tags[i];
-                if out.best[i] > ETH as i32 {
-                    continue; // filtered out
-                }
-                metrics.filter_passed += 1;
-                match self.cfg.filter_policy {
-                    FilterPolicy::AllPassing => {
-                        metrics.affine_instances += 1;
-                        *metrics.affine_per_xbar.entry(tag.xbar).or_default() += 1;
-                        // window moves to the affine stage (each is used
-                        // at most once — §Perf opt 1)
-                        let win = std::mem::take(&mut batch.wins[i]);
-                        if let Some(b) = affine_batcher.push(tag, batch.reads[i], win) {
-                            affine_batches.push(b);
+        if n_shards == 1 {
+            // ---- Single shard: route inline, run on the pipeline's own
+            // engine (the PJRT path when compiled in) ----
+            let t0 = Instant::now();
+            let mut items: Vec<ShardItem<'_>> = Vec::new();
+            let mut next_pair = 0u32;
+            for read in reads {
+                self.route_oriented(read, &rc_seqs, &mut next_pair, |item| items.push(item));
+            }
+            let t_route = t0.elapsed();
+            let (outcomes, m) = run_shard(self.index, &self.cfg, &mut self.engine, &items)?;
+            for o in outcomes {
+                best.update(o);
+            }
+            metrics.merge(m);
+            metrics.t_seed += t_route;
+        } else {
+            // ---- Sharded: stream routed pairs to worker threads over
+            // bounded channels, partitioned by minimizer hash ----
+            let index = self.index;
+            let cfg = &self.cfg;
+            let (shard_results, t_route) = thread::scope(|s| {
+                let mut txs = Vec::with_capacity(n_shards);
+                let mut handles = Vec::with_capacity(n_shards);
+                for _ in 0..n_shards {
+                    let (tx, rx) = mpsc::sync_channel::<Vec<ShardItem<'_>>>(CHANNEL_DEPTH);
+                    txs.push(tx);
+                    handles.push(s.spawn(move || {
+                        // ingest chunks as they stream in (FIFO
+                        // admission + window extraction overlap the
+                        // producer's routing); compute starts when the
+                        // producer hangs up
+                        let mut worker = ShardWorker::new(index, cfg);
+                        while let Ok(chunk) = rx.recv() {
+                            worker.ingest(chunk);
                         }
-                    }
-                    FilterPolicy::MinOnly => {
-                        let e = pair_best.entry(tag.pair_id);
-                        match e {
-                            std::collections::hash_map::Entry::Occupied(mut o) => {
-                                if out.best[i] < o.get().0 {
-                                    *o.get_mut() =
-                                        (out.best[i], tag, std::mem::take(&mut batch.wins[i]));
-                                }
-                            }
-                            std::collections::hash_map::Entry::Vacant(v) => {
-                                v.insert((out.best[i], tag, std::mem::take(&mut batch.wins[i])));
-                            }
+                        let mut engine = RustEngine;
+                        worker.finish(&mut engine)
+                    }));
+                }
+
+                // producer (this thread): seed, route, partition, send
+                let t0 = Instant::now();
+                let mut pending: Vec<Vec<ShardItem<'_>>> =
+                    (0..n_shards).map(|_| Vec::with_capacity(SHARD_CHUNK)).collect();
+                let mut next_pair = 0u32;
+                for read in reads {
+                    self.route_oriented(read, &rc_seqs, &mut next_pair, |item| {
+                        let sh = shard_of(item.kmer, n_shards);
+                        pending[sh].push(item);
+                        if pending[sh].len() >= SHARD_CHUNK {
+                            let full = std::mem::replace(
+                                &mut pending[sh],
+                                Vec::with_capacity(SHARD_CHUNK),
+                            );
+                            // a send error means the worker died; its
+                            // join below surfaces the cause
+                            let _ = txs[sh].send(full);
                         }
+                    });
+                }
+                for (sh, tx) in txs.into_iter().enumerate() {
+                    let rest = std::mem::take(&mut pending[sh]);
+                    if !rest.is_empty() {
+                        let _ = tx.send(rest);
                     }
+                    // tx drops here: the worker's recv loop ends and its
+                    // compute begins
                 }
-            }
-        }
-        if self.cfg.filter_policy == FilterPolicy::MinOnly {
-            let mut winners: Vec<(i32, WorkTag, Vec<u8>)> = pair_best.into_values().collect();
-            winners.sort_by_key(|(_, t, _)| (t.read_id, t.pair_id));
-            for (_, tag, win) in winners {
-                metrics.affine_instances += 1;
-                *metrics.affine_per_xbar.entry(tag.xbar).or_default() += 1;
-                let seq: &[u8] = if tag.reverse {
-                    &rc_seqs[tag.read_id as usize]
-                } else {
-                    &reads[tag.read_id as usize].seq
-                };
-                if let Some(b) = affine_batcher.push(tag, seq, win) {
-                    affine_batches.push(b);
-                }
-            }
-        }
-        if let Some(b) = affine_batcher.flush() {
-            affine_batches.push(b);
-        }
-        metrics.t_linear = t0.elapsed();
+                let t_route = t0.elapsed();
 
-        // ---- Stage 4: batched affine alignment + traceback ----
-        let t0 = Instant::now();
-        for batch in &affine_batches {
-            let ww: Vec<&[u8]> = batch.wins.iter().map(|v| v.as_slice()).collect();
-            let out = self.engine.affine_batch(&batch.reads, &ww)?;
-            metrics.affine_batches += 1;
-            let tt = Instant::now();
-            for (i, tag) in batch.tags.iter().enumerate() {
-                if let Some(outcome) = self.decode_affine(
-                    tag,
-                    out.best[i],
-                    out.best_j[i] as usize,
-                    &out.dirs[i],
-                    batch.reads[i],
-                    &mut metrics,
-                ) {
-                    best.update(outcome);
+                // deterministic merge order: shard 0..N (the arbitration
+                // key makes any order equivalent)
+                let results: Vec<Result<(Vec<AffineOutcome>, Metrics)>> = handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("shard worker panicked"))))
+                    .collect();
+                (results, t_route)
+            });
+            for r in shard_results {
+                let (outcomes, m) = r?;
+                for o in outcomes {
+                    best.update(o);
                 }
+                metrics.merge(m);
             }
-            metrics.t_traceback += tt.elapsed();
-        }
-        metrics.t_affine = t0.elapsed();
-
-        // ---- RISC-V offload path (scalar Rust engine) ----
-        for (tag, seq) in riscv_items {
-            let win = self.index.window_for(tag.ref_pos, tag.read_offset as usize);
-            metrics.riscv_linear_instances += 1;
-            let lin = self.riscv_engine.linear_batch(&[seq], &[&win])?;
-            if lin.best[0] > ETH as i32 {
-                continue;
-            }
-            metrics.riscv_affine_instances += 1;
-            let aff = self.riscv_engine.affine_batch(&[seq], &[&win])?;
-            if let Some(outcome) = self.decode_affine(
-                &tag,
-                aff.best[0],
-                aff.best_j[0] as usize,
-                &aff.dirs[0],
-                seq,
-                &mut metrics,
-            ) {
-                best.update(outcome);
-            }
+            metrics.t_seed += t_route;
         }
 
         // ---- Finalize ----
@@ -338,34 +298,33 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
         Ok((mappings, metrics))
     }
 
-    /// Turn one affine result into an outcome (traceback + position
-    /// refinement). None for saturated or irrecoverable paths.
-    fn decode_affine(
+    /// Route one read (both orientations when revcomp handling is on)
+    /// into [`ShardItem`]s, assigning globally sequential pair ids.
+    fn route_oriented<'s>(
         &self,
-        tag: &WorkTag,
-        dist: i32,
-        best_j: usize,
-        dirs: &[u8],
-        read: &[u8],
-        metrics: &mut Metrics,
-    ) -> Option<AffineOutcome> {
-        if dist >= SAT_AFFINE {
-            return None;
+        read: &'s ReadRecord,
+        rc_seqs: &'s [Seq],
+        next_pair: &mut u32,
+        mut emit: impl FnMut(ShardItem<'s>),
+    ) {
+        let mut oriented: Vec<(&'s [u8], bool)> = Vec::with_capacity(2);
+        oriented.push((read.seq.as_slice(), false));
+        if self.cfg.handle_revcomp {
+            oriented.push((rc_seqs[read.id as usize].as_slice(), true));
         }
-        match traceback(dirs, read.len(), best_j) {
-            Ok(aln) => {
-                debug_assert_eq!(script_cost(&aln.ops, aln.j_end), dist, "cost identity");
-                Some(AffineOutcome {
-                    read_id: tag.read_id,
-                    pos: aln.refined_pos(tag.pl),
-                    dist,
-                    cigar: Cigar::from_ops(&aln.ops),
-                    reverse: tag.reverse,
-                })
-            }
-            Err(_) => {
-                metrics.traceback_failures += 1;
-                None
+        for &(seq, reverse) in &oriented {
+            for pair in self.router.route(self.index, read.id, seq) {
+                let pair_id = *next_pair;
+                *next_pair += 1;
+                emit(ShardItem {
+                    pair_id,
+                    read_id: read.id,
+                    read_offset: pair.read_offset,
+                    kmer: pair.kmer,
+                    target: pair.target,
+                    reverse,
+                    seq,
+                });
             }
         }
     }
@@ -375,7 +334,7 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
 mod tests {
     use super::*;
     use crate::genome::synth::{ReadSimConfig, SynthConfig};
-    use crate::params::{K, READ_LEN, W};
+    use crate::params::{ETH, K, READ_LEN, SAT_AFFINE, W};
 
     fn setup(n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
         let g = SynthConfig { len: 80_000, ..Default::default() }.generate();
@@ -456,12 +415,64 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             match (x, y) {
                 (None, None) => {}
-                (Some(x), Some(y)) => {
-                    assert_eq!((x.pos, x.dist, x.cigar.to_string()), (y.pos, y.dist, y.cigar.to_string()))
-                }
+                (Some(x), Some(y)) => assert_eq!(
+                    (x.pos, x.dist, x.cigar.to_string()),
+                    (y.pos, y.dist, y.cigar.to_string())
+                ),
                 _ => panic!("mapping presence differs between runs"),
             }
         }
+    }
+
+    #[test]
+    fn sharded_matches_single_thread_exactly() {
+        let (idx, reads) = setup(40);
+        let run = |threads: usize| {
+            let c = PipelineConfig { threads, ..cfg() };
+            let mut p = Pipeline::new(&idx, c, RustEngine);
+            p.map_reads(&reads).unwrap()
+        };
+        let (m1, x1) = run(1);
+        for threads in [2usize, 3, 4] {
+            let (mt, xt) = run(threads);
+            for (a, b) in m1.iter().zip(&mt) {
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => assert_eq!(
+                        (a.pos, a.dist, a.cigar.to_string(), a.candidates, a.reverse),
+                        (b.pos, b.dist, b.cigar.to_string(), b.candidates, b.reverse),
+                        "threads={threads}"
+                    ),
+                    _ => panic!("presence mismatch at threads={threads}"),
+                }
+            }
+            assert_eq!(
+                x1.invariant_counters(),
+                xt.invariant_counters(),
+                "workload counters must not depend on sharding (threads={threads})"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_handles_more_threads_than_work() {
+        // more shards than minimizers: some workers receive nothing
+        let (idx, reads) = setup(3);
+        let c = PipelineConfig { threads: 16, ..cfg() };
+        let mut p = Pipeline::new(&idx, c, RustEngine);
+        let (mappings, metrics) = p.map_reads(&reads).unwrap();
+        assert_eq!(mappings.len(), 3);
+        assert_eq!(metrics.n_reads, 3);
+    }
+
+    #[test]
+    fn sharded_empty_read_set() {
+        let (idx, _) = setup(1);
+        let c = PipelineConfig { threads: 4, ..cfg() };
+        let mut p = Pipeline::new(&idx, c, RustEngine);
+        let (mappings, metrics) = p.map_reads(&[]).unwrap();
+        assert!(mappings.is_empty());
+        assert_eq!(metrics.n_reads, 0);
     }
 
     #[test]

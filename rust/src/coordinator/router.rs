@@ -26,16 +26,22 @@ pub enum Target {
 /// One routed work unit: a read paired with one of its minimizers.
 #[derive(Debug, Clone)]
 pub struct RoutedPair {
+    /// Read this pair belongs to.
     pub read_id: u32,
+    /// The minimizer k-mer (routing key).
     pub kmer: u64,
+    /// Minimizer offset within the read.
     pub read_offset: u32,
+    /// Reference occurrences of the minimizer.
     pub n_occurrences: usize,
+    /// Where the pair executes.
     pub target: Target,
 }
 
 /// The routing table.
 pub struct Router {
     assignment: HashMap<u64, (u32, u32)>,
+    /// Total crossbars allocated by the offline assignment.
     pub xbars_used: u32,
     low_th: usize,
 }

@@ -94,39 +94,12 @@ where
             let id = fm.read_id as usize;
             all[id] = Some(fm);
         }
-        merge_metrics(&mut total, m);
+        total.merge(m);
     }
     if covered != n_reads {
         return Err(anyhow!("compute stage failed after {covered}/{n_reads} reads ({chunks} chunks)"));
     }
     Ok((all, total))
-}
-
-fn merge_metrics(into: &mut Metrics, m: Metrics) {
-    into.n_reads += m.n_reads;
-    into.routed_pairs += m.routed_pairs;
-    into.riscv_pairs += m.riscv_pairs;
-    into.dropped_pairs += m.dropped_pairs;
-    into.linear_instances += m.linear_instances;
-    into.affine_instances += m.affine_instances;
-    into.riscv_linear_instances += m.riscv_linear_instances;
-    into.riscv_affine_instances += m.riscv_affine_instances;
-    into.filter_passed += m.filter_passed;
-    into.reads_with_candidates += m.reads_with_candidates;
-    into.linear_batches += m.linear_batches;
-    into.affine_batches += m.affine_batches;
-    into.traceback_failures += m.traceback_failures;
-    for (k, v) in m.pairs_per_xbar {
-        *into.pairs_per_xbar.entry(k).or_default() += v;
-    }
-    for (k, v) in m.affine_per_xbar {
-        *into.affine_per_xbar.entry(k).or_default() += v;
-    }
-    into.t_seed += m.t_seed;
-    into.t_linear += m.t_linear;
-    into.t_affine += m.t_affine;
-    into.t_traceback += m.t_traceback;
-    into.t_total += m.t_total;
 }
 
 #[cfg(test)]

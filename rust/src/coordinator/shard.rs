@@ -1,0 +1,485 @@
+//! Per-shard execution of pipeline stages 2-6 (paper Fig. 6; §V-B data
+//! organization).
+//!
+//! DART-PIM gets its throughput from thousands of crossbars each owning a
+//! disjoint slice of the reference segments. The host realization mirrors
+//! that: routed (read, minimizer) pairs are partitioned by minimizer hash
+//! ([`crate::index::shard_of`]), so every shard touches a disjoint set of
+//! minimizers — and, because each minimizer owns a contiguous private
+//! crossbar range (see [`super::router`]), a disjoint set of crossbars,
+//! Reads FIFOs, and reference segments. One worker thread per shard then
+//! runs FIFO admission, the batched linear filter, batched affine
+//! alignment, traceback, and the RISC-V offload path over its private
+//! slice, with no synchronization beyond the channel that feeds it.
+//!
+//! A [`ShardWorker`] splits the work into an incremental phase
+//! ([`ShardWorker::ingest`]: FIFO admission, window extraction, batch
+//! packing — runs as items stream in, overlapping the producer's
+//! routing) and a compute phase ([`ShardWorker::finish`]: the batched WF
+//! engine calls, traceback, and the RISC-V offload path).
+//!
+//! Determinism contract (held by `tests/shard_determinism.rs`):
+//!
+//! * Pair ids are assigned by the serial routing stage, so they are
+//!   identical for every shard count.
+//! * A crossbar's FIFO receives its entries in the same relative order
+//!   regardless of sharding (per-shard item streams preserve the global
+//!   emission order), so maxReads drops are identical.
+//! * Workers emit [`AffineOutcome`]s whose arbitration key is the serial
+//!   emission order; [`super::state::BestSoFar`] resolves full ties with
+//!   it, so the merged winners are identical under any interleaving.
+//! * Workload counters in [`Metrics`] are item-local sums and merge to
+//!   identical totals; only the batch-shape counters
+//!   (`linear_batches`/`affine_batches`) and wall-clock timings depend on
+//!   the shard count.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::align::traceback::{script_cost, traceback};
+use crate::align::Cigar;
+use crate::index::MinimizerIndex;
+use crate::params::{ETH, SAT_AFFINE};
+use crate::runtime::{RustEngine, WfEngine};
+
+use super::batcher::{Batch, Batcher, WorkTag};
+use super::fifo::{FifoEntry, PushResult, ReadsFifo};
+use super::metrics::Metrics;
+use super::pipeline::{FilterPolicy, PipelineConfig};
+use super::router::Target;
+use super::state::AffineOutcome;
+
+/// One routed (read, minimizer) pair bound to its oriented read sequence:
+/// the unit of work a shard worker consumes.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardItem<'a> {
+    /// Globally sequential pair id (assigned by the serial routing
+    /// stage; identical for every shard count).
+    pub pair_id: u32,
+    /// Read this pair belongs to.
+    pub read_id: u32,
+    /// Minimizer offset within the read.
+    pub read_offset: u32,
+    /// The minimizer k-mer (the shard partition key).
+    pub kmer: u64,
+    /// Crossbar range or RISC-V pool executing this pair.
+    pub target: Target,
+    /// Reverse-complement orientation of `seq`.
+    pub reverse: bool,
+    /// The oriented read sequence (borrowed from the read set, or from
+    /// the materialized reverse complements).
+    pub seq: &'a [u8],
+}
+
+/// Serial emission order of one WF instance, used as the deterministic
+/// tie-break key (see [`AffineOutcome::key`]): pairs are emitted in
+/// pair-id order and occurrences within a pair in ascending reference
+/// position.
+fn emission_key(pair_id: u32, ref_pos: u32) -> u64 {
+    (u64::from(pair_id) << 32) | u64::from(ref_pos)
+}
+
+/// Executes pipeline stages 2-6 over one shard's item stream.
+///
+/// The worker owns everything its slice needs — the Reads FIFOs of its
+/// crossbars, the linear-stage batcher, and the RISC-V work list — so N
+/// workers share nothing but the read-only index.
+pub struct ShardWorker<'a> {
+    index: &'a MinimizerIndex,
+    cfg: &'a PipelineConfig,
+    metrics: Metrics,
+    fifos: HashMap<u32, ReadsFifo>,
+    linear_batcher: Batcher<'a>,
+    linear_batches: Vec<Batch<'a>>,
+    riscv_items: Vec<(WorkTag, &'a [u8])>,
+}
+
+impl<'a> ShardWorker<'a> {
+    /// Empty worker for one shard.
+    pub fn new(index: &'a MinimizerIndex, cfg: &'a PipelineConfig) -> Self {
+        ShardWorker {
+            index,
+            cfg,
+            metrics: Metrics::default(),
+            fifos: HashMap::new(),
+            linear_batcher: Batcher::new(cfg.batch_size, index.read_len),
+            linear_batches: Vec::new(),
+            riscv_items: Vec::new(),
+        }
+    }
+
+    /// Incremental phase (Fig. 6 steps 1-3): FIFO admission, window
+    /// extraction, and batch packing for a slice of the item stream.
+    /// Called repeatedly as chunks arrive, so this work overlaps the
+    /// producer's routing; items must arrive in emission order (the
+    /// determinism contract).
+    pub fn ingest(&mut self, items: impl IntoIterator<Item = ShardItem<'a>>) {
+        let t0 = Instant::now();
+        let (index, cfg) = (self.index, self.cfg);
+        for item in items {
+            let occs = index.occurrences(item.kmer);
+            match item.target {
+                Target::Riscv => {
+                    self.metrics.riscv_pairs += 1;
+                    for &pos in occs {
+                        self.riscv_items.push((
+                            WorkTag {
+                                read_id: item.read_id,
+                                pair_id: item.pair_id,
+                                ref_pos: pos,
+                                read_offset: item.read_offset,
+                                pl: pos as i64 - item.read_offset as i64,
+                                xbar: u32::MAX, // RISC-V pool, not a crossbar
+                                reverse: item.reverse,
+                            },
+                            item.seq,
+                        ));
+                    }
+                }
+                Target::Xbar { first, count } => {
+                    // FIFO admission on the owning crossbar (the
+                    // minimizer's crossbar range is private to this shard)
+                    let fifo = self.fifos.entry(first).or_insert_with(|| {
+                        ReadsFifo::new(cfg.dart.fifo_capacity_reads(), cfg.dart.max_reads)
+                    });
+                    let entry =
+                        FifoEntry { read_id: item.read_id, read_offset: item.read_offset };
+                    match fifo.push(entry) {
+                        PushResult::CapExceeded => {
+                            self.metrics.dropped_pairs += 1;
+                            continue;
+                        }
+                        PushResult::Full => {
+                            // batch-mode backpressure: the entry is
+                            // consumed immediately below, so the FIFO
+                            // drains as fast as it fills
+                            fifo.pop();
+                            if fifo.push(entry) == PushResult::CapExceeded {
+                                self.metrics.dropped_pairs += 1;
+                                continue;
+                            }
+                        }
+                        PushResult::Accepted => {}
+                    }
+                    fifo.pop(); // consumed by this round's linear iteration
+                    self.metrics.routed_pairs += 1;
+                    *self.metrics.pairs_per_xbar.entry(first).or_default() += 1;
+                    for sub in 1..count {
+                        *self.metrics.pairs_per_xbar.entry(first + sub).or_default() += 1;
+                    }
+                    for (i, &pos) in occs.iter().enumerate() {
+                        let tag = WorkTag {
+                            read_id: item.read_id,
+                            pair_id: item.pair_id,
+                            ref_pos: pos,
+                            read_offset: item.read_offset,
+                            pl: pos as i64 - item.read_offset as i64,
+                            // which of the minimizer's crossbars holds
+                            // this occurrence's segment row
+                            xbar: first + (i / cfg.dart.linear_rows) as u32,
+                            reverse: item.reverse,
+                        };
+                        let win = index.window_for(pos, item.read_offset as usize);
+                        self.metrics.linear_instances += 1;
+                        if let Some(b) = self.linear_batcher.push(tag, item.seq, win) {
+                            self.linear_batches.push(b);
+                        }
+                    }
+                }
+            }
+        }
+        self.metrics.t_seed += t0.elapsed();
+    }
+
+    /// Compute phase (Fig. 6 steps 3-6 + RISC-V offload): run the
+    /// batched linear filter, batched affine alignment, and traceback on
+    /// `engine`, then the RISC-V pairs on the scalar Rust engine.
+    ///
+    /// Returns the shard's candidate outcomes (for the caller to fold
+    /// into a [`super::state::BestSoFar`]) and its [`Metrics`]
+    /// contribution (`n_reads`, `reads_with_candidates`, and `t_total`
+    /// are left at zero — they are whole-run quantities the caller owns).
+    pub fn finish<E: WfEngine>(
+        mut self,
+        engine: &mut E,
+    ) -> Result<(Vec<AffineOutcome>, Metrics)> {
+        let mut metrics = self.metrics;
+        if let Some(b) = self.linear_batcher.flush() {
+            self.linear_batches.push(b);
+        }
+
+        // ---- Batched linear filter (Fig. 6 steps 3-4) ----
+        let t0 = Instant::now();
+        // pair_id -> (best dist, tag, window, read seq) for MinOnly
+        let mut pair_best: HashMap<u32, (i32, WorkTag, Vec<u8>, &[u8])> = HashMap::new();
+        let mut affine_batcher = Batcher::new(self.cfg.batch_size, self.index.read_len);
+        let mut affine_batches: Vec<Batch<'_>> = Vec::new();
+        for batch in &mut self.linear_batches {
+            let ww: Vec<&[u8]> = batch.wins.iter().map(|v| v.as_slice()).collect();
+            let out = engine.linear_batch(&batch.reads, &ww)?;
+            drop(ww);
+            metrics.linear_batches += 1;
+            for i in 0..batch.tags.len() {
+                let tag = batch.tags[i];
+                if out.best[i] > ETH as i32 {
+                    continue; // filtered out
+                }
+                metrics.filter_passed += 1;
+                match self.cfg.filter_policy {
+                    FilterPolicy::AllPassing => {
+                        metrics.affine_instances += 1;
+                        *metrics.affine_per_xbar.entry(tag.xbar).or_default() += 1;
+                        // window moves to the affine stage (each is used
+                        // at most once — §Perf opt 1)
+                        let win = std::mem::take(&mut batch.wins[i]);
+                        if let Some(b) = affine_batcher.push(tag, batch.reads[i], win) {
+                            affine_batches.push(b);
+                        }
+                    }
+                    FilterPolicy::MinOnly => {
+                        let e = pair_best.entry(tag.pair_id);
+                        match e {
+                            std::collections::hash_map::Entry::Occupied(mut o) => {
+                                if out.best[i] < o.get().0 {
+                                    *o.get_mut() = (
+                                        out.best[i],
+                                        tag,
+                                        std::mem::take(&mut batch.wins[i]),
+                                        batch.reads[i],
+                                    );
+                                }
+                            }
+                            std::collections::hash_map::Entry::Vacant(v) => {
+                                v.insert((
+                                    out.best[i],
+                                    tag,
+                                    std::mem::take(&mut batch.wins[i]),
+                                    batch.reads[i],
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if self.cfg.filter_policy == FilterPolicy::MinOnly {
+            let mut winners: Vec<(i32, WorkTag, Vec<u8>, &[u8])> =
+                pair_best.into_values().collect();
+            winners.sort_by_key(|(_, t, _, _)| (t.read_id, t.pair_id));
+            for (_, tag, win, seq) in winners {
+                metrics.affine_instances += 1;
+                *metrics.affine_per_xbar.entry(tag.xbar).or_default() += 1;
+                if let Some(b) = affine_batcher.push(tag, seq, win) {
+                    affine_batches.push(b);
+                }
+            }
+        }
+        if let Some(b) = affine_batcher.flush() {
+            affine_batches.push(b);
+        }
+        metrics.t_linear = t0.elapsed();
+
+        // ---- Batched affine alignment + traceback (Fig. 6 steps 5-6) --
+        let t0 = Instant::now();
+        let mut outcomes: Vec<AffineOutcome> = Vec::new();
+        for batch in &affine_batches {
+            let ww: Vec<&[u8]> = batch.wins.iter().map(|v| v.as_slice()).collect();
+            let out = engine.affine_batch(&batch.reads, &ww)?;
+            metrics.affine_batches += 1;
+            let tt = Instant::now();
+            for (i, tag) in batch.tags.iter().enumerate() {
+                if let Some(outcome) = decode_affine(
+                    tag,
+                    out.best[i],
+                    out.best_j[i] as usize,
+                    &out.dirs[i],
+                    batch.reads[i],
+                    &mut metrics,
+                ) {
+                    outcomes.push(outcome);
+                }
+            }
+            metrics.t_traceback += tt.elapsed();
+        }
+        metrics.t_affine = t0.elapsed();
+
+        // ---- RISC-V offload path (scalar Rust engine, always) ----
+        let mut riscv_engine = RustEngine;
+        for (tag, seq) in self.riscv_items {
+            let win = self.index.window_for(tag.ref_pos, tag.read_offset as usize);
+            metrics.riscv_linear_instances += 1;
+            let lin = riscv_engine.linear_batch(&[seq], &[&win])?;
+            if lin.best[0] > ETH as i32 {
+                continue;
+            }
+            metrics.riscv_affine_instances += 1;
+            let aff = riscv_engine.affine_batch(&[seq], &[&win])?;
+            if let Some(outcome) = decode_affine(
+                &tag,
+                aff.best[0],
+                aff.best_j[0] as usize,
+                &aff.dirs[0],
+                seq,
+                &mut metrics,
+            ) {
+                outcomes.push(outcome);
+            }
+        }
+
+        Ok((outcomes, metrics))
+    }
+}
+
+/// Run stages 2-6 over a complete item list in one call: ingest
+/// everything, then compute on `engine`. The single-threaded pipeline
+/// path and tests use this; the threaded path drives a [`ShardWorker`]
+/// incrementally as chunks stream in.
+pub fn run_shard<'a, E: WfEngine>(
+    index: &'a MinimizerIndex,
+    cfg: &'a PipelineConfig,
+    engine: &mut E,
+    items: &[ShardItem<'a>],
+) -> Result<(Vec<AffineOutcome>, Metrics)> {
+    let mut worker = ShardWorker::new(index, cfg);
+    worker.ingest(items.iter().copied());
+    worker.finish(engine)
+}
+
+/// Turn one affine result into an outcome (traceback + position
+/// refinement). `None` for saturated or irrecoverable paths.
+fn decode_affine(
+    tag: &WorkTag,
+    dist: i32,
+    best_j: usize,
+    dirs: &[u8],
+    read: &[u8],
+    metrics: &mut Metrics,
+) -> Option<AffineOutcome> {
+    if dist >= SAT_AFFINE {
+        return None;
+    }
+    match traceback(dirs, read.len(), best_j) {
+        Ok(aln) => {
+            debug_assert_eq!(script_cost(&aln.ops, aln.j_end), dist, "cost identity");
+            Some(AffineOutcome {
+                read_id: tag.read_id,
+                pos: aln.refined_pos(tag.pl),
+                dist,
+                cigar: Cigar::from_ops(&aln.ops),
+                reverse: tag.reverse,
+                key: emission_key(tag.pair_id, tag.ref_pos),
+            })
+        }
+        Err(_) => {
+            metrics.traceback_failures += 1;
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::synth::{ReadSimConfig, SynthConfig};
+    use crate::index::shard_of;
+    use crate::params::{K, READ_LEN, W};
+
+    /// run_shard over everything == the item-level serial semantics; a
+    /// partition of the same items produces the same outcome multiset.
+    #[test]
+    fn partitioned_shards_cover_the_serial_outcomes() {
+        let g = SynthConfig { len: 60_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = ReadSimConfig { n_reads: 30, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        let cfg = PipelineConfig {
+            dart: crate::pim::DartPimConfig { low_th: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let router = crate::coordinator::Router::new(&idx, &cfg.dart);
+
+        let mut items: Vec<ShardItem<'_>> = Vec::new();
+        let mut next_pair = 0u32;
+        for r in &reads {
+            for pair in router.route(&idx, r.id, &r.seq) {
+                items.push(ShardItem {
+                    pair_id: next_pair,
+                    read_id: r.id,
+                    read_offset: pair.read_offset,
+                    kmer: pair.kmer,
+                    target: pair.target,
+                    reverse: false,
+                    seq: &r.seq,
+                });
+                next_pair += 1;
+            }
+        }
+
+        let (serial, sm) = run_shard(&idx, &cfg, &mut RustEngine, &items).unwrap();
+
+        let n = 3;
+        let mut sharded: Vec<AffineOutcome> = Vec::new();
+        let mut merged = Metrics::default();
+        for sh in 0..n {
+            let part: Vec<ShardItem<'_>> =
+                items.iter().filter(|it| shard_of(it.kmer, n) == sh).copied().collect();
+            let (out, m) = run_shard(&idx, &cfg, &mut RustEngine, &part).unwrap();
+            sharded.extend(out);
+            merged.merge(m);
+        }
+
+        let keyset = |v: &[AffineOutcome]| {
+            let mut k: Vec<(u64, i64, i32)> = v.iter().map(|o| (o.key, o.pos, o.dist)).collect();
+            k.sort_unstable();
+            k
+        };
+        assert_eq!(keyset(&serial), keyset(&sharded));
+        assert_eq!(sm.linear_instances, merged.linear_instances);
+        assert_eq!(sm.affine_instances, merged.affine_instances);
+        assert_eq!(sm.filter_passed, merged.filter_passed);
+        assert_eq!(sm.routed_pairs, merged.routed_pairs);
+    }
+
+    /// Chunked ingest (the threaded path's streaming shape) must equal
+    /// one-shot ingest.
+    #[test]
+    fn chunked_ingest_equals_one_shot() {
+        let g = SynthConfig { len: 50_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = ReadSimConfig { n_reads: 20, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        let cfg = PipelineConfig {
+            dart: crate::pim::DartPimConfig { low_th: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let router = crate::coordinator::Router::new(&idx, &cfg.dart);
+        let mut items: Vec<ShardItem<'_>> = Vec::new();
+        let mut next_pair = 0u32;
+        for r in &reads {
+            for pair in router.route(&idx, r.id, &r.seq) {
+                items.push(ShardItem {
+                    pair_id: next_pair,
+                    read_id: r.id,
+                    read_offset: pair.read_offset,
+                    kmer: pair.kmer,
+                    target: pair.target,
+                    reverse: false,
+                    seq: &r.seq,
+                });
+                next_pair += 1;
+            }
+        }
+        let (one_shot, _) = run_shard(&idx, &cfg, &mut RustEngine, &items).unwrap();
+        let mut worker = ShardWorker::new(&idx, &cfg);
+        for chunk in items.chunks(7) {
+            worker.ingest(chunk.iter().copied());
+        }
+        let (chunked, _) = worker.finish(&mut RustEngine).unwrap();
+        assert_eq!(one_shot.len(), chunked.len());
+        for (a, b) in one_shot.iter().zip(&chunked) {
+            assert_eq!((a.key, a.pos, a.dist), (b.key, b.pos, b.dist));
+        }
+    }
+}

@@ -2,39 +2,64 @@
 //! keeps, per read, the minimal-distance PL seen so far across all
 //! crossbars' affine results, with a deterministic tie-break so the
 //! outcome is independent of arrival order.
+//!
+//! Arrival-order independence is what makes the sharded pipeline's merge
+//! trivial: every shard worker emits [`AffineOutcome`]s in its own order,
+//! and folding them into one [`BestSoFar`] in *any* interleaving yields
+//! the same winners. Full ties on `(dist, pos, reverse)` are broken by
+//! [`AffineOutcome::key`], the instance's serial emission order, so even
+//! equal-cost alignments with different CIGARs resolve identically
+//! whether the run used one thread or many.
 
 use crate::align::Cigar;
 
 /// One affine result delivered to the aggregator.
 #[derive(Debug, Clone)]
 pub struct AffineOutcome {
+    /// Read this outcome belongs to.
     pub read_id: u32,
     /// Refined mapping position (PL + traceback start offset).
     pub pos: i64,
+    /// Affine alignment cost.
     pub dist: i32,
+    /// Reconstructed alignment.
     pub cigar: Cigar,
     /// Reverse-complement orientation.
     pub reverse: bool,
+    /// Deterministic arbitration key: `pair_id << 32 | ref_pos`, i.e. the
+    /// serial emission order of the WF instance. Breaks full
+    /// `(dist, pos, reverse)` ties so the winning candidate (and its
+    /// CIGAR) is identical for every shard interleaving.
+    pub key: u64,
 }
 
 /// Final per-read decision.
 #[derive(Debug, Clone)]
 pub struct BestMapping {
+    /// Refined mapping position in reference coordinates.
     pub pos: i64,
+    /// Affine alignment cost of the winning candidate.
     pub dist: i32,
+    /// Alignment of the winning candidate.
     pub cigar: Cigar,
     /// How many candidate outcomes were considered.
     pub candidates: u32,
+    /// Reverse-complement orientation of the winning candidate.
     pub reverse: bool,
+    /// Arbitration key of the winning candidate (see
+    /// [`AffineOutcome::key`]).
+    pub key: u64,
 }
 
-/// Order-independent aggregation: smaller (dist, pos) wins.
+/// Order-independent aggregation: smaller `(dist, pos, reverse, key)`
+/// wins.
 #[derive(Debug, Default)]
 pub struct BestSoFar {
     slots: Vec<Option<BestMapping>>,
 }
 
 impl BestSoFar {
+    /// Empty state for `n_reads` reads.
     pub fn new(n_reads: usize) -> Self {
         BestSoFar { slots: vec![None; n_reads] }
     }
@@ -50,16 +75,20 @@ impl BestSoFar {
                     cigar: o.cigar,
                     candidates: 1,
                     reverse: o.reverse,
+                    key: o.key,
                 })
             }
             Some(b) => {
                 b.candidates += 1;
-                // forward orientation wins ties (deterministic)
-                if (o.dist, o.pos, o.reverse) < (b.dist, b.pos, b.reverse) {
+                // forward orientation wins ties; the emission-order key
+                // resolves anything still equal (deterministic under any
+                // shard interleaving)
+                if (o.dist, o.pos, o.reverse, o.key) < (b.dist, b.pos, b.reverse, b.key) {
                     b.pos = o.pos;
                     b.dist = o.dist;
                     b.cigar = o.cigar;
                     b.reverse = o.reverse;
+                    b.key = o.key;
                 }
             }
         }
@@ -75,6 +104,7 @@ impl BestSoFar {
         self.slots
     }
 
+    /// Number of reads with at least one candidate.
     pub fn mapped_count(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
@@ -86,7 +116,11 @@ mod tests {
     use crate::util::proptest::check;
 
     fn o(read_id: u32, pos: i64, dist: i32) -> AffineOutcome {
-        AffineOutcome { read_id, pos, dist, cigar: Cigar(vec![]), reverse: false }
+        AffineOutcome { read_id, pos, dist, cigar: Cigar(vec![]), reverse: false, key: 0 }
+    }
+
+    fn ok(read_id: u32, pos: i64, dist: i32, key: u64) -> AffineOutcome {
+        AffineOutcome { key, ..o(read_id, pos, dist) }
     }
 
     #[test]
@@ -110,11 +144,25 @@ mod tests {
     }
 
     #[test]
+    fn full_tie_breaks_on_emission_key() {
+        // same (dist, pos, reverse): the earlier-emitted instance wins,
+        // in either arrival order
+        let mut a = BestSoFar::new(1);
+        a.update(ok(0, 10, 3, 7));
+        a.update(ok(0, 10, 3, 2));
+        let mut b = BestSoFar::new(1);
+        b.update(ok(0, 10, 3, 2));
+        b.update(ok(0, 10, 3, 7));
+        assert_eq!(a.get(0).unwrap().key, 2);
+        assert_eq!(b.get(0).unwrap().key, 2);
+    }
+
+    #[test]
     fn order_independent_property() {
         check("best-so-far order independence", 0xBE57, 50, |rng| {
             let n = rng.gen_range(1..20usize);
             let outcomes: Vec<AffineOutcome> = (0..n)
-                .map(|_| o(0, rng.gen_range(0..1000i64), rng.gen_range(0..30i32)))
+                .map(|i| ok(0, rng.gen_range(0..1000i64), rng.gen_range(0..30i32), i as u64))
                 .collect();
             let mut forward = BestSoFar::new(1);
             for oc in outcomes.iter().cloned() {
@@ -125,7 +173,7 @@ mod tests {
                 reverse.update(oc);
             }
             let (f, r) = (forward.get(0).unwrap(), reverse.get(0).unwrap());
-            assert_eq!((f.pos, f.dist), (r.pos, r.dist));
+            assert_eq!((f.pos, f.dist, f.key), (r.pos, r.dist, r.key));
         });
     }
 }

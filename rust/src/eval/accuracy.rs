@@ -14,7 +14,9 @@ use crate::index::MinimizerIndex;
 /// Accuracy summary.
 #[derive(Debug, Clone)]
 pub struct AccuracyReport {
+    /// Reads evaluated.
     pub n_reads: usize,
+    /// Reads the pipeline mapped.
     pub mapped: usize,
     /// Agreement with the oracle mapper's position (exact).
     pub oracle_exact: usize,
@@ -24,6 +26,7 @@ pub struct AccuracyReport {
     pub oracle_mapped: usize,
     /// Agreement with the simulated origin within +-tolerance.
     pub truth_near: usize,
+    /// Position tolerance used for the "near" counts.
     pub tolerance: i64,
 }
 

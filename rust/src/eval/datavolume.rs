@@ -12,7 +12,9 @@ use crate::seeding::seeder::all_seed_hits;
 /// Data-volume summary for a workload.
 #[derive(Debug, Clone)]
 pub struct DataVolume {
+    /// Reads in the workload.
     pub n_reads: u64,
+    /// Read length in bases.
     pub read_len: usize,
     /// Raw read payload (2 bits/base packed -> bytes).
     pub input_bytes: u64,
@@ -26,6 +28,7 @@ pub struct DataVolume {
 }
 
 impl DataVolume {
+    /// Mean potential locations per read.
     pub fn pls_per_read(&self) -> f64 {
         self.total_pls as f64 / self.n_reads.max(1) as f64
     }

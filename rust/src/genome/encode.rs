@@ -4,10 +4,13 @@
 //! padding). The PIM cost model accounts for the paper's physical 2-bit
 //! packing; in-host we trade 4x memory for simple indexing.
 
-/// Base codes.
+/// Base code for A.
 pub const BASE_A: u8 = 0;
+/// Base code for C.
 pub const BASE_C: u8 = 1;
+/// Base code for G.
 pub const BASE_G: u8 = 2;
+/// Base code for T.
 pub const BASE_T: u8 = 3;
 /// Unknown / padding (never matches anything, including itself, in WF).
 pub const BASE_N: u8 = 4;

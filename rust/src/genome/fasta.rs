@@ -8,7 +8,9 @@ use super::encode::{decode_seq, encode_seq, Seq};
 /// One FASTA record: header (without `>`) + encoded sequence.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FastaRecord {
+    /// Header line without the leading `>`.
     pub name: String,
+    /// Encoded sequence (base codes).
     pub seq: Seq,
 }
 

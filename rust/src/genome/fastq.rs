@@ -10,12 +10,16 @@ use super::encode::{decode_seq, encode_seq, Seq};
 /// paper's pipeline).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FastqRecord {
+    /// Header line without the leading `@`.
     pub name: String,
+    /// Encoded sequence (base codes).
     pub seq: Seq,
+    /// Quality string, verbatim ASCII.
     pub qual: Vec<u8>,
 }
 
 impl FastqRecord {
+    /// Build a record whose every base has quality `q`.
     pub fn with_const_qual(name: String, seq: Seq, q: u8) -> Self {
         let qual = vec![q; seq.len()];
         FastqRecord { name, seq, qual }

@@ -22,6 +22,7 @@ pub struct MutateConfig {
     pub del_rate: f64,
     /// Max indel length (uniform in 1..=max).
     pub max_indel: usize,
+    /// RNG seed (deterministic donor for a given config).
     pub seed: u64,
 }
 
@@ -39,13 +40,15 @@ impl Default for MutateConfig {
 
 /// A donor genome plus its coordinate map to the reference.
 pub struct Donor {
+    /// The donor sequence (base codes).
     pub seq: Seq,
     /// For each donor base, the reference coordinate it derives from (for
     /// inserted bases: the coordinate of the nearest following reference
     /// base). Monotone non-decreasing.
     map: Vec<u32>,
-    /// Number of SNPs / indel events applied.
+    /// Number of SNPs applied.
     pub n_snps: usize,
+    /// Number of indel events applied.
     pub n_indels: usize,
 }
 
@@ -56,10 +59,12 @@ impl Donor {
         self.map[p]
     }
 
+    /// Donor genome length in bases.
     pub fn len(&self) -> usize {
         self.seq.len()
     }
 
+    /// True when the donor sequence is empty.
     pub fn is_empty(&self) -> bool {
         self.seq.is_empty()
     }

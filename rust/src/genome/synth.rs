@@ -117,14 +117,18 @@ pub struct ReadRecord {
 /// Read simulator parameters (Illumina-like error profile).
 #[derive(Debug, Clone)]
 pub struct ReadSimConfig {
+    /// Number of reads to simulate.
     pub n_reads: usize,
+    /// Read length in bases.
     pub read_len: usize,
     /// Per-base substitution rate (Illumina ≈ 1e-3; we default higher to
     /// exercise the filter at small scale).
     pub sub_rate: f64,
-    /// Per-read insertion/deletion probabilities (rare for Illumina).
+    /// Per-read insertion probability (rare for Illumina).
     pub ins_rate: f64,
+    /// Per-read deletion probability (rare for Illumina).
     pub del_rate: f64,
+    /// RNG seed (deterministic read set for a given config).
     pub seed: u64,
 }
 

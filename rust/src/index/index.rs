@@ -19,20 +19,50 @@ pub struct MinimizerIndex {
     occurrences: HashMap<u64, Vec<u32>>,
     /// The reference genome (base codes).
     pub reference: Seq,
-    /// k-mer length / window size used at build time.
+    /// k-mer length used at build time.
     pub k: usize,
+    /// Minimizer window size (k-mers per window) used at build time.
     pub w: usize,
     /// Read length the segment geometry is built for.
     pub read_len: usize,
+}
+
+/// Deterministic shard owner of a minimizer under an `n_shards`-way
+/// partition of the index (the host mirror of the paper's per-crossbar
+/// data organization, §V-B).
+///
+/// Because the crossbar assignment gives every minimizer a private
+/// contiguous crossbar range (see [`crate::coordinator::Router`]),
+/// partitioning *by minimizer* also partitions crossbars, Reads FIFOs,
+/// and reference segments into disjoint per-shard slices. The low bits
+/// of packed k-mers are heavily biased (2-bit bases), so the key is
+/// mixed (64-bit finalizer) before reduction.
+pub fn shard_of(kmer: u64, n_shards: usize) -> usize {
+    debug_assert!(n_shards >= 1);
+    if n_shards <= 1 {
+        return 0;
+    }
+    // murmur3 / splitmix-style 64-bit finalizer
+    let mut x = kmer;
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    x ^= x >> 33;
+    (x % n_shards as u64) as usize
 }
 
 /// Summary statistics of an index (drives Fig. 8-10 workload modelling
 /// and the §II data-volume motivation numbers).
 #[derive(Debug, Clone)]
 pub struct IndexStats {
+    /// Distinct minimizers in the index.
     pub n_minimizers: usize,
+    /// Total occurrence positions across all minimizers.
     pub n_occurrences: usize,
+    /// Largest single-minimizer occurrence count.
     pub max_occurrences: usize,
+    /// Mean occurrences per minimizer.
     pub mean_occurrences: f64,
     /// Minimizers with occurrence count <= lowTh are offloaded to the
     /// DP-RISC-V cores (paper §V-A).
@@ -40,6 +70,7 @@ pub struct IndexStats {
     /// Bytes of segment data a DART-PIM deployment would replicate into
     /// crossbars (2 bits/base), vs. the hash-table footprint.
     pub segment_storage_bytes: usize,
+    /// Bytes of the equivalent classical hash-table index.
     pub hashtable_storage_bytes: usize,
 }
 
@@ -137,6 +168,18 @@ impl MinimizerIndex {
             out[off..off + (hi - lo)].copy_from_slice(&self.reference[lo..hi]);
         }
         out
+    }
+
+    /// Occurrence totals per shard under an `n_shards`-way
+    /// [`shard_of`] partition — the work each pipeline shard would own.
+    /// Used to check partition balance (a pathological reference could
+    /// concentrate occurrences in one shard and serialize the pipeline).
+    pub fn shard_loads(&self, n_shards: usize) -> Vec<u64> {
+        let mut loads = vec![0u64; n_shards.max(1)];
+        for (kmer, occs) in self.iter() {
+            loads[shard_of(kmer, n_shards)] += occs.len() as u64;
+        }
+        loads
     }
 
     /// Compute index statistics.
@@ -245,6 +288,40 @@ mod tests {
         if (first as usize) < (READ_LEN - K) + ETH {
             let seg = idx.segment(first);
             assert_eq!(seg[0], BASE_N);
+        }
+    }
+
+    #[test]
+    fn shard_of_is_stable_and_in_range() {
+        let idx = index();
+        for (kmer, _) in idx.iter() {
+            for n in [1usize, 2, 3, 4, 7, 16] {
+                let s = shard_of(kmer, n);
+                assert!(s < n);
+                assert_eq!(s, shard_of(kmer, n), "must be deterministic");
+            }
+            assert_eq!(shard_of(kmer, 1), 0);
+        }
+    }
+
+    #[test]
+    fn shard_loads_sum_and_balance() {
+        let idx = index();
+        let stats = idx.stats(0);
+        for n in [1usize, 2, 4, 8] {
+            let loads = idx.shard_loads(n);
+            assert_eq!(loads.len(), n);
+            assert_eq!(loads.iter().sum::<u64>() as usize, stats.n_occurrences);
+        }
+        // the mixed hash must not collapse a random-ish genome onto a
+        // few shards: every 4-way shard gets a meaningful share
+        let loads = idx.shard_loads(4);
+        let total: u64 = loads.iter().sum();
+        for (i, &l) in loads.iter().enumerate() {
+            assert!(
+                l as f64 >= 0.05 * total as f64,
+                "shard {i} owns {l}/{total} occurrences — partition is degenerate"
+            );
         }
     }
 

@@ -39,6 +39,7 @@ pub struct KmerIter<'a> {
 }
 
 impl<'a> KmerIter<'a> {
+    /// Iterator over `seq` with k-mer length `k` (1..=32).
     pub fn new(seq: &'a [u8], k: usize) -> Self {
         assert!(k >= 1 && k <= 32);
         KmerIter { seq, k, pos: 0, cur: 0, valid: 0, mask: (1u64 << (2 * k)) - 1 }

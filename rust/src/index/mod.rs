@@ -11,7 +11,7 @@ pub mod minimizer;
 #[allow(clippy::module_inception)]
 pub mod index;
 
-pub use index::{IndexStats, MinimizerIndex};
+pub use index::{shard_of, IndexStats, MinimizerIndex};
 pub use io::{load_index, save_index};
 pub use kmer::{kmer_hash, pack_kmer};
 pub use minimizer::{minimizers, Minimizer};

@@ -22,6 +22,11 @@
 //! the `examples/` directory. `DESIGN.md` maps every paper table/figure
 //! to the module and bench that regenerates it.
 
+// Every public item must be documented: the crate is the reference map
+// between the paper's figures/equations and the code, so an undocumented
+// export is a hole in that map. CI turns this into a hard error via
+// `cargo doc` with RUSTDOCFLAGS="-D warnings".
+#![warn(missing_docs)]
 // Style lints the numeric-kernel code intentionally trips: index loops
 // mirror the paper's per-cell recurrences (`needless_range_loop`), and
 // explicit `a >= lo && a <= hi` bounds mirror Table III inequalities
@@ -65,11 +70,15 @@ pub mod params {
     pub const SAT_LINEAR: i32 = (ETH as i32) + 1;
     /// Affine WF saturation (5-bit cells).
     pub const SAT_AFFINE: i32 = 31;
-    /// Edit costs (all 1 in the paper).
+    /// Substitution cost (all edit costs are 1 in the paper).
     pub const W_SUB: i32 = 1;
+    /// Insertion cost (linear model).
     pub const W_INS: i32 = 1;
+    /// Deletion cost (linear model).
     pub const W_DEL: i32 = 1;
+    /// Gap-open cost (affine model).
     pub const W_OP: i32 = 1;
+    /// Gap-extend cost (affine model).
     pub const W_EX: i32 = 1;
     /// "Infinity" for in-row scans; matches python params.BIG.
     pub const BIG: i32 = 1 << 20;

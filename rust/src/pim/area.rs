@@ -12,15 +12,22 @@ pub struct AreaModel {
     pub riscv_core_mm2: f64,
     /// RISC-V cache area (mm²) — 0.05.
     pub riscv_cache_mm2: f64,
-    /// Controller unit areas (µm²), Table VI.
+    /// Crossbar controller area (µm²), Table VI.
     pub xbar_ctrl_um2: f64,
+    /// Bank controller area (µm²), Table VI.
     pub bank_ctrl_um2: f64,
+    /// Chip controller area (µm²), Table VI.
     pub chip_ctrl_um2: f64,
+    /// PIM controller area (µm²), Table VI.
     pub pim_ctrl_um2: f64,
-    /// Peripheral unit areas (µm²), Table VI (RACER, scaled to 28 nm).
+    /// Peripheral decode-and-drive unit area (µm²), Table VI (RACER,
+    /// scaled to 28 nm).
     pub decode_drive_um2: f64,
+    /// Read/write circuit area per cell column (µm²).
     pub rw_circuit_um2: f64,
+    /// Selector pass-gate area per cell (µm²).
     pub selector_passgate_um2: f64,
+    /// Driver pass-gate area per cell (µm²).
     pub driver_passgate_um2: f64,
 }
 
@@ -45,13 +52,18 @@ impl Default for AreaModel {
 /// Area breakdown in mm² (Fig. 10c categories).
 #[derive(Debug, Clone)]
 pub struct AreaBreakdown {
+    /// Memristive crossbar arrays.
     pub crossbars: f64,
+    /// Controller hierarchy (PIM/chip/bank/crossbar).
     pub controllers: f64,
+    /// Peripheral decode-and-drive circuitry.
     pub peripherals: f64,
+    /// DP-RISC-V cores and caches.
     pub riscv: f64,
 }
 
 impl AreaBreakdown {
+    /// Total area in mm².
     pub fn total(&self) -> f64 {
         self.crossbars + self.controllers + self.peripherals + self.riscv
     }

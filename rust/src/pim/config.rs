@@ -13,8 +13,9 @@ pub struct DartPimConfig {
     pub banks_per_chip: usize,
     /// Crossbars per bank.
     pub xbars_per_bank: usize,
-    /// Crossbar geometry (bits).
+    /// Crossbar width in bits (columns).
     pub xbar_cols: usize,
+    /// Crossbar height in rows.
     pub xbar_rows: usize,
     /// RISC-V cores per chip.
     pub riscv_per_chip: usize,

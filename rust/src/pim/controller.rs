@@ -9,9 +9,13 @@ use super::config::DartPimConfig;
 /// Per-unit controller power (W), Table VI (synthesized, TSMC 28 nm).
 #[derive(Debug, Clone)]
 pub struct ControllerPower {
+    /// Per-crossbar controller power (W).
     pub xbar_w: f64,
+    /// Per-bank controller power (W).
     pub bank_w: f64,
+    /// Per-chip controller power (W).
     pub chip_w: f64,
+    /// Top-level PIM controller power (W).
     pub pim_w: f64,
     /// Peripheral decode-and-drive unit power (W) per bank.
     pub decode_drive_w: f64,
@@ -32,20 +36,28 @@ impl Default for ControllerPower {
 /// Controller counts for a configuration.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ControllerCounts {
+    /// Top-level PIM controllers (one per module).
     pub pim: usize,
+    /// Chip controllers.
     pub chip: usize,
+    /// Bank controllers.
     pub bank: usize,
+    /// Crossbar controllers.
     pub xbar: usize,
 }
 
 /// Hierarchical address of one crossbar.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct XbarAddr {
+    /// Chip index within the module.
     pub chip: u32,
+    /// Bank index within the chip.
     pub bank: u32,
+    /// Crossbar index within the bank.
     pub xbar: u32,
 }
 
+/// Controller counts for a configuration.
 pub fn counts(cfg: &DartPimConfig) -> ControllerCounts {
     ControllerCounts {
         pim: cfg.n_modules,

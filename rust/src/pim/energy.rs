@@ -47,15 +47,22 @@ impl Default for EnergyModel {
 /// Energy breakdown for a full run (Fig. 10b categories), in joules.
 #[derive(Debug, Clone, Default)]
 pub struct EnergyBreakdown {
+    /// MAGIC switching energy in the crossbar arrays.
     pub crossbars: f64,
+    /// Controller hierarchy energy.
     pub controllers: f64,
+    /// Peripheral decode-and-drive energy.
     pub peripherals: f64,
+    /// DP-RISC-V compute energy.
     pub riscv: f64,
+    /// Read-stream transfer into the PIM modules.
     pub transfer_in: f64,
+    /// Result readout transfer back to the host.
     pub transfer_out: f64,
 }
 
 impl EnergyBreakdown {
+    /// Total energy in joules.
     pub fn total(&self) -> f64 {
         self.crossbars
             + self.controllers

@@ -17,8 +17,9 @@
 use super::magic::{min_with_writeback, MagicOp};
 use crate::params::{window_len, BAND, READ_LEN};
 
-/// Bit widths of WF cells (paper §III: 3-bit linear, 5-bit affine).
+/// Bit width of linear WF cells (paper §III: 3-bit).
 pub const B_LINEAR: usize = 3;
+/// Bit width of affine WF cells (paper §III: 5-bit).
 pub const B_AFFINE: usize = 5;
 
 /// Where instance costs come from.
@@ -34,17 +35,23 @@ pub enum CostSource {
 /// Cycle/switch cost of one WF instance on one crossbar.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InstanceCost {
+    /// Compute cycles (MAGIC NOR sequences).
     pub magic_cycles: u64,
+    /// Memristor switches during compute.
     pub magic_switches: u64,
+    /// Cycles spent writing operands into rows.
     pub write_cycles: u64,
+    /// Memristor switches during operand writes.
     pub write_switches: u64,
 }
 
 impl InstanceCost {
+    /// Compute + write cycles.
     pub fn total_cycles(&self) -> u64 {
         self.magic_cycles + self.write_cycles
     }
 
+    /// Compute + write switches (drives the energy model).
     pub fn total_switches(&self) -> u64 {
         self.magic_switches + self.write_switches
     }
@@ -180,18 +187,25 @@ pub fn affine_instance_cost(src: CostSource) -> InstanceCost {
 /// the affine buffer). Asserted to fit the 1024-bit row.
 #[derive(Debug, Clone)]
 pub struct RowAllocation {
+    /// Bits holding the reference segment / window.
     pub segment_bits: usize,
+    /// Bits holding the read.
     pub read_bits: usize,
+    /// Bits holding the WF band value columns.
     pub band_bits: usize,
+    /// Bits reserved for intermediates.
     pub temp_bits: usize,
+    /// Physical row width (1024 in the paper).
     pub row_bits: usize,
 }
 
 impl RowAllocation {
+    /// Bits allocated to data (segment + read + band).
     pub fn used(&self) -> usize {
         self.segment_bits + self.read_bits + self.band_bits
     }
 
+    /// True when the allocation leaves the paper's ~80 temp bits free.
     pub fn fits(&self) -> bool {
         // the paper requires >= ~80 temp bits for intermediates
         self.used() + 80 <= self.row_bits

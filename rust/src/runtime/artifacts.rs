@@ -13,22 +13,32 @@ use crate::util::json;
 /// One lowered HLO module.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// Unique artifact name (e.g. "linear_wf_b256").
     pub name: String,
     /// "linear_wf" or "affine_wf".
     pub kind: String,
+    /// Batch size the module was lowered for.
     pub batch: usize,
+    /// Path of the HLO text file.
     pub path: PathBuf,
 }
 
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct ArtifactManifest {
+    /// Read length the kernels were lowered for.
     pub read_len: usize,
+    /// Window length (read_len + 2*eth).
     pub win_len: usize,
+    /// Band width (2*eth + 1).
     pub band: usize,
+    /// Error threshold eth.
     pub eth: usize,
+    /// Linear WF saturation value.
     pub sat_linear: i32,
+    /// Affine WF saturation value.
     pub sat_affine: i32,
+    /// The lowered modules.
     pub artifacts: Vec<ArtifactEntry>,
 }
 

@@ -25,8 +25,11 @@ pub struct LinearBatch {
 /// Results of one batched affine-alignment call.
 #[derive(Debug, Clone)]
 pub struct AffineBatch {
+    /// Final band row per instance.
     pub band: Vec<[i32; BAND]>,
+    /// Best distance per instance (saturated => unmappable here).
     pub best: Vec<i32>,
+    /// Band coordinate of the best distance.
     pub best_j: Vec<u32>,
     /// Packed 4-bit traceback directions, row-major (read_len, BAND).
     pub dirs: Vec<Vec<u8>>,
@@ -37,6 +40,7 @@ pub struct AffineBatch {
 /// Not `Send`: the PJRT client is single-threaded by construction; the
 /// scheduler constructs engines on their owning thread via a factory.
 pub trait WfEngine {
+    /// Short engine name for logs and bench labels.
     fn name(&self) -> &'static str;
 
     /// Pre-alignment filter: banded linear WF over (read, window) pairs.

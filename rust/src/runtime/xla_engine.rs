@@ -63,10 +63,12 @@ impl XlaEngine {
         Self::load(super::artifacts::default_dir())
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &ArtifactManifest {
         &self.manifest
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

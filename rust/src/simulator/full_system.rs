@@ -23,24 +23,28 @@
 //!   buffer geometry permits; reported as an ablation.
 
 use std::collections::HashMap;
+use std::thread;
 
 use crate::align::banded_linear::{best_of_band, linear_wf_band};
-use crate::index::MinimizerIndex;
+use crate::index::{shard_of, MinimizerIndex};
 use crate::params::ETH;
 use crate::pim::DartPimConfig;
-use crate::seeding::seed_read;
+use crate::seeding::{seed_read, ReadSeed};
 
 /// How affine lock-step rounds are counted (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum TimingMode {
+    /// One affine instance per lock-step round (reproduces the paper).
     #[default]
     PaperSerial,
+    /// Idealized 8-instances-per-round ablation.
     Batched8,
 }
 
 /// Counters produced by one simulated run.
 #[derive(Debug, Clone, Default)]
 pub struct SimCounts {
+    /// Reads in the simulated workload.
     pub n_reads: u64,
     /// (read, minimizer) pairs routed to crossbars.
     pub routed_pairs: u64,
@@ -52,8 +56,9 @@ pub struct SimCounts {
     pub linear_instances: u64,
     /// J_A: affine WF instances in DP-memory.
     pub affine_instances: u64,
-    /// Linear / affine WF instances computed by the RISC-V cores.
+    /// Linear WF instances computed by the RISC-V cores.
     pub riscv_linear_instances: u64,
+    /// Affine WF instances computed by the RISC-V cores.
     pub riscv_affine_instances: u64,
     /// Linear lock-step rounds at the bottleneck crossbar (K_L).
     pub k_linear: u64,
@@ -100,10 +105,21 @@ impl SimCounts {
     }
 }
 
+/// Per-shard partial result of the workload simulation (private to the
+/// shard merge in [`FullSystemSim::simulate_threaded`]).
+struct ShardSimCounts {
+    counts: SimCounts,
+    pairs_per_xbar: HashMap<u32, u64>,
+    affine_per_xbar: HashMap<u32, u64>,
+    candidates: Vec<bool>,
+}
+
 /// Offline crossbar assignment: each minimizer above lowTh owns
 /// `ceil(occurrences / linear_rows)` crossbars.
 pub struct FullSystemSim<'a> {
+    /// The minimizer index being simulated against.
     pub index: &'a MinimizerIndex,
+    /// Architecture configuration.
     pub cfg: DartPimConfig,
     /// minimizer -> (first crossbar id, number of crossbars), for
     /// minimizers assigned to DP-memory.
@@ -140,65 +156,134 @@ impl<'a> FullSystemSim<'a> {
     /// Simulate the online phase over a workload, running the actual
     /// linear filter per segment (Rust mirror of the L1 kernel).
     pub fn simulate(&self, reads: &[crate::genome::ReadRecord]) -> SimCounts {
-        let mut c = SimCounts { n_reads: reads.len() as u64, ..Default::default() };
-        // pairs routed per crossbar (first crossbar of the minimizer is
-        // the FIFO owner), affine instances per crossbar
-        let mut pairs_per_xbar: HashMap<u32, u64> = HashMap::new();
-        let mut affine_per_xbar: HashMap<u32, u64> = HashMap::new();
-        for read in reads {
-            let mut have_candidate = false;
+        self.simulate_threaded(reads, 1)
+    }
+
+    /// [`Self::simulate`] sharded across `n_threads` worker threads.
+    ///
+    /// (read, minimizer) pairs are partitioned by minimizer hash
+    /// ([`shard_of`]) exactly like the live pipeline, so each worker's
+    /// per-crossbar cap accounting touches a disjoint crossbar set and
+    /// the merged counts are identical to the serial path for every
+    /// thread count.
+    pub fn simulate_threaded(
+        &self,
+        reads: &[crate::genome::ReadRecord],
+        n_threads: usize,
+    ) -> SimCounts {
+        let n = n_threads.max(1);
+        // stage 1 (serial): seed every read, partition pairs by minimizer
+        let mut shards: Vec<Vec<(u32, ReadSeed)>> = (0..n).map(|_| Vec::new()).collect();
+        for (ri, read) in reads.iter().enumerate() {
             for seed in seed_read(self.index, &read.seq) {
-                let occs = self.index.occurrences(seed.kmer);
-                if occs.is_empty() {
+                if self.index.occurrences(seed.kmer).is_empty() {
                     continue;
                 }
-                match self.assignment_of(seed.kmer) {
-                    None => {
-                        // lowTh minimizer: the RISC-V cores run both WF
-                        // stages for every occurrence.
-                        c.riscv_pairs += 1;
-                        c.riscv_linear_instances += occs.len() as u64;
-                        for &pos in occs {
-                            if self.filter_passes(&read.seq, pos, seed.read_offset) {
-                                c.riscv_affine_instances += 1;
-                                have_candidate = true;
-                            }
-                        }
-                    }
-                    Some((first, n)) => {
-                        // the read is broadcast to every crossbar of the
-                        // minimizer; the FIFO cap applies per crossbar
-                        let cap = self.cfg.max_reads as u64;
-                        let count = pairs_per_xbar.entry(first).or_default();
-                        if *count >= cap {
-                            c.dropped_pairs += 1;
-                            continue;
-                        }
-                        *count += 1;
-                        for sub in 1..n {
-                            *pairs_per_xbar.entry(first + sub).or_default() += 1;
-                        }
-                        c.routed_pairs += 1;
-                        c.linear_instances += occs.len() as u64;
-                        for (i, &pos) in occs.iter().enumerate() {
-                            if self.filter_passes(&read.seq, pos, seed.read_offset) {
-                                c.affine_instances += 1;
-                                let xb = first + (i / self.cfg.linear_rows) as u32;
-                                *affine_per_xbar.entry(xb).or_default() += 1;
-                                have_candidate = true;
-                            }
-                        }
-                    }
-                }
-            }
-            if have_candidate {
-                c.reads_with_candidates += 1;
+                shards[shard_of(seed.kmer, n)].push((ri as u32, seed));
             }
         }
+
+        // stage 2: per-shard workload counting (threaded when asked)
+        let parts: Vec<ShardSimCounts> = if n == 1 {
+            vec![self.simulate_shard(reads, &shards[0])]
+        } else {
+            thread::scope(|s| {
+                let handles: Vec<_> = shards
+                    .iter()
+                    .map(|items| s.spawn(move || self.simulate_shard(reads, items)))
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("sim shard panicked")).collect()
+            })
+        };
+
+        // deterministic merge: sums and disjoint map unions
+        let mut c = SimCounts { n_reads: reads.len() as u64, ..Default::default() };
+        let mut pairs_per_xbar: HashMap<u32, u64> = HashMap::new();
+        let mut affine_per_xbar: HashMap<u32, u64> = HashMap::new();
+        let mut candidates = vec![false; reads.len()];
+        for p in parts {
+            c.routed_pairs += p.counts.routed_pairs;
+            c.dropped_pairs += p.counts.dropped_pairs;
+            c.riscv_pairs += p.counts.riscv_pairs;
+            c.linear_instances += p.counts.linear_instances;
+            c.affine_instances += p.counts.affine_instances;
+            c.riscv_linear_instances += p.counts.riscv_linear_instances;
+            c.riscv_affine_instances += p.counts.riscv_affine_instances;
+            for (k, v) in p.pairs_per_xbar {
+                *pairs_per_xbar.entry(k).or_default() += v;
+            }
+            for (k, v) in p.affine_per_xbar {
+                *affine_per_xbar.entry(k).or_default() += v;
+            }
+            for (i, had) in p.candidates.into_iter().enumerate() {
+                candidates[i] |= had;
+            }
+        }
+        c.reads_with_candidates = candidates.iter().filter(|&&x| x).count() as u64;
         c.k_linear = pairs_per_xbar.values().copied().max().unwrap_or(0);
         c.bottleneck_affine = affine_per_xbar.values().copied().max().unwrap_or(0);
         c.active_xbars = pairs_per_xbar.len() as u64;
         c
+    }
+
+    /// Count one shard's workload: the serial per-pair semantics over a
+    /// partition-ordered item list (cap accounting stays exact because a
+    /// minimizer's crossbars belong to exactly one shard).
+    fn simulate_shard(
+        &self,
+        reads: &[crate::genome::ReadRecord],
+        items: &[(u32, ReadSeed)],
+    ) -> ShardSimCounts {
+        let mut p = ShardSimCounts {
+            counts: SimCounts::default(),
+            pairs_per_xbar: HashMap::new(),
+            affine_per_xbar: HashMap::new(),
+            candidates: vec![false; reads.len()],
+        };
+        let c = &mut p.counts;
+        for &(ri, ref seed) in items {
+            let read = &reads[ri as usize];
+            let occs = self.index.occurrences(seed.kmer);
+            match self.assignment_of(seed.kmer) {
+                None => {
+                    // lowTh minimizer: the RISC-V cores run both WF
+                    // stages for every occurrence.
+                    c.riscv_pairs += 1;
+                    c.riscv_linear_instances += occs.len() as u64;
+                    for &pos in occs {
+                        if self.filter_passes(&read.seq, pos, seed.read_offset) {
+                            c.riscv_affine_instances += 1;
+                            p.candidates[ri as usize] = true;
+                        }
+                    }
+                }
+                Some((first, n)) => {
+                    // the read is broadcast to every crossbar of the
+                    // minimizer; the FIFO cap applies per crossbar
+                    let cap = self.cfg.max_reads as u64;
+                    let count = p.pairs_per_xbar.entry(first).or_default();
+                    if *count >= cap {
+                        c.dropped_pairs += 1;
+                        continue;
+                    }
+                    *count += 1;
+                    for sub in 1..n {
+                        *p.pairs_per_xbar.entry(first + sub).or_default() += 1;
+                    }
+                    c.routed_pairs += 1;
+                    c.linear_instances += occs.len() as u64;
+                    for (i, &pos) in occs.iter().enumerate() {
+                        if self.filter_passes(&read.seq, pos, seed.read_offset) {
+                            c.affine_instances += 1;
+                            let xb = first + (i / self.cfg.linear_rows) as u32;
+                            *p.affine_per_xbar.entry(xb).or_default() += 1;
+                            p.candidates[ri as usize] = true;
+                        }
+                    }
+                }
+            }
+        }
+        p
     }
 
     /// Linear WF filter for one (read, occurrence) pair.
@@ -283,6 +368,29 @@ mod tests {
         let loose = FullSystemSim::new(&idx, loose).simulate(&reads);
         assert_eq!(loose.dropped_pairs, 0);
         assert!(loose.routed_pairs > c.routed_pairs);
+    }
+
+    #[test]
+    fn threaded_simulation_matches_serial() {
+        let (idx, reads) = setup(150);
+        let sim =
+            FullSystemSim::new(&idx, DartPimConfig { low_th: 1, ..Default::default() });
+        let serial = sim.simulate(&reads);
+        for n in [2usize, 4, 7] {
+            let t = sim.simulate_threaded(&reads, n);
+            assert_eq!(t.n_reads, serial.n_reads, "n={n}");
+            assert_eq!(t.routed_pairs, serial.routed_pairs, "n={n}");
+            assert_eq!(t.dropped_pairs, serial.dropped_pairs, "n={n}");
+            assert_eq!(t.riscv_pairs, serial.riscv_pairs, "n={n}");
+            assert_eq!(t.linear_instances, serial.linear_instances, "n={n}");
+            assert_eq!(t.affine_instances, serial.affine_instances, "n={n}");
+            assert_eq!(t.riscv_linear_instances, serial.riscv_linear_instances, "n={n}");
+            assert_eq!(t.riscv_affine_instances, serial.riscv_affine_instances, "n={n}");
+            assert_eq!(t.k_linear, serial.k_linear, "n={n}");
+            assert_eq!(t.bottleneck_affine, serial.bottleneck_affine, "n={n}");
+            assert_eq!(t.active_xbars, serial.active_xbars, "n={n}");
+            assert_eq!(t.reads_with_candidates, serial.reads_with_candidates, "n={n}");
+        }
     }
 
     #[test]

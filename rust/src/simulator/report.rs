@@ -20,15 +20,22 @@ pub const BUS_BYTES_PER_S: f64 = 32e9;
 /// Full evaluation report for one configuration + workload.
 #[derive(Debug, Clone)]
 pub struct SystemReport {
+    /// The workload counts the report was built from.
     pub counts: SimCounts,
+    /// The architecture configuration.
     pub cfg: DartPimConfig,
-    /// Execution-time components (Fig. 10a): the run is paced by the
-    /// slowest of the three.
+    /// Execution-time component (Fig. 10a): DP-memory lock-step rounds.
+    /// The run is paced by the slowest of the three components.
     pub t_dpmem_s: f64,
+    /// Execution-time component: DP-RISC-V offload compute.
     pub t_riscv_s: f64,
+    /// Execution-time component: result readout over the bus.
     pub t_readout_s: f64,
+    /// End-to-end execution time (Eq. 6).
     pub exec_time_s: f64,
+    /// Energy breakdown (Eq. 7 / Fig. 10b).
     pub energy: EnergyBreakdown,
+    /// Area breakdown (Fig. 10c).
     pub area: AreaBreakdown,
 }
 

@@ -6,10 +6,15 @@ use std::time::{Duration, Instant};
 /// Timing summary for one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Benchmark case label.
     pub name: String,
+    /// Measured iterations (excluding warmup).
     pub iters: usize,
+    /// Mean iteration latency.
     pub mean: Duration,
+    /// Median iteration latency.
     pub p50: Duration,
+    /// 95th-percentile iteration latency.
     pub p95: Duration,
     /// Optional work units per iteration (for throughput lines).
     pub units_per_iter: f64,

@@ -12,10 +12,12 @@ pub struct SmallRng {
 }
 
 impl SmallRng {
+    /// Generator seeded with `seed` (same seed => same stream).
     pub fn seed_from_u64(seed: u64) -> Self {
         SmallRng { state: seed }
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
@@ -55,6 +57,7 @@ impl SmallRng {
 
 /// Range sampling, monomorphized per integer type.
 pub trait SampleRange<T> {
+    /// Uniform sample from `self` using `rng`.
     fn sample(self, rng: &mut SmallRng) -> T;
 }
 

@@ -1,0 +1,132 @@
+//! Sharding determinism: `map_reads` must produce byte-identical output
+//! for every worker-thread count — same mappings, same CIGARs, same
+//! workload counters. This is the contract that lets the sharded
+//! pipeline (and every later scaling PR built on it) claim the paper's
+//! parallelism without changing a single mapping decision.
+//!
+//! Workload: synthetic reference, donor-derived mutated reads (SNPs +
+//! indels between donor and reference, sequencing errors on top) — the
+//! same shape as the e2e suite, so ties and near-ties actually occur.
+
+use dart_pim::coordinator::{FilterPolicy, FinalMapping, Pipeline, PipelineConfig};
+use dart_pim::genome::mutate::MutateConfig;
+use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+use dart_pim::genome::ReadRecord;
+use dart_pim::index::MinimizerIndex;
+use dart_pim::params::{K, READ_LEN, W};
+use dart_pim::pim::DartPimConfig;
+use dart_pim::runtime::RustEngine;
+
+fn workload(n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
+    let genome = SynthConfig { len: 300_000, ..Default::default() }.generate();
+    let donor = MutateConfig::default().apply(&genome);
+    let idx = MinimizerIndex::build(genome, K, W, READ_LEN);
+    let reads =
+        ReadSimConfig { n_reads, ..Default::default() }.simulate(&donor.seq, |p| donor.to_ref(p));
+    (idx, reads)
+}
+
+/// Render mappings exactly like `dart-pim map` writes its TSV, so
+/// "byte-identical" means what the CLI user sees.
+fn render(mappings: &[Option<FinalMapping>]) -> String {
+    let mut out = String::new();
+    for m in mappings.iter().flatten() {
+        out.push_str(&format!(
+            "{}\t{}\t{}\t{}\t{}\t{}\n",
+            m.read_id,
+            m.pos,
+            if m.reverse { '-' } else { '+' },
+            m.dist,
+            m.cigar,
+            m.candidates
+        ));
+    }
+    out
+}
+
+fn run(
+    idx: &MinimizerIndex,
+    reads: &[ReadRecord],
+    threads: usize,
+    policy: FilterPolicy,
+    revcomp: bool,
+) -> (String, std::collections::BTreeMap<String, u64>) {
+    let cfg = PipelineConfig {
+        dart: DartPimConfig { low_th: 1, ..Default::default() },
+        filter_policy: policy,
+        handle_revcomp: revcomp,
+        threads,
+        ..Default::default()
+    };
+    let mut p = Pipeline::new(idx, cfg, RustEngine);
+    let (mappings, metrics) = p.map_reads(reads).unwrap();
+    (render(&mappings), metrics.invariant_counters())
+}
+
+#[test]
+fn threads_1_and_4_are_byte_identical() {
+    let (idx, reads) = workload(400);
+    let (tsv1, counters1) = run(&idx, &reads, 1, FilterPolicy::AllPassing, false);
+    let (tsv4, counters4) = run(&idx, &reads, 4, FilterPolicy::AllPassing, false);
+    assert!(!tsv1.is_empty(), "workload must actually map reads");
+    assert_eq!(tsv1, tsv4, "mappings + CIGARs must be byte-identical");
+    assert_eq!(counters1, counters4, "workload counters must be identical");
+}
+
+#[test]
+fn every_thread_count_agrees() {
+    let (idx, reads) = workload(200);
+    let (base, counters) = run(&idx, &reads, 1, FilterPolicy::AllPassing, false);
+    for threads in [2usize, 3, 4, 8] {
+        let (tsv, c) = run(&idx, &reads, threads, FilterPolicy::AllPassing, false);
+        assert_eq!(base, tsv, "threads={threads}");
+        assert_eq!(counters, c, "threads={threads}");
+    }
+}
+
+#[test]
+fn min_only_policy_is_also_deterministic() {
+    let (idx, reads) = workload(200);
+    let (tsv1, c1) = run(&idx, &reads, 1, FilterPolicy::MinOnly, false);
+    let (tsv4, c4) = run(&idx, &reads, 4, FilterPolicy::MinOnly, false);
+    assert!(!tsv1.is_empty());
+    assert_eq!(tsv1, tsv4);
+    assert_eq!(c1, c4);
+}
+
+#[test]
+fn revcomp_reads_are_also_deterministic() {
+    let (idx, mut reads) = workload(150);
+    for r in reads.iter_mut() {
+        if r.id % 2 == 1 {
+            r.seq = dart_pim::genome::revcomp(&r.seq);
+        }
+    }
+    let (tsv1, c1) = run(&idx, &reads, 1, FilterPolicy::AllPassing, true);
+    let (tsv4, c4) = run(&idx, &reads, 4, FilterPolicy::AllPassing, true);
+    assert!(tsv1.contains('-'), "some reads must map on the reverse strand");
+    assert_eq!(tsv1, tsv4);
+    assert_eq!(c1, c4);
+}
+
+#[test]
+fn max_reads_cap_drops_identically() {
+    // the FIFO lifetime cap is order-sensitive bookkeeping; the
+    // minimizer-hash partition must preserve which pairs are dropped
+    let (idx, reads) = workload(300);
+    let run_capped = |threads: usize| {
+        let cfg = PipelineConfig {
+            dart: DartPimConfig { low_th: 0, max_reads: 3, ..Default::default() },
+            threads,
+            ..Default::default()
+        };
+        let mut p = Pipeline::new(&idx, cfg, RustEngine);
+        let (mappings, metrics) = p.map_reads(&reads).unwrap();
+        (render(&mappings), metrics.invariant_counters())
+    };
+    let (tsv1, c1) = run_capped(1);
+    assert!(c1["dropped_pairs"] > 0, "cap of 3 must drop pairs");
+    let (tsv4, c4) = run_capped(4);
+    assert_eq!(tsv1, tsv4);
+    assert_eq!(c1, c4);
+}
