@@ -12,7 +12,7 @@
 //! plus `make artifacts` for the XLA engine path).
 //!
 //! Flags: --reads N (default 20000), --len BP (default 2000000),
-//!        --engine xla|rust (default xla), --oracle N (default 2000).
+//!        --engine xla|rust|bitpal (default xla), --oracle N (default 2000).
 
 use std::time::Instant;
 
@@ -25,7 +25,7 @@ use dart_pim::index::MinimizerIndex;
 use dart_pim::params::{K, READ_LEN, W};
 use dart_pim::pim::xbar_sim::CostSource;
 use dart_pim::pim::DartPimConfig;
-use dart_pim::runtime::RustEngine;
+use dart_pim::runtime::{BitpalEngine, EngineKind, RustEngine};
 use dart_pim::simulator::report::{build_report, scale_counts};
 use dart_pim::simulator::TimingMode;
 
@@ -61,6 +61,11 @@ fn map_with_engine(
         println!("engine: rust");
         return Pipeline::new(index, cfg, RustEngine).map_reads(reads);
     }
+    if kind == "bitpal" {
+        println!("engine: bitpal (bit-parallel filter)");
+        let cfg = PipelineConfig { worker_engine: EngineKind::Bitpal, ..cfg };
+        return Pipeline::new(index, cfg, BitpalEngine::new()).map_reads(reads);
+    }
     let engine = dart_pim::runtime::XlaEngine::load_default()?;
     println!(
         "engine: xla/PJRT ({}), {} compiled variants",
@@ -77,6 +82,11 @@ fn map_with_engine(
     cfg: PipelineConfig,
     reads: &[dart_pim::genome::ReadRecord],
 ) -> anyhow::Result<MapResult> {
+    if kind == "bitpal" {
+        println!("engine: bitpal (bit-parallel filter)");
+        let cfg = PipelineConfig { worker_engine: EngineKind::Bitpal, ..cfg };
+        return Pipeline::new(index, cfg, BitpalEngine::new()).map_reads(reads);
+    }
     if kind != "rust" {
         println!("engine: rust (this build has no `pjrt` feature; --engine {kind} unavailable)");
     } else {

@@ -1,0 +1,24 @@
+//! Workload builders shared by the engine benches, so the printed
+//! (`wf_engines`) and recorded (`pipeline_scaling`) comparisons measure
+//! exactly the same batch shape.
+
+use dart_pim::params::{window_len, ETH, READ_LEN};
+use dart_pim::util::SmallRng;
+
+/// A batch of `b` random reads, each planted exactly (no errors) at the
+/// band anchor of an otherwise-random window — the standard engine
+/// micro-bench workload.
+pub fn planted_wf_batch(rng: &mut SmallRng, b: usize) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let reads: Vec<Vec<u8>> =
+        (0..b).map(|_| (0..READ_LEN).map(|_| rng.gen_range(0..4)).collect()).collect();
+    let wins: Vec<Vec<u8>> = reads
+        .iter()
+        .map(|r| {
+            let mut w: Vec<u8> =
+                (0..window_len(READ_LEN)).map(|_| rng.gen_range(0..4)).collect();
+            w[ETH..ETH + READ_LEN].copy_from_slice(r);
+            w
+        })
+        .collect();
+    (reads, wins)
+}

@@ -1,64 +1,148 @@
 //! Bench: sharded-pipeline throughput scaling — end-to-end `map_reads`
-//! reads/s at 1/2/4 worker threads on a synthetic workload, recorded to
-//! `BENCH_pipeline.json` at the repository root so future PRs have a
-//! perf trajectory to compare against.
+//! reads/s at 1/2/4 worker threads for each host engine (`rust` scalar
+//! vs `bitpal` bit-parallel), plus the isolated filter-stage comparison,
+//! recorded to `BENCH_pipeline.json` at the repository root so future
+//! PRs have a perf trajectory to compare against.
 //!
 //!     cargo bench --bench pipeline_scaling
+//!     cargo bench --bench pipeline_scaling -- --smoke  # CI: tiny run, no JSON
 //!
 //! The workload mirrors the wf_engines end-to-end case (500 kbp
 //! reference, 2000 simulated 150 bp reads, lowTh = 0 so all work takes
-//! the crossbar path). Output at every thread count is byte-identical
-//! (held by tests/shard_determinism.rs); only the wall-clock changes.
+//! the crossbar path). Output at every thread count and engine is
+//! byte-identical (held by tests/shard_determinism.rs); only the
+//! wall-clock changes.
 
+mod common;
+
+use common::planted_wf_batch;
 use dart_pim::coordinator::{Pipeline, PipelineConfig};
 use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
 use dart_pim::index::MinimizerIndex;
 use dart_pim::params::{K, READ_LEN, W};
 use dart_pim::pim::DartPimConfig;
-use dart_pim::runtime::RustEngine;
+use dart_pim::runtime::{EngineKind, WfEngine};
 use dart_pim::util::bench::bench_units;
 use dart_pim::util::json::Json;
+use dart_pim::util::SmallRng;
 
 const GENOME_LEN: usize = 500_000;
 const N_READS: usize = 2000;
 const THREADS: [usize; 3] = [1, 2, 4];
+const ENGINES: [EngineKind; 2] = [EngineKind::Rust, EngineKind::Bitpal];
+/// Filter-stage batch sizes for the bitpal-vs-rust comparison (the >= 2x
+/// target applies from one full 64-lane word up).
+const FILTER_BATCHES: [usize; 3] = [32, 64, 256];
 
 fn main() {
-    let genome = SynthConfig { len: GENOME_LEN, ..Default::default() }.generate();
+    let smoke = std::env::args().skip(1).any(|a| a == "--smoke");
+    let (genome_len, n_reads) = if smoke { (60_000, 100) } else { (GENOME_LEN, N_READS) };
+    let genome = SynthConfig { len: genome_len, ..Default::default() }.generate();
     let index = MinimizerIndex::build(genome, K, W, READ_LEN);
-    let reads = ReadSimConfig { n_reads: N_READS, ..Default::default() }
+    let reads = ReadSimConfig { n_reads, ..Default::default() }
         .simulate(&index.reference, |p| p as u32);
     let base = PipelineConfig {
         dart: DartPimConfig { low_th: 0, ..Default::default() },
         ..Default::default()
     };
 
-    println!("== sharded pipeline scaling ({N_READS} reads, {GENOME_LEN} bp ref) ==");
+    println!("== sharded pipeline scaling ({n_reads} reads, {genome_len} bp ref) ==");
     let loads = index.shard_loads(*THREADS.last().unwrap());
     println!("occurrence shard loads at t=4: {loads:?}");
 
-    let mut rates: Vec<f64> = Vec::new();
-    for &threads in &THREADS {
-        let cfg = PipelineConfig { threads, ..base.clone() };
-        let s = bench_units(
-            &format!("pipeline rust t={threads}"),
-            1,
-            5,
-            reads.len() as f64,
-            &mut || {
-                let mut p = Pipeline::new(&index, cfg.clone(), RustEngine);
-                std::hint::black_box(p.map_reads(&reads).unwrap());
-            },
+    // ---- end-to-end map_reads: engine x threads ----
+    let mut rates: Vec<(EngineKind, Vec<f64>)> = Vec::new();
+    for kind in ENGINES {
+        let mut engine_rates = Vec::new();
+        for &threads in &THREADS {
+            let cfg = PipelineConfig { threads, worker_engine: kind, ..base.clone() };
+            let s = bench_units(
+                &format!("pipeline {} t={threads}", kind.name()),
+                if smoke { 0 } else { 1 },
+                if smoke { 1 } else { 5 },
+                reads.len() as f64,
+                &mut || {
+                    let mut p = Pipeline::new(&index, cfg.clone(), kind.build());
+                    std::hint::black_box(p.map_reads(&reads).unwrap());
+                },
+            );
+            println!("{s}");
+            engine_rates.push(s.throughput());
+        }
+        let speedup: Vec<f64> =
+            engine_rates.iter().map(|r| r / engine_rates[0].max(1e-12)).collect();
+        println!(
+            "{} speedup vs 1 thread: {}",
+            kind.name(),
+            speedup.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(" ")
         );
-        println!("{s}");
-        rates.push(s.throughput());
+        rates.push((kind, engine_rates));
     }
-    let speedup: Vec<f64> = rates.iter().map(|r| r / rates[0].max(1e-12)).collect();
-    println!(
-        "speedup vs 1 thread: {}",
-        speedup.iter().map(|s| format!("{s:.2}x")).collect::<Vec<_>>().join(" ")
-    );
 
+    // ---- isolated filter stage: bitpal vs rust ----
+    println!("\n== filter stage: bitpal vs rust ==");
+    let mut rng = SmallRng::seed_from_u64(11);
+    let mut filter_rows: Vec<(usize, f64, f64)> = Vec::new();
+    for b in FILTER_BATCHES {
+        let (fr, fw) = planted_wf_batch(&mut rng, b);
+        let rr: Vec<&[u8]> = fr.iter().map(|v| v.as_slice()).collect();
+        let ww: Vec<&[u8]> = fw.iter().map(|v| v.as_slice()).collect();
+        let iters = if smoke { 1 } else { 40 };
+        let mut rust = EngineKind::Rust.build();
+        let rs = bench_units(&format!("rust   filter b={b}"), 0, iters, b as f64, &mut || {
+            std::hint::black_box(rust.linear_batch(&rr, &ww).unwrap());
+        });
+        let mut bit = EngineKind::Bitpal.build();
+        let bs = bench_units(&format!("bitpal filter b={b}"), 0, iters, b as f64, &mut || {
+            std::hint::black_box(bit.linear_batch(&rr, &ww).unwrap());
+        });
+        println!("{rs}");
+        println!("{bs}");
+        println!("  -> speedup {:.2}x", bs.throughput() / rs.throughput().max(1e-12));
+        filter_rows.push((b, rs.throughput(), bs.throughput()));
+    }
+
+    if smoke {
+        println!("smoke run: skipping BENCH_pipeline.json (numbers are not measurements)");
+        return;
+    }
+
+    let engines_json = Json::Arr(
+        rates
+            .iter()
+            .map(|(kind, engine_rates)| {
+                Json::obj(vec![
+                    ("engine", Json::Str(kind.name().into())),
+                    (
+                        "reads_per_s",
+                        Json::Arr(engine_rates.iter().map(|&r| r.into()).collect()),
+                    ),
+                    (
+                        "speedup_vs_1",
+                        Json::Arr(
+                            engine_rates
+                                .iter()
+                                .map(|r| (r / engine_rates[0].max(1e-12)).into())
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    let filter_json = Json::Arr(
+        filter_rows
+            .iter()
+            .map(|&(b, rust_tp, bit_tp)| {
+                Json::obj(vec![
+                    ("batch", b.into()),
+                    ("rust_instances_per_s", rust_tp.into()),
+                    ("bitpal_instances_per_s", bit_tp.into()),
+                    ("speedup", (bit_tp / rust_tp.max(1e-12)).into()),
+                ])
+            })
+            .collect(),
+    );
     let j = Json::obj(vec![
         ("bench", Json::Str("pipeline_scaling".into())),
         ("measured", Json::Bool(true)),
@@ -69,12 +153,11 @@ fn main() {
                 ("n_reads", N_READS.into()),
                 ("read_len", READ_LEN.into()),
                 ("low_th", 0usize.into()),
-                ("engine", Json::Str("rust".into())),
             ]),
         ),
         ("threads", Json::Arr(THREADS.iter().map(|&t| t.into()).collect())),
-        ("reads_per_s", Json::Arr(rates.iter().map(|&r| r.into()).collect())),
-        ("speedup_vs_1", Json::Arr(speedup.iter().map(|&s| s.into()).collect())),
+        ("engines", engines_json),
+        ("filter_stage_bitpal_vs_rust", filter_json),
     ]);
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pipeline.json");
     std::fs::write(out, j.pretty()).expect("write BENCH_pipeline.json");

@@ -1,42 +1,43 @@
-//! Bench: the host hot path — batched WF engine throughput (XLA/PJRT vs
-//! pure Rust) across batch sizes, plus the end-to-end pipeline rate.
-//! This is the §Perf working bench (EXPERIMENTS.md).
+//! Bench: the host hot path — batched WF engine throughput (bit-parallel
+//! bitpal vs pure Rust vs XLA/PJRT) across batch sizes, plus the
+//! end-to-end pipeline rate. This is the §Perf working bench
+//! (EXPERIMENTS.md).
 //!
 //!     cargo bench --bench wf_engines
+//!     cargo bench --bench wf_engines -- --smoke   # CI: compile + run, tiny iters
+//!
+//! The headline number is the filter-stage comparison: `bitpal` advances
+//! 64 instances per word op (one lane each), so its `linear_batch`
+//! should beat `rust` by >= 2x at batch >= 64.
 
+mod common;
+
+use common::planted_wf_batch as mk_batch;
 use dart_pim::coordinator::{Pipeline, PipelineConfig};
 use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
 use dart_pim::index::MinimizerIndex;
-use dart_pim::params::{window_len, K, READ_LEN, W};
+use dart_pim::params::{K, READ_LEN, W};
 use dart_pim::pim::DartPimConfig;
-use dart_pim::runtime::{RustEngine, WfEngine};
 #[cfg(feature = "pjrt")]
 use dart_pim::runtime::XlaEngine;
+use dart_pim::runtime::{BitpalEngine, EngineKind, RustEngine, WfEngine};
 use dart_pim::util::bench::bench_units;
 use dart_pim::util::SmallRng;
 
-fn mk_batch(rng: &mut SmallRng, b: usize) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
-    let reads: Vec<Vec<u8>> =
-        (0..b).map(|_| (0..READ_LEN).map(|_| rng.gen_range(0..4)).collect()).collect();
-    let wins: Vec<Vec<u8>> = reads
-        .iter()
-        .map(|r| {
-            let mut w: Vec<u8> =
-                (0..window_len(READ_LEN)).map(|_| rng.gen_range(0..4)).collect();
-            w[6..6 + READ_LEN].copy_from_slice(r);
-            w
-        })
-        .collect();
-    (reads, wins)
-}
-
-fn engine_suite(name: &str, engine: &mut dyn WfEngine, rng: &mut SmallRng) {
+fn engine_suite(name: &str, engine: &mut dyn WfEngine, rng: &mut SmallRng, smoke: bool) {
     for b in [32usize, 256] {
         let (reads, wins) = mk_batch(rng, b);
         let rr: Vec<&[u8]> = reads.iter().map(|v| v.as_slice()).collect();
         let ww: Vec<&[u8]> = wins.iter().map(|v| v.as_slice()).collect();
-        let iters = if b >= 256 { 20 } else { 60 };
-        let s = bench_units(&format!("{name} linear b={b}"), 3, iters, b as f64, &mut || {
+        let iters = if smoke {
+            2
+        } else if b >= 256 {
+            20
+        } else {
+            60
+        };
+        let warmup = if smoke { 0 } else { 3 };
+        let s = bench_units(&format!("{name} linear b={b}"), warmup, iters, b as f64, &mut || {
             std::hint::black_box(engine.linear_batch(&rr, &ww).unwrap());
         });
         println!("{s}");
@@ -45,56 +46,97 @@ fn engine_suite(name: &str, engine: &mut dyn WfEngine, rng: &mut SmallRng) {
         let (reads, wins) = mk_batch(rng, b);
         let rr: Vec<&[u8]> = reads.iter().map(|v| v.as_slice()).collect();
         let ww: Vec<&[u8]> = wins.iter().map(|v| v.as_slice()).collect();
-        let s = bench_units(&format!("{name} affine b={b}"), 2, 20, b as f64, &mut || {
+        let iters = if smoke { 2 } else { 20 };
+        let warmup = if smoke { 0 } else { 2 };
+        let s = bench_units(&format!("{name} affine b={b}"), warmup, iters, b as f64, &mut || {
             std::hint::black_box(engine.affine_batch(&rr, &ww).unwrap());
         });
         println!("{s}");
     }
 }
 
+/// The tentpole comparison: bitpal vs rust on the linear filter stage.
+fn filter_stage_comparison(rng: &mut SmallRng, smoke: bool) {
+    println!("\n== filter stage: bitpal vs rust (linear_batch reads/s) ==");
+    let iters = if smoke { 2 } else { 40 };
+    let warmup = if smoke { 0 } else { 3 };
+    for b in [32usize, 64, 256] {
+        let (reads, wins) = mk_batch(rng, b);
+        let rr: Vec<&[u8]> = reads.iter().map(|v| v.as_slice()).collect();
+        let ww: Vec<&[u8]> = wins.iter().map(|v| v.as_slice()).collect();
+        let mut rust = RustEngine;
+        let rs = bench_units(&format!("rust   filter b={b}"), warmup, iters, b as f64, &mut || {
+            std::hint::black_box(rust.linear_batch(&rr, &ww).unwrap());
+        });
+        let mut bit = BitpalEngine::new();
+        let bs = bench_units(&format!("bitpal filter b={b}"), warmup, iters, b as f64, &mut || {
+            std::hint::black_box(bit.linear_batch(&rr, &ww).unwrap());
+        });
+        println!("{rs}");
+        println!("{bs}");
+        let speedup = bs.throughput() / rs.throughput().max(1e-12);
+        let verdict = if smoke {
+            "(smoke run; not a measurement)"
+        } else if b >= 64 && speedup < 2.0 {
+            "** below the 2x target **"
+        } else {
+            ""
+        };
+        println!("  -> bitpal/rust speedup at b={b}: {speedup:.2}x {verdict}");
+    }
+}
+
 #[cfg(feature = "pjrt")]
-fn xla_engine_suite(rng: &mut SmallRng) {
+fn xla_engine_suite(rng: &mut SmallRng, smoke: bool) {
     match XlaEngine::load_default() {
-        Ok(mut e) => engine_suite("xla ", &mut e, rng),
+        Ok(mut e) => engine_suite("xla ", &mut e, rng, smoke),
         Err(e) => println!("xla engine unavailable ({e}); run `make artifacts`"),
     }
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn xla_engine_suite(_rng: &mut SmallRng) {
+fn xla_engine_suite(_rng: &mut SmallRng, _smoke: bool) {
     println!("xla engine not compiled in (enable with `--features pjrt`)");
 }
 
 fn main() {
+    let smoke = std::env::args().skip(1).any(|a| a == "--smoke");
     let mut rng = SmallRng::seed_from_u64(9);
     println!("== WF engine micro-bench (units = WF instances) ==");
-    engine_suite("rust", &mut RustEngine, &mut rng);
-    xla_engine_suite(&mut rng);
+    engine_suite("rust", &mut RustEngine, &mut rng, smoke);
+    engine_suite("bitpal", &mut BitpalEngine::new(), &mut rng, smoke);
+    xla_engine_suite(&mut rng, smoke);
+
+    filter_stage_comparison(&mut rng, smoke);
 
     println!("\n== end-to-end pipeline (host reads/s) ==");
-    let genome = SynthConfig { len: 500_000, ..Default::default() }.generate();
+    let (genome_len, n_reads, iters) = if smoke { (60_000, 100, 1) } else { (500_000, 2000, 3) };
+    let genome = SynthConfig { len: genome_len, ..Default::default() }.generate();
     let index = MinimizerIndex::build(genome, K, W, READ_LEN);
-    let reads = ReadSimConfig { n_reads: 2000, ..Default::default() }
+    let reads = ReadSimConfig { n_reads, ..Default::default() }
         .simulate(&index.reference, |p| p as u32);
     let cfg = PipelineConfig {
         dart: DartPimConfig { low_th: 0, ..Default::default() },
         ..Default::default()
     };
-    // sharded scaling: minimizer-hash partition across worker threads
-    // (see benches/pipeline_scaling.rs for the recorded baseline)
-    for threads in [1usize, 2, 4] {
-        let c = PipelineConfig { threads, ..cfg.clone() };
-        let s = bench_units(
-            &format!("pipeline rust 2k reads t={threads}"),
-            1,
-            3,
-            reads.len() as f64,
-            &mut || {
-                let mut p = Pipeline::new(&index, c.clone(), RustEngine);
-                std::hint::black_box(p.map_reads(&reads).unwrap());
-            },
-        );
-        println!("{s}");
+    // sharded scaling x engine kind: minimizer-hash partition across
+    // worker threads (see benches/pipeline_scaling.rs for the recorded
+    // baseline)
+    for kind in [EngineKind::Rust, EngineKind::Bitpal] {
+        for threads in [1usize, 2, 4] {
+            let c = PipelineConfig { threads, worker_engine: kind, ..cfg.clone() };
+            let s = bench_units(
+                &format!("pipeline {} {n_reads} reads t={threads}", kind.name()),
+                if smoke { 0 } else { 1 },
+                iters,
+                reads.len() as f64,
+                &mut || {
+                    let mut p = Pipeline::new(&index, c.clone(), kind.build());
+                    std::hint::black_box(p.map_reads(&reads).unwrap());
+                },
+            );
+            println!("{s}");
+        }
     }
     #[cfg(feature = "pjrt")]
     if let Ok(engine) = XlaEngine::load_default() {

@@ -210,7 +210,13 @@ mod tests {
 
     use crate::util::SmallRng;
 
-    fn planted(rng: &mut SmallRng, n: usize, subs: usize, dels: usize, inss: usize) -> (Vec<u8>, Vec<u8>) {
+    fn planted(
+        rng: &mut SmallRng,
+        n: usize,
+        subs: usize,
+        dels: usize,
+        inss: usize,
+    ) -> (Vec<u8>, Vec<u8>) {
         let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
         let mut seq = read.clone();
         for _ in 0..dels {
@@ -271,7 +277,10 @@ mod tests {
         let (dist, j) = best_of_band(&res.band);
         let aln = traceback(&res.dirs, read.len(), j).unwrap();
         assert_eq!(dist, script_cost(&aln.ops, aln.j_end));
-        assert_eq!(aln.ops.iter().filter(|&&o| o == EditOp::Match).count(), 30 - aln.ops.iter().filter(|&&o| o != EditOp::Match && o != EditOp::Del).count());
+        assert_eq!(
+            aln.ops.iter().filter(|&&o| o == EditOp::Match).count(),
+            30 - aln.ops.iter().filter(|&&o| o != EditOp::Match && o != EditOp::Del).count()
+        );
     }
 
     #[test]

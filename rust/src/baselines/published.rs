@@ -134,12 +134,24 @@ mod tests {
         let systems = published_systems();
         let by = |n: &str| systems.iter().find(|s| s.name.starts_with(n)).unwrap();
         let t = |s: &PublishedSystem| dart.throughput() / s.throughput();
-        assert!((t(by("Parabricks")) - 5.7).abs() < 0.3, "Parabricks speedup {}", t(by("Parabricks")));
-        assert!((t(by("SeGraM")) - 257.0).abs() / 257.0 < 0.05, "SeGraM speedup {}", t(by("SeGraM")));
+        assert!(
+            (t(by("Parabricks")) - 5.7).abs() < 0.3,
+            "Parabricks speedup {}",
+            t(by("Parabricks"))
+        );
+        assert!(
+            (t(by("SeGraM")) - 257.0).abs() / 257.0 < 0.05,
+            "SeGraM speedup {}",
+            t(by("SeGraM"))
+        );
         assert!((t(by("minimap2")) - 227.0).abs() / 227.0 < 0.05);
         assert!((t(by("GenASM")) - 334.0).abs() / 334.0 < 0.05);
         let e = |s: &PublishedSystem| dart.reads_per_joule() / s.reads_per_joule();
-        assert!((e(by("Parabricks")) - 90.6).abs() / 90.6 < 0.05, "Parabricks energy {}", e(by("Parabricks")));
+        assert!(
+            (e(by("Parabricks")) - 90.6).abs() / 90.6 < 0.05,
+            "Parabricks energy {}",
+            e(by("Parabricks"))
+        );
         assert!((e(by("SeGraM")) - 20.7).abs() / 20.7 < 0.05);
         assert!((e(by("GenASM")) - 3.6).abs() / 3.6 < 0.1);
     }

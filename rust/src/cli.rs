@@ -25,7 +25,7 @@ use crate::index::MinimizerIndex;
 use crate::params::{K, READ_LEN, W};
 use crate::pim::xbar_sim::{self, CostSource};
 use crate::pim::DartPimConfig;
-use crate::runtime::RustEngine;
+use crate::runtime::{BitpalEngine, EngineKind, RustEngine};
 #[cfg(feature = "pjrt")]
 use crate::runtime::XlaEngine;
 use crate::simulator::report::{build_report, scale_counts};
@@ -102,24 +102,29 @@ COMMANDS
   synth     --out-dir D [--len 2000000] [--reads 10000] [--seed 1]
             [--snp-rate 0.001] [--sub-rate 0.004]
   index     --ref R.fasta --out index.bin [--read-len 150]
-  map       --ref R.fasta --reads R.fastq [--engine xla|rust]
+  map       --ref R.fasta --reads R.fastq [--engine xla|rust|bitpal]
             (or --index index.bin instead of --ref)
             [--max-reads 25000] [--low-th 3] [--batch 256] [--min-only]
             [--revcomp] [--threads 1] [--out mappings.tsv]
   evaluate  --ref R.fasta --reads R.fastq --truth truth.tsv
-            [--engine xla|rust] [--tolerance 5] [--threads 1]
-  simulate  --ref R.fasta --reads R.fastq [--max-reads 25000]
-            [--low-th 3] [--scale 389000000] [--batched-affine]
-            [--constructive] [--threads 1]
+            [--engine xla|rust|bitpal] [--tolerance 5] [--threads 1]
+  simulate  --ref R.fasta --reads R.fastq [--engine rust|bitpal]
+            [--max-reads 25000] [--low-th 3] [--scale 389000000]
+            [--batched-affine] [--constructive] [--threads 1]
   figures   [--fig 8|9|10a|10b|10c|table4|motivation|headline|all]
   crossbar
   config
 
 `--threads N` shards work across N worker threads (minimizer-hash
 partition; output is byte-identical for any N). The default is 1, or
-the DART_PIM_THREADS environment variable when set. --engine xla is
-always single-threaded (the PJRT client cannot be shared across
-threads); combining it with --threads N > 1 warns and runs with 1.
+the DART_PIM_THREADS environment variable when set.
+
+ENGINES: `rust` is the scalar reference engine; `bitpal` computes the
+linear filter bit-parallel (64 instances per machine word, identical
+numerics) and, like rust, is Send — both compose with --threads N.
+DART_PIM_ENGINE sets the default worker engine. --engine xla is always
+single-threaded (the PJRT client cannot be shared across threads);
+combining it with --threads N > 1 warns and runs with 1.
 ";
 
 /// Entry point; returns the process exit code.
@@ -171,7 +176,10 @@ fn cmd_synth(args: &Args) -> Result<()> {
     }
     .simulate(&donor.seq, |p| donor.to_ref(p));
 
-    save_fasta(out_dir.join("ref.fasta"), &[FastaRecord { name: "synthetic".into(), seq: genome }])?;
+    save_fasta(
+        out_dir.join("ref.fasta"),
+        &[FastaRecord { name: "synthetic".into(), seq: genome }],
+    )?;
     let records: Vec<FastqRecord> = reads
         .iter()
         .map(|r| FastqRecord::with_const_qual(format!("read{}", r.id), r.seq.clone(), b'I'))
@@ -197,9 +205,7 @@ fn cmd_index(args: &Args) -> Result<()> {
     let ref_path = args.get("ref").context("--ref required")?;
     let out = args.get("out").context("--out required")?;
     let read_len = args.get_usize("read-len", READ_LEN)?;
-    let fasta = load_fasta(ref_path)?;
-    anyhow::ensure!(!fasta.is_empty(), "empty reference FASTA");
-    let reference = fasta.into_iter().next().unwrap().seq;
+    let reference = load_reference(ref_path)?;
     let index = MinimizerIndex::build(reference, K, W, read_len);
     crate::index::save_index(out, &index)?;
     let stats = index.stats(3);
@@ -211,6 +217,18 @@ fn cmd_index(args: &Args) -> Result<()> {
         stats.n_occurrences
     );
     Ok(())
+}
+
+/// Load the first sequence of a reference FASTA, with the file path in
+/// every error (including the empty-FASTA case, which used to panic).
+fn load_reference(ref_path: &str) -> Result<crate::genome::encode::Seq> {
+    let fasta =
+        load_fasta(ref_path).with_context(|| format!("reading reference FASTA {ref_path}"))?;
+    Ok(fasta
+        .into_iter()
+        .next()
+        .with_context(|| format!("reference FASTA {ref_path} contains no sequences"))?
+        .seq)
 }
 
 /// Load the reference (or prebuilt index) and read set named by
@@ -231,9 +249,7 @@ pub fn load_inputs(args: &Args) -> Result<(MinimizerIndex, Vec<ReadRecord>)> {
         idx
     } else {
         let ref_path = args.get("ref").context("--ref or --index required")?;
-        let fasta = load_fasta(ref_path)?;
-        anyhow::ensure!(!fasta.is_empty(), "empty reference FASTA");
-        let reference = fasta.into_iter().next().unwrap().seq;
+        let reference = load_reference(ref_path)?;
         MinimizerIndex::build(reference, K, W, read_len)
     };
     let reads: Vec<ReadRecord> = fastq
@@ -265,7 +281,7 @@ fn run_pipeline(
 ) -> Result<(Vec<Option<crate::coordinator::FinalMapping>>, crate::coordinator::metrics::Metrics)> {
     anyhow::ensure!(
         index.read_len == READ_LEN || args.get("engine") != Some("xla"),
-        "the AOT artifacts target {}bp reads; use --engine rust for other lengths",
+        "the AOT artifacts target {}bp reads; use --engine rust or bitpal for other lengths",
         READ_LEN
     );
     let cfg = PipelineConfig {
@@ -278,13 +294,24 @@ fn run_pipeline(
         },
         handle_revcomp: args.flag("revcomp"),
         threads: args.get_usize("threads", default_threads())?,
+        ..Default::default()
     };
-    // Default engine: the PJRT path when it is compiled in, the pure-Rust
-    // reference engine otherwise (identical numerics; see engine_parity).
-    let default_engine = if cfg!(feature = "pjrt") { "xla" } else { "rust" };
+    // Default engine: the PJRT path when it is compiled in, else the
+    // DART_PIM_ENGINE host engine (identical numerics; see the
+    // engine_parity and engine_parity_bitpal suites).
+    let default_engine =
+        if cfg!(feature = "pjrt") { "xla" } else { crate::runtime::default_engine().name() };
     match args.get("engine").unwrap_or(default_engine) {
         "rust" => {
+            let cfg = PipelineConfig { worker_engine: EngineKind::Rust, ..cfg };
             let mut p = Pipeline::new(index, cfg, RustEngine);
+            p.map_reads(reads)
+        }
+        "bitpal" => {
+            // bit-parallel filter engine; Send, so worker shards run it
+            // too and --threads N composes
+            let cfg = PipelineConfig { worker_engine: EngineKind::Bitpal, ..cfg };
+            let mut p = Pipeline::new(index, cfg, BitpalEngine::new());
             p.map_reads(reads)
         }
         #[cfg(feature = "pjrt")]
@@ -311,9 +338,9 @@ fn run_pipeline(
         #[cfg(not(feature = "pjrt"))]
         "xla" => bail!(
             "this build has no XLA/PJRT support (rebuild with `--features pjrt`); \
-             use --engine rust"
+             use --engine rust or --engine bitpal"
         ),
-        other => bail!("unknown engine {other:?} (xla|rust)"),
+        other => bail!("unknown engine {other:?} (xla|rust|bitpal)"),
     }
 }
 
@@ -368,10 +395,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let (index, reads) = load_inputs(args)?;
     let cfg = dart_config(args)?;
     let threads = args.get_usize("threads", default_threads())?;
+    let engine_name = args.get("engine").unwrap_or(crate::runtime::default_engine().name());
+    let engine = EngineKind::from_name(engine_name).with_context(|| {
+        format!(
+            "simulate runs the host filter on a thread-constructible engine \
+             (rust|bitpal), not {engine_name:?}"
+        )
+    })?;
     let sim = FullSystemSim::new(&index, cfg.clone());
-    let counts = sim.simulate_threaded(&reads, threads);
-    let cost = if args.flag("constructive") { CostSource::Constructive } else { CostSource::PaperTable4 };
-    let timing = if args.flag("batched-affine") { TimingMode::Batched8 } else { TimingMode::PaperSerial };
+    let counts = sim.simulate_threaded_with(&reads, threads, engine);
+    let cost = if args.flag("constructive") {
+        CostSource::Constructive
+    } else {
+        CostSource::PaperTable4
+    };
+    let timing = if args.flag("batched-affine") {
+        TimingMode::Batched8
+    } else {
+        TimingMode::PaperSerial
+    };
     let report = build_report(&counts, &cfg, cost, timing);
     println!("measured workload: {} reads, PLs/read={:.1}, pass={:.2}%, riscv share={:.3}%",
         counts.n_reads, counts.pls_per_read(), 100.0 * counts.pass_rate(),
@@ -517,6 +559,70 @@ mod tests {
         run(&argv("figures --fig table4")).unwrap();
         run(&argv("crossbar")).unwrap();
         run(&argv("config")).unwrap();
+    }
+
+    #[test]
+    fn empty_reference_fasta_errors_with_the_path() {
+        let dir = std::env::temp_dir().join(format!("dartpim-efa-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let fa = dir.join("empty.fasta");
+        std::fs::write(&fa, "").unwrap();
+        let fq = dir.join("r.fastq");
+        std::fs::write(&fq, "@r0\nACGTACGTACGTACGT\n+\nIIIIIIIIIIIIIIII\n").unwrap();
+        let fa_s = fa.to_str().unwrap();
+        let fq_s = fq.to_str().unwrap();
+
+        let err = run(&argv(&format!("map --ref {fa_s} --reads {fq_s}"))).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("no sequences") && msg.contains("empty.fasta"),
+            "map error must name the file: {msg}"
+        );
+
+        let out = dir.join("x.idx");
+        let err = run(&argv(&format!("index --ref {fa_s} --out {}", out.display())))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("no sequences") && msg.contains("empty.fasta"),
+            "index error must name the file: {msg}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bitpal_engine_tsv_is_byte_identical() {
+        let dir = std::env::temp_dir().join(format!("dartpim-bitpal-{}", std::process::id()));
+        let d = dir.to_str().unwrap();
+        run(&argv(&format!("synth --out-dir {d} --len 60000 --reads 40"))).unwrap();
+        run(&argv(&format!(
+            "map --ref {d}/ref.fasta --reads {d}/reads.fastq --engine rust --low-th 0 \
+             --out {d}/rust.tsv"
+        )))
+        .unwrap();
+        run(&argv(&format!(
+            "map --ref {d}/ref.fasta --reads {d}/reads.fastq --engine bitpal --low-th 0 \
+             --out {d}/bitpal.tsv"
+        )))
+        .unwrap();
+        run(&argv(&format!(
+            "map --ref {d}/ref.fasta --reads {d}/reads.fastq --engine bitpal --low-th 0 \
+             --threads 4 --out {d}/bitpal4.tsv"
+        )))
+        .unwrap();
+        let rust = std::fs::read_to_string(dir.join("rust.tsv")).unwrap();
+        let bitpal = std::fs::read_to_string(dir.join("bitpal.tsv")).unwrap();
+        let bitpal4 = std::fs::read_to_string(dir.join("bitpal4.tsv")).unwrap();
+        assert!(rust.lines().count() > 30, "workload must map reads:\n{rust}");
+        assert_eq!(rust, bitpal, "bitpal must be byte-identical to rust");
+        assert_eq!(rust, bitpal4, "sharded bitpal must be byte-identical too");
+        // simulate accepts the engine as well and must not error
+        run(&argv(&format!(
+            "simulate --ref {d}/ref.fasta --reads {d}/reads.fastq --low-th 0 \
+             --engine bitpal --threads 2"
+        )))
+        .unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

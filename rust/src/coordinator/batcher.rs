@@ -116,7 +116,15 @@ mod tests {
 
     fn item(i: u32) -> (WorkTag, &'static [u8], Vec<u8>) {
         (
-            WorkTag { read_id: i, pair_id: i, ref_pos: i * 10, read_offset: 0, pl: i as i64 * 10, xbar: i, reverse: false },
+            WorkTag {
+                read_id: i,
+                pair_id: i,
+                ref_pos: i * 10,
+                read_offset: 0,
+                pl: i as i64 * 10,
+                xbar: i,
+                reverse: false,
+            },
             &READ,
             vec![1u8; window_len(READ_LEN)],
         )

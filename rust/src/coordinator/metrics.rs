@@ -181,7 +181,8 @@ mod tests {
 
     #[test]
     fn sim_counts_bridge() {
-        let mut m = Metrics { n_reads: 10, routed_pairs: 80, linear_instances: 500, ..Default::default() };
+        let mut m =
+            Metrics { n_reads: 10, routed_pairs: 80, linear_instances: 500, ..Default::default() };
         m.pairs_per_xbar.insert(1, 30);
         m.pairs_per_xbar.insert(2, 50);
         m.affine_per_xbar.insert(2, 7);

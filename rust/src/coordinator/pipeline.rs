@@ -13,10 +13,13 @@
 //!
 //! With [`PipelineConfig::threads`] > 1, routed pairs are partitioned by
 //! minimizer hash across worker threads (std::thread + mpsc), each
-//! owning a [`RustEngine`], its own batchers, and the Reads FIFOs of its
-//! private crossbar slice — the host mirror of the paper's per-crossbar
-//! data organization (§V-B). Output is byte-identical for every thread
-//! count; see [`super::shard`] for the determinism contract.
+//! owning an engine built on its own thread from
+//! [`PipelineConfig::worker_engine`] (the scalar Rust engine or the
+//! bit-parallel bitpal engine — both `Send`, unlike PJRT), its own
+//! batchers, and the Reads FIFOs of its private crossbar slice — the
+//! host mirror of the paper's per-crossbar data organization (§V-B).
+//! Output is byte-identical for every thread count and engine kind; see
+//! [`super::shard`] for the determinism contract.
 
 use std::sync::mpsc;
 use std::thread;
@@ -29,7 +32,7 @@ use crate::genome::encode::Seq;
 use crate::genome::ReadRecord;
 use crate::index::{shard_of, MinimizerIndex};
 use crate::pim::DartPimConfig;
-use crate::runtime::{RustEngine, WfEngine};
+use crate::runtime::{EngineKind, WfEngine};
 
 use super::metrics::Metrics;
 use super::router::Router;
@@ -82,10 +85,16 @@ pub struct PipelineConfig {
     pub handle_revcomp: bool,
     /// Worker shards for [`Pipeline::map_reads`]. 1 = run in the calling
     /// thread on the pipeline's own engine; N > 1 = partition routed
-    /// pairs by minimizer hash across N worker threads, each owning a
-    /// [`RustEngine`]. Output is byte-identical for every value.
-    /// Defaults to [`default_threads`].
+    /// pairs by minimizer hash across N worker threads, each owning an
+    /// engine built from [`PipelineConfig::worker_engine`]. Output is
+    /// byte-identical for every value. Defaults to [`default_threads`].
     pub threads: usize,
+    /// Engine each worker shard constructs on its own thread
+    /// ([`EngineKind::build`]); the single-threaded path ignores this
+    /// and uses the pipeline's configured engine. Defaults to
+    /// [`crate::runtime::default_engine`] (the `DART_PIM_ENGINE`
+    /// environment variable, else the scalar Rust engine).
+    pub worker_engine: EngineKind,
 }
 
 impl Default for PipelineConfig {
@@ -96,6 +105,7 @@ impl Default for PipelineConfig {
             filter_policy: FilterPolicy::AllPassing,
             handle_revcomp: false,
             threads: default_threads(),
+            worker_engine: crate::runtime::default_engine(),
         }
     }
 }
@@ -152,8 +162,8 @@ pub struct Pipeline<'a, E: WfEngine> {
 
 impl<'a, E: WfEngine> Pipeline<'a, E> {
     /// Build a pipeline over `index` with the given engine (the engine
-    /// is only used by the single-threaded path; worker shards own
-    /// [`RustEngine`]s).
+    /// is only used by the single-threaded path; worker shards build
+    /// their own from [`PipelineConfig::worker_engine`]).
     pub fn new(index: &'a MinimizerIndex, cfg: PipelineConfig, engine: E) -> Self {
         let router = Router::new(index, &cfg.dart);
         Pipeline { index, router, cfg, engine }
@@ -224,8 +234,11 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
                         while let Ok(chunk) = rx.recv() {
                             worker.ingest(chunk);
                         }
-                        let mut engine = RustEngine;
-                        worker.finish(&mut engine)
+                        // the engine is constructed on its owning thread
+                        // (every EngineKind variant is Send-safe to build
+                        // and run here; the PJRT engine never is)
+                        let mut engine = cfg.worker_engine.build();
+                        worker.finish(engine.as_mut())
                     }));
                 }
 
@@ -335,6 +348,7 @@ mod tests {
     use super::*;
     use crate::genome::synth::{ReadSimConfig, SynthConfig};
     use crate::params::{ETH, K, READ_LEN, SAT_AFFINE, W};
+    use crate::runtime::{BitpalEngine, RustEngine};
 
     fn setup(n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
         let g = SynthConfig { len: 80_000, ..Default::default() }.generate();
@@ -451,6 +465,35 @@ mod tests {
                 xt.invariant_counters(),
                 "workload counters must not depend on sharding (threads={threads})"
             );
+        }
+    }
+
+    #[test]
+    fn bitpal_engine_matches_rust_end_to_end() {
+        let (idx, reads) = setup(40);
+        let baseline = {
+            // pin the baseline to the scalar single-threaded path: the
+            // env defaults (DART_PIM_THREADS / DART_PIM_ENGINE) must not
+            // be able to turn this into bitpal-vs-bitpal in CI
+            let c = PipelineConfig { threads: 1, worker_engine: EngineKind::Rust, ..cfg() };
+            let mut p = Pipeline::new(&idx, c, RustEngine);
+            p.map_reads(&reads).unwrap().0
+        };
+        for threads in [1usize, 4] {
+            let c = PipelineConfig { threads, worker_engine: EngineKind::Bitpal, ..cfg() };
+            let mut p = Pipeline::new(&idx, c, BitpalEngine::new());
+            let (m, _) = p.map_reads(&reads).unwrap();
+            for (a, b) in baseline.iter().zip(&m) {
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => assert_eq!(
+                        (a.pos, a.dist, a.cigar.to_string(), a.candidates),
+                        (b.pos, b.dist, b.cigar.to_string(), b.candidates),
+                        "threads={threads}"
+                    ),
+                    _ => panic!("presence mismatch (threads={threads})"),
+                }
+            }
         }
     }
 

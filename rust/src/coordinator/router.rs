@@ -104,8 +104,8 @@ mod tests {
     fn setup() -> (MinimizerIndex, Vec<crate::genome::ReadRecord>, Router) {
         let g = SynthConfig { len: 100_000, ..Default::default() }.generate();
         let idx = MinimizerIndex::build(g, K, W, READ_LEN);
-        let reads =
-            ReadSimConfig { n_reads: 50, ..Default::default() }.simulate(&idx.reference, |p| p as u32);
+        let reads = ReadSimConfig { n_reads: 50, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
         let router = Router::new(&idx, &DartPimConfig::default());
         (idx, reads, router)
     }

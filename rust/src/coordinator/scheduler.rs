@@ -97,7 +97,9 @@ where
         total.merge(m);
     }
     if covered != n_reads {
-        return Err(anyhow!("compute stage failed after {covered}/{n_reads} reads ({chunks} chunks)"));
+        return Err(anyhow!(
+            "compute stage failed after {covered}/{n_reads} reads ({chunks} chunks)"
+        ));
     }
     Ok((all, total))
 }
@@ -125,7 +127,8 @@ mod tests {
             p.map_reads(&reads).unwrap()
         };
         let (streamed, metrics) =
-            run_streaming(&idx, PipelineConfig::default(), || Ok(RustEngine), reads.clone(), 7).unwrap();
+            run_streaming(&idx, PipelineConfig::default(), || Ok(RustEngine), reads.clone(), 7)
+                .unwrap();
         assert_eq!(metrics.n_reads, 40);
         for (a, b) in batch.iter().zip(&streamed) {
             match (a, b) {
@@ -154,7 +157,8 @@ mod tests {
     fn empty_stream() {
         let (idx, _) = setup(1);
         let (m, metrics) =
-            run_streaming(&idx, PipelineConfig::default(), || Ok(RustEngine), Vec::new(), 8).unwrap();
+            run_streaming(&idx, PipelineConfig::default(), || Ok(RustEngine), Vec::new(), 8)
+                .unwrap();
         assert!(m.is_empty());
         assert_eq!(metrics.n_reads, 0);
     }

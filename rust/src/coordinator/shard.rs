@@ -201,7 +201,7 @@ impl<'a> ShardWorker<'a> {
     /// into a [`super::state::BestSoFar`]) and its [`Metrics`]
     /// contribution (`n_reads`, `reads_with_candidates`, and `t_total`
     /// are left at zero — they are whole-run quantities the caller owns).
-    pub fn finish<E: WfEngine>(
+    pub fn finish<E: WfEngine + ?Sized>(
         mut self,
         engine: &mut E,
     ) -> Result<(Vec<AffineOutcome>, Metrics)> {
@@ -336,7 +336,7 @@ impl<'a> ShardWorker<'a> {
 /// everything, then compute on `engine`. The single-threaded pipeline
 /// path and tests use this; the threaded path drives a [`ShardWorker`]
 /// incrementally as chunks stream in.
-pub fn run_shard<'a, E: WfEngine>(
+pub fn run_shard<'a, E: WfEngine + ?Sized>(
     index: &'a MinimizerIndex,
     cfg: &'a PipelineConfig,
     engine: &mut E,

@@ -124,7 +124,9 @@ impl EnergyModel {
             peripherals: self.p_peripherals * exec_time_s,
             // cores idle/busy modelled at constant power (paper uses the
             // AX25 nominal power for all cores over the run)
-            riscv: n_riscv * (self.p_riscv_core + self.p_riscv_cache) * exec_time_s.max(riscv_busy_s / n_riscv),
+            riscv: n_riscv
+                * (self.p_riscv_core + self.p_riscv_cache)
+                * exec_time_s.max(riscv_busy_s / n_riscv),
             transfer_in: self.e_xfer_write * bits_in,
             transfer_out: self.e_xfer_read * bits_out,
         }
@@ -167,8 +169,19 @@ mod tests {
     fn breakdown_sums() {
         let m = EnergyModel::default();
         let cfg = DartPimConfig::default();
-        let b = m.breakdown(&cfg, &PAPER_LINEAR, &PAPER_AFFINE, 1_000_000, 10_000, 1e9, 1e9, 10.0, 100.0);
-        let s = b.crossbars + b.controllers + b.peripherals + b.riscv + b.transfer_in + b.transfer_out;
+        let b = m.breakdown(
+            &cfg,
+            &PAPER_LINEAR,
+            &PAPER_AFFINE,
+            1_000_000,
+            10_000,
+            1e9,
+            1e9,
+            10.0,
+            100.0,
+        );
+        let s =
+            b.crossbars + b.controllers + b.peripherals + b.riscv + b.transfer_in + b.transfer_out;
         assert!((b.total() - s).abs() < 1e-9);
         assert!(b.avg_power(100.0) > 0.0);
     }

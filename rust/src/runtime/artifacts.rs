@@ -46,8 +46,9 @@ impl ArtifactManifest {
     /// Load `manifest.json` from an artifacts directory.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref();
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let text = std::fs::read_to_string(dir.join("manifest.json")).with_context(|| {
+            format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+        })?;
         let v = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
         let get = |k: &str| -> Result<usize> {
             v.get(k).and_then(|x| x.as_usize()).with_context(|| format!("manifest missing {k}"))
@@ -55,7 +56,8 @@ impl ArtifactManifest {
         let mut artifacts = Vec::new();
         for a in v.get("artifacts").and_then(|x| x.as_arr()).context("manifest artifacts")? {
             let s = |k: &str| -> Result<String> {
-                Ok(a.get(k).and_then(|x| x.as_str()).with_context(|| format!("artifact {k}"))?.to_string())
+                let v = a.get(k).and_then(|x| x.as_str());
+                Ok(v.with_context(|| format!("artifact {k}"))?.to_string())
             };
             artifacts.push(ArtifactEntry {
                 name: s("name")?,

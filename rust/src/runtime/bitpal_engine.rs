@@ -1,0 +1,287 @@
+//! Bit-parallel batched linear-filter engine (`--engine bitpal`).
+//!
+//! The paper's speedup comes from executing the optimized Wagner-Fischer
+//! recurrence bit-serially across *all crossbar rows at once* (§IV,
+//! Fig. 5): every crossbar row holds one WF instance, and one broadcast
+//! MAGIC op sequence advances every instance by one DP cell. The closest
+//! host analog inverts the axes: a 64-bit machine word holds **one bit
+//! lane per instance slot**, and one word op advances up to 64 instances
+//! by one DP cell — the Myers/BitPal family of bit-parallel alignment
+//! encodings (Alser et al. 2020; Diab et al. 2022), re-derived here for
+//! the paper's *banded, anchored, saturating* linear recurrence.
+//!
+//! # Delta encoding
+//!
+//! Band values are never materialized during the scan. Per band
+//! coordinate `j` the engine tracks, as one `u64` word each:
+//!
+//! * `hp[j]` / `hm[j]` — the **horizontal delta** `V[j] - V[j-1]` of the
+//!   current row, which is always in `{-1, 0, +1}` (`hp` = +1 lanes,
+//!   `hm` = -1 lanes), and
+//! * `d[j]` — the **diagonal delta** `V'[j] - V[j]` between consecutive
+//!   rows, always in `{0, +1}`.
+//!
+//! For the banded recurrence
+//! `raw[j] = min(V[j] + mm, V[j+1] + 1, raw[j-1] + 1)` the diagonal
+//! delta has a pure boolean form (`d == 1` iff no min-term hits zero):
+//!
+//! ```text
+//! d[j] = mm[j] & !hm[j+1] & !(hp[j] & !d[j-1])
+//! ```
+//!
+//! and the new horizontal deltas follow from
+//! `ΔH'[j] = ΔH[j] + d[j] - d[j-1]` (provably back in `{-1, 0, +1}`).
+//! One row of one 64-instance batch therefore costs ~13 word ops per
+//! band coordinate instead of 64 scalar min-chains.
+//!
+//! Two exactness arguments make the output identical to
+//! [`super::RustEngine`]:
+//!
+//! * **Clamp commutation** — the scalar kernel saturates every row at
+//!   `eth + 1`; saturating only the final row gives the same band
+//!   because clamping is monotone and all recurrence increments are
+//!   >= 0 (`min(min(u, S) + a, S) = min(u + a, S)` for `a >= 0`).
+//! * **Early-exit equivalence** — the scalar kernel's all-saturated
+//!   early exit returns exactly the all-`SAT` band the full recurrence
+//!   would produce, so not early-exiting here changes nothing.
+//!
+//! The affine stage keeps exact scalar WF + traceback: only filter
+//! *survivors* reach it (a few percent of instances), and the packed
+//! 4-bit direction planes it must emit have no bit-parallel encoding
+//! with the same numerics contract. `tests/engine_parity_bitpal.rs`
+//! holds both stages to exact agreement with [`super::RustEngine`].
+
+use anyhow::Result;
+
+use crate::align::banded_linear::best_of_band;
+use crate::params::{BAND, ETH, SAT_LINEAR};
+
+use super::engine::{check_batch, scalar_affine_batch, AffineBatch, LinearBatch, WfEngine};
+
+/// Instance slots per machine word: one bit lane each.
+pub const LANES: usize = 64;
+
+/// Bit-parallel linear filter + exact scalar affine fallback.
+///
+/// `Send` (unlike the PJRT engine), so shard workers can own one and the
+/// engine composes with `--threads N`.
+#[derive(Debug, Default, Clone)]
+pub struct BitpalEngine {
+    /// Mismatch words, `mm[i][j]` = one bit per lane — scratch reused
+    /// across batches to avoid per-call allocation.
+    mm: Vec<[u64; BAND]>,
+}
+
+impl BitpalEngine {
+    /// A fresh engine (no artifacts to load; state is scratch only).
+    pub fn new() -> Self {
+        BitpalEngine::default()
+    }
+
+    /// Run one <= 64-instance chunk and append its results to `out`.
+    ///
+    /// Inactive lanes (`reads.len() < 64`) compute on all-zero mismatch
+    /// words; their results are simply never read back.
+    fn linear_chunk(&mut self, reads: &[&[u8]], wins: &[&[u8]], out: &mut LinearBatch) {
+        let lanes = reads.len();
+        debug_assert!(lanes >= 1 && lanes <= LANES);
+        let n = reads[0].len();
+
+        // ---- mismatch words: mm[i][j] bit k = lane k mismatches at
+        // (row i, band j); the `r >= 4` term keeps N bases unmatchable,
+        // exactly as in the scalar kernel ----
+        self.mm.clear();
+        self.mm.resize(n, [0u64; BAND]);
+        for (k, (r, w)) in reads.iter().zip(wins).enumerate() {
+            for (i, mrow) in self.mm.iter_mut().enumerate() {
+                let rb = r[i];
+                let g = &w[i..i + BAND];
+                for j in 0..BAND {
+                    let mm = rb != g[j] || rb >= 4;
+                    mrow[j] |= u64::from(mm) << k;
+                }
+            }
+        }
+
+        // ---- delta state of the anchored init row |j - eth|:
+        // descending toward the anchor, ascending after it ----
+        let mut hp = [0u64; BAND];
+        let mut hm = [0u64; BAND];
+        for j in 1..BAND {
+            if j <= ETH {
+                hm[j] = !0;
+            } else {
+                hp[j] = !0;
+            }
+        }
+        // absolute value of V[row][0] per lane (init row: |0 - eth|)
+        let mut v0 = [ETH as i32; LANES];
+
+        // ---- the scan: one anti-diagonal of all lanes per word op ----
+        let mut d = [0u64; BAND];
+        for row in &self.mm {
+            d[0] = row[0] & !hm[1];
+            for j in 1..BAND {
+                // j = BAND-1 has no top neighbour: its min-term can
+                // never hit zero, so the mask is all-ones
+                let top_nonzero = if j < BAND - 1 { !hm[j + 1] } else { !0 };
+                d[j] = row[j] & top_nonzero & !(hp[j] & !d[j - 1]);
+            }
+            for j in 1..BAND {
+                let bp = d[j] & !d[j - 1]; // ΔH' contribution +1
+                let bm = !d[j] & d[j - 1]; // ΔH' contribution -1
+                let nhp = (hp[j] & !bm) | (bp & !hm[j]);
+                let nhm = (hm[j] & !bp) | (bm & !hp[j]);
+                hp[j] = nhp;
+                hm[j] = nhm;
+            }
+            let d0 = d[0];
+            for (k, v) in v0.iter_mut().enumerate().take(lanes) {
+                *v += ((d0 >> k) & 1) as i32;
+            }
+        }
+
+        // ---- reconstruct per-lane bands (clamp once, at the end) ----
+        for k in 0..lanes {
+            let mut v = v0[k];
+            let mut band = [0i32; BAND];
+            band[0] = v.min(SAT_LINEAR);
+            for j in 1..BAND {
+                v += ((hp[j] >> k) & 1) as i32 - ((hm[j] >> k) & 1) as i32;
+                band[j] = v.min(SAT_LINEAR);
+            }
+            let (best, best_j) = best_of_band(&band);
+            out.band.push(band);
+            out.best.push(best);
+            out.best_j.push(best_j as u32);
+        }
+    }
+}
+
+impl WfEngine for BitpalEngine {
+    fn name(&self) -> &'static str {
+        "bitpal"
+    }
+
+    fn linear_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<LinearBatch> {
+        check_batch(reads, wins)?;
+        let mut out = LinearBatch {
+            band: Vec::with_capacity(reads.len()),
+            best: Vec::with_capacity(reads.len()),
+            best_j: Vec::with_capacity(reads.len()),
+        };
+        for (rc, wc) in reads.chunks(LANES).zip(wins.chunks(LANES)) {
+            self.linear_chunk(rc, wc, &mut out);
+        }
+        Ok(out)
+    }
+
+    fn affine_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<AffineBatch> {
+        // Exact scalar affine + traceback: only filter survivors get here.
+        scalar_affine_batch(reads, wins)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::window_len;
+    use crate::runtime::RustEngine;
+    use crate::util::SmallRng;
+
+    fn planted_batch(
+        rng: &mut SmallRng,
+        b: usize,
+        n: usize,
+        subs: usize,
+    ) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+        let reads: Vec<Vec<u8>> =
+            (0..b).map(|_| (0..n).map(|_| rng.gen_range(0..4)).collect()).collect();
+        let wins: Vec<Vec<u8>> = reads
+            .iter()
+            .map(|r| {
+                let mut w: Vec<u8> =
+                    (0..window_len(n)).map(|_| rng.gen_range(0..4)).collect();
+                w[ETH..ETH + n].copy_from_slice(r);
+                for _ in 0..subs {
+                    let p = rng.gen_range(ETH..ETH + n);
+                    w[p] = (w[p] + rng.gen_range(1..4u8)) % 4;
+                }
+                w
+            })
+            .collect();
+        (reads, wins)
+    }
+
+    fn as_slices(v: &[Vec<u8>]) -> Vec<&[u8]> {
+        v.iter().map(|x| x.as_slice()).collect()
+    }
+
+    #[test]
+    fn planted_matches_are_zero() {
+        let mut rng = SmallRng::seed_from_u64(70);
+        let (reads, wins) = planted_batch(&mut rng, 5, 40, 0);
+        let out =
+            BitpalEngine::new().linear_batch(&as_slices(&reads), &as_slices(&wins)).unwrap();
+        assert_eq!(out.best, vec![0; 5]);
+        assert_eq!(out.best_j, vec![ETH as u32; 5]);
+    }
+
+    #[test]
+    fn chunking_covers_batches_beyond_64_lanes() {
+        let mut rng = SmallRng::seed_from_u64(71);
+        for b in [1usize, 63, 64, 65, 130] {
+            let (reads, wins) = planted_batch(&mut rng, b, 30, 2);
+            let rr = as_slices(&reads);
+            let ww = as_slices(&wins);
+            let bit = BitpalEngine::new().linear_batch(&rr, &ww).unwrap();
+            let rust = RustEngine.linear_batch(&rr, &ww).unwrap();
+            assert_eq!(bit.best, rust.best, "b={b}");
+            assert_eq!(bit.best_j, rust.best_j, "b={b}");
+            assert_eq!(bit.band, rust.band, "b={b}");
+        }
+    }
+
+    #[test]
+    fn all_mismatch_saturates_at_band_center() {
+        let read = vec![0u8; 30];
+        let win = vec![1u8; window_len(30)];
+        let out = BitpalEngine::new().linear_batch(&[&read], &[&win]).unwrap();
+        assert_eq!(out.best, vec![SAT_LINEAR]);
+        assert_eq!(out.best_j, vec![ETH as u32]);
+    }
+
+    #[test]
+    fn n_bases_never_match() {
+        // base code 4 (N) mismatches even against itself
+        let read = vec![4u8; 20];
+        let win = vec![4u8; window_len(20)];
+        let out = BitpalEngine::new().linear_batch(&[&read], &[&win]).unwrap();
+        assert!(out.best[0] > 0);
+        let rust = RustEngine.linear_batch(&[&read], &[&win]).unwrap();
+        assert_eq!(out.best, rust.best);
+        assert_eq!(out.band, rust.band);
+    }
+
+    #[test]
+    fn rejects_malformed_batches() {
+        let mut e = BitpalEngine::new();
+        assert!(e.linear_batch(&[], &[]).is_err());
+        let r = vec![0u8; 20];
+        let w = vec![0u8; 20]; // wrong window length
+        assert!(e.linear_batch(&[&r], &[&w]).is_err());
+    }
+
+    #[test]
+    fn affine_fallback_is_the_scalar_path() {
+        let mut rng = SmallRng::seed_from_u64(72);
+        let (reads, wins) = planted_batch(&mut rng, 6, 30, 1);
+        let rr = as_slices(&reads);
+        let ww = as_slices(&wins);
+        let bit = BitpalEngine::new().affine_batch(&rr, &ww).unwrap();
+        let rust = RustEngine.affine_batch(&rr, &ww).unwrap();
+        assert_eq!(bit.best, rust.best);
+        assert_eq!(bit.best_j, rust.best_j);
+        assert_eq!(bit.dirs, rust.dirs);
+    }
+}

@@ -1,9 +1,10 @@
 //! The WF engine abstraction + the pure-Rust reference engine.
 //!
-//! Both engines implement identical numerics (band values, best-of-band
-//! tie-breaks, packed traceback directions); the XLA engine runs the
+//! Every engine implements identical numerics (band values, best-of-band
+//! tie-breaks, packed traceback directions): the XLA engine runs the
 //! AOT-compiled Pallas kernels, the Rust engine runs the in-crate
-//! mirrors. The coordinator is engine-agnostic.
+//! mirrors, and the bitpal engine runs the bit-parallel delta encoding
+//! of the same recurrence. The coordinator is engine-agnostic.
 
 use anyhow::{ensure, Result};
 
@@ -37,8 +38,10 @@ pub struct AffineBatch {
 
 /// A batched Wagner-Fischer compute engine.
 ///
-/// Not `Send`: the PJRT client is single-threaded by construction; the
-/// scheduler constructs engines on their owning thread via a factory.
+/// The trait itself does not require `Send` (the PJRT client is
+/// single-threaded by construction), but the pure-host engines
+/// ([`RustEngine`], [`super::BitpalEngine`]) are `Send`; shard workers
+/// construct one on their owning thread via [`EngineKind::build`].
 pub trait WfEngine {
     /// Short engine name for logs and bench labels.
     fn name(&self) -> &'static str;
@@ -51,6 +54,22 @@ pub trait WfEngine {
     fn affine_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<AffineBatch>;
 }
 
+// Boxed engines (the `EngineKind::build` product) are engines too, so a
+// worker-built `Box<dyn WfEngine + Send>` can drive a `Pipeline` directly.
+impl<E: WfEngine + ?Sized> WfEngine for Box<E> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn linear_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<LinearBatch> {
+        (**self).linear_batch(reads, wins)
+    }
+
+    fn affine_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<AffineBatch> {
+        (**self).affine_batch(reads, wins)
+    }
+}
+
 pub(crate) fn check_batch(reads: &[&[u8]], wins: &[&[u8]]) -> Result<usize> {
     ensure!(!reads.is_empty(), "empty batch");
     ensure!(reads.len() == wins.len(), "reads/windows length mismatch");
@@ -60,6 +79,79 @@ pub(crate) fn check_batch(reads: &[&[u8]], wins: &[&[u8]]) -> Result<usize> {
         ensure!(w.len() == crate::params::window_len(n), "bad window length");
     }
     Ok(n)
+}
+
+/// Exact scalar affine WF + traceback directions over a batch — the
+/// reference affine path, shared by [`RustEngine`] and the bit-parallel
+/// engine's survivor fallback.
+pub(crate) fn scalar_affine_batch(reads: &[&[u8]], wins: &[&[u8]]) -> Result<AffineBatch> {
+    check_batch(reads, wins)?;
+    let mut out = AffineBatch {
+        band: Vec::with_capacity(reads.len()),
+        best: Vec::with_capacity(reads.len()),
+        best_j: Vec::with_capacity(reads.len()),
+        dirs: Vec::with_capacity(reads.len()),
+    };
+    for (r, w) in reads.iter().zip(wins) {
+        let res = affine_wf_band(r, w);
+        let (d, j) = best_of_band(&res.band);
+        out.band.push(res.band);
+        out.best.push(d);
+        out.best_j.push(j as u32);
+        out.dirs.push(res.dirs);
+    }
+    Ok(out)
+}
+
+/// Selector for engines that shard workers (and other threads) can
+/// construct locally. The PJRT engine is deliberately absent: it is not
+/// `Send`, so it only ever drives the single-threaded pipeline path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// The scalar pure-Rust reference engine.
+    #[default]
+    Rust,
+    /// The bit-parallel delta-encoded filter engine.
+    Bitpal,
+}
+
+impl EngineKind {
+    /// Parse an engine name (`rust` / `bitpal`). `None` for engines that
+    /// cannot be thread-constructed (e.g. `xla`) or unknown names.
+    pub fn from_name(name: &str) -> Option<EngineKind> {
+        match name {
+            "rust" => Some(EngineKind::Rust),
+            "bitpal" => Some(EngineKind::Bitpal),
+            _ => None,
+        }
+    }
+
+    /// The engine name (matches the CLI `--engine` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Rust => "rust",
+            EngineKind::Bitpal => "bitpal",
+        }
+    }
+
+    /// Construct the engine. Every variant is `Send`, so the result can
+    /// be built and owned by a worker thread.
+    pub fn build(self) -> Box<dyn WfEngine + Send> {
+        match self {
+            EngineKind::Rust => Box::new(RustEngine),
+            EngineKind::Bitpal => Box::new(super::BitpalEngine::new()),
+        }
+    }
+}
+
+/// Default worker-engine kind: the `DART_PIM_ENGINE` environment
+/// variable when it names a thread-constructible engine (CI runs the
+/// whole suite under `DART_PIM_ENGINE=bitpal`), else [`EngineKind::Rust`].
+pub fn default_engine() -> EngineKind {
+    std::env::var("DART_PIM_ENGINE")
+        .ok()
+        .and_then(|v| EngineKind::from_name(&v))
+        .unwrap_or(EngineKind::Rust)
 }
 
 /// Pure-Rust engine (reference numerics; also models the DP-RISC-V
@@ -90,22 +182,33 @@ impl WfEngine for RustEngine {
     }
 
     fn affine_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<AffineBatch> {
-        check_batch(reads, wins)?;
-        let mut out = AffineBatch {
-            band: Vec::with_capacity(reads.len()),
-            best: Vec::with_capacity(reads.len()),
-            best_j: Vec::with_capacity(reads.len()),
-            dirs: Vec::with_capacity(reads.len()),
-        };
-        for (r, w) in reads.iter().zip(wins) {
-            let res = affine_wf_band(r, w);
-            let (d, j) = best_of_band(&res.band);
-            out.band.push(res.band);
-            out.best.push(d);
-            out.best_j.push(j as u32);
-            out.dirs.push(res.dirs);
+        scalar_affine_batch(reads, wins)
+    }
+}
+
+#[cfg(test)]
+mod kind_tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_round_trips_names() {
+        for kind in [EngineKind::Rust, EngineKind::Bitpal] {
+            assert_eq!(EngineKind::from_name(kind.name()), Some(kind));
+            assert_eq!(kind.build().name(), kind.name());
         }
-        Ok(out)
+        assert_eq!(EngineKind::from_name("xla"), None);
+        assert_eq!(EngineKind::from_name("nope"), None);
+    }
+
+    #[test]
+    fn built_engines_run_a_batch() {
+        let read = vec![1u8; 20];
+        let win = vec![1u8; crate::params::window_len(20)];
+        for kind in [EngineKind::Rust, EngineKind::Bitpal] {
+            let mut e = kind.build();
+            let out = e.linear_batch(&[&read], &[&win]).unwrap();
+            assert_eq!(out.best, vec![0], "{}", kind.name());
+        }
     }
 }
 

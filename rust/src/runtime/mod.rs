@@ -11,14 +11,21 @@
 //!
 //! [`engine::RustEngine`] is the bit-identical pure-Rust mirror (also the
 //! RISC-V-offload compute path); `tests/engine_parity.rs` holds the two
-//! engines to exact agreement.
+//! engines to exact agreement. [`bitpal_engine::BitpalEngine`] is the
+//! bit-parallel host analog of the crossbars' row-parallel compute
+//! (§IV/Fig. 5): a delta-encoded linear filter with one word lane per
+//! instance, exact-scalar affine for survivors, same numerics contract
+//! (`tests/engine_parity_bitpal.rs`). [`engine::EngineKind`] is the
+//! factory shard workers use to construct their thread-local engine.
 
 pub mod artifacts;
+pub mod bitpal_engine;
 pub mod engine;
 #[cfg(feature = "pjrt")]
 pub mod xla_engine;
 
 pub use artifacts::ArtifactManifest;
-pub use engine::{AffineBatch, LinearBatch, RustEngine, WfEngine};
+pub use bitpal_engine::BitpalEngine;
+pub use engine::{default_engine, AffineBatch, EngineKind, LinearBatch, RustEngine, WfEngine};
 #[cfg(feature = "pjrt")]
 pub use xla_engine::XlaEngine;

@@ -25,11 +25,16 @@
 use std::collections::HashMap;
 use std::thread;
 
-use crate::align::banded_linear::{best_of_band, linear_wf_band};
 use crate::index::{shard_of, MinimizerIndex};
 use crate::params::ETH;
 use crate::pim::DartPimConfig;
+use crate::runtime::{default_engine, EngineKind, WfEngine};
 use crate::seeding::{seed_read, ReadSeed};
+
+/// Engine flush size for the shard filter pass (the largest artifact
+/// batch; big enough that the bit-parallel engine runs full 64-lane
+/// words).
+const SIM_FILTER_BATCH: usize = 256;
 
 /// How affine lock-step rounds are counted (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -159,17 +164,31 @@ impl<'a> FullSystemSim<'a> {
         self.simulate_threaded(reads, 1)
     }
 
-    /// [`Self::simulate`] sharded across `n_threads` worker threads.
+    /// [`Self::simulate`] sharded across `n_threads` worker threads on
+    /// the [`default_engine`] filter engine.
+    pub fn simulate_threaded(
+        &self,
+        reads: &[crate::genome::ReadRecord],
+        n_threads: usize,
+    ) -> SimCounts {
+        self.simulate_threaded_with(reads, n_threads, default_engine())
+    }
+
+    /// [`Self::simulate`] sharded across `n_threads` worker threads,
+    /// filtering through `engine` (each worker constructs its own — the
+    /// reason the PJRT engine is not an [`EngineKind`]).
     ///
     /// (read, minimizer) pairs are partitioned by minimizer hash
     /// ([`shard_of`]) exactly like the live pipeline, so each worker's
     /// per-crossbar cap accounting touches a disjoint crossbar set and
     /// the merged counts are identical to the serial path for every
-    /// thread count.
-    pub fn simulate_threaded(
+    /// thread count — and, because the engines share one numerics
+    /// contract, for every engine kind.
+    pub fn simulate_threaded_with(
         &self,
         reads: &[crate::genome::ReadRecord],
         n_threads: usize,
+        engine: EngineKind,
     ) -> SimCounts {
         let n = n_threads.max(1);
         // stage 1 (serial): seed every read, partition pairs by minimizer
@@ -185,12 +204,12 @@ impl<'a> FullSystemSim<'a> {
 
         // stage 2: per-shard workload counting (threaded when asked)
         let parts: Vec<ShardSimCounts> = if n == 1 {
-            vec![self.simulate_shard(reads, &shards[0])]
+            vec![self.simulate_shard(reads, &shards[0], engine)]
         } else {
             thread::scope(|s| {
                 let handles: Vec<_> = shards
                     .iter()
-                    .map(|items| s.spawn(move || self.simulate_shard(reads, items)))
+                    .map(|items| s.spawn(move || self.simulate_shard(reads, items, engine)))
                     .collect();
                 handles.into_iter().map(|h| h.join().expect("sim shard panicked")).collect()
             })
@@ -229,18 +248,64 @@ impl<'a> FullSystemSim<'a> {
     /// Count one shard's workload: the serial per-pair semantics over a
     /// partition-ordered item list (cap accounting stays exact because a
     /// minimizer's crossbars belong to exactly one shard).
+    ///
+    /// Routing and cap accounting stay per-pair (order-sensitive); the
+    /// surviving WF instances accumulate into a [`SIM_FILTER_BATCH`]
+    /// buffer that drains through `engine` as it fills, so memory stays
+    /// bounded no matter the workload. Instance results are independent,
+    /// so batch boundaries cannot change any count.
     fn simulate_shard(
         &self,
         reads: &[crate::genome::ReadRecord],
         items: &[(u32, ReadSeed)],
+        engine: EngineKind,
     ) -> ShardSimCounts {
+        // one pending filter instance: read index, owning crossbar
+        // (None = RISC-V pool), read slice, extracted window
+        struct Pending<'r> {
+            ri: u32,
+            xbar: Option<u32>,
+            read: &'r [u8],
+            win: Vec<u8>,
+        }
+        /// Run the buffered instances through the engine (Rust mirror of
+        /// the L1 kernel, scalar or bit-parallel — identical numerics)
+        /// and fold the pass/fail results into the shard counters.
+        fn drain(
+            wf: &mut (dyn WfEngine + Send),
+            pending: &mut Vec<Pending<'_>>,
+            p: &mut ShardSimCounts,
+        ) {
+            if pending.is_empty() {
+                return;
+            }
+            let rr: Vec<&[u8]> = pending.iter().map(|x| x.read).collect();
+            let ww: Vec<&[u8]> = pending.iter().map(|x| x.win.as_slice()).collect();
+            let out = wf.linear_batch(&rr, &ww).expect("simulator filter batch");
+            for (inst, &best) in pending.iter().zip(&out.best) {
+                if best > ETH as i32 {
+                    continue;
+                }
+                p.candidates[inst.ri as usize] = true;
+                match inst.xbar {
+                    None => p.counts.riscv_affine_instances += 1,
+                    Some(xb) => {
+                        p.counts.affine_instances += 1;
+                        *p.affine_per_xbar.entry(xb).or_default() += 1;
+                    }
+                }
+            }
+            pending.clear();
+        }
+
         let mut p = ShardSimCounts {
             counts: SimCounts::default(),
             pairs_per_xbar: HashMap::new(),
             affine_per_xbar: HashMap::new(),
             candidates: vec![false; reads.len()],
         };
-        let c = &mut p.counts;
+        let mut wf = engine.build();
+        let mut pending: Vec<Pending<'_>> = Vec::with_capacity(SIM_FILTER_BATCH);
         for &(ri, ref seed) in items {
             let read = &reads[ri as usize];
             let occs = self.index.occurrences(seed.kmer);
@@ -248,13 +313,15 @@ impl<'a> FullSystemSim<'a> {
                 None => {
                     // lowTh minimizer: the RISC-V cores run both WF
                     // stages for every occurrence.
-                    c.riscv_pairs += 1;
-                    c.riscv_linear_instances += occs.len() as u64;
+                    p.counts.riscv_pairs += 1;
+                    p.counts.riscv_linear_instances += occs.len() as u64;
                     for &pos in occs {
-                        if self.filter_passes(&read.seq, pos, seed.read_offset) {
-                            c.riscv_affine_instances += 1;
-                            p.candidates[ri as usize] = true;
-                        }
+                        pending.push(Pending {
+                            ri,
+                            xbar: None,
+                            read: &read.seq,
+                            win: self.index.window_for(pos, seed.read_offset as usize),
+                        });
                     }
                 }
                 Some((first, n)) => {
@@ -263,35 +330,31 @@ impl<'a> FullSystemSim<'a> {
                     let cap = self.cfg.max_reads as u64;
                     let count = p.pairs_per_xbar.entry(first).or_default();
                     if *count >= cap {
-                        c.dropped_pairs += 1;
+                        p.counts.dropped_pairs += 1;
                         continue;
                     }
                     *count += 1;
                     for sub in 1..n {
                         *p.pairs_per_xbar.entry(first + sub).or_default() += 1;
                     }
-                    c.routed_pairs += 1;
-                    c.linear_instances += occs.len() as u64;
+                    p.counts.routed_pairs += 1;
+                    p.counts.linear_instances += occs.len() as u64;
                     for (i, &pos) in occs.iter().enumerate() {
-                        if self.filter_passes(&read.seq, pos, seed.read_offset) {
-                            c.affine_instances += 1;
-                            let xb = first + (i / self.cfg.linear_rows) as u32;
-                            *p.affine_per_xbar.entry(xb).or_default() += 1;
-                            p.candidates[ri as usize] = true;
-                        }
+                        pending.push(Pending {
+                            ri,
+                            xbar: Some(first + (i / self.cfg.linear_rows) as u32),
+                            read: &read.seq,
+                            win: self.index.window_for(pos, seed.read_offset as usize),
+                        });
                     }
                 }
             }
+            if pending.len() >= SIM_FILTER_BATCH {
+                drain(wf.as_mut(), &mut pending, &mut p);
+            }
         }
+        drain(wf.as_mut(), &mut pending, &mut p);
         p
-    }
-
-    /// Linear WF filter for one (read, occurrence) pair.
-    fn filter_passes(&self, read: &[u8], pos: u32, read_offset: u32) -> bool {
-        let seg = self.index.segment(pos);
-        let win = self.index.window_of_segment(&seg, read_offset as usize);
-        let (dist, _) = best_of_band(&linear_wf_band(read, win));
-        dist <= ETH as i32
     }
 }
 

@@ -1,0 +1,134 @@
+//! Bit-parallel engine parity: `BitpalEngine` must agree with
+//! `RustEngine` *exactly* — same bands, same best distances, same
+//! best-of-band tie-breaks, same affine direction planes — over
+//! randomized batches, including the shapes that stress the word-lane
+//! layout (batch sizes that don't divide 64), the recurrence's fixed
+//! points (all-mismatch reads, N bases), and instances that straddle
+//! the `dist == eth` filter boundary.
+
+use dart_pim::params::{window_len, ETH, SAT_LINEAR};
+use dart_pim::runtime::{BitpalEngine, RustEngine, WfEngine};
+use dart_pim::util::proptest::check;
+use dart_pim::util::SmallRng;
+
+fn as_slices(v: &[Vec<u8>]) -> Vec<&[u8]> {
+    v.iter().map(|x| x.as_slice()).collect()
+}
+
+/// One random (read, window) pair in one of several adversarial shapes.
+fn rand_instance(rng: &mut SmallRng, n: usize) -> (Vec<u8>, Vec<u8>) {
+    let wl = window_len(n);
+    match rng.gen_range(0..5u32) {
+        // pure random (usually saturates)
+        0 => {
+            let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
+            let win: Vec<u8> = (0..wl).map(|_| rng.gen_range(0..4)).collect();
+            (read, win)
+        }
+        // planted at a random band shift with 0..=8 substitutions, so
+        // distances land on both sides of the eth boundary
+        1 | 2 => {
+            let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
+            let mut win: Vec<u8> = (0..wl).map(|_| rng.gen_range(0..4)).collect();
+            let shift = rng.gen_range(0..=2 * ETH);
+            win[shift..shift + n].copy_from_slice(&read);
+            for _ in 0..rng.gen_range(0..=8usize) {
+                let p = rng.gen_range(shift..shift + n);
+                win[p] = (win[p] + rng.gen_range(1..4u8)) % 4;
+            }
+            (read, win)
+        }
+        // all-mismatch (the saturation fixed point / early-exit path)
+        3 => (vec![0u8; n], vec![1u8; wl]),
+        // alphabet with N bases (code 4 never matches, even vs itself)
+        _ => {
+            let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..5)).collect();
+            let mut win: Vec<u8> = (0..wl).map(|_| rng.gen_range(0..5)).collect();
+            let shift = rng.gen_range(0..=2 * ETH);
+            win[shift..shift + n].copy_from_slice(&read);
+            (read, win)
+        }
+    }
+}
+
+fn rand_batch(rng: &mut SmallRng, b: usize, n: usize) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let mut reads = Vec::with_capacity(b);
+    let mut wins = Vec::with_capacity(b);
+    for _ in 0..b {
+        let (r, w) = rand_instance(rng, n);
+        reads.push(r);
+        wins.push(w);
+    }
+    (reads, wins)
+}
+
+#[test]
+fn linear_batch_parity_randomized() {
+    check("bitpal linear parity", 0xB17A, 40, |rng| {
+        // batch sizes deliberately off the 64-lane grid
+        let b = rng.gen_range(1..=130usize);
+        let n = [1usize, 3, 17, 30, 64, 150][rng.gen_range(0..6usize)];
+        let (reads, wins) = rand_batch(rng, b, n);
+        let rr = as_slices(&reads);
+        let ww = as_slices(&wins);
+        let rust = RustEngine.linear_batch(&rr, &ww).unwrap();
+        let bit = BitpalEngine::new().linear_batch(&rr, &ww).unwrap();
+        assert_eq!(rust.best, bit.best, "b={b} n={n}");
+        assert_eq!(rust.best_j, bit.best_j, "b={b} n={n}");
+        assert_eq!(rust.band, bit.band, "b={b} n={n}");
+    });
+}
+
+#[test]
+fn affine_batch_parity_randomized() {
+    check("bitpal affine parity", 0xAFF1, 25, |rng| {
+        let b = rng.gen_range(1..=70usize);
+        let n = [17usize, 30, 64, 150][rng.gen_range(0..4usize)];
+        let (reads, wins) = rand_batch(rng, b, n);
+        let rr = as_slices(&reads);
+        let ww = as_slices(&wins);
+        let rust = RustEngine.affine_batch(&rr, &ww).unwrap();
+        let bit = BitpalEngine::new().affine_batch(&rr, &ww).unwrap();
+        assert_eq!(rust.best, bit.best, "b={b} n={n}");
+        assert_eq!(rust.best_j, bit.best_j, "b={b} n={n}");
+        assert_eq!(rust.band, bit.band, "b={b} n={n}");
+        assert_eq!(rust.dirs, bit.dirs, "b={b} n={n}");
+    });
+}
+
+/// Deterministic boundary sweep: one instance per substitution count
+/// s = 0..=12 (sub positions spaced so no cheaper gap path exists, the
+/// filler base pattern shifted so off-diagonals mismatch). The batch of
+/// 13 straddles the filter threshold instance by instance:
+/// `best == min(s, eth + 1)` with the tie-break pinned at the anchor.
+#[test]
+fn boundary_instances_straddle_the_filter_threshold() {
+    let n = 30;
+    let read: Vec<u8> = (0..n).map(|i| (i % 4) as u8).collect();
+    let mut reads = Vec::new();
+    let mut wins = Vec::new();
+    for s in 0..=12usize {
+        let mut win: Vec<u8> = (0..window_len(n)).map(|c| ((c + 2) % 4) as u8).collect();
+        win[ETH..ETH + n].copy_from_slice(&read);
+        for t in 0..s {
+            let p = 2 * t + 1;
+            win[ETH + p] = (read[p] + 2) % 4;
+        }
+        reads.push(read.clone());
+        wins.push(win);
+    }
+    let rr = as_slices(&reads);
+    let ww = as_slices(&wins);
+    let rust = RustEngine.linear_batch(&rr, &ww).unwrap();
+    let bit = BitpalEngine::new().linear_batch(&rr, &ww).unwrap();
+    assert_eq!(rust.best, bit.best);
+    assert_eq!(rust.best_j, bit.best_j);
+    assert_eq!(rust.band, bit.band);
+    for (s, &best) in bit.best.iter().enumerate() {
+        assert_eq!(best, (s as i32).min(SAT_LINEAR), "s={s}");
+    }
+    // the sweep really covers dist == eth and the first saturated value
+    assert!(bit.best.contains(&(ETH as i32)));
+    assert!(bit.best.contains(&SAT_LINEAR));
+    assert_eq!(bit.best_j[ETH], ETH as u32, "anchor tie-break at the boundary");
+}

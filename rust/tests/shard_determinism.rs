@@ -15,7 +15,7 @@ use dart_pim::genome::ReadRecord;
 use dart_pim::index::MinimizerIndex;
 use dart_pim::params::{K, READ_LEN, W};
 use dart_pim::pim::DartPimConfig;
-use dart_pim::runtime::RustEngine;
+use dart_pim::runtime::{BitpalEngine, EngineKind, RustEngine};
 
 fn workload(n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
     let genome = SynthConfig { len: 300_000, ..Default::default() }.generate();
@@ -107,6 +107,26 @@ fn revcomp_reads_are_also_deterministic() {
     assert!(tsv1.contains('-'), "some reads must map on the reverse strand");
     assert_eq!(tsv1, tsv4);
     assert_eq!(c1, c4);
+}
+
+#[test]
+fn bitpal_workers_are_byte_identical_to_rust() {
+    // engine determinism composes with shard determinism: a 4-way
+    // sharded run whose workers own bit-parallel engines must emit the
+    // same bytes as the single-threaded scalar run
+    let (idx, reads) = workload(200);
+    let (base_tsv, base_counters) = run(&idx, &reads, 1, FilterPolicy::AllPassing, false);
+    assert!(!base_tsv.is_empty());
+    let cfg = PipelineConfig {
+        dart: DartPimConfig { low_th: 1, ..Default::default() },
+        threads: 4,
+        worker_engine: EngineKind::Bitpal,
+        ..Default::default()
+    };
+    let mut p = Pipeline::new(&idx, cfg, BitpalEngine::new());
+    let (mappings, metrics) = p.map_reads(&reads).unwrap();
+    assert_eq!(base_tsv, render(&mappings), "bitpal TSV must match rust byte-for-byte");
+    assert_eq!(base_counters, metrics.invariant_counters());
 }
 
 #[test]
