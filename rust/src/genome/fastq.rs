@@ -1,4 +1,17 @@
 //! Minimal FASTQ reader/writer (4-line records).
+//!
+//! The primary ingestion path is [`FastqStream`], an incremental
+//! pull-parser over any [`BufRead`]: it holds one record in memory at a
+//! time, so the mapping pipeline can consume arbitrarily large read sets
+//! (including stdin) in O(1) parser memory. [`read_fastq`] /
+//! [`load_fastq`] survive as thin collect wrappers for callers that
+//! genuinely need the whole set.
+//!
+//! Accepted syntax beyond the strict 4-line form: CRLF line endings, a
+//! final record without a trailing newline, and blank lines *between*
+//! records. Malformed input errors name the 1-based record ordinal and
+//! the read name, so a bad record deep inside a multi-gigabyte stream is
+//! diagnosable.
 
 use std::io::{self, BufRead, BufReader, Read, Write};
 use std::path::Path;
@@ -26,44 +39,148 @@ impl FastqRecord {
     }
 }
 
-/// Parse FASTQ from any reader.
-pub fn read_fastq<R: Read>(r: R) -> io::Result<Vec<FastqRecord>> {
-    let mut lines = BufReader::new(r).lines();
-    let mut out = Vec::new();
-    loop {
-        let header = match lines.next() {
-            None => break,
-            Some(l) => l?,
-        };
-        if header.trim().is_empty() {
-            continue;
+/// Incremental FASTQ parser: an iterator of `io::Result<FastqRecord>`
+/// over any buffered reader. Memory is one record regardless of input
+/// size — the ingestion half of the pipeline's bounded-memory contract.
+///
+/// The stream fuses after the first error (a parse failure mid-stream
+/// leaves the reader at an unknown position; resynchronizing would risk
+/// silently misparsing the remainder).
+pub struct FastqStream<R: BufRead> {
+    reader: R,
+    /// Scratch for the current line (reused across records).
+    line: String,
+    /// Records successfully parsed so far (== 1-based ordinal of the
+    /// last record returned).
+    records: u64,
+    /// Set once EOF or an error was returned; the iterator is fused.
+    done: bool,
+}
+
+impl<R: BufRead> FastqStream<R> {
+    /// Stream records from `reader`.
+    pub fn new(reader: R) -> Self {
+        FastqStream { reader, line: String::new(), records: 0, done: false }
+    }
+
+    /// Records successfully parsed so far.
+    pub fn records_read(&self) -> u64 {
+        self.records
+    }
+
+    /// Read the next line into `self.line`, stripping the trailing
+    /// `\n` / `\r\n` (and a bare trailing `\r`, which only occurs when a
+    /// CRLF file is cut between the two bytes). `false` at EOF.
+    fn fill_line(&mut self) -> io::Result<bool> {
+        self.line.clear();
+        if self.reader.read_line(&mut self.line)? == 0 {
+            return Ok(false);
         }
-        let seq = lines.next().ok_or_else(|| truncated())??;
-        let plus = lines.next().ok_or_else(|| truncated())??;
-        let qual = lines.next().ok_or_else(|| truncated())??;
-        if !header.starts_with('@') || !plus.starts_with('+') {
-            return Err(io::Error::new(io::ErrorKind::InvalidData, "malformed FASTQ record"));
+        if self.line.ends_with('\n') {
+            self.line.pop();
         }
+        if self.line.ends_with('\r') {
+            self.line.pop();
+        }
+        Ok(true)
+    }
+
+    /// Parse one record; `Ok(None)` at clean end of input.
+    fn parse_record(&mut self) -> io::Result<Option<FastqRecord>> {
+        // skip blank lines between records
+        loop {
+            if !self.fill_line()? {
+                return Ok(None);
+            }
+            if !self.line.trim().is_empty() {
+                break;
+            }
+        }
+        let ordinal = self.records + 1;
+        if !self.line.starts_with('@') {
+            return Err(malformed(ordinal, None, "header line does not start with '@'"));
+        }
+        let name = self.line[1..].split_whitespace().next().unwrap_or("").to_string();
+
+        if !self.fill_line()? {
+            return Err(truncated(ordinal, &name, "sequence line"));
+        }
+        let seq = encode_seq(self.line.trim_end().as_bytes());
+
+        if !self.fill_line()? {
+            return Err(truncated(ordinal, &name, "'+' separator line"));
+        }
+        if !self.line.starts_with('+') {
+            return Err(malformed(ordinal, Some(&name), "separator line does not start with '+'"));
+        }
+
+        if !self.fill_line()? {
+            return Err(truncated(ordinal, &name, "quality line"));
+        }
+        let qual = self.line.trim_end().as_bytes().to_vec();
         if seq.len() != qual.len() {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                "FASTQ sequence/quality length mismatch",
+            return Err(malformed(
+                ordinal,
+                Some(&name),
+                &format!(
+                    "sequence length {} does not match quality length {}",
+                    seq.len(),
+                    qual.len()
+                ),
             ));
         }
-        out.push(FastqRecord {
-            name: header[1..].split_whitespace().next().unwrap_or("").to_string(),
-            seq: encode_seq(seq.trim_end().as_bytes()),
-            qual: qual.trim_end().as_bytes().to_vec(),
-        });
+
+        self.records = ordinal;
+        Ok(Some(FastqRecord { name, seq, qual }))
     }
-    Ok(out)
 }
 
-fn truncated() -> io::Error {
-    io::Error::new(io::ErrorKind::UnexpectedEof, "truncated FASTQ record")
+impl<R: BufRead> Iterator for FastqStream<R> {
+    type Item = io::Result<FastqRecord>;
+
+    fn next(&mut self) -> Option<io::Result<FastqRecord>> {
+        if self.done {
+            return None;
+        }
+        match self.parse_record() {
+            Ok(Some(rec)) => Some(Ok(rec)),
+            Ok(None) => {
+                self.done = true;
+                None
+            }
+            Err(e) => {
+                self.done = true;
+                Some(Err(e))
+            }
+        }
+    }
 }
 
-/// Load a FASTQ file.
+fn malformed(ordinal: u64, name: Option<&str>, what: &str) -> io::Error {
+    let who = match name {
+        Some(n) if !n.is_empty() => format!("FASTQ record #{ordinal} (read {n:?})"),
+        _ => format!("FASTQ record #{ordinal}"),
+    };
+    io::Error::new(io::ErrorKind::InvalidData, format!("{who}: {what}"))
+}
+
+fn truncated(ordinal: u64, name: &str, missing: &str) -> io::Error {
+    let who = if name.is_empty() {
+        format!("FASTQ record #{ordinal}")
+    } else {
+        format!("FASTQ record #{ordinal} (read {name:?})")
+    };
+    io::Error::new(io::ErrorKind::UnexpectedEof, format!("truncated {who}: missing {missing}"))
+}
+
+/// Parse FASTQ from any reader into a vector (thin wrapper over
+/// [`FastqStream`]; prefer the stream for large inputs).
+pub fn read_fastq<R: Read>(r: R) -> io::Result<Vec<FastqRecord>> {
+    FastqStream::new(BufReader::new(r)).collect()
+}
+
+/// Load a FASTQ file (collecting wrapper; prefer [`FastqStream`] for
+/// large inputs).
 pub fn load_fastq<P: AsRef<Path>>(path: P) -> io::Result<Vec<FastqRecord>> {
     read_fastq(std::fs::File::open(path)?)
 }
@@ -102,18 +219,71 @@ mod tests {
     }
 
     #[test]
-    fn rejects_length_mismatch() {
-        assert!(read_fastq(&b"@r\nACGT\n+\nII\n"[..]).is_err());
+    fn streaming_yields_records_one_at_a_time() {
+        let input = b"@a\nACGT\n+\nIIII\n\n@b x y\nTT\n+\nII\n";
+        let mut s = FastqStream::new(&input[..]);
+        let a = s.next().unwrap().unwrap();
+        assert_eq!(a.name, "a");
+        assert_eq!(s.records_read(), 1);
+        let b = s.next().unwrap().unwrap();
+        assert_eq!(b.name, "b", "name stops at the first whitespace");
+        assert_eq!(b.seq, encode_seq(b"TT"));
+        assert!(s.next().is_none());
+        assert!(s.next().is_none(), "stream is fused");
+        assert_eq!(s.records_read(), 2);
     }
 
     #[test]
-    fn rejects_truncation() {
-        assert!(read_fastq(&b"@r\nACGT\n"[..]).is_err());
+    fn accepts_crlf_line_endings() {
+        let unix = b"@r\nACGT\n+\nIIII\n";
+        let dos = b"@r\r\nACGT\r\n+\r\nIIII\r\n";
+        assert_eq!(read_fastq(&unix[..]).unwrap(), read_fastq(&dos[..]).unwrap());
+        let rec = &read_fastq(&dos[..]).unwrap()[0];
+        assert_eq!(rec.seq, encode_seq(b"ACGT"));
+        assert_eq!(rec.qual, b"IIII");
+    }
+
+    #[test]
+    fn accepts_final_record_without_trailing_newline() {
+        let recs = read_fastq(&b"@r0\nACGT\n+\nIIII\n@r1\nTTAA\n+\nJJJJ"[..]).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].qual, b"JJJJ");
+    }
+
+    #[test]
+    fn rejects_length_mismatch_naming_the_record() {
+        let err = read_fastq(&b"@ok\nAC\n+\nII\n@bad\nACGT\n+\nII\n"[..]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("#2"), "must name the ordinal: {msg}");
+        assert!(msg.contains("bad"), "must name the read: {msg}");
+        assert!(msg.contains('4') && msg.contains('2'), "must name both lengths: {msg}");
+    }
+
+    #[test]
+    fn rejects_truncation_naming_the_record() {
+        for (input, missing) in [
+            (&b"@r\nACGT\n"[..], "separator"),
+            (&b"@r\n"[..], "sequence"),
+            (&b"@r\nACGT\n+\n"[..], "quality"),
+        ] {
+            let err = read_fastq(input).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+            let msg = err.to_string();
+            assert!(msg.contains("#1") && msg.contains('r'), "{msg}");
+            assert!(msg.contains(missing), "{msg} should mention {missing}");
+        }
     }
 
     #[test]
     fn rejects_bad_markers() {
         assert!(read_fastq(&b"r\nACGT\n+\nIIII\n"[..]).is_err());
         assert!(read_fastq(&b"@r\nACGT\nx\nIIII\n"[..]).is_err());
+    }
+
+    #[test]
+    fn stream_fuses_after_error() {
+        let mut s = FastqStream::new(&b"@r\nACGT\n+\nII\n@next\nAC\n+\nII\n"[..]);
+        assert!(s.next().unwrap().is_err());
+        assert!(s.next().is_none(), "no resynchronization after a parse error");
     }
 }

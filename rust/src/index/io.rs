@@ -10,6 +10,10 @@ use std::path::Path;
 use super::index::MinimizerIndex;
 
 const MAGIC: &[u8; 8] = b"DARTPIM1";
+/// The format-family prefix of [`MAGIC`]; the trailing byte is the
+/// format version, so a future-version file is distinguishable from a
+/// non-index file.
+const MAGIC_FAMILY: &[u8; 7] = b"DARTPIM";
 
 fn w_u64<W: Write>(w: &mut W, v: u64) -> io::Result<()> {
     w.write_all(&v.to_le_bytes())
@@ -59,41 +63,114 @@ pub fn write_index<W: Write>(w: &mut W, idx: &MinimizerIndex) -> io::Result<()> 
     Ok(())
 }
 
-/// Deserialize an index, validating the geometry header.
+/// Deserialize an index, rejecting truncated or corrupted inputs with a
+/// descriptive error instead of misparsing.
+///
+/// Validation layers: magic + format version, geometry plausibility,
+/// declared-vs-available length agreement for every section (declared
+/// sizes are never trusted with a large up-front allocation — a corrupt
+/// length field fails with "truncated", not an OOM), occurrence bounds
+/// against the reference, and a trailing-bytes check so a concatenated
+/// or padded file is caught rather than silently half-read.
 pub fn read_index<R: Read>(r: &mut R) -> io::Result<MinimizerIndex> {
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            bad("truncated index: shorter than the 8-byte magic")
+        } else {
+            e
+        }
+    })?;
     if &magic != MAGIC {
-        return Err(bad("not a DART-PIM index file"));
+        if &magic[..7] == MAGIC_FAMILY {
+            return Err(bad(&format!(
+                "unsupported DART-PIM index version {:?} (this build reads {:?})",
+                magic[7] as char, MAGIC[7] as char
+            )));
+        }
+        return Err(bad("not a DART-PIM index file (bad magic)"));
     }
-    let k = r_u64(r)? as usize;
-    let w = r_u64(r)? as usize;
-    let read_len = r_u64(r)? as usize;
+    let k = read_u64_ctx(r, "geometry header (k)")? as usize;
+    let w = read_u64_ctx(r, "geometry header (w)")? as usize;
+    let read_len = read_u64_ctx(r, "geometry header (read_len)")? as usize;
     if k == 0 || k > 32 || w == 0 || read_len < k {
-        return Err(bad("implausible index geometry"));
+        return Err(bad(&format!(
+            "implausible index geometry: k={k}, w={w}, read_len={read_len}"
+        )));
     }
-    let ref_len = r_u64(r)? as usize;
-    let mut reference = vec![0u8; ref_len];
-    r.read_exact(&mut reference)?;
+    let ref_len = read_u64_ctx(r, "reference length")? as usize;
+    // read incrementally (take + read_to_end) so a corrupt ref_len can
+    // only fail with "truncated", never allocate ref_len bytes up front
+    let mut reference = Vec::new();
+    r.by_ref().take(ref_len as u64).read_to_end(&mut reference)?;
+    if reference.len() != ref_len {
+        return Err(bad(&format!(
+            "truncated index: reference section has {} of {} declared bytes",
+            reference.len(),
+            ref_len
+        )));
+    }
     if reference.iter().any(|&c| c > 4) {
-        return Err(bad("invalid base codes in reference"));
+        return Err(bad("corrupted index: invalid base codes in reference"));
     }
-    let n = r_u64(r)? as usize;
+    let n = read_u64_ctx(r, "minimizer count")? as usize;
+    if n > ref_len {
+        return Err(bad(&format!(
+            "corrupted index: {n} minimizers declared for a {ref_len}-base reference"
+        )));
+    }
     let mut occurrences = std::collections::HashMap::with_capacity(n);
-    for _ in 0..n {
-        let m = r_u64(r)?;
-        let cnt = r_u32(r)? as usize;
-        let mut v = Vec::with_capacity(cnt);
+    for entry in 0..n {
+        let m = read_u64_ctx(r, "minimizer entry")?;
+        let cnt = read_u32_ctx(r, "occurrence count")? as usize;
+        if cnt > ref_len {
+            return Err(bad(&format!(
+                "corrupted index: minimizer entry #{entry} declares {cnt} occurrences \
+                 for a {ref_len}-base reference"
+            )));
+        }
+        let mut v = Vec::with_capacity(cnt.min(4096));
         for _ in 0..cnt {
-            let p = r_u32(r)?;
+            let p = read_u32_ctx(r, "occurrence position")?;
             if p as usize + k > ref_len {
-                return Err(bad("occurrence out of reference bounds"));
+                return Err(bad(&format!(
+                    "corrupted index: occurrence at {p} of minimizer entry #{entry} is \
+                     out of reference bounds"
+                )));
             }
             v.push(p);
         }
-        occurrences.insert(m, v);
+        if occurrences.insert(m, v).is_some() {
+            return Err(bad(&format!(
+                "corrupted index: duplicate minimizer entry {m:#x}"
+            )));
+        }
+    }
+    let mut trailing = [0u8; 1];
+    if r.read(&mut trailing)? != 0 {
+        return Err(bad("corrupted index: trailing bytes after the occurrence table"));
     }
     Ok(MinimizerIndex::from_parts(occurrences, reference, k, w, read_len))
+}
+
+fn read_u64_ctx<R: Read>(r: &mut R, what: &str) -> io::Result<u64> {
+    r_u64(r).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            bad(&format!("truncated index: unexpected end of file in {what}"))
+        } else {
+            e
+        }
+    })
+}
+
+fn read_u32_ctx<R: Read>(r: &mut R, what: &str) -> io::Result<u32> {
+    r_u32(r).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            bad(&format!("truncated index: unexpected end of file in {what}"))
+        } else {
+            e
+        }
+    })
 }
 
 /// Save to a file.

@@ -1,0 +1,114 @@
+//! Integration: the on-disk index cache must round-trip exactly and
+//! reject truncated / corrupted / version-skewed files with descriptive
+//! errors — never misparse, never trust a declared length with a giant
+//! allocation (a corrupt length field must fail as "truncated", not
+//! abort the process).
+
+use dart_pim::genome::synth::SynthConfig;
+use dart_pim::index::{load_index, save_index, MinimizerIndex};
+use dart_pim::params::{K, READ_LEN, W};
+
+fn build_index() -> MinimizerIndex {
+    let g = SynthConfig { len: 40_000, ..Default::default() }.generate();
+    MinimizerIndex::build(g, K, W, READ_LEN)
+}
+
+fn serialized(idx: &MinimizerIndex) -> Vec<u8> {
+    let mut buf = Vec::new();
+    dart_pim::index::io::write_index(&mut buf, idx).unwrap();
+    buf
+}
+
+fn parse(buf: &[u8]) -> std::io::Result<MinimizerIndex> {
+    dart_pim::index::io::read_index(&mut &buf[..])
+}
+
+#[test]
+fn file_round_trip_preserves_everything() {
+    let idx = build_index();
+    let path = std::env::temp_dir().join(format!("dartpim-iio-{}.bin", std::process::id()));
+    save_index(&path, &idx).unwrap();
+    let back = load_index(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!((back.k, back.w, back.read_len), (idx.k, idx.w, idx.read_len));
+    assert_eq!(back.reference, idx.reference);
+    assert_eq!(back.n_minimizers(), idx.n_minimizers());
+    for (m, occs) in idx.iter() {
+        assert_eq!(back.occurrences(m), occs, "minimizer {m:#x}");
+    }
+}
+
+#[test]
+fn every_truncation_point_is_rejected() {
+    let idx = build_index();
+    let buf = serialized(&idx);
+    // sweep the header densely and the payload sparsely; every proper
+    // prefix must fail (the format has no optional tail)
+    let mut cuts: Vec<usize> = (0..64.min(buf.len())).collect();
+    cuts.extend((64..buf.len()).step_by(buf.len() / 31 + 1));
+    cuts.push(buf.len() - 1);
+    for cut in cuts {
+        let err = parse(&buf[..cut]).expect_err(&format!("prefix of {cut} bytes must fail"));
+        let msg = err.to_string();
+        assert!(
+            msg.contains("truncated") || msg.contains("magic"),
+            "cut={cut}: unhelpful error {msg:?}"
+        );
+    }
+}
+
+#[test]
+fn bad_magic_and_version_skew_are_distinguished() {
+    let idx = build_index();
+    let mut buf = serialized(&idx);
+    // wholly different magic
+    let err = parse(b"NOTANIDXatall").unwrap_err();
+    assert!(err.to_string().contains("not a DART-PIM index"), "{err}");
+    // same family, future version byte: the error must say "version"
+    buf[7] = b'9';
+    let err = parse(&buf).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+}
+
+#[test]
+fn corrupt_length_fields_fail_without_huge_allocation() {
+    let idx = build_index();
+    let buf = serialized(&idx);
+    // ref_len (bytes 32..40) -> absurd: must report truncation, and must
+    // not try to pre-allocate 2^64 bytes on the way there
+    let mut evil = buf.clone();
+    evil[32..40].copy_from_slice(&u64::MAX.to_le_bytes());
+    let err = parse(&evil).unwrap_err();
+    assert!(err.to_string().contains("truncated"), "{err}");
+    // geometry: k = 0 is implausible
+    let mut evil = buf.clone();
+    evil[8..16].copy_from_slice(&0u64.to_le_bytes());
+    let err = parse(&evil).unwrap_err();
+    assert!(err.to_string().contains("geometry"), "{err}");
+}
+
+#[test]
+fn corrupt_payload_is_rejected() {
+    let idx = build_index();
+    let buf = serialized(&idx);
+    // first reference base -> invalid code
+    let mut evil = buf.clone();
+    evil[40] = 9;
+    let err = parse(&evil).unwrap_err();
+    assert!(err.to_string().contains("base codes"), "{err}");
+    // last occurrence position -> far out of the reference
+    let mut evil = buf.clone();
+    let n = evil.len();
+    evil[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes());
+    let err = parse(&evil).unwrap_err();
+    assert!(err.to_string().contains("out of reference bounds"), "{err}");
+}
+
+#[test]
+fn trailing_garbage_is_rejected() {
+    let idx = build_index();
+    let mut buf = serialized(&idx);
+    buf.push(0x5a);
+    let err = parse(&buf).unwrap_err();
+    assert!(err.to_string().contains("trailing"), "{err}");
+}
