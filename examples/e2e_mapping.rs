@@ -50,6 +50,24 @@ fn arg_s(name: &str, default: &str) -> String {
 type MapResult =
     (Vec<Option<dart_pim::coordinator::FinalMapping>>, dart_pim::coordinator::metrics::Metrics);
 
+/// Drive the bounded streaming entry point (the production ingestion
+/// path: reads flow through backpressured channels and decisions leave
+/// in read order at epoch boundaries) and collect the ordered output.
+fn collect_stream<E: dart_pim::runtime::WfEngine>(
+    index: &MinimizerIndex,
+    cfg: PipelineConfig,
+    engine: E,
+    reads: &[dart_pim::genome::ReadRecord],
+) -> anyhow::Result<MapResult> {
+    let mut mappings = Vec::with_capacity(reads.len());
+    let metrics =
+        Pipeline::new(index, cfg, engine).map_stream(reads.iter().cloned().map(Ok), |_, m| {
+            mappings.push(m);
+            Ok(())
+        })?;
+    Ok((mappings, metrics))
+}
+
 #[cfg(feature = "pjrt")]
 fn map_with_engine(
     kind: &str,
@@ -59,12 +77,12 @@ fn map_with_engine(
 ) -> anyhow::Result<MapResult> {
     if kind == "rust" {
         println!("engine: rust");
-        return Pipeline::new(index, cfg, RustEngine).map_reads(reads);
+        return collect_stream(index, cfg, RustEngine, reads);
     }
     if kind == "bitpal" {
         println!("engine: bitpal (bit-parallel filter)");
         let cfg = PipelineConfig { worker_engine: EngineKind::Bitpal, ..cfg };
-        return Pipeline::new(index, cfg, BitpalEngine::new()).map_reads(reads);
+        return collect_stream(index, cfg, BitpalEngine::new(), reads);
     }
     let engine = dart_pim::runtime::XlaEngine::load_default()?;
     println!(
@@ -72,7 +90,7 @@ fn map_with_engine(
         engine.platform(),
         engine.manifest().artifacts.len()
     );
-    Pipeline::new(index, cfg, engine).map_reads(reads)
+    collect_stream(index, cfg, engine, reads)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -85,14 +103,14 @@ fn map_with_engine(
     if kind == "bitpal" {
         println!("engine: bitpal (bit-parallel filter)");
         let cfg = PipelineConfig { worker_engine: EngineKind::Bitpal, ..cfg };
-        return Pipeline::new(index, cfg, BitpalEngine::new()).map_reads(reads);
+        return collect_stream(index, cfg, BitpalEngine::new(), reads);
     }
     if kind != "rust" {
         println!("engine: rust (this build has no `pjrt` feature; --engine {kind} unavailable)");
     } else {
         println!("engine: rust");
     }
-    Pipeline::new(index, cfg, RustEngine).map_reads(reads)
+    collect_stream(index, cfg, RustEngine, reads)
 }
 
 fn main() -> anyhow::Result<()> {

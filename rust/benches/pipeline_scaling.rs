@@ -79,6 +79,39 @@ fn main() {
         rates.push((kind, engine_rates));
     }
 
+    // ---- streaming entry point: map_stream with a small epoch at the
+    // max thread count (the bounded-memory production path; must track
+    // the in-memory wrapper closely — the flush barriers are the only
+    // added cost) ----
+    let mut stream_rates: Vec<(EngineKind, f64)> = Vec::new();
+    for kind in ENGINES {
+        let threads = *THREADS.last().unwrap();
+        let cfg = PipelineConfig {
+            threads,
+            worker_engine: kind,
+            stream_epoch: 256,
+            ..base.clone()
+        };
+        let s = bench_units(
+            &format!("stream   {} t={threads}", kind.name()),
+            if smoke { 0 } else { 1 },
+            if smoke { 1 } else { 5 },
+            reads.len() as f64,
+            &mut || {
+                let mut p = Pipeline::new(&index, cfg.clone(), kind.build());
+                let mut mapped = 0usize;
+                p.map_stream(reads.iter().cloned().map(Ok), |_, m| {
+                    mapped += m.is_some() as usize;
+                    Ok(())
+                })
+                .unwrap();
+                std::hint::black_box(mapped);
+            },
+        );
+        println!("{s}");
+        stream_rates.push((kind, s.throughput()));
+    }
+
     // ---- isolated filter stage: bitpal vs rust ----
     println!("\n== filter stage: bitpal vs rust ==");
     let mut rng = SmallRng::seed_from_u64(11);
@@ -130,6 +163,19 @@ fn main() {
             })
             .collect(),
     );
+    let stream_json = Json::Arr(
+        stream_rates
+            .iter()
+            .map(|&(kind, tp)| {
+                Json::obj(vec![
+                    ("engine", Json::Str(kind.name().into())),
+                    ("threads", (*THREADS.last().unwrap()).into()),
+                    ("stream_epoch", 256usize.into()),
+                    ("reads_per_s", tp.into()),
+                ])
+            })
+            .collect(),
+    );
     let filter_json = Json::Arr(
         filter_rows
             .iter()
@@ -157,6 +203,7 @@ fn main() {
         ),
         ("threads", Json::Arr(THREADS.iter().map(|&t| t.into()).collect())),
         ("engines", engines_json),
+        ("map_stream", stream_json),
         ("filter_stage_bitpal_vs_rust", filter_json),
     ]);
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pipeline.json");

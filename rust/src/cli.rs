@@ -11,13 +11,14 @@
 //!   config    — print the architecture configuration (Tables II/III)
 
 use std::collections::HashMap;
+use std::io::{self, BufRead, Write};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{default_threads, FilterPolicy, Pipeline, PipelineConfig};
 use crate::eval::figures;
 use crate::genome::fasta::{load_fasta, save_fasta, FastaRecord};
-use crate::genome::fastq::{load_fastq, save_fastq, FastqRecord};
+use crate::genome::fastq::{save_fastq, FastqRecord, FastqStream};
 use crate::genome::mutate::MutateConfig;
 use crate::genome::synth::{ReadSimConfig, SynthConfig};
 use crate::genome::ReadRecord;
@@ -102,22 +103,25 @@ COMMANDS
   synth     --out-dir D [--len 2000000] [--reads 10000] [--seed 1]
             [--snp-rate 0.001] [--sub-rate 0.004]
   index     --ref R.fasta --out index.bin [--read-len 150]
-  map       --ref R.fasta --reads R.fastq [--engine xla|rust|bitpal]
+  map       --ref R.fasta --reads R.fastq|- [--engine xla|rust|bitpal]
             (or --index index.bin instead of --ref)
             [--max-reads 25000] [--low-th 3] [--batch 256] [--min-only]
             [--revcomp] [--threads 1] [--out mappings.tsv]
   evaluate  --ref R.fasta --reads R.fastq --truth truth.tsv
             [--engine xla|rust|bitpal] [--tolerance 5] [--threads 1]
-  simulate  --ref R.fasta --reads R.fastq [--engine rust|bitpal]
+  simulate  --ref R.fasta --reads R.fastq|- [--engine rust|bitpal]
             [--max-reads 25000] [--low-th 3] [--scale 389000000]
             [--batched-affine] [--constructive] [--threads 1]
   figures   [--fig 8|9|10a|10b|10c|table4|motivation|headline|all]
   crossbar
   config
 
-`--threads N` shards work across N worker threads (minimizer-hash
-partition; output is byte-identical for any N). The default is 1, or
-the DART_PIM_THREADS environment variable when set.
+`map` and `simulate` stream their FASTQ: `--reads -` reads stdin, and
+memory stays bounded (O(epoch + threads x batch), not O(input)) no
+matter how large the read set is — TSV rows are emitted as reads
+finish. `--threads N` shards work across N worker threads
+(minimizer-hash partition; output is byte-identical for any N). The
+default is 1, or the DART_PIM_THREADS environment variable when set.
 
 ENGINES: `rust` is the scalar reference engine; `bitpal` computes the
 linear filter bit-parallel (64 instances per machine word, identical
@@ -231,32 +235,78 @@ fn load_reference(ref_path: &str) -> Result<crate::genome::encode::Seq> {
         .seq)
 }
 
-/// Load the reference (or prebuilt index) and read set named by
-/// `--ref`/`--index` and `--reads`.
-pub fn load_inputs(args: &Args) -> Result<(MinimizerIndex, Vec<ReadRecord>)> {
-    let reads_path = args.get("reads").context("--reads required")?;
-    let fastq = load_fastq(reads_path)?;
-    anyhow::ensure!(!fastq.is_empty(), "empty FASTQ");
-    let read_len = fastq[0].seq.len();
-    let index = if let Some(idx_path) = args.get("index") {
-        let idx = crate::index::load_index(idx_path)?;
+/// Open `--reads` as a buffered byte stream; `-` streams stdin.
+fn open_reads(path: &str) -> Result<Box<dyn BufRead>> {
+    if path == "-" {
+        Ok(Box::new(io::BufReader::new(io::stdin())))
+    } else {
+        let f = std::fs::File::open(path).with_context(|| format!("opening FASTQ {path}"))?;
+        Ok(Box::new(io::BufReader::new(f)))
+    }
+}
+
+/// Start streaming `--reads`: peeks the first record to fix the read
+/// length (which determines the index geometry), then yields
+/// `ReadRecord`s with dense sequential ids. Parser memory is O(1) in
+/// the stream length; a length-divergent or malformed record errors
+/// with its ordinal and name.
+fn stream_reads(path: &str) -> Result<(usize, impl Iterator<Item = Result<ReadRecord>>)> {
+    let mut stream = FastqStream::new(open_reads(path)?);
+    let first = match stream.next() {
+        None => bail!("empty FASTQ {path}"),
+        Some(r) => r.with_context(|| format!("reading FASTQ {path}"))?,
+    };
+    let read_len = first.seq.len();
+    anyhow::ensure!(read_len > 0, "first FASTQ record of {path} has an empty sequence");
+    let path_owned = path.to_string();
+    let iter = std::iter::once(Ok(first))
+        .chain(stream.map(move |r| r.with_context(|| format!("reading FASTQ {path_owned}"))))
+        .enumerate()
+        .map(move |(i, r)| {
+            let rec = r?;
+            anyhow::ensure!(
+                rec.seq.len() == read_len,
+                "FASTQ record #{} ({:?}) is {} bp; the pipeline requires a uniform read \
+                 length ({} bp, set by the first record)",
+                i + 1,
+                rec.name,
+                rec.seq.len(),
+                read_len
+            );
+            Ok(ReadRecord { id: i as u32, seq: rec.seq, truth_pos: 0, errors: 0 })
+        });
+    Ok((read_len, iter))
+}
+
+/// Load the prebuilt index (`--index`) or build one from `--ref`,
+/// checked against the read stream's geometry.
+fn load_or_build_index(args: &Args, read_len: usize) -> Result<MinimizerIndex> {
+    if let Some(idx_path) = args.get("index") {
+        let idx = crate::index::load_index(idx_path)
+            .with_context(|| format!("loading index {idx_path}"))?;
         anyhow::ensure!(
             idx.read_len == read_len,
             "index was built for {} bp reads, FASTQ has {} bp",
             idx.read_len,
             read_len
         );
-        idx
+        Ok(idx)
     } else {
         let ref_path = args.get("ref").context("--ref or --index required")?;
         let reference = load_reference(ref_path)?;
-        MinimizerIndex::build(reference, K, W, read_len)
-    };
-    let reads: Vec<ReadRecord> = fastq
-        .into_iter()
-        .enumerate()
-        .map(|(i, r)| ReadRecord { id: i as u32, seq: r.seq, truth_pos: 0, errors: 0 })
-        .collect();
+        Ok(MinimizerIndex::build(reference, K, W, read_len))
+    }
+}
+
+/// Load the reference (or prebuilt index) and the **whole** read set —
+/// the collect wrapper over the internal read stream for subcommands
+/// that genuinely need random access (`evaluate` joins against a truth
+/// table). `map`/`simulate` stream instead.
+pub fn load_inputs(args: &Args) -> Result<(MinimizerIndex, Vec<ReadRecord>)> {
+    let reads_path = args.get("reads").context("--reads required")?;
+    let (read_len, reads) = stream_reads(reads_path)?;
+    let reads: Vec<ReadRecord> = reads.collect::<Result<_>>()?;
+    let index = load_or_build_index(args, read_len)?;
     Ok((index, reads))
 }
 
@@ -274,11 +324,21 @@ fn load_truth(path: &str, n: usize) -> Result<Vec<u32>> {
     Ok(truth)
 }
 
-fn run_pipeline(
+/// Stream a read set through the pipeline on the `--engine` selected by
+/// the CLI; per-read decisions leave through `sink` in read order as
+/// they become final (the single engine-dispatch site — `map` streams
+/// TSV rows, `evaluate` collects via [`run_pipeline`]).
+fn run_pipeline_stream<I, R, S>(
     args: &Args,
     index: &MinimizerIndex,
-    reads: &[ReadRecord],
-) -> Result<(Vec<Option<crate::coordinator::FinalMapping>>, crate::coordinator::metrics::Metrics)> {
+    reads: I,
+    sink: S,
+) -> Result<crate::coordinator::metrics::Metrics>
+where
+    I: IntoIterator<Item = Result<R>>,
+    R: std::borrow::Borrow<ReadRecord>,
+    S: FnMut(u32, Option<crate::coordinator::FinalMapping>) -> Result<()>,
+{
     anyhow::ensure!(
         index.read_len == READ_LEN || args.get("engine") != Some("xla"),
         "the AOT artifacts target {}bp reads; use --engine rust or bitpal for other lengths",
@@ -304,15 +364,13 @@ fn run_pipeline(
     match args.get("engine").unwrap_or(default_engine) {
         "rust" => {
             let cfg = PipelineConfig { worker_engine: EngineKind::Rust, ..cfg };
-            let mut p = Pipeline::new(index, cfg, RustEngine);
-            p.map_reads(reads)
+            Pipeline::new(index, cfg, RustEngine).map_stream(reads, sink)
         }
         "bitpal" => {
             // bit-parallel filter engine; Send, so worker shards run it
             // too and --threads N composes
             let cfg = PipelineConfig { worker_engine: EngineKind::Bitpal, ..cfg };
-            let mut p = Pipeline::new(index, cfg, BitpalEngine::new());
-            p.map_reads(reads)
+            Pipeline::new(index, cfg, BitpalEngine::new()).map_stream(reads, sink)
         }
         #[cfg(feature = "pjrt")]
         "xla" => {
@@ -332,8 +390,7 @@ fn run_pipeline(
                 engine.platform(),
                 engine.manifest().artifacts.len()
             );
-            let mut p = Pipeline::new(index, cfg, engine);
-            p.map_reads(reads)
+            Pipeline::new(index, cfg, engine).map_stream(reads, sink)
         }
         #[cfg(not(feature = "pjrt"))]
         "xla" => bail!(
@@ -344,28 +401,58 @@ fn run_pipeline(
     }
 }
 
+/// Collect wrapper over [`run_pipeline_stream`] for subcommands that
+/// post-process the whole mapping vector (`evaluate`).
+fn run_pipeline(
+    args: &Args,
+    index: &MinimizerIndex,
+    reads: &[ReadRecord],
+) -> Result<(Vec<Option<crate::coordinator::FinalMapping>>, crate::coordinator::metrics::Metrics)> {
+    let mut out = Vec::with_capacity(reads.len());
+    let metrics = run_pipeline_stream(args, index, reads.iter().map(Ok), |_, m| {
+        out.push(m);
+        Ok(())
+    })?;
+    Ok((out, metrics))
+}
+
 fn cmd_map(args: &Args) -> Result<()> {
-    let (index, reads) = load_inputs(args)?;
-    let (mappings, metrics) = run_pipeline(args, &index, &reads)?;
-    eprintln!("{}", metrics.summary());
-    let mut out = String::from("read_id\tpos\tstrand\tdist\tcigar\tcandidates\n");
-    for m in mappings.iter().flatten() {
-        out.push_str(&format!(
-            "{}\t{}\t{}\t{}\t{}\t{}\n",
-            m.read_id,
-            m.pos,
-            if m.reverse { '-' } else { '+' },
-            m.dist,
-            m.cigar,
-            m.candidates
-        ));
-    }
-    match args.get("out") {
+    let reads_path = args.get("reads").context("--reads required")?;
+    let (read_len, reads) = stream_reads(reads_path)?;
+    let index = load_or_build_index(args, read_len)?;
+    let out_path = args.get("out");
+    let mut out: Box<dyn Write> = match out_path {
         Some(path) => {
-            std::fs::write(path, out)?;
-            eprintln!("wrote {path}");
+            let f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+            Box::new(io::BufWriter::new(f))
         }
-        None => print!("{out}"),
+        None => Box::new(io::BufWriter::new(io::stdout())),
+    };
+    out.write_all(b"read_id\tpos\tstrand\tdist\tcigar\tcandidates\n")?;
+    // streaming TSV emitter: rows leave as epochs complete, so memory
+    // stays O(epoch + threads x batch) no matter the FASTQ size (stdin
+    // included); row order and bytes are identical for every --threads
+    // and --engine setting
+    let metrics = run_pipeline_stream(args, &index, reads, |_, m| {
+        if let Some(m) = m {
+            writeln!(
+                out,
+                "{}\t{}\t{}\t{}\t{}\t{}",
+                m.read_id,
+                m.pos,
+                if m.reverse { '-' } else { '+' },
+                m.dist,
+                m.cigar,
+                m.candidates
+            )?;
+        }
+        Ok(())
+    })?;
+    out.flush()?;
+    drop(out);
+    eprintln!("{}", metrics.summary());
+    if let Some(path) = out_path {
+        eprintln!("wrote {path}");
     }
     Ok(())
 }
@@ -392,7 +479,9 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let (index, reads) = load_inputs(args)?;
+    let reads_path = args.get("reads").context("--reads required")?;
+    let (read_len, reads) = stream_reads(reads_path)?;
+    let index = load_or_build_index(args, read_len)?;
     let cfg = dart_config(args)?;
     let threads = args.get_usize("threads", default_threads())?;
     let engine_name = args.get("engine").unwrap_or(crate::runtime::default_engine().name());
@@ -403,7 +492,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         )
     })?;
     let sim = FullSystemSim::new(&index, cfg.clone());
-    let counts = sim.simulate_threaded_with(&reads, threads, engine);
+    // streams the FASTQ through the bounded sim shards (O(batch) in
+    // flight), exactly like `map`
+    let counts = sim.simulate_stream(reads, threads, engine)?;
     let cost = if args.flag("constructive") {
         CostSource::Constructive
     } else {

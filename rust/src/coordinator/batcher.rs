@@ -6,6 +6,8 @@
 //! single PJRT execution; the batcher accumulates work items and flushes
 //! them at the artifact batch size (the engine pads partial batches).
 
+use std::sync::Arc;
+
 use crate::params::window_len;
 
 /// Provenance of one WF instance (flows through to the results).
@@ -28,19 +30,20 @@ pub struct WorkTag {
     pub reverse: bool,
 }
 
-/// One batch ready for the engine. Reads are borrowed from the input
-/// read set (zero-copy — §Perf opt 1); windows are owned (computed per
-/// instance).
-pub struct Batch<'a> {
+/// One batch ready for the engine. Reads are shared slices (one
+/// refcounted allocation per oriented read, cloned per instance — the
+/// streaming replacement for the old borrowed-slice zero-copy); windows
+/// are owned (computed per instance).
+pub struct Batch {
     /// Provenance of each instance.
     pub tags: Vec<WorkTag>,
-    /// Read sequences, borrowed from the input read set.
-    pub reads: Vec<&'a [u8]>,
+    /// Read sequences (shared; many instances of one read clone one Arc).
+    pub reads: Vec<Arc<[u8]>>,
     /// Reference windows, owned (extracted per instance).
     pub wins: Vec<Vec<u8>>,
 }
 
-impl<'a> Batch<'a> {
+impl Batch {
     /// Number of instances in the batch.
     pub fn len(&self) -> usize {
         self.tags.len()
@@ -50,16 +53,26 @@ impl<'a> Batch<'a> {
     pub fn is_empty(&self) -> bool {
         self.tags.is_empty()
     }
+
+    /// Borrow the read sequences as the `&[&[u8]]` shape engines take.
+    pub fn read_slices(&self) -> Vec<&[u8]> {
+        self.reads.iter().map(|r| r.as_ref()).collect()
+    }
+
+    /// Borrow the windows as the `&[&[u8]]` shape engines take.
+    pub fn win_slices(&self) -> Vec<&[u8]> {
+        self.wins.iter().map(|w| w.as_slice()).collect()
+    }
 }
 
 /// Accumulates work items; yields full batches eagerly.
-pub struct Batcher<'a> {
+pub struct Batcher {
     target: usize,
     read_len: usize,
-    pending: Batch<'a>,
+    pending: Batch,
 }
 
-impl<'a> Batcher<'a> {
+impl Batcher {
     /// `target` is the flush size (use the largest artifact batch for
     /// throughput; smaller for latency).
     pub fn new(target: usize, read_len: usize) -> Self {
@@ -72,7 +85,7 @@ impl<'a> Batcher<'a> {
     }
 
     /// Add one work item; returns a full batch when the target is hit.
-    pub fn push(&mut self, tag: WorkTag, read: &'a [u8], win: Vec<u8>) -> Option<Batch<'a>> {
+    pub fn push(&mut self, tag: WorkTag, read: Arc<[u8]>, win: Vec<u8>) -> Option<Batch> {
         debug_assert_eq!(read.len(), self.read_len);
         debug_assert_eq!(win.len(), window_len(self.read_len));
         self.pending.tags.push(tag);
@@ -85,8 +98,8 @@ impl<'a> Batcher<'a> {
         }
     }
 
-    /// Flush whatever is pending (end of stream).
-    pub fn flush(&mut self) -> Option<Batch<'a>> {
+    /// Flush whatever is pending (end of stream or epoch boundary).
+    pub fn flush(&mut self) -> Option<Batch> {
         if self.pending.is_empty() {
             None
         } else {
@@ -99,7 +112,7 @@ impl<'a> Batcher<'a> {
         self.pending.len()
     }
 
-    fn take(&mut self) -> Batch<'a> {
+    fn take(&mut self) -> Batch {
         std::mem::replace(
             &mut self.pending,
             Batch { tags: Vec::new(), reads: Vec::new(), wins: Vec::new() },
@@ -112,9 +125,7 @@ mod tests {
     use super::*;
     use crate::params::{window_len, READ_LEN};
 
-    const READ: [u8; READ_LEN] = [0u8; READ_LEN];
-
-    fn item(i: u32) -> (WorkTag, &'static [u8], Vec<u8>) {
+    fn item(i: u32) -> (WorkTag, Arc<[u8]>, Vec<u8>) {
         (
             WorkTag {
                 read_id: i,
@@ -125,7 +136,7 @@ mod tests {
                 xbar: i,
                 reverse: false,
             },
-            &READ,
+            Arc::from(vec![0u8; READ_LEN]),
             vec![1u8; window_len(READ_LEN)],
         )
     }
@@ -141,6 +152,8 @@ mod tests {
         let batch = b.push(t, r, w).expect("full batch");
         assert_eq!(batch.len(), 3);
         assert_eq!(batch.tags[1].read_id, 1);
+        assert_eq!(batch.read_slices().len(), 3);
+        assert_eq!(batch.win_slices().len(), 3);
         assert_eq!(b.pending_len(), 0);
     }
 

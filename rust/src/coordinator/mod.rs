@@ -11,20 +11,26 @@
 //!                  PJRT call over many instances (steps 3, 6)
 //! * [`shard`]    — per-shard execution of steps 2-6: the minimizer-hash
 //!                  partition that mirrors the per-crossbar data
-//!                  organization (§V-B), and the worker that runs FIFO
-//!                  admission, filtering, alignment, and traceback over
-//!                  one shard's disjoint slice
+//!                  organization (§V-B), and the bounded incremental
+//!                  worker that runs FIFO admission, filtering,
+//!                  alignment, and traceback over one shard's disjoint
+//!                  slice with O(batch) in-flight state
 //! * [`state`]    — per-read best-so-far PL aggregation, the main
 //!                  RISC-V's bookkeeping (step 7), with the deterministic
 //!                  tie-break that makes the shard merge order-free
 //! * [`metrics`]  — mergeable counters that feed the full-system
 //!                  simulator's Eq. 6/7 reports
-//! * [`pipeline`] — the end-to-end mapper: single-threaded on the
-//!                  configured engine, or sharded across worker threads
-//!                  (`PipelineConfig::threads`) with byte-identical output
-//! * [`scheduler`]— the chunked streaming driver (producer/compute stage
-//!                  threads + channels; std::thread + mpsc — this offline
-//!                  build has no tokio)
+//! * [`pipeline`] — the end-to-end mapper: `Pipeline::map_stream` pulls
+//!                  reads from any source (FASTQ file, stdin, generator),
+//!                  feeds shard workers through bounded backpressured
+//!                  channels, and emits decisions in read order at epoch
+//!                  boundaries — memory O(epoch + threads × batch),
+//!                  output byte-identical for every thread count and
+//!                  epoch size; `map_reads` is its collect wrapper
+//! * [`scheduler`]— the older chunked driver (producer/compute stage
+//!                  threads + channels) retained for chunk-granular
+//!                  hand-off experiments; `pipeline::map_stream` is the
+//!                  production streaming path
 //!
 //! See `ARCHITECTURE.md` at the repository root for the dataflow diagram
 //! and the threading/determinism contract.

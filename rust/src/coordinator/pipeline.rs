@@ -9,6 +9,27 @@
 //! (RISC-V-offload) pairs always run on the scalar Rust path, mirroring
 //! the paper's heterogeneous split.
 //!
+//! # Streaming, bounded-memory execution
+//!
+//! [`Pipeline::map_stream`] is the primary entry point: it pulls reads
+//! from any fallible iterator (a [`crate::genome::fastq::FastqStream`]
+//! over a file or stdin, a synthetic generator, a slice), routes them,
+//! and pushes final per-read decisions into a sink **in ascending
+//! read-id order** as they become final. In-flight state is bounded:
+//!
+//! * routed items travel to shard workers over **bounded** channels
+//!   (`CHANNEL_DEPTH` chunks of `SHARD_CHUNK` items), so a slow
+//!   filter stage backpressures routing exactly like a full hardware
+//!   Reads FIFO pauses the read stream (paper §V-C);
+//! * workers execute every engine batch the moment it fills
+//!   (O(batch) in-flight WF state, see [`super::shard`]);
+//! * every [`PipelineConfig::stream_epoch`] reads, the coordinator
+//!   drains the workers and emits that epoch's decisions, so the
+//!   aggregation state is O(epoch), not O(workload).
+//!
+//! [`Pipeline::map_reads`] survives as a thin collect wrapper over
+//! `map_stream` for slice-shaped workloads and tests.
+//!
 //! # Sharded execution
 //!
 //! With [`PipelineConfig::threads`] > 1, routed pairs are partitioned by
@@ -18,17 +39,17 @@
 //! bit-parallel bitpal engine — both `Send`, unlike PJRT), its own
 //! batchers, and the Reads FIFOs of its private crossbar slice — the
 //! host mirror of the paper's per-crossbar data organization (§V-B).
-//! Output is byte-identical for every thread count and engine kind; see
-//! [`super::shard`] for the determinism contract.
+//! Output is byte-identical for every thread count, engine kind, and
+//! epoch size; see [`super::shard`] for the determinism contract.
 
-use std::sync::mpsc;
+use std::borrow::Borrow;
+use std::sync::{mpsc, Arc};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::align::Cigar;
-use crate::genome::encode::Seq;
 use crate::genome::ReadRecord;
 use crate::index::{shard_of, MinimizerIndex};
 use crate::pim::DartPimConfig;
@@ -36,7 +57,7 @@ use crate::runtime::{EngineKind, WfEngine};
 
 use super::metrics::Metrics;
 use super::router::Router;
-use super::shard::{run_shard, ShardItem, ShardWorker};
+use super::shard::{ShardItem, ShardWorker};
 use super::state::{AffineOutcome, BestSoFar};
 
 /// Which filtered instances advance to affine alignment.
@@ -66,8 +87,12 @@ pub fn default_threads() -> usize {
 /// Number of [`ShardItem`]s streamed to a worker per channel send.
 const SHARD_CHUNK: usize = 512;
 /// Bounded depth of each worker's item channel (backpressure, like the
-/// hardware Reads FIFO bounds the read stream).
+/// hardware Reads FIFO bounds the read stream): at most
+/// `CHANNEL_DEPTH × SHARD_CHUNK` items are queued per shard before the
+/// producer's routing stalls.
 const CHANNEL_DEPTH: usize = 4;
+/// Default [`PipelineConfig::stream_epoch`].
+pub const STREAM_EPOCH_READS: usize = 2048;
 
 /// Pipeline configuration.
 #[derive(Debug, Clone)]
@@ -83,11 +108,12 @@ pub struct PipelineConfig {
     /// (real sequencers emit both strands; the paper elides this, but a
     /// practical mapper needs it — extension feature, DESIGN.md §7).
     pub handle_revcomp: bool,
-    /// Worker shards for [`Pipeline::map_reads`]. 1 = run in the calling
-    /// thread on the pipeline's own engine; N > 1 = partition routed
-    /// pairs by minimizer hash across N worker threads, each owning an
-    /// engine built from [`PipelineConfig::worker_engine`]. Output is
-    /// byte-identical for every value. Defaults to [`default_threads`].
+    /// Worker shards for the mapping entry points. 1 = run in the
+    /// calling thread on the pipeline's own engine; N > 1 = partition
+    /// routed pairs by minimizer hash across N worker threads, each
+    /// owning an engine built from [`PipelineConfig::worker_engine`].
+    /// Output is byte-identical for every value. Defaults to
+    /// [`default_threads`].
     pub threads: usize,
     /// Engine each worker shard constructs on its own thread
     /// ([`EngineKind::build`]); the single-threaded path ignores this
@@ -95,6 +121,13 @@ pub struct PipelineConfig {
     /// [`crate::runtime::default_engine`] (the `DART_PIM_ENGINE`
     /// environment variable, else the scalar Rust engine).
     pub worker_engine: EngineKind,
+    /// Reads per streaming epoch: the emission / memory granularity of
+    /// [`Pipeline::map_stream`]. Peak aggregation state is O(epoch)
+    /// reads regardless of input size; mapping decisions are emitted in
+    /// read order at every epoch boundary. The value never changes any
+    /// mapping decision (engine numerics are per-instance), only
+    /// latency/memory. Defaults to [`STREAM_EPOCH_READS`].
+    pub stream_epoch: usize,
 }
 
 impl Default for PipelineConfig {
@@ -106,6 +139,7 @@ impl Default for PipelineConfig {
             handle_revcomp: false,
             threads: default_threads(),
             worker_engine: crate::runtime::default_engine(),
+            stream_epoch: STREAM_EPOCH_READS,
         }
     }
 }
@@ -126,6 +160,17 @@ pub struct FinalMapping {
     /// true if the read mapped in reverse-complement orientation.
     pub reverse: bool,
 }
+
+/// Message streamed to one shard worker.
+enum WorkerMsg {
+    /// A chunk of routed items, in emission order.
+    Items(Vec<ShardItem>),
+    /// Epoch barrier: drain and ack with the outcomes so far.
+    Flush,
+}
+
+/// One worker's answer to a [`WorkerMsg::Flush`] (or its terminal error).
+type EpochAck = (usize, Result<Vec<AffineOutcome>>);
 
 /// The mapper.
 ///
@@ -174,81 +219,158 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
         self.engine.name()
     }
 
-    /// Map a read set end to end. Returns per-read decisions (indexed by
-    /// read id) and run metrics.
-    ///
-    /// With `cfg.threads` > 1 the routed pairs are executed by worker
-    /// shards; mappings, CIGARs, and workload counters are byte-identical
-    /// to the single-threaded path (see
-    /// [`Metrics::invariant_counters`]).
+    /// Map a materialized read set end to end — a thin collect wrapper
+    /// over [`Pipeline::map_stream`]. Returns per-read decisions
+    /// (indexed by read id) and run metrics. Reads must carry dense
+    /// sequential ids (`reads[i].id == i`), which every generator in
+    /// this crate produces.
     pub fn map_reads(
         &mut self,
         reads: &[ReadRecord],
     ) -> Result<(Vec<Option<FinalMapping>>, Metrics)> {
+        let mut out = Vec::with_capacity(reads.len());
+        let metrics = self.map_stream(
+            reads.iter().enumerate().map(|(i, r)| {
+                debug_assert_eq!(r.id as usize, i, "map_reads requires dense sequential ids");
+                Ok(r)
+            }),
+            |_, m| {
+                out.push(m);
+                Ok(())
+            },
+        )?;
+        Ok((out, metrics))
+    }
+
+    /// Map a read stream end to end with bounded memory.
+    ///
+    /// Reads are pulled from `reads` (any fallible iterator; ids are
+    /// assigned by arrival order) and each read's final decision is
+    /// pushed into `sink(read_id, decision)` — every id exactly once, in
+    /// ascending order, `None` for unmapped reads. Decisions are emitted
+    /// at epoch boundaries ([`PipelineConfig::stream_epoch`] reads), so
+    /// peak memory is O(epoch + threads × batch) regardless of the
+    /// stream length.
+    ///
+    /// Mappings, CIGARs, and workload counters are byte-identical for
+    /// every `threads` / `worker_engine` / `stream_epoch` setting (see
+    /// [`Metrics::invariant_counters`]); `tests/stream_parity.rs` and
+    /// `tests/shard_determinism.rs` hold that contract.
+    ///
+    /// An `Err` from the iterator, the sink, or a worker engine aborts
+    /// the run and is returned (a worker *panic* propagates as a panic
+    /// with its original payload).
+    ///
+    /// `reads` may yield owned records (a parser) or `&ReadRecord` (a
+    /// slice walk — no copies).
+    pub fn map_stream<I, R, S>(&mut self, reads: I, mut sink: S) -> Result<Metrics>
+    where
+        I: IntoIterator<Item = Result<R>>,
+        R: Borrow<ReadRecord>,
+        S: FnMut(u32, Option<FinalMapping>) -> Result<()>,
+    {
+        if self.cfg.threads.max(1) == 1 {
+            self.map_stream_single(reads, &mut sink)
+        } else {
+            self.map_stream_sharded(reads, &mut sink)
+        }
+    }
+
+    /// Single-shard streaming: route inline, run on the pipeline's own
+    /// engine (the PJRT path when compiled in).
+    fn map_stream_single<I, R, S>(&mut self, reads: I, sink: &mut S) -> Result<Metrics>
+    where
+        I: IntoIterator<Item = Result<R>>,
+        R: Borrow<ReadRecord>,
+        S: FnMut(u32, Option<FinalMapping>) -> Result<()>,
+    {
+        let index = self.index;
+        let router = &self.router;
+        let cfg = &self.cfg;
+        let engine = &mut self.engine;
+        let epoch = cfg.stream_epoch.max(1);
+
         let t_start = Instant::now();
-        let n_shards = self.cfg.threads.max(1);
-        let mut metrics = Metrics { n_reads: reads.len() as u64, ..Default::default() };
-        let mut best = BestSoFar::new(reads.len());
-
-        // reverse-complement orientations, materialized once per read so
-        // the zero-copy batches can borrow them (empty when disabled)
-        let rc_seqs: Vec<Seq> = if self.cfg.handle_revcomp {
-            reads.iter().map(|r| crate::genome::revcomp(&r.seq)).collect()
-        } else {
-            Vec::new()
-        };
-
-        if n_shards == 1 {
-            // ---- Single shard: route inline, run on the pipeline's own
-            // engine (the PJRT path when compiled in) ----
+        let mut metrics = Metrics::default();
+        let mut worker = ShardWorker::new(index, cfg);
+        let mut chunk: Vec<ShardItem> = Vec::new();
+        let mut t_route = Duration::ZERO;
+        let mut next_pair = 0u32;
+        let mut next_id = 0u32;
+        let mut epoch_start = 0u32;
+        for rec in reads {
+            let rec = rec?;
+            let read = rec.borrow();
             let t0 = Instant::now();
-            let mut items: Vec<ShardItem<'_>> = Vec::new();
-            let mut next_pair = 0u32;
-            for read in reads {
-                self.route_oriented(read, &rc_seqs, &mut next_pair, |item| items.push(item));
+            route_read(router, index, cfg.handle_revcomp, next_id, read, &mut next_pair, |it| {
+                chunk.push(it)
+            });
+            t_route += t0.elapsed();
+            worker.ingest(&mut *engine, chunk.drain(..))?;
+            next_id = bump_read_id(next_id)?;
+            if (next_id - epoch_start) as usize >= epoch {
+                let outs = worker.drain(&mut *engine)?;
+                emit_epoch(epoch_start, next_id, outs, sink, &mut metrics)?;
+                epoch_start = next_id;
             }
-            let t_route = t0.elapsed();
-            let (outcomes, m) = run_shard(self.index, &self.cfg, &mut self.engine, &items)?;
-            for o in outcomes {
-                best.update(o);
-            }
-            metrics.merge(m);
-            metrics.t_seed += t_route;
-        } else {
-            // ---- Sharded: stream routed pairs to worker threads over
-            // bounded channels, partitioned by minimizer hash ----
-            let index = self.index;
-            let cfg = &self.cfg;
-            let (shard_results, t_route) = thread::scope(|s| {
-                let mut txs = Vec::with_capacity(n_shards);
-                let mut handles = Vec::with_capacity(n_shards);
-                for _ in 0..n_shards {
-                    let (tx, rx) = mpsc::sync_channel::<Vec<ShardItem<'_>>>(CHANNEL_DEPTH);
-                    txs.push(tx);
-                    handles.push(s.spawn(move || {
-                        // ingest chunks as they stream in (FIFO
-                        // admission + window extraction overlap the
-                        // producer's routing); compute starts when the
-                        // producer hangs up
-                        let mut worker = ShardWorker::new(index, cfg);
-                        while let Ok(chunk) = rx.recv() {
-                            worker.ingest(chunk);
-                        }
-                        // the engine is constructed on its owning thread
-                        // (every EngineKind variant is Send-safe to build
-                        // and run here; the PJRT engine never is)
-                        let mut engine = cfg.worker_engine.build();
-                        worker.finish(engine.as_mut())
-                    }));
-                }
+        }
+        let (outs, m) = worker.finish(&mut *engine)?;
+        emit_epoch(epoch_start, next_id, outs, sink, &mut metrics)?;
+        metrics.merge(m);
+        metrics.t_seed += t_route;
+        metrics.n_reads = u64::from(next_id);
+        metrics.t_total = t_start.elapsed();
+        Ok(metrics)
+    }
 
-                // producer (this thread): seed, route, partition, send
+    /// Sharded streaming: feed persistent per-shard workers over bounded
+    /// channels, with an epoch flush/ack barrier for ordered emission.
+    fn map_stream_sharded<I, R, S>(&mut self, reads: I, sink: &mut S) -> Result<Metrics>
+    where
+        I: IntoIterator<Item = Result<R>>,
+        R: Borrow<ReadRecord>,
+        S: FnMut(u32, Option<FinalMapping>) -> Result<()>,
+    {
+        let n_shards = self.cfg.threads;
+        let index = self.index;
+        let router = &self.router;
+        let cfg = &self.cfg;
+        let epoch = cfg.stream_epoch.max(1);
+
+        let t_start = Instant::now();
+        let (mut metrics, n_reads) = thread::scope(|s| -> Result<(Metrics, u32)> {
+            let (otx, orx) = mpsc::channel::<EpochAck>();
+            let mut txs = Vec::with_capacity(n_shards);
+            let mut handles = Vec::with_capacity(n_shards);
+            for sh in 0..n_shards {
+                let (tx, rx) = mpsc::sync_channel::<WorkerMsg>(CHANNEL_DEPTH);
+                txs.push(tx);
+                let otx = otx.clone();
+                handles.push(s.spawn(move || worker_loop(index, cfg, sh, rx, otx)));
+            }
+            // only workers hold ack senders: a hangup means they all died
+            drop(otx);
+
+            // producer (this thread): pull, route, partition, send
+            let mut pending: Vec<Vec<ShardItem>> =
+                (0..n_shards).map(|_| Vec::with_capacity(SHARD_CHUNK)).collect();
+            let mut metrics = Metrics::default();
+            let mut t_route = Duration::ZERO;
+            let mut next_pair = 0u32;
+            let mut next_id = 0u32;
+            let mut epoch_start = 0u32;
+            for rec in reads {
+                let rec = rec?;
+                let read = rec.borrow();
                 let t0 = Instant::now();
-                let mut pending: Vec<Vec<ShardItem<'_>>> =
-                    (0..n_shards).map(|_| Vec::with_capacity(SHARD_CHUNK)).collect();
-                let mut next_pair = 0u32;
-                for read in reads {
-                    self.route_oriented(read, &rc_seqs, &mut next_pair, |item| {
+                route_read(
+                    router,
+                    index,
+                    cfg.handle_revcomp,
+                    next_id,
+                    read,
+                    &mut next_pair,
+                    |item| {
                         let sh = shard_of(item.kmer, n_shards);
                         pending[sh].push(item);
                         if pending[sh].len() >= SHARD_CHUNK {
@@ -256,91 +378,229 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
                                 &mut pending[sh],
                                 Vec::with_capacity(SHARD_CHUNK),
                             );
-                            // a send error means the worker died; its
-                            // join below surfaces the cause
-                            let _ = txs[sh].send(full);
+                            // a send error means the worker died; the
+                            // flush barrier below surfaces its error
+                            let _ = txs[sh].send(WorkerMsg::Items(full));
                         }
-                    });
+                    },
+                );
+                t_route += t0.elapsed();
+                next_id = bump_read_id(next_id)?;
+                if (next_id - epoch_start) as usize >= epoch {
+                    let span = (epoch_start, next_id);
+                    flush_epoch(&txs, &orx, &handles, &mut pending, span, sink, &mut metrics)?;
+                    epoch_start = next_id;
                 }
-                for (sh, tx) in txs.into_iter().enumerate() {
-                    let rest = std::mem::take(&mut pending[sh]);
-                    if !rest.is_empty() {
-                        let _ = tx.send(rest);
-                    }
-                    // tx drops here: the worker's recv loop ends and its
-                    // compute begins
-                }
-                let t_route = t0.elapsed();
-
-                // deterministic merge order: shard 0..N (the arbitration
-                // key makes any order equivalent)
-                let results: Vec<Result<(Vec<AffineOutcome>, Metrics)>> = handles
-                    .into_iter()
-                    .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("shard worker panicked"))))
-                    .collect();
-                (results, t_route)
-            });
-            for r in shard_results {
-                let (outcomes, m) = r?;
-                for o in outcomes {
-                    best.update(o);
-                }
+            }
+            // final (possibly partial or empty) epoch, then hang up
+            let span = (epoch_start, next_id);
+            flush_epoch(&txs, &orx, &handles, &mut pending, span, sink, &mut metrics)?;
+            drop(txs);
+            for h in handles {
+                let m = h.join().map_err(|_| anyhow!("shard worker panicked"))?;
                 metrics.merge(m);
             }
             metrics.t_seed += t_route;
-        }
-
-        // ---- Finalize ----
-        metrics.reads_with_candidates = best.mapped_count() as u64;
+            Ok((metrics, next_id))
+        })?;
+        metrics.n_reads = u64::from(n_reads);
         metrics.t_total = t_start.elapsed();
-        let mappings = best
-            .into_mappings()
-            .into_iter()
-            .enumerate()
-            .map(|(id, m)| {
-                m.map(|b| FinalMapping {
-                    read_id: id as u32,
-                    pos: b.pos,
-                    dist: b.dist,
-                    cigar: b.cigar,
-                    candidates: b.candidates,
-                    reverse: b.reverse,
-                })
-            })
-            .collect();
-        Ok((mappings, metrics))
+        Ok(metrics)
     }
+}
 
-    /// Route one read (both orientations when revcomp handling is on)
-    /// into [`ShardItem`]s, assigning globally sequential pair ids.
-    fn route_oriented<'s>(
-        &self,
-        read: &'s ReadRecord,
-        rc_seqs: &'s [Seq],
-        next_pair: &mut u32,
-        mut emit: impl FnMut(ShardItem<'s>),
-    ) {
-        let mut oriented: Vec<(&'s [u8], bool)> = Vec::with_capacity(2);
-        oriented.push((read.seq.as_slice(), false));
-        if self.cfg.handle_revcomp {
-            oriented.push((rc_seqs[read.id as usize].as_slice(), true));
+/// Advance the dense read-id counter (u32 ids cap a single run at ~4.3 G
+/// reads — an order of magnitude above the paper's 389 M workload).
+fn bump_read_id(next_id: u32) -> Result<u32> {
+    next_id.checked_add(1).ok_or_else(|| anyhow!("read stream exceeds u32 read ids"))
+}
+
+/// Route one read (both orientations when revcomp handling is on) into
+/// [`ShardItem`]s, assigning globally sequential pair ids. The oriented
+/// sequences are materialized once per read as shared slices; every
+/// routed pair clones the refcount, not the bases.
+fn route_read(
+    router: &Router,
+    index: &MinimizerIndex,
+    handle_revcomp: bool,
+    read_id: u32,
+    read: &ReadRecord,
+    next_pair: &mut u32,
+    mut emit: impl FnMut(ShardItem),
+) {
+    let mut oriented: Vec<(Arc<[u8]>, bool)> = Vec::with_capacity(2);
+    oriented.push((Arc::from(read.seq.as_slice()), false));
+    if handle_revcomp {
+        oriented.push((Arc::from(crate::genome::revcomp(&read.seq)), true));
+    }
+    for (seq, reverse) in oriented {
+        for pair in router.route(index, read_id, &seq) {
+            let pair_id = *next_pair;
+            *next_pair += 1;
+            emit(ShardItem {
+                pair_id,
+                read_id,
+                read_offset: pair.read_offset,
+                kmer: pair.kmer,
+                target: pair.target,
+                reverse,
+                seq: seq.clone(),
+            });
         }
-        for &(seq, reverse) in &oriented {
-            for pair in self.router.route(self.index, read.id, seq) {
-                let pair_id = *next_pair;
-                *next_pair += 1;
-                emit(ShardItem {
-                    pair_id,
-                    read_id: read.id,
-                    read_offset: pair.read_offset,
-                    kmer: pair.kmer,
-                    target: pair.target,
-                    reverse,
-                    seq,
-                });
+    }
+}
+
+/// One shard worker's thread body: build the engine locally, ingest item
+/// chunks as they stream in (overlapping the producer's routing), drain
+/// and ack at every flush barrier, and return the shard's metrics at
+/// hangup. Failures are delivered through the ack channel so the
+/// coordinator never blocks on a dead worker.
+fn worker_loop(
+    index: &MinimizerIndex,
+    cfg: &PipelineConfig,
+    sh: usize,
+    rx: mpsc::Receiver<WorkerMsg>,
+    otx: mpsc::Sender<EpochAck>,
+) -> Metrics {
+    // the engine is constructed on its owning thread (every EngineKind
+    // variant is Send-safe to build and run here; the PJRT engine never
+    // is)
+    let mut engine = cfg.worker_engine.build();
+    let mut worker = ShardWorker::new(index, cfg);
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Items(items) => {
+                if let Err(e) = worker.ingest(engine.as_mut(), items) {
+                    let _ = otx.send((sh, Err(e)));
+                    return Metrics::default();
+                }
+            }
+            WorkerMsg::Flush => {
+                let ack = worker.drain(engine.as_mut());
+                let failed = ack.is_err();
+                let _ = otx.send((sh, ack));
+                if failed {
+                    return Metrics::default();
+                }
             }
         }
     }
+    // the producer hangs up only after a final flush: nothing is pending
+    match worker.finish(engine.as_mut()) {
+        Ok((rest, metrics)) => {
+            debug_assert!(rest.is_empty(), "hangup after a final flush leaves no work");
+            metrics
+        }
+        Err(_) => Metrics::default(),
+    }
+}
+
+/// Epoch barrier: ship each shard's leftover chunk plus a flush marker,
+/// collect exactly one ack per worker (or a worker's terminal error),
+/// then fold the epoch's outcomes and emit reads `[start, end)` through
+/// the sink in order.
+#[allow(clippy::too_many_arguments)]
+fn flush_epoch<S>(
+    txs: &[mpsc::SyncSender<WorkerMsg>],
+    orx: &mpsc::Receiver<EpochAck>,
+    handles: &[thread::ScopedJoinHandle<'_, Metrics>],
+    pending: &mut [Vec<ShardItem>],
+    (start, end): (u32, u32),
+    sink: &mut S,
+    metrics: &mut Metrics,
+) -> Result<()>
+where
+    S: FnMut(u32, Option<FinalMapping>) -> Result<()>,
+{
+    for (sh, tx) in txs.iter().enumerate() {
+        if !pending[sh].is_empty() {
+            let items = std::mem::take(&mut pending[sh]);
+            let _ = tx.send(WorkerMsg::Items(items));
+        }
+        let _ = tx.send(WorkerMsg::Flush);
+    }
+    let mut acked = vec![false; txs.len()];
+    let mut n_acked = 0usize;
+    let mut outcomes: Vec<AffineOutcome> = Vec::new();
+    while n_acked < txs.len() {
+        let msg: Option<EpochAck> = match orx.recv_timeout(Duration::from_millis(100)) {
+            Ok(m) => Some(m),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // a worker that died without an ack or an error message
+                // (i.e. panicked) would otherwise hang the run forever
+                let dead = acked.iter().zip(handles).any(|(&a, h)| !a && h.is_finished());
+                if !dead {
+                    None
+                } else if let Ok(m) = orx.try_recv() {
+                    // the dying worker's final message raced the timeout
+                    // (its send happened-before the exit we observed):
+                    // handle it normally instead of masking the cause
+                    Some(m)
+                } else {
+                    // exited with no message at all: the worker panicked.
+                    // Returning unwinds the scope, whose implicit join
+                    // re-raises that panic with its original payload —
+                    // a worker panic surfaces as a panic, not this Err.
+                    bail!("shard worker terminated without delivering epoch results");
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                bail!("all shard workers disconnected mid-epoch");
+            }
+        };
+        match msg {
+            None => {}
+            Some((sh, Ok(outs))) => {
+                debug_assert!(!acked[sh], "one ack per worker per flush");
+                acked[sh] = true;
+                n_acked += 1;
+                outcomes.extend(outs);
+            }
+            Some((_, Err(e))) => return Err(e),
+        }
+    }
+    emit_epoch(start, end, outcomes, sink, metrics)
+}
+
+/// Fold one epoch's outcomes into per-read decisions and push reads
+/// `[start, end)` through the sink in ascending id order. Correctness
+/// rests on the emission-order arbitration key ([`AffineOutcome::key`]):
+/// folding outcomes in *any* arrival order yields identical winners, so
+/// thread count and epoch size never change a byte of output.
+fn emit_epoch<S>(
+    start: u32,
+    end: u32,
+    outcomes: Vec<AffineOutcome>,
+    sink: &mut S,
+    metrics: &mut Metrics,
+) -> Result<()>
+where
+    S: FnMut(u32, Option<FinalMapping>) -> Result<()>,
+{
+    let mut best = BestSoFar::new((end - start) as usize);
+    for mut o in outcomes {
+        debug_assert!(o.read_id >= start && o.read_id < end, "outcome outside its epoch");
+        o.read_id -= start;
+        best.update(o);
+    }
+    for (i, m) in best.into_mappings().into_iter().enumerate() {
+        let read_id = start + i as u32;
+        if m.is_some() {
+            metrics.reads_with_candidates += 1;
+        }
+        sink(
+            read_id,
+            m.map(|b| FinalMapping {
+                read_id,
+                pos: b.pos,
+                dist: b.dist,
+                cigar: b.cigar,
+                candidates: b.candidates,
+                reverse: b.reverse,
+            }),
+        )?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -465,6 +725,89 @@ mod tests {
                 xt.invariant_counters(),
                 "workload counters must not depend on sharding (threads={threads})"
             );
+        }
+    }
+
+    #[test]
+    fn stream_epoch_size_never_changes_output() {
+        let (idx, reads) = setup(40);
+        let run = |threads: usize, stream_epoch: usize| {
+            let c = PipelineConfig { threads, stream_epoch, ..cfg() };
+            let mut p = Pipeline::new(&idx, c, RustEngine);
+            p.map_reads(&reads).unwrap()
+        };
+        let (base, bm) = run(1, STREAM_EPOCH_READS);
+        for (threads, epoch) in [(1usize, 1usize), (1, 7), (4, 7), (4, 16), (3, 1)] {
+            let (m, x) = run(threads, epoch);
+            assert_eq!(base.len(), m.len());
+            for (a, b) in base.iter().zip(&m) {
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => assert_eq!(
+                        (a.pos, a.dist, a.cigar.to_string(), a.candidates, a.reverse),
+                        (b.pos, b.dist, b.cigar.to_string(), b.candidates, b.reverse),
+                        "threads={threads} epoch={epoch}"
+                    ),
+                    _ => panic!("presence mismatch (threads={threads} epoch={epoch})"),
+                }
+            }
+            assert_eq!(
+                bm.invariant_counters(),
+                x.invariant_counters(),
+                "threads={threads} epoch={epoch}"
+            );
+        }
+    }
+
+    #[test]
+    fn map_stream_sink_sees_every_id_in_order() {
+        let (idx, reads) = setup(23);
+        let c = PipelineConfig { threads: 2, stream_epoch: 5, ..cfg() };
+        let mut p = Pipeline::new(&idx, c, RustEngine);
+        let mut seen: Vec<u32> = Vec::new();
+        let metrics = p
+            .map_stream(reads.iter().cloned().map(Ok), |id, _| {
+                seen.push(id);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(seen, (0..23).collect::<Vec<u32>>());
+        assert_eq!(metrics.n_reads, 23);
+    }
+
+    #[test]
+    fn map_stream_propagates_input_errors() {
+        let (idx, reads) = setup(8);
+        for threads in [1usize, 3] {
+            let c = PipelineConfig { threads, stream_epoch: 2, ..cfg() };
+            let mut p = Pipeline::new(&idx, c, RustEngine);
+            let stream = reads
+                .iter()
+                .cloned()
+                .map(Ok)
+                .chain(std::iter::once(Err(anyhow!("bad FASTQ record"))));
+            let err = p.map_stream(stream, |_, _| Ok(())).unwrap_err();
+            assert!(err.to_string().contains("bad FASTQ"), "threads={threads}: {err}");
+        }
+    }
+
+    #[test]
+    fn map_stream_propagates_sink_errors() {
+        let (idx, reads) = setup(12);
+        for threads in [1usize, 3] {
+            let c = PipelineConfig { threads, stream_epoch: 3, ..cfg() };
+            let mut p = Pipeline::new(&idx, c, RustEngine);
+            let mut emitted = 0u32;
+            let err = p
+                .map_stream(reads.iter().cloned().map(Ok), |_, _| {
+                    emitted += 1;
+                    if emitted > 4 {
+                        bail!("sink full")
+                    }
+                    Ok(())
+                })
+                .unwrap_err();
+            assert!(err.to_string().contains("sink full"), "threads={threads}: {err}");
         }
     }
 

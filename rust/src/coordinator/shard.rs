@@ -8,17 +8,24 @@
 //! minimizers — and, because each minimizer owns a contiguous private
 //! crossbar range (see [`super::router`]), a disjoint set of crossbars,
 //! Reads FIFOs, and reference segments. One worker thread per shard then
-//! runs FIFO admission, the batched linear filter, batched affine
+//! runs FIFO admission, the batched WF linear filter, batched affine
 //! alignment, traceback, and the RISC-V offload path over its private
 //! slice, with no synchronization beyond the channel that feeds it.
 //!
-//! A [`ShardWorker`] splits the work into an incremental phase
-//! ([`ShardWorker::ingest`]: FIFO admission, window extraction, batch
-//! packing — runs as items stream in, overlapping the producer's
-//! routing) and a compute phase ([`ShardWorker::finish`]: the batched WF
-//! engine calls, traceback, and the RISC-V offload path).
+//! A [`ShardWorker`] is **incremental and bounded**: [`ShardWorker::ingest`]
+//! runs FIFO admission and window extraction as items stream in, and
+//! executes every engine batch the moment it fills, so in-flight state is
+//! O(batch), not O(workload). [`ShardWorker::drain`] is the epoch
+//! barrier the streaming pipeline uses to force out partially-filled
+//! batches and collect the outcomes accumulated so far;
+//! [`ShardWorker::finish`] is the end-of-stream drain that also yields
+//! the shard's [`Metrics`]. Long-lived state that must persist across
+//! epochs — the per-crossbar FIFO maxReads accounting — lives on the
+//! worker, which is why the streaming pipeline keeps one worker per shard
+//! alive for the whole run.
 //!
-//! Determinism contract (held by `tests/shard_determinism.rs`):
+//! Determinism contract (held by `tests/shard_determinism.rs` and
+//! `tests/stream_parity.rs`):
 //!
 //! * Pair ids are assigned by the serial routing stage, so they are
 //!   identical for every shard count.
@@ -27,13 +34,16 @@
 //!   emission order), so maxReads drops are identical.
 //! * Workers emit [`AffineOutcome`]s whose arbitration key is the serial
 //!   emission order; [`super::state::BestSoFar`] resolves full ties with
-//!   it, so the merged winners are identical under any interleaving.
+//!   it, so the merged winners are identical under any interleaving —
+//!   and under any epoch (drain) granularity, since engine numerics are
+//!   per-instance and batch boundaries carry no state.
 //! * Workload counters in [`Metrics`] are item-local sums and merge to
 //!   identical totals; only the batch-shape counters
 //!   (`linear_batches`/`affine_batches`) and wall-clock timings depend on
-//!   the shard count.
+//!   the shard count and epoch size.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -52,9 +62,12 @@ use super::router::Target;
 use super::state::AffineOutcome;
 
 /// One routed (read, minimizer) pair bound to its oriented read sequence:
-/// the unit of work a shard worker consumes.
-#[derive(Debug, Clone, Copy)]
-pub struct ShardItem<'a> {
+/// the unit of work a shard worker consumes. The sequence is a shared
+/// slice (one refcounted allocation per oriented read), so items can
+/// cross thread boundaries without borrowing from a materialized read
+/// set — the enabler for streaming ingestion.
+#[derive(Debug, Clone)]
+pub struct ShardItem {
     /// Globally sequential pair id (assigned by the serial routing
     /// stage; identical for every shard count).
     pub pair_id: u32,
@@ -68,9 +81,9 @@ pub struct ShardItem<'a> {
     pub target: Target,
     /// Reverse-complement orientation of `seq`.
     pub reverse: bool,
-    /// The oriented read sequence (borrowed from the read set, or from
-    /// the materialized reverse complements).
-    pub seq: &'a [u8],
+    /// The oriented read sequence (shared with the other items of the
+    /// same oriented read).
+    pub seq: Arc<[u8]>,
 }
 
 /// Serial emission order of one WF instance, used as the deterministic
@@ -81,19 +94,31 @@ fn emission_key(pair_id: u32, ref_pos: u32) -> u64 {
     (u64::from(pair_id) << 32) | u64::from(ref_pos)
 }
 
-/// Executes pipeline stages 2-6 over one shard's item stream.
+/// Executes pipeline stages 2-6 over one shard's item stream with
+/// bounded memory.
 ///
 /// The worker owns everything its slice needs — the Reads FIFOs of its
-/// crossbars, the linear-stage batcher, and the RISC-V work list — so N
-/// workers share nothing but the read-only index.
+/// crossbars, the stage batchers, the open MinOnly pair state, and the
+/// RISC-V work list — so N workers share nothing but the read-only
+/// index. All engine work happens eagerly as batches fill; see the
+/// module docs for the ingest/drain/finish protocol.
 pub struct ShardWorker<'a> {
     index: &'a MinimizerIndex,
     cfg: &'a PipelineConfig,
     metrics: Metrics,
     fifos: HashMap<u32, ReadsFifo>,
-    linear_batcher: Batcher<'a>,
-    linear_batches: Vec<Batch<'a>>,
-    riscv_items: Vec<(WorkTag, &'a [u8])>,
+    linear_batcher: Batcher,
+    affine_batcher: Batcher,
+    /// MinOnly: best passing linear result per pair seen since the last
+    /// drain, keyed by pair id (ascending == serial emission order).
+    /// Bounded by the epoch size; pairs never span epochs because
+    /// epochs split on read boundaries.
+    pair_best: BTreeMap<u32, (i32, WorkTag, Vec<u8>, Arc<[u8]>)>,
+    /// lowTh pairs awaiting the scalar RISC-V path (bounded: drained
+    /// every epoch; each pair has <= lowTh occurrences).
+    riscv_items: Vec<(WorkTag, Arc<[u8]>)>,
+    /// Outcomes accumulated since the last drain.
+    outcomes: Vec<AffineOutcome>,
 }
 
 impl<'a> ShardWorker<'a> {
@@ -105,18 +130,25 @@ impl<'a> ShardWorker<'a> {
             metrics: Metrics::default(),
             fifos: HashMap::new(),
             linear_batcher: Batcher::new(cfg.batch_size, index.read_len),
-            linear_batches: Vec::new(),
+            affine_batcher: Batcher::new(cfg.batch_size, index.read_len),
+            pair_best: BTreeMap::new(),
             riscv_items: Vec::new(),
+            outcomes: Vec::new(),
         }
     }
 
-    /// Incremental phase (Fig. 6 steps 1-3): FIFO admission, window
-    /// extraction, and batch packing for a slice of the item stream.
-    /// Called repeatedly as chunks arrive, so this work overlaps the
-    /// producer's routing; items must arrive in emission order (the
+    /// Incremental phase (Fig. 6 steps 1-3, plus eager 3-6): FIFO
+    /// admission, window extraction, and batch packing for a slice of
+    /// the item stream — and, whenever a batch fills, the batched WF
+    /// compute for it, so memory stays O(batch). Called repeatedly as
+    /// chunks arrive; items must arrive in emission order (the
     /// determinism contract).
-    pub fn ingest(&mut self, items: impl IntoIterator<Item = ShardItem<'a>>) {
-        let t0 = Instant::now();
+    pub fn ingest<E: WfEngine + ?Sized>(
+        &mut self,
+        engine: &mut E,
+        items: impl IntoIterator<Item = ShardItem>,
+    ) -> Result<()> {
+        let mut t0 = Instant::now();
         let (index, cfg) = (self.index, self.cfg);
         for item in items {
             let occs = index.occurrences(item.kmer);
@@ -134,7 +166,7 @@ impl<'a> ShardWorker<'a> {
                                 xbar: u32::MAX, // RISC-V pool, not a crossbar
                                 reverse: item.reverse,
                             },
-                            item.seq,
+                            item.seq.clone(),
                         ));
                     }
                 }
@@ -183,167 +215,195 @@ impl<'a> ShardWorker<'a> {
                         };
                         let win = index.window_for(pos, item.read_offset as usize);
                         self.metrics.linear_instances += 1;
-                        if let Some(b) = self.linear_batcher.push(tag, item.seq, win) {
-                            self.linear_batches.push(b);
+                        if let Some(b) = self.linear_batcher.push(tag, item.seq.clone(), win) {
+                            // close the admission span so engine time is
+                            // not double-counted under t_seed
+                            self.metrics.t_seed += t0.elapsed();
+                            self.run_linear_batch(engine, b)?;
+                            t0 = Instant::now();
                         }
                     }
                 }
             }
         }
         self.metrics.t_seed += t0.elapsed();
+        Ok(())
     }
 
-    /// Compute phase (Fig. 6 steps 3-6 + RISC-V offload): run the
-    /// batched linear filter, batched affine alignment, and traceback on
-    /// `engine`, then the RISC-V pairs on the scalar Rust engine.
-    ///
-    /// Returns the shard's candidate outcomes (for the caller to fold
-    /// into a [`super::state::BestSoFar`]) and its [`Metrics`]
-    /// contribution (`n_reads`, `reads_with_candidates`, and `t_total`
-    /// are left at zero — they are whole-run quantities the caller owns).
+    /// Epoch barrier: force partially-filled batches through the engine,
+    /// finalize open MinOnly pairs, run the buffered RISC-V pairs, and
+    /// return every outcome accumulated since the previous drain. After
+    /// a drain the worker holds no pending WF work — only the persistent
+    /// FIFO cap state survives into the next epoch.
+    pub fn drain<E: WfEngine + ?Sized>(&mut self, engine: &mut E) -> Result<Vec<AffineOutcome>> {
+        if let Some(b) = self.linear_batcher.flush() {
+            self.run_linear_batch(engine, b)?;
+        }
+        if self.cfg.filter_policy == FilterPolicy::MinOnly {
+            // every seen pair is fully filtered now (no pending linear
+            // work), so the per-pair winners are final; emit them in
+            // pair-id order == the serial emission order across reads
+            let winners = std::mem::take(&mut self.pair_best);
+            let mut ready: Vec<Batch> = Vec::new();
+            for (_, (_, tag, win, seq)) in winners {
+                self.metrics.affine_instances += 1;
+                *self.metrics.affine_per_xbar.entry(tag.xbar).or_default() += 1;
+                if let Some(b) = self.affine_batcher.push(tag, seq, win) {
+                    ready.push(b);
+                }
+            }
+            for b in ready {
+                self.run_affine_batch(engine, b)?;
+            }
+        }
+        if let Some(b) = self.affine_batcher.flush() {
+            self.run_affine_batch(engine, b)?;
+        }
+        self.run_riscv()?;
+        Ok(std::mem::take(&mut self.outcomes))
+    }
+
+    /// End-of-stream: drain everything and hand back the shard's
+    /// [`Metrics`] contribution (`n_reads`, `reads_with_candidates`, and
+    /// `t_total` are left at zero — they are whole-run quantities the
+    /// caller owns).
     pub fn finish<E: WfEngine + ?Sized>(
         mut self,
         engine: &mut E,
     ) -> Result<(Vec<AffineOutcome>, Metrics)> {
-        let mut metrics = self.metrics;
-        if let Some(b) = self.linear_batcher.flush() {
-            self.linear_batches.push(b);
-        }
+        let outcomes = self.drain(engine)?;
+        Ok((outcomes, self.metrics))
+    }
 
-        // ---- Batched linear filter (Fig. 6 steps 3-4) ----
+    /// Batched linear filter (Fig. 6 steps 3-4) over one full batch,
+    /// feeding survivors to the affine stage (run eagerly when its
+    /// batches fill).
+    fn run_linear_batch<E: WfEngine + ?Sized>(
+        &mut self,
+        engine: &mut E,
+        mut batch: Batch,
+    ) -> Result<()> {
         let t0 = Instant::now();
-        // pair_id -> (best dist, tag, window, read seq) for MinOnly
-        let mut pair_best: HashMap<u32, (i32, WorkTag, Vec<u8>, &[u8])> = HashMap::new();
-        let mut affine_batcher = Batcher::new(self.cfg.batch_size, self.index.read_len);
-        let mut affine_batches: Vec<Batch<'_>> = Vec::new();
-        for batch in &mut self.linear_batches {
-            let ww: Vec<&[u8]> = batch.wins.iter().map(|v| v.as_slice()).collect();
-            let out = engine.linear_batch(&batch.reads, &ww)?;
-            drop(ww);
-            metrics.linear_batches += 1;
-            for i in 0..batch.tags.len() {
-                let tag = batch.tags[i];
-                if out.best[i] > ETH as i32 {
-                    continue; // filtered out
-                }
-                metrics.filter_passed += 1;
-                match self.cfg.filter_policy {
-                    FilterPolicy::AllPassing => {
-                        metrics.affine_instances += 1;
-                        *metrics.affine_per_xbar.entry(tag.xbar).or_default() += 1;
-                        // window moves to the affine stage (each is used
-                        // at most once — §Perf opt 1)
-                        let win = std::mem::take(&mut batch.wins[i]);
-                        if let Some(b) = affine_batcher.push(tag, batch.reads[i], win) {
-                            affine_batches.push(b);
-                        }
+        let out = {
+            let rr = batch.read_slices();
+            let ww = batch.win_slices();
+            engine.linear_batch(&rr, &ww)?
+        };
+        self.metrics.linear_batches += 1;
+        let mut ready: Vec<Batch> = Vec::new();
+        for i in 0..batch.tags.len() {
+            let tag = batch.tags[i];
+            if out.best[i] > ETH as i32 {
+                continue; // filtered out
+            }
+            self.metrics.filter_passed += 1;
+            match self.cfg.filter_policy {
+                FilterPolicy::AllPassing => {
+                    self.metrics.affine_instances += 1;
+                    *self.metrics.affine_per_xbar.entry(tag.xbar).or_default() += 1;
+                    // window moves to the affine stage (each is used at
+                    // most once — §Perf opt 1)
+                    let win = std::mem::take(&mut batch.wins[i]);
+                    let read = batch.reads[i].clone();
+                    if let Some(b) = self.affine_batcher.push(tag, read, win) {
+                        ready.push(b);
                     }
-                    FilterPolicy::MinOnly => {
-                        let e = pair_best.entry(tag.pair_id);
-                        match e {
-                            std::collections::hash_map::Entry::Occupied(mut o) => {
-                                if out.best[i] < o.get().0 {
-                                    *o.get_mut() = (
-                                        out.best[i],
-                                        tag,
-                                        std::mem::take(&mut batch.wins[i]),
-                                        batch.reads[i],
-                                    );
-                                }
+                }
+                FilterPolicy::MinOnly => {
+                    let win = std::mem::take(&mut batch.wins[i]);
+                    let cand = (out.best[i], tag, win, batch.reads[i].clone());
+                    match self.pair_best.entry(tag.pair_id) {
+                        std::collections::btree_map::Entry::Occupied(mut o) => {
+                            if cand.0 < o.get().0 {
+                                *o.get_mut() = cand;
                             }
-                            std::collections::hash_map::Entry::Vacant(v) => {
-                                v.insert((
-                                    out.best[i],
-                                    tag,
-                                    std::mem::take(&mut batch.wins[i]),
-                                    batch.reads[i],
-                                ));
-                            }
+                        }
+                        std::collections::btree_map::Entry::Vacant(v) => {
+                            v.insert(cand);
                         }
                     }
                 }
             }
         }
-        if self.cfg.filter_policy == FilterPolicy::MinOnly {
-            let mut winners: Vec<(i32, WorkTag, Vec<u8>, &[u8])> =
-                pair_best.into_values().collect();
-            winners.sort_by_key(|(_, t, _, _)| (t.read_id, t.pair_id));
-            for (_, tag, win, seq) in winners {
-                metrics.affine_instances += 1;
-                *metrics.affine_per_xbar.entry(tag.xbar).or_default() += 1;
-                if let Some(b) = affine_batcher.push(tag, seq, win) {
-                    affine_batches.push(b);
-                }
-            }
+        self.metrics.t_linear += t0.elapsed();
+        for b in ready {
+            self.run_affine_batch(engine, b)?;
         }
-        if let Some(b) = affine_batcher.flush() {
-            affine_batches.push(b);
-        }
-        metrics.t_linear = t0.elapsed();
+        Ok(())
+    }
 
-        // ---- Batched affine alignment + traceback (Fig. 6 steps 5-6) --
+    /// Batched affine alignment + traceback (Fig. 6 steps 5-6) over one
+    /// full batch; outcomes accumulate until the next drain.
+    fn run_affine_batch<E: WfEngine + ?Sized>(
+        &mut self,
+        engine: &mut E,
+        batch: Batch,
+    ) -> Result<()> {
         let t0 = Instant::now();
-        let mut outcomes: Vec<AffineOutcome> = Vec::new();
-        for batch in &affine_batches {
-            let ww: Vec<&[u8]> = batch.wins.iter().map(|v| v.as_slice()).collect();
-            let out = engine.affine_batch(&batch.reads, &ww)?;
-            metrics.affine_batches += 1;
-            let tt = Instant::now();
-            for (i, tag) in batch.tags.iter().enumerate() {
-                if let Some(outcome) = decode_affine(
-                    tag,
-                    out.best[i],
-                    out.best_j[i] as usize,
-                    &out.dirs[i],
-                    batch.reads[i],
-                    &mut metrics,
-                ) {
-                    outcomes.push(outcome);
-                }
+        let out = {
+            let rr = batch.read_slices();
+            let ww = batch.win_slices();
+            engine.affine_batch(&rr, &ww)?
+        };
+        self.metrics.affine_batches += 1;
+        let tt = Instant::now();
+        for (i, tag) in batch.tags.iter().enumerate() {
+            if let Some(outcome) = decode_affine(
+                tag,
+                out.best[i],
+                out.best_j[i] as usize,
+                &out.dirs[i],
+                batch.reads[i].as_ref(),
+                &mut self.metrics,
+            ) {
+                self.outcomes.push(outcome);
             }
-            metrics.t_traceback += tt.elapsed();
         }
-        metrics.t_affine = t0.elapsed();
+        self.metrics.t_traceback += tt.elapsed();
+        self.metrics.t_affine += t0.elapsed();
+        Ok(())
+    }
 
-        // ---- RISC-V offload path (scalar Rust engine, always) ----
+    /// RISC-V offload path: the buffered lowTh pairs, on the scalar Rust
+    /// engine (always — mirroring the paper's heterogeneous split).
+    fn run_riscv(&mut self) -> Result<()> {
         let mut riscv_engine = RustEngine;
-        for (tag, seq) in self.riscv_items {
+        for (tag, seq) in std::mem::take(&mut self.riscv_items) {
             let win = self.index.window_for(tag.ref_pos, tag.read_offset as usize);
-            metrics.riscv_linear_instances += 1;
-            let lin = riscv_engine.linear_batch(&[seq], &[&win])?;
+            self.metrics.riscv_linear_instances += 1;
+            let lin = riscv_engine.linear_batch(&[seq.as_ref()], &[&win])?;
             if lin.best[0] > ETH as i32 {
                 continue;
             }
-            metrics.riscv_affine_instances += 1;
-            let aff = riscv_engine.affine_batch(&[seq], &[&win])?;
+            self.metrics.riscv_affine_instances += 1;
+            let aff = riscv_engine.affine_batch(&[seq.as_ref()], &[&win])?;
             if let Some(outcome) = decode_affine(
                 &tag,
                 aff.best[0],
                 aff.best_j[0] as usize,
                 &aff.dirs[0],
-                seq,
-                &mut metrics,
+                seq.as_ref(),
+                &mut self.metrics,
             ) {
-                outcomes.push(outcome);
+                self.outcomes.push(outcome);
             }
         }
-
-        Ok((outcomes, metrics))
+        Ok(())
     }
 }
 
 /// Run stages 2-6 over a complete item list in one call: ingest
-/// everything, then compute on `engine`. The single-threaded pipeline
-/// path and tests use this; the threaded path drives a [`ShardWorker`]
+/// everything, then finish on `engine`. Tests and the shard parity
+/// suite use this; the streaming pipeline drives a [`ShardWorker`]
 /// incrementally as chunks stream in.
 pub fn run_shard<'a, E: WfEngine + ?Sized>(
     index: &'a MinimizerIndex,
     cfg: &'a PipelineConfig,
     engine: &mut E,
-    items: &[ShardItem<'a>],
+    items: &[ShardItem],
 ) -> Result<(Vec<AffineOutcome>, Metrics)> {
     let mut worker = ShardWorker::new(index, cfg);
-    worker.ingest(items.iter().copied());
+    worker.ingest(engine, items.iter().cloned())?;
     worker.finish(engine)
 }
 
@@ -383,8 +443,35 @@ fn decode_affine(
 mod tests {
     use super::*;
     use crate::genome::synth::{ReadSimConfig, SynthConfig};
+    use crate::genome::ReadRecord;
     use crate::index::shard_of;
     use crate::params::{K, READ_LEN, W};
+
+    fn route_all(
+        idx: &MinimizerIndex,
+        cfg: &PipelineConfig,
+        reads: &[ReadRecord],
+    ) -> Vec<ShardItem> {
+        let router = crate::coordinator::Router::new(idx, &cfg.dart);
+        let mut items: Vec<ShardItem> = Vec::new();
+        let mut next_pair = 0u32;
+        for r in reads {
+            let seq: Arc<[u8]> = Arc::from(r.seq.as_slice());
+            for pair in router.route(idx, r.id, &r.seq) {
+                items.push(ShardItem {
+                    pair_id: next_pair,
+                    read_id: r.id,
+                    read_offset: pair.read_offset,
+                    kmer: pair.kmer,
+                    target: pair.target,
+                    reverse: false,
+                    seq: seq.clone(),
+                });
+                next_pair += 1;
+            }
+        }
+        items
+    }
 
     /// run_shard over everything == the item-level serial semantics; a
     /// partition of the same items produces the same outcome multiset.
@@ -398,24 +485,7 @@ mod tests {
             dart: crate::pim::DartPimConfig { low_th: 0, ..Default::default() },
             ..Default::default()
         };
-        let router = crate::coordinator::Router::new(&idx, &cfg.dart);
-
-        let mut items: Vec<ShardItem<'_>> = Vec::new();
-        let mut next_pair = 0u32;
-        for r in &reads {
-            for pair in router.route(&idx, r.id, &r.seq) {
-                items.push(ShardItem {
-                    pair_id: next_pair,
-                    read_id: r.id,
-                    read_offset: pair.read_offset,
-                    kmer: pair.kmer,
-                    target: pair.target,
-                    reverse: false,
-                    seq: &r.seq,
-                });
-                next_pair += 1;
-            }
-        }
+        let items = route_all(&idx, &cfg, &reads);
 
         let (serial, sm) = run_shard(&idx, &cfg, &mut RustEngine, &items).unwrap();
 
@@ -423,8 +493,8 @@ mod tests {
         let mut sharded: Vec<AffineOutcome> = Vec::new();
         let mut merged = Metrics::default();
         for sh in 0..n {
-            let part: Vec<ShardItem<'_>> =
-                items.iter().filter(|it| shard_of(it.kmer, n) == sh).copied().collect();
+            let part: Vec<ShardItem> =
+                items.iter().filter(|it| shard_of(it.kmer, n) == sh).cloned().collect();
             let (out, m) = run_shard(&idx, &cfg, &mut RustEngine, &part).unwrap();
             sharded.extend(out);
             merged.merge(m);
@@ -442,10 +512,10 @@ mod tests {
         assert_eq!(sm.routed_pairs, merged.routed_pairs);
     }
 
-    /// Chunked ingest (the threaded path's streaming shape) must equal
-    /// one-shot ingest.
+    /// Chunked ingest (the streaming path's shape) must equal one-shot
+    /// ingest — including when an epoch drain is forced between chunks.
     #[test]
-    fn chunked_ingest_equals_one_shot() {
+    fn chunked_ingest_and_mid_stream_drains_equal_one_shot() {
         let g = SynthConfig { len: 50_000, ..Default::default() }.generate();
         let idx = MinimizerIndex::build(g, K, W, READ_LEN);
         let reads = ReadSimConfig { n_reads: 20, ..Default::default() }
@@ -454,32 +524,48 @@ mod tests {
             dart: crate::pim::DartPimConfig { low_th: 0, ..Default::default() },
             ..Default::default()
         };
-        let router = crate::coordinator::Router::new(&idx, &cfg.dart);
-        let mut items: Vec<ShardItem<'_>> = Vec::new();
-        let mut next_pair = 0u32;
-        for r in &reads {
-            for pair in router.route(&idx, r.id, &r.seq) {
-                items.push(ShardItem {
-                    pair_id: next_pair,
-                    read_id: r.id,
-                    read_offset: pair.read_offset,
-                    kmer: pair.kmer,
-                    target: pair.target,
-                    reverse: false,
-                    seq: &r.seq,
-                });
-                next_pair += 1;
+        let items = route_all(&idx, &cfg, &reads);
+        let (one_shot, _) = run_shard(&idx, &cfg, &mut RustEngine, &items).unwrap();
+
+        let mut worker = ShardWorker::new(&idx, &cfg);
+        let mut drained: Vec<AffineOutcome> = Vec::new();
+        for (ci, chunk) in items.chunks(7).enumerate() {
+            worker.ingest(&mut RustEngine, chunk.iter().cloned()).unwrap();
+            if ci % 3 == 2 {
+                // epoch barrier mid-stream: outcomes must be identical
+                // in aggregate no matter where the drains land
+                drained.extend(worker.drain(&mut RustEngine).unwrap());
             }
         }
-        let (one_shot, _) = run_shard(&idx, &cfg, &mut RustEngine, &items).unwrap();
+        let (rest, _) = worker.finish(&mut RustEngine).unwrap();
+        drained.extend(rest);
+        assert_eq!(one_shot.len(), drained.len());
+        let key = |v: &[AffineOutcome]| {
+            let mut k: Vec<(u64, i64, i32)> = v.iter().map(|o| (o.key, o.pos, o.dist)).collect();
+            k.sort_unstable();
+            k
+        };
+        assert_eq!(key(&one_shot), key(&drained));
+    }
+
+    /// After a drain the worker holds no pending outcomes: finish on an
+    /// already-drained worker yields nothing new.
+    #[test]
+    fn drain_leaves_no_pending_work() {
+        let g = SynthConfig { len: 40_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = ReadSimConfig { n_reads: 10, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        let cfg = PipelineConfig {
+            dart: crate::pim::DartPimConfig { low_th: 0, ..Default::default() },
+            ..Default::default()
+        };
+        let items = route_all(&idx, &cfg, &reads);
         let mut worker = ShardWorker::new(&idx, &cfg);
-        for chunk in items.chunks(7) {
-            worker.ingest(chunk.iter().copied());
-        }
-        let (chunked, _) = worker.finish(&mut RustEngine).unwrap();
-        assert_eq!(one_shot.len(), chunked.len());
-        for (a, b) in one_shot.iter().zip(&chunked) {
-            assert_eq!((a.key, a.pos, a.dist), (b.key, b.pos, b.dist));
-        }
+        worker.ingest(&mut RustEngine, items.iter().cloned()).unwrap();
+        let first = worker.drain(&mut RustEngine).unwrap();
+        assert!(!first.is_empty(), "workload must produce outcomes");
+        let (rest, _) = worker.finish(&mut RustEngine).unwrap();
+        assert!(rest.is_empty(), "drain must leave nothing pending");
     }
 }

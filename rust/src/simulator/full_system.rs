@@ -14,6 +14,17 @@
 //! human dataset this yields ~45 affine instances per read, consistent
 //! with its energy and RISC-V-load numbers (DESIGN.md §4 derivation).
 //!
+//! Like the live pipeline, the simulator is streaming:
+//! [`FullSystemSim::simulate_stream`] pulls reads from any fallible
+//! iterator, partitions (read, minimizer) pairs by minimizer hash
+//! across persistent per-shard workers over bounded channels, and keeps
+//! at most `SIM_FILTER_BATCH` WF instances in flight per shard. The one
+//! per-read residual is candidate tracking (`reads_with_candidates`
+//! needs cross-shard dedup): **1 bit per read per shard**, i.e.
+//! ~49 MB/shard at the paper's 389 M-read scale — the WF working set
+//! stays O(batch). The slice entry points ([`FullSystemSim::simulate`]
+//! and friends) are thin wrappers.
+//!
 //! Affine iteration accounting ([`TimingMode`]):
 //! * `PaperSerial` — one affine instance per lock-step round
 //!   (`K_A ≈` affine instances at the bottleneck). This reproduces the
@@ -22,8 +33,12 @@
 //! * `Batched8` — the idealized 8-instances-per-round mode the affine
 //!   buffer geometry permits; reported as an ablation.
 
+use std::borrow::Borrow;
 use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
 use std::thread;
+
+use anyhow::Result;
 
 use crate::index::{shard_of, MinimizerIndex};
 use crate::params::ETH;
@@ -33,8 +48,20 @@ use crate::seeding::{seed_read, ReadSeed};
 
 /// Engine flush size for the shard filter pass (the largest artifact
 /// batch; big enough that the bit-parallel engine runs full 64-lane
-/// words).
+/// words). Also the per-shard in-flight instance bound of the streaming
+/// simulation.
 const SIM_FILTER_BATCH: usize = 256;
+
+/// Dense read index for the sim stream, guarded like the pipeline's
+/// read-id counter (a silent u32 wrap would alias candidate bits).
+fn sim_read_id(n_reads: u64) -> Result<u32> {
+    u32::try_from(n_reads).map_err(|_| anyhow::anyhow!("read stream exceeds u32 read ids"))
+}
+
+/// Seeded pairs per channel send in the streaming simulation.
+const SIM_CHUNK: usize = 512;
+/// Bounded depth of each sim worker's channel (backpressure).
+const SIM_CHANNEL_DEPTH: usize = 4;
 
 /// How affine lock-step rounds are counted (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -110,13 +137,107 @@ impl SimCounts {
     }
 }
 
-/// Per-shard partial result of the workload simulation (private to the
-/// shard merge in [`FullSystemSim::simulate_threaded`]).
-struct ShardSimCounts {
+/// Growable bitset marking reads with at least one surviving candidate
+/// (1 bit per read: the streaming replacement for a `Vec<bool>` sized to
+/// a read count that is unknown up front).
+#[derive(Debug, Default, Clone)]
+struct ReadFlags {
+    words: Vec<u64>,
+}
+
+impl ReadFlags {
+    fn set(&mut self, i: u32) {
+        let w = (i / 64) as usize;
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        self.words[w] |= 1u64 << (i % 64);
+    }
+
+    fn union(&mut self, other: &ReadFlags) {
+        if other.words.len() > self.words.len() {
+            self.words.resize(other.words.len(), 0);
+        }
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= *b;
+        }
+    }
+
+    fn count(&self) -> u64 {
+        self.words.iter().map(|w| u64::from(w.count_ones())).sum()
+    }
+}
+
+/// One seeded (read, minimizer) pair in flight to a sim shard.
+struct SimItem {
+    /// Dense stream index of the read.
+    ri: u32,
+    /// The resolved minimizer.
+    seed: ReadSeed,
+    /// The read's sequence (shared across its seeds).
+    seq: Arc<[u8]>,
+}
+
+/// One pending filter instance: read index, owning crossbar (None =
+/// RISC-V pool), read sequence, extracted window.
+struct PendingInstance {
+    ri: u32,
+    xbar: Option<u32>,
+    seq: Arc<[u8]>,
+    win: Vec<u8>,
+}
+
+/// Per-shard state of the workload simulation: counters, the shard's
+/// private per-crossbar cap accounting, and the bounded in-flight
+/// instance buffer. Persists for the whole stream (cap accounting is a
+/// lifetime quantity).
+struct SimShard {
     counts: SimCounts,
     pairs_per_xbar: HashMap<u32, u64>,
     affine_per_xbar: HashMap<u32, u64>,
-    candidates: Vec<bool>,
+    candidates: ReadFlags,
+    pending: Vec<PendingInstance>,
+    engine: Box<dyn WfEngine + Send>,
+}
+
+impl SimShard {
+    fn new(engine: EngineKind) -> Self {
+        SimShard {
+            counts: SimCounts::default(),
+            pairs_per_xbar: HashMap::new(),
+            affine_per_xbar: HashMap::new(),
+            candidates: ReadFlags::default(),
+            pending: Vec::with_capacity(SIM_FILTER_BATCH),
+            engine: engine.build(),
+        }
+    }
+
+    /// Run the buffered instances through the engine (Rust mirror of the
+    /// L1 kernel, scalar or bit-parallel — identical numerics) and fold
+    /// the pass/fail results into the shard counters.
+    fn drain(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let rr: Vec<&[u8]> = self.pending.iter().map(|x| x.seq.as_ref()).collect();
+        let ww: Vec<&[u8]> = self.pending.iter().map(|x| x.win.as_slice()).collect();
+        let out = self.engine.linear_batch(&rr, &ww).expect("simulator filter batch");
+        drop((rr, ww));
+        for (inst, &best) in self.pending.iter().zip(&out.best) {
+            if best > ETH as i32 {
+                continue;
+            }
+            self.candidates.set(inst.ri);
+            match inst.xbar {
+                None => self.counts.riscv_affine_instances += 1,
+                Some(xb) => {
+                    self.counts.affine_instances += 1;
+                    *self.affine_per_xbar.entry(xb).or_default() += 1;
+                }
+            }
+        }
+        self.pending.clear();
+    }
 }
 
 /// Offline crossbar assignment: each minimizer above lowTh owns
@@ -175,52 +296,69 @@ impl<'a> FullSystemSim<'a> {
     }
 
     /// [`Self::simulate`] sharded across `n_threads` worker threads,
-    /// filtering through `engine` (each worker constructs its own — the
-    /// reason the PJRT engine is not an [`EngineKind`]).
-    ///
-    /// (read, minimizer) pairs are partitioned by minimizer hash
-    /// ([`shard_of`]) exactly like the live pipeline, so each worker's
-    /// per-crossbar cap accounting touches a disjoint crossbar set and
-    /// the merged counts are identical to the serial path for every
-    /// thread count — and, because the engines share one numerics
-    /// contract, for every engine kind.
+    /// filtering through `engine` — a thin slice wrapper over
+    /// [`Self::simulate_stream`].
     pub fn simulate_threaded_with(
         &self,
         reads: &[crate::genome::ReadRecord],
         n_threads: usize,
         engine: EngineKind,
     ) -> SimCounts {
-        let n = n_threads.max(1);
-        // stage 1 (serial): seed every read, partition pairs by minimizer
-        let mut shards: Vec<Vec<(u32, ReadSeed)>> = (0..n).map(|_| Vec::new()).collect();
-        for (ri, read) in reads.iter().enumerate() {
-            for seed in seed_read(self.index, &read.seq) {
-                if self.index.occurrences(seed.kmer).is_empty() {
-                    continue;
-                }
-                shards[shard_of(seed.kmer, n)].push((ri as u32, seed));
-            }
-        }
+        self.simulate_stream(reads.iter().map(Ok), n_threads, engine)
+            .expect("slice-backed simulation cannot fail")
+    }
 
-        // stage 2: per-shard workload counting (threaded when asked)
-        let parts: Vec<ShardSimCounts> = if n == 1 {
-            vec![self.simulate_shard(reads, &shards[0], engine)]
+    /// Simulate a read **stream** with bounded memory.
+    ///
+    /// (read, minimizer) pairs are partitioned by minimizer hash
+    /// ([`shard_of`]) exactly like the live pipeline, so each worker's
+    /// per-crossbar cap accounting touches a disjoint crossbar set and
+    /// the merged counts are identical to the serial path for every
+    /// thread count — and, because the engines share one numerics
+    /// contract, for every engine kind. Each worker owns its engine
+    /// (constructed on its own thread — the reason the PJRT engine is
+    /// not an [`EngineKind`]) and keeps at most `SIM_FILTER_BATCH`
+    /// instances in flight; pairs travel over bounded channels, so a
+    /// slow filter backpressures seeding.
+    ///
+    /// Only the read iterator (or a stream longer than u32 read ids)
+    /// can produce an `Err`; engine failures are programming errors and
+    /// panic, as in the slice path.
+    pub fn simulate_stream<I, R>(
+        &self,
+        reads: I,
+        n_threads: usize,
+        engine: EngineKind,
+    ) -> Result<SimCounts>
+    where
+        I: IntoIterator<Item = Result<R>>,
+        R: std::borrow::Borrow<crate::genome::ReadRecord>,
+    {
+        let n = n_threads.max(1);
+        let (shards, n_reads) = if n == 1 {
+            // serial: one persistent shard fed inline
+            let mut shard = SimShard::new(engine);
+            let mut n_reads = 0u64;
+            let mut chunk: Vec<SimItem> = Vec::new();
+            for rec in reads {
+                let rec = rec?;
+                let ri = sim_read_id(n_reads)?;
+                self.seed_into(ri, rec.borrow(), 1, |_, item| chunk.push(item));
+                self.sim_ingest(&mut shard, chunk.drain(..));
+                n_reads += 1;
+            }
+            shard.drain();
+            (vec![shard], n_reads)
         } else {
-            thread::scope(|s| {
-                let handles: Vec<_> = shards
-                    .iter()
-                    .map(|items| s.spawn(move || self.simulate_shard(reads, items, engine)))
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("sim shard panicked")).collect()
-            })
+            self.simulate_stream_threaded(reads, n, engine)?
         };
 
         // deterministic merge: sums and disjoint map unions
-        let mut c = SimCounts { n_reads: reads.len() as u64, ..Default::default() };
+        let mut c = SimCounts { n_reads, ..Default::default() };
         let mut pairs_per_xbar: HashMap<u32, u64> = HashMap::new();
         let mut affine_per_xbar: HashMap<u32, u64> = HashMap::new();
-        let mut candidates = vec![false; reads.len()];
-        for p in parts {
+        let mut candidates = ReadFlags::default();
+        for p in shards {
             c.routed_pairs += p.counts.routed_pairs;
             c.dropped_pairs += p.counts.dropped_pairs;
             c.riscv_pairs += p.counts.riscv_pairs;
@@ -234,127 +372,152 @@ impl<'a> FullSystemSim<'a> {
             for (k, v) in p.affine_per_xbar {
                 *affine_per_xbar.entry(k).or_default() += v;
             }
-            for (i, had) in p.candidates.into_iter().enumerate() {
-                candidates[i] |= had;
-            }
+            candidates.union(&p.candidates);
         }
-        c.reads_with_candidates = candidates.iter().filter(|&&x| x).count() as u64;
+        c.reads_with_candidates = candidates.count();
         c.k_linear = pairs_per_xbar.values().copied().max().unwrap_or(0);
         c.bottleneck_affine = affine_per_xbar.values().copied().max().unwrap_or(0);
         c.active_xbars = pairs_per_xbar.len() as u64;
-        c
+        Ok(c)
+    }
+
+    /// Threaded body of [`Self::simulate_stream`]: persistent per-shard
+    /// workers behind bounded channels; shard states return at join.
+    fn simulate_stream_threaded<I, R>(
+        &self,
+        reads: I,
+        n: usize,
+        engine: EngineKind,
+    ) -> Result<(Vec<SimShard>, u64)>
+    where
+        I: IntoIterator<Item = Result<R>>,
+        R: std::borrow::Borrow<crate::genome::ReadRecord>,
+    {
+        thread::scope(|s| -> Result<(Vec<SimShard>, u64)> {
+            let mut txs = Vec::with_capacity(n);
+            let mut handles = Vec::with_capacity(n);
+            for _ in 0..n {
+                let (tx, rx) = mpsc::sync_channel::<Vec<SimItem>>(SIM_CHANNEL_DEPTH);
+                txs.push(tx);
+                handles.push(s.spawn(move || {
+                    let mut shard = SimShard::new(engine);
+                    while let Ok(items) = rx.recv() {
+                        self.sim_ingest(&mut shard, items);
+                    }
+                    shard.drain();
+                    shard
+                }));
+            }
+
+            let mut pending: Vec<Vec<SimItem>> =
+                (0..n).map(|_| Vec::with_capacity(SIM_CHUNK)).collect();
+            let mut n_reads = 0u64;
+            for rec in reads {
+                let rec = rec?;
+                let ri = sim_read_id(n_reads)?;
+                self.seed_into(ri, rec.borrow(), n, |sh, item| {
+                    pending[sh].push(item);
+                    if pending[sh].len() >= SIM_CHUNK {
+                        let full = std::mem::replace(
+                            &mut pending[sh],
+                            Vec::with_capacity(SIM_CHUNK),
+                        );
+                        // a send error means the worker died (panic in
+                        // the engine); join below re-raises it
+                        let _ = txs[sh].send(full);
+                    }
+                });
+                n_reads += 1;
+            }
+            for (sh, tx) in txs.into_iter().enumerate() {
+                let rest = std::mem::take(&mut pending[sh]);
+                if !rest.is_empty() {
+                    let _ = tx.send(rest);
+                }
+                // tx drops here: the worker drains and returns its state
+            }
+            let shards: Vec<SimShard> =
+                handles.into_iter().map(|h| h.join().expect("sim shard panicked")).collect();
+            Ok((shards, n_reads))
+        })
+    }
+
+    /// Seed one read and emit its productive (read, minimizer) pairs,
+    /// tagged with the owning shard under an `n`-way partition.
+    fn seed_into(
+        &self,
+        ri: u32,
+        read: &crate::genome::ReadRecord,
+        n: usize,
+        mut emit: impl FnMut(usize, SimItem),
+    ) {
+        let seq: Arc<[u8]> = Arc::from(read.seq.as_slice());
+        for seed in seed_read(self.index, &read.seq) {
+            if self.index.occurrences(seed.kmer).is_empty() {
+                continue;
+            }
+            let sh = shard_of(seed.kmer, n);
+            emit(sh, SimItem { ri, seed, seq: seq.clone() });
+        }
     }
 
     /// Count one shard's workload: the serial per-pair semantics over a
-    /// partition-ordered item list (cap accounting stays exact because a
-    /// minimizer's crossbars belong to exactly one shard).
+    /// partition-ordered item stream (cap accounting stays exact because
+    /// a minimizer's crossbars belong to exactly one shard).
     ///
     /// Routing and cap accounting stay per-pair (order-sensitive); the
-    /// surviving WF instances accumulate into a [`SIM_FILTER_BATCH`]
-    /// buffer that drains through `engine` as it fills, so memory stays
-    /// bounded no matter the workload. Instance results are independent,
-    /// so batch boundaries cannot change any count.
-    fn simulate_shard(
-        &self,
-        reads: &[crate::genome::ReadRecord],
-        items: &[(u32, ReadSeed)],
-        engine: EngineKind,
-    ) -> ShardSimCounts {
-        // one pending filter instance: read index, owning crossbar
-        // (None = RISC-V pool), read slice, extracted window
-        struct Pending<'r> {
-            ri: u32,
-            xbar: Option<u32>,
-            read: &'r [u8],
-            win: Vec<u8>,
-        }
-        /// Run the buffered instances through the engine (Rust mirror of
-        /// the L1 kernel, scalar or bit-parallel — identical numerics)
-        /// and fold the pass/fail results into the shard counters.
-        fn drain(
-            wf: &mut (dyn WfEngine + Send),
-            pending: &mut Vec<Pending<'_>>,
-            p: &mut ShardSimCounts,
-        ) {
-            if pending.is_empty() {
-                return;
-            }
-            let rr: Vec<&[u8]> = pending.iter().map(|x| x.read).collect();
-            let ww: Vec<&[u8]> = pending.iter().map(|x| x.win.as_slice()).collect();
-            let out = wf.linear_batch(&rr, &ww).expect("simulator filter batch");
-            for (inst, &best) in pending.iter().zip(&out.best) {
-                if best > ETH as i32 {
-                    continue;
-                }
-                p.candidates[inst.ri as usize] = true;
-                match inst.xbar {
-                    None => p.counts.riscv_affine_instances += 1,
-                    Some(xb) => {
-                        p.counts.affine_instances += 1;
-                        *p.affine_per_xbar.entry(xb).or_default() += 1;
-                    }
-                }
-            }
-            pending.clear();
-        }
-
-        let mut p = ShardSimCounts {
-            counts: SimCounts::default(),
-            pairs_per_xbar: HashMap::new(),
-            affine_per_xbar: HashMap::new(),
-            candidates: vec![false; reads.len()],
-        };
-        let mut wf = engine.build();
-        let mut pending: Vec<Pending<'_>> = Vec::with_capacity(SIM_FILTER_BATCH);
-        for &(ri, ref seed) in items {
-            let read = &reads[ri as usize];
-            let occs = self.index.occurrences(seed.kmer);
-            match self.assignment_of(seed.kmer) {
+    /// surviving WF instances accumulate into the shard's
+    /// [`SIM_FILTER_BATCH`] buffer that drains through its engine as it
+    /// fills, so memory stays bounded no matter the workload. Instance
+    /// results are independent, so batch boundaries cannot change any
+    /// count.
+    fn sim_ingest(&self, p: &mut SimShard, items: impl IntoIterator<Item = SimItem>) {
+        for item in items {
+            let occs = self.index.occurrences(item.seed.kmer);
+            match self.assignment_of(item.seed.kmer) {
                 None => {
                     // lowTh minimizer: the RISC-V cores run both WF
                     // stages for every occurrence.
                     p.counts.riscv_pairs += 1;
                     p.counts.riscv_linear_instances += occs.len() as u64;
                     for &pos in occs {
-                        pending.push(Pending {
-                            ri,
+                        p.pending.push(PendingInstance {
+                            ri: item.ri,
                             xbar: None,
-                            read: &read.seq,
-                            win: self.index.window_for(pos, seed.read_offset as usize),
+                            seq: item.seq.clone(),
+                            win: self.index.window_for(pos, item.seed.read_offset as usize),
                         });
                     }
                 }
-                Some((first, n)) => {
+                Some((first, count)) => {
                     // the read is broadcast to every crossbar of the
                     // minimizer; the FIFO cap applies per crossbar
                     let cap = self.cfg.max_reads as u64;
-                    let count = p.pairs_per_xbar.entry(first).or_default();
-                    if *count >= cap {
+                    let slot = p.pairs_per_xbar.entry(first).or_default();
+                    if *slot >= cap {
                         p.counts.dropped_pairs += 1;
                         continue;
                     }
-                    *count += 1;
-                    for sub in 1..n {
+                    *slot += 1;
+                    for sub in 1..count {
                         *p.pairs_per_xbar.entry(first + sub).or_default() += 1;
                     }
                     p.counts.routed_pairs += 1;
                     p.counts.linear_instances += occs.len() as u64;
                     for (i, &pos) in occs.iter().enumerate() {
-                        pending.push(Pending {
-                            ri,
+                        p.pending.push(PendingInstance {
+                            ri: item.ri,
                             xbar: Some(first + (i / self.cfg.linear_rows) as u32),
-                            read: &read.seq,
-                            win: self.index.window_for(pos, seed.read_offset as usize),
+                            seq: item.seq.clone(),
+                            win: self.index.window_for(pos, item.seed.read_offset as usize),
                         });
                     }
                 }
             }
-            if pending.len() >= SIM_FILTER_BATCH {
-                drain(wf.as_mut(), &mut pending, &mut p);
+            if p.pending.len() >= SIM_FILTER_BATCH {
+                p.drain();
             }
         }
-        drain(wf.as_mut(), &mut pending, &mut p);
-        p
     }
 }
 
@@ -453,6 +616,33 @@ mod tests {
             assert_eq!(t.bottleneck_affine, serial.bottleneck_affine, "n={n}");
             assert_eq!(t.active_xbars, serial.active_xbars, "n={n}");
             assert_eq!(t.reads_with_candidates, serial.reads_with_candidates, "n={n}");
+        }
+    }
+
+    #[test]
+    fn stream_matches_slice_and_propagates_errors() {
+        let (idx, reads) = setup(60);
+        let sim =
+            FullSystemSim::new(&idx, DartPimConfig { low_th: 1, ..Default::default() });
+        let slice = sim.simulate(&reads);
+        for n in [1usize, 3] {
+            let c = sim
+                .simulate_stream(reads.iter().cloned().map(Ok), n, EngineKind::Rust)
+                .unwrap();
+            assert_eq!(c.routed_pairs, slice.routed_pairs, "n={n}");
+            assert_eq!(c.reads_with_candidates, slice.reads_with_candidates, "n={n}");
+            let err = sim
+                .simulate_stream(
+                    reads
+                        .iter()
+                        .cloned()
+                        .map(Ok)
+                        .chain(std::iter::once(Err(anyhow::anyhow!("bad record")))),
+                    n,
+                    EngineKind::Rust,
+                )
+                .unwrap_err();
+            assert!(err.to_string().contains("bad record"), "n={n}");
         }
     }
 

@@ -1,0 +1,196 @@
+//! Streaming-vs-in-memory parity: `map_stream` (tiny epochs, bounded
+//! channels) must be byte-identical to the collect wrapper `map_reads`
+//! for every threads × engine combination, and the CLI's streamed TSV —
+//! including `--reads -` over stdin — must be byte-identical to a
+//! file-fed run. This is the acceptance contract of the bounded-memory
+//! ingestion path: streaming changes *when* work happens, never *what*
+//! comes out.
+
+use std::io::Write as _;
+use std::process::{Command, Stdio};
+
+use dart_pim::cli;
+use dart_pim::coordinator::{FinalMapping, Pipeline, PipelineConfig};
+use dart_pim::genome::mutate::MutateConfig;
+use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+use dart_pim::genome::ReadRecord;
+use dart_pim::index::MinimizerIndex;
+use dart_pim::params::{K, READ_LEN, W};
+use dart_pim::pim::DartPimConfig;
+use dart_pim::runtime::EngineKind;
+
+/// Donor-derived randomized workload (SNPs + indels + sequencing
+/// errors), the same shape as the determinism suite so ties and
+/// near-ties actually occur.
+fn workload(n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
+    let genome = SynthConfig { len: 250_000, ..Default::default() }.generate();
+    let donor = MutateConfig::default().apply(&genome);
+    let idx = MinimizerIndex::build(genome, K, W, READ_LEN);
+    let reads =
+        ReadSimConfig { n_reads, ..Default::default() }.simulate(&donor.seq, |p| donor.to_ref(p));
+    (idx, reads)
+}
+
+/// Render mappings exactly like `dart-pim map` writes its TSV rows.
+fn render(mappings: &[Option<FinalMapping>]) -> String {
+    let mut out = String::new();
+    for m in mappings.iter().flatten() {
+        out.push_str(&format!(
+            "{}\t{}\t{}\t{}\t{}\t{}\n",
+            m.read_id,
+            m.pos,
+            if m.reverse { '-' } else { '+' },
+            m.dist,
+            m.cigar,
+            m.candidates
+        ));
+    }
+    out
+}
+
+fn cfg(threads: usize, engine: EngineKind, stream_epoch: usize) -> PipelineConfig {
+    PipelineConfig {
+        dart: DartPimConfig { low_th: 1, ..Default::default() },
+        threads,
+        worker_engine: engine,
+        stream_epoch,
+        ..Default::default()
+    }
+}
+
+/// map_stream with a deliberately tiny epoch (forcing many flush
+/// barriers and partial batches) must equal map_reads with the default
+/// epoch, for threads {1,4} × engines {rust,bitpal} — and the sink must
+/// see every read id exactly once, in order.
+#[test]
+fn stream_is_byte_identical_to_in_memory_for_threads_x_engines() {
+    let (idx, reads) = workload(300);
+    let baseline = {
+        let mut p = Pipeline::new(&idx, cfg(1, EngineKind::Rust, 4096), EngineKind::Rust.build());
+        render(&p.map_reads(&reads).unwrap().0)
+    };
+    assert!(!baseline.is_empty(), "workload must map reads");
+    for threads in [1usize, 4] {
+        for engine in [EngineKind::Rust, EngineKind::Bitpal] {
+            let mut p = Pipeline::new(&idx, cfg(threads, engine, 17), engine.build());
+            let mut got: Vec<Option<FinalMapping>> = Vec::new();
+            let mut next_expected = 0u32;
+            let metrics = p
+                .map_stream(reads.iter().cloned().map(Ok), |id, m| {
+                    assert_eq!(id, next_expected, "sink ids must be dense and ordered");
+                    next_expected += 1;
+                    got.push(m);
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(metrics.n_reads, reads.len() as u64);
+            assert_eq!(
+                baseline,
+                render(&got),
+                "threads={threads} engine={} epoch=17 must be byte-identical",
+                engine.name()
+            );
+        }
+    }
+}
+
+/// The CLI TSV must be byte-identical across `--threads` × `--engine`
+/// on a synthesized workload (the exact file a user diffs).
+#[test]
+fn cli_tsv_is_byte_identical_across_threads_and_engines() {
+    let dir = std::env::temp_dir().join(format!("dartpim-sp-{}", std::process::id()));
+    let d = dir.to_str().unwrap().to_string();
+    let run = |s: &str| cli::run(&s.split_whitespace().map(|x| x.to_string()).collect::<Vec<_>>());
+    run(&format!("synth --out-dir {d} --len 60000 --reads 60")).unwrap();
+    let mut outputs: Vec<(String, String)> = Vec::new();
+    for threads in [1usize, 4] {
+        for engine in ["rust", "bitpal"] {
+            let out = format!("{d}/map-{threads}-{engine}.tsv");
+            run(&format!(
+                "map --ref {d}/ref.fasta --reads {d}/reads.fastq --low-th 0 \
+                 --engine {engine} --threads {threads} --out {out}"
+            ))
+            .unwrap();
+            outputs.push((
+                format!("threads={threads} engine={engine}"),
+                std::fs::read_to_string(&out).unwrap(),
+            ));
+        }
+    }
+    let (base_label, base) = &outputs[0];
+    assert!(base.lines().count() > 40, "most reads must map:\n{base}");
+    for (label, tsv) in &outputs[1..] {
+        assert_eq!(base, tsv, "{label} must equal {base_label}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `map --reads -` (stdin) must produce the same bytes on stdout as a
+/// file-fed `--out` run — the real process, not a harness shortcut.
+#[test]
+fn stdin_streaming_matches_file_input() {
+    let dir = std::env::temp_dir().join(format!("dartpim-stdin-{}", std::process::id()));
+    let d = dir.to_str().unwrap().to_string();
+    let run = |s: &str| cli::run(&s.split_whitespace().map(|x| x.to_string()).collect::<Vec<_>>());
+    run(&format!("synth --out-dir {d} --len 60000 --reads 50")).unwrap();
+    run(&format!(
+        "map --ref {d}/ref.fasta --reads {d}/reads.fastq --low-th 0 --threads 2 \
+         --out {d}/file.tsv"
+    ))
+    .unwrap();
+    let expected = std::fs::read_to_string(format!("{d}/file.tsv")).unwrap();
+
+    let fastq = std::fs::read(format!("{d}/reads.fastq")).unwrap();
+    let mut child = Command::new(env!("CARGO_BIN_EXE_dart-pim"))
+        .args([
+            "map",
+            "--ref",
+            &format!("{d}/ref.fasta"),
+            "--reads",
+            "-",
+            "--low-th",
+            "0",
+            "--threads",
+            "2",
+        ])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn dart-pim");
+    child.stdin.as_mut().unwrap().write_all(&fastq).unwrap();
+    let out = child.wait_with_output().unwrap();
+    assert!(
+        out.status.success(),
+        "map --reads - failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_eq!(
+        expected,
+        String::from_utf8_lossy(&out.stdout),
+        "stdin-streamed TSV must be byte-identical to the file-fed run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A malformed record mid-stream aborts the run with the record's
+/// ordinal and name in the error (no silent partial output).
+#[test]
+fn malformed_mid_stream_record_aborts_with_position() {
+    let dir = std::env::temp_dir().join(format!("dartpim-badfq-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let d = dir.to_str().unwrap().to_string();
+    let run = |s: &str| cli::run(&s.split_whitespace().map(|x| x.to_string()).collect::<Vec<_>>());
+    run(&format!("synth --out-dir {d} --len 60000 --reads 5")).unwrap();
+    // append a record whose quality is shorter than its sequence
+    let mut fq = std::fs::read_to_string(format!("{d}/reads.fastq")).unwrap();
+    fq.push_str("@broken\nACGTACGT\n+\nII\n");
+    std::fs::write(format!("{d}/bad.fastq"), fq).unwrap();
+    let err = run(&format!(
+        "map --ref {d}/ref.fasta --reads {d}/bad.fastq --low-th 0 --out {d}/x.tsv"
+    ))
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("#6") && msg.contains("broken"), "error must locate the record: {msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
