@@ -13,6 +13,9 @@
 //! byte-identical (held by tests/shard_determinism.rs); only the
 //! wall-clock changes.
 
+// the workload builders live with the test suites: one definition of
+// "the standard engine batch" shared by tests and benches
+#[path = "../tests/common/mod.rs"]
 mod common;
 
 use common::planted_wf_batch;

@@ -10,6 +10,9 @@
 //! 64 instances per word op (one lane each), so its `linear_batch`
 //! should beat `rust` by >= 2x at batch >= 64.
 
+// the workload builders live with the test suites: one definition of
+// "the standard engine batch" shared by tests and benches
+#[path = "../tests/common/mod.rs"]
 mod common;
 
 use common::planted_wf_batch as mk_batch;

@@ -15,10 +15,10 @@ use std::io::{self, BufRead, Write};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{default_threads, FilterPolicy, Pipeline, PipelineConfig};
+use crate::coordinator::{default_threads, FilterPolicy, PairingConfig, Pipeline, PipelineConfig};
 use crate::eval::figures;
 use crate::genome::fasta::{load_fasta, save_fasta, FastaRecord};
-use crate::genome::fastq::{save_fastq, FastqRecord, FastqStream};
+use crate::genome::fastq::{save_fastq, FastqRecord, FastqStream, PairedFastqStream};
 use crate::genome::mutate::MutateConfig;
 use crate::genome::synth::{ReadSimConfig, SynthConfig};
 use crate::genome::ReadRecord;
@@ -102,14 +102,20 @@ USAGE: dart-pim <command> [--key value ...]
 COMMANDS
   synth     --out-dir D [--len 2000000] [--reads 10000] [--seed 1]
             [--snp-rate 0.001] [--sub-rate 0.004]
+            [--paired] [--insert-mean 350] [--insert-sd 30]
   index     --ref R.fasta --out index.bin [--read-len 150]
   map       --ref R.fasta --reads R.fastq|- [--engine xla|rust|bitpal]
             (or --index index.bin instead of --ref)
+            [--reads2 R2.fastq | --interleaved]
+            [--insert-min 50] [--insert-max 1000] [--no-rescue]
             [--max-reads 25000] [--low-th 3] [--batch 256] [--min-only]
-            [--revcomp] [--threads 1] [--out mappings.tsv]
+            [--revcomp] [--threads 1] [--stream-epoch 2048]
+            [--out mappings.tsv]
   evaluate  --ref R.fasta --reads R.fastq --truth truth.tsv
+            [--reads2 R2.fastq | --interleaved]
             [--engine xla|rust|bitpal] [--tolerance 5] [--threads 1]
   simulate  --ref R.fasta --reads R.fastq|- [--engine rust|bitpal]
+            [--reads2 R2.fastq | --interleaved]
             [--max-reads 25000] [--low-th 3] [--scale 389000000]
             [--batched-affine] [--constructive] [--threads 1]
   figures   [--fig 8|9|10a|10b|10c|table4|motivation|headline|all]
@@ -122,6 +128,17 @@ matter how large the read set is — TSV rows are emitted as reads
 finish. `--threads N` shards work across N worker threads
 (minimizer-hash partition; output is byte-identical for any N). The
 default is 1, or the DART_PIM_THREADS environment variable when set.
+
+PAIRED-END: `--reads2 R2.fastq` zips two parallel FASTQ files;
+`--interleaved` reads alternating R1/R2 records from one source
+(including stdin: `--interleaved --reads -`). Mates resolve together:
+proper pairs (FR orientation, insert within --insert-min/--insert-max)
+win, otherwise each mate keeps its single-end decision, and a mate with
+no candidates is rescued near its partner unless --no-rescue. Paired
+mapping implies --revcomp. The paired map TSV has columns
+  pair_id  mate(1|2)  pos  strand  dist  cigar  candidates  pair
+where pair is proper|single|rescued; rows appear only for mapped mates.
+Output stays byte-identical for every --threads/--engine/epoch setting.
 
 ENGINES: `rust` is the scalar reference engine; `bitpal` computes the
 linear filter bit-parallel (64 instances per machine word, identical
@@ -172,35 +189,70 @@ fn cmd_synth(args: &Args) -> Result<()> {
         ..Default::default()
     }
     .apply(&genome);
-    let reads = ReadSimConfig {
-        n_reads,
-        sub_rate: args.get_f64("sub-rate", 0.004)?,
-        seed: seed ^ 0x0EAD,
-        ..Default::default()
-    }
-    .simulate(&donor.seq, |p| donor.to_ref(p));
+    let paired = args.flag("paired");
+    let reads = if paired {
+        // --reads counts pairs in paired mode (2x records on disk)
+        crate::genome::synth::PairSimConfig {
+            n_pairs: n_reads,
+            insert_mean: args.get_usize("insert-mean", 350)?,
+            insert_sd: args.get_usize("insert-sd", 30)?,
+            sub_rate: args.get_f64("sub-rate", 0.004)?,
+            seed: seed ^ 0x0EAD,
+            ..Default::default()
+        }
+        .simulate(&donor.seq, donor.mapper())
+    } else {
+        ReadSimConfig {
+            n_reads,
+            sub_rate: args.get_f64("sub-rate", 0.004)?,
+            seed: seed ^ 0x0EAD,
+            ..Default::default()
+        }
+        .simulate(&donor.seq, donor.mapper())
+    };
 
     save_fasta(
         out_dir.join("ref.fasta"),
         &[FastaRecord { name: "synthetic".into(), seq: genome }],
     )?;
-    let records: Vec<FastqRecord> = reads
-        .iter()
-        .map(|r| FastqRecord::with_const_qual(format!("read{}", r.id), r.seq.clone(), b'I'))
-        .collect();
-    save_fastq(out_dir.join("reads.fastq"), &records)?;
+    if paired {
+        // three equivalent paired layouts: R1/R2 files + one interleaved
+        let rec = |r: &ReadRecord| {
+            let mate = r.id % 2 + 1;
+            FastqRecord::with_const_qual(
+                format!("pair{}/{mate}", r.id / 2),
+                r.seq.clone(),
+                b'I',
+            )
+        };
+        let r1: Vec<FastqRecord> =
+            reads.iter().filter(|r| r.id % 2 == 0).map(&rec).collect();
+        let r2: Vec<FastqRecord> =
+            reads.iter().filter(|r| r.id % 2 == 1).map(&rec).collect();
+        let il: Vec<FastqRecord> = reads.iter().map(&rec).collect();
+        save_fastq(out_dir.join("reads_1.fastq"), &r1)?;
+        save_fastq(out_dir.join("reads_2.fastq"), &r2)?;
+        save_fastq(out_dir.join("reads_interleaved.fastq"), &il)?;
+    } else {
+        let records: Vec<FastqRecord> = reads
+            .iter()
+            .map(|r| FastqRecord::with_const_qual(format!("read{}", r.id), r.seq.clone(), b'I'))
+            .collect();
+        save_fastq(out_dir.join("reads.fastq"), &records)?;
+    }
     let mut truth = String::from("read_id\ttruth_pos\terrors\n");
     for r in &reads {
         truth.push_str(&format!("{}\t{}\t{}\n", r.id, r.truth_pos, r.errors));
     }
     std::fs::write(out_dir.join("truth.tsv"), truth)?;
     println!(
-        "wrote {}: {} bp reference ({} SNPs, {} indels in donor), {} reads",
+        "wrote {}: {} bp reference ({} SNPs, {} indels in donor), {} {}",
         out_dir.display(),
         len,
         donor.n_snps,
         donor.n_indels,
-        n_reads
+        n_reads,
+        if paired { "read pairs" } else { "reads" }
     );
     Ok(())
 }
@@ -278,6 +330,100 @@ fn stream_reads(path: &str) -> Result<(usize, impl Iterator<Item = Result<ReadRe
     Ok((read_len, iter))
 }
 
+/// True when the arguments select paired-end input, after validating
+/// that the paired flags are coherent.
+fn paired_mode(args: &Args) -> Result<bool> {
+    let two_files = args.get("reads2").is_some();
+    let interleaved = args.flag("interleaved");
+    anyhow::ensure!(
+        !(two_files && interleaved),
+        "--reads2 and --interleaved are mutually exclusive; pass one paired source"
+    );
+    if two_files && args.get("reads") == Some("-") && args.get("reads2") == Some("-") {
+        bail!(
+            "cannot stream both mates from stdin; interleave the pairs and pass \
+             `--interleaved --reads -`"
+        );
+    }
+    Ok(two_files || interleaved)
+}
+
+/// Start streaming a paired source (`--reads2` two-file zip or
+/// `--interleaved`): peeks the first pair to fix the read length, then
+/// yields `ReadRecord`s in the paired layout (R1 of pair `i` at id `2i`,
+/// R2 at `2i + 1`). Structural errors (unmatched mate, mate-name
+/// mismatch, length divergence) name the 1-based pair ordinal and the
+/// read name.
+fn stream_paired_reads(
+    args: &Args,
+) -> Result<(usize, Box<dyn Iterator<Item = Result<ReadRecord>>>)> {
+    let r1_path = args.get("reads").context("--reads required")?;
+    let label = if args.flag("interleaved") {
+        format!("interleaved FASTQ {r1_path}")
+    } else {
+        format!("paired FASTQ {r1_path} + {}", args.get("reads2").unwrap_or("?"))
+    };
+    let mut stream: Box<dyn Iterator<Item = io::Result<(FastqRecord, FastqRecord)>>> =
+        if args.flag("interleaved") {
+            Box::new(PairedFastqStream::interleaved(open_reads(r1_path)?))
+        } else {
+            let r2_path = args.get("reads2").context("--reads2 required")?;
+            Box::new(PairedFastqStream::two_files(open_reads(r1_path)?, open_reads(r2_path)?))
+        };
+    let first = match stream.next() {
+        None => bail!("empty {label}"),
+        Some(p) => p.with_context(|| format!("reading {label}"))?,
+    };
+    let read_len = first.0.seq.len();
+    anyhow::ensure!(read_len > 0, "first record of {label} has an empty sequence");
+    let label_owned = label.clone();
+    let iter = std::iter::once(Ok(first))
+        .chain(stream.map(move |p| p.with_context(|| format!("reading {label_owned}"))))
+        .enumerate()
+        .flat_map(move |(i, p)| match p {
+            Err(e) => vec![Err(e)],
+            Ok((r1, r2)) => {
+                let check = |mate: u8, rec: &FastqRecord| -> Result<()> {
+                    anyhow::ensure!(
+                        rec.seq.len() == read_len,
+                        "read pair #{} (R{} {:?}) is {} bp; the pipeline requires a uniform \
+                         read length ({} bp, set by the first record)",
+                        i + 1,
+                        mate,
+                        rec.name,
+                        rec.seq.len(),
+                        read_len
+                    );
+                    Ok(())
+                };
+                if let Err(e) = check(1, &r1).and_then(|_| check(2, &r2)) {
+                    return vec![Err(e)];
+                }
+                vec![
+                    Ok(ReadRecord { id: 2 * i as u32, seq: r1.seq, truth_pos: 0, errors: 0 }),
+                    Ok(ReadRecord { id: 2 * i as u32 + 1, seq: r2.seq, truth_pos: 0, errors: 0 }),
+                ]
+            }
+        });
+    Ok((read_len, Box::new(iter)))
+}
+
+/// Start streaming whichever input shape the arguments select: the
+/// single-end `--reads` stream, or the paired layout from
+/// `--reads2`/`--interleaved`. Returns (read_len, paired?, stream).
+fn stream_input(
+    args: &Args,
+) -> Result<(usize, bool, Box<dyn Iterator<Item = Result<ReadRecord>>>)> {
+    if paired_mode(args)? {
+        let (read_len, iter) = stream_paired_reads(args)?;
+        Ok((read_len, true, iter))
+    } else {
+        let reads_path = args.get("reads").context("--reads required")?;
+        let (read_len, iter) = stream_reads(reads_path)?;
+        Ok((read_len, false, Box::new(iter)))
+    }
+}
+
 /// Load the prebuilt index (`--index`) or build one from `--ref`,
 /// checked against the read stream's geometry.
 fn load_or_build_index(args: &Args, read_len: usize) -> Result<MinimizerIndex> {
@@ -301,10 +447,11 @@ fn load_or_build_index(args: &Args, read_len: usize) -> Result<MinimizerIndex> {
 /// Load the reference (or prebuilt index) and the **whole** read set —
 /// the collect wrapper over the internal read stream for subcommands
 /// that genuinely need random access (`evaluate` joins against a truth
-/// table). `map`/`simulate` stream instead.
+/// table). `map`/`simulate` stream instead. Honors the paired input
+/// flags (`--reads2`/`--interleaved`): paired sources collect in the
+/// paired id layout.
 pub fn load_inputs(args: &Args) -> Result<(MinimizerIndex, Vec<ReadRecord>)> {
-    let reads_path = args.get("reads").context("--reads required")?;
-    let (read_len, reads) = stream_reads(reads_path)?;
+    let (read_len, _, reads) = stream_input(args)?;
     let reads: Vec<ReadRecord> = reads.collect::<Result<_>>()?;
     let index = load_or_build_index(args, read_len)?;
     Ok((index, reads))
@@ -344,6 +491,18 @@ where
         "the AOT artifacts target {}bp reads; use --engine rust or bitpal for other lengths",
         READ_LEN
     );
+    let paired = paired_mode(args)?;
+    let pairing = if paired {
+        let insert_min = args.get_usize("insert-min", 50)? as u32;
+        let insert_max = args.get_usize("insert-max", 1000)? as u32;
+        anyhow::ensure!(
+            insert_min <= insert_max,
+            "--insert-min {insert_min} exceeds --insert-max {insert_max}"
+        );
+        Some(PairingConfig { insert_min, insert_max, rescue: !args.flag("no-rescue") })
+    } else {
+        None
+    };
     let cfg = PipelineConfig {
         dart: dart_config(args)?,
         batch_size: args.get_usize("batch", 256)?,
@@ -352,8 +511,16 @@ where
         } else {
             FilterPolicy::AllPassing
         },
-        handle_revcomp: args.flag("revcomp"),
+        // paired mapping needs both strands: R2 is sequenced from the
+        // opposite strand of its fragment
+        handle_revcomp: args.flag("revcomp") || paired,
         threads: args.get_usize("threads", default_threads())?,
+        // emission/memory granularity only — never changes output bytes
+        // (tests/golden_e2e.rs sweeps it against the default)
+        stream_epoch: args
+            .get_usize("stream-epoch", crate::coordinator::pipeline::STREAM_EPOCH_READS)?
+            .max(1),
+        pairing,
         ..Default::default()
     };
     // Default engine: the PJRT path when it is compiled in, else the
@@ -417,8 +584,7 @@ fn run_pipeline(
 }
 
 fn cmd_map(args: &Args) -> Result<()> {
-    let reads_path = args.get("reads").context("--reads required")?;
-    let (read_len, reads) = stream_reads(reads_path)?;
+    let (read_len, paired, reads) = stream_input(args)?;
     let index = load_or_build_index(args, read_len)?;
     let out_path = args.get("out");
     let mut out: Box<dyn Write> = match out_path {
@@ -428,23 +594,42 @@ fn cmd_map(args: &Args) -> Result<()> {
         }
         None => Box::new(io::BufWriter::new(io::stdout())),
     };
-    out.write_all(b"read_id\tpos\tstrand\tdist\tcigar\tcandidates\n")?;
+    if paired {
+        out.write_all(b"pair_id\tmate\tpos\tstrand\tdist\tcigar\tcandidates\tpair\n")?;
+    } else {
+        out.write_all(b"read_id\tpos\tstrand\tdist\tcigar\tcandidates\n")?;
+    }
     // streaming TSV emitter: rows leave as epochs complete, so memory
     // stays O(epoch + threads x batch) no matter the FASTQ size (stdin
     // included); row order and bytes are identical for every --threads
     // and --engine setting
     let metrics = run_pipeline_stream(args, &index, reads, |_, m| {
         if let Some(m) = m {
-            writeln!(
-                out,
-                "{}\t{}\t{}\t{}\t{}\t{}",
-                m.read_id,
-                m.pos,
-                if m.reverse { '-' } else { '+' },
-                m.dist,
-                m.cigar,
-                m.candidates
-            )?;
+            if paired {
+                writeln!(
+                    out,
+                    "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+                    m.read_id / 2,
+                    m.read_id % 2 + 1,
+                    m.pos,
+                    if m.reverse { '-' } else { '+' },
+                    m.dist,
+                    m.cigar,
+                    m.candidates,
+                    m.pair.as_str()
+                )?;
+            } else {
+                writeln!(
+                    out,
+                    "{}\t{}\t{}\t{}\t{}\t{}",
+                    m.read_id,
+                    m.pos,
+                    if m.reverse { '-' } else { '+' },
+                    m.dist,
+                    m.cigar,
+                    m.candidates
+                )?;
+            }
         }
         Ok(())
     })?;
@@ -458,6 +643,7 @@ fn cmd_map(args: &Args) -> Result<()> {
 }
 
 fn cmd_evaluate(args: &Args) -> Result<()> {
+    let paired = paired_mode(args)?;
     let (index, mut reads) = load_inputs(args)?;
     let truth = load_truth(args.get("truth").context("--truth required")?, reads.len())?;
     for r in reads.iter_mut() {
@@ -475,12 +661,43 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
         rep.mapped,
         rep.n_reads
     );
+    if paired {
+        let pr = crate::eval::evaluate_pair_accuracy(&reads, &mappings, tol);
+        println!(
+            "pair-aware (±{tol}): pair recall {:.4} ({}/{} pairs)  mate accuracy {:.4}  \
+             precision {:.4}  proper mates {}  rescued {}",
+            pr.pair_recall(),
+            pr.pair_correct,
+            pr.n_pairs,
+            pr.mate_accuracy(),
+            pr.mate_precision(),
+            pr.proper_mates,
+            pr.rescued_mates
+        );
+        // single-end baseline over the same records (pairing off,
+        // revcomp kept on so both strands stay mappable): the pairing
+        // gain the paper-adjacent literature leans on, measured here
+        let mut se_args = Args {
+            cmd: args.cmd.clone(),
+            opts: args.opts.clone(),
+            flags: args.flags.clone(),
+        };
+        se_args.opts.remove("reads2");
+        se_args.flags.retain(|f| f != "interleaved");
+        se_args.flags.push("revcomp".into());
+        let (se_mappings, _) = run_pipeline(&se_args, &index, &reads)?;
+        let se = crate::eval::evaluate_pair_accuracy(&reads, &se_mappings, tol);
+        println!(
+            "single-end baseline on the same reads: mate accuracy {:.4}  (pairing gain {:+.4})",
+            se.mate_accuracy(),
+            pr.mate_accuracy() - se.mate_accuracy()
+        );
+    }
     Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let reads_path = args.get("reads").context("--reads required")?;
-    let (read_len, reads) = stream_reads(reads_path)?;
+    let (read_len, paired, reads) = stream_input(args)?;
     let index = load_or_build_index(args, read_len)?;
     let cfg = dart_config(args)?;
     let threads = args.get_usize("threads", default_threads())?;
@@ -493,8 +710,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     })?;
     let sim = FullSystemSim::new(&index, cfg.clone());
     // streams the FASTQ through the bounded sim shards (O(batch) in
-    // flight), exactly like `map`
-    let counts = sim.simulate_stream(reads, threads, engine)?;
+    // flight), exactly like `map`; paired sources mirror the live
+    // pipeline's mate orientation and report pair availability
+    let counts = if paired {
+        sim.simulate_stream_paired(reads, threads, engine)?
+    } else {
+        sim.simulate_stream(reads, threads, engine)?
+    };
+    if paired {
+        println!(
+            "paired workload: {} pairs, both-mates-alive {} ({:.1}%)",
+            counts.n_pairs,
+            counts.pairs_with_candidates,
+            100.0 * counts.pairs_with_candidates as f64 / counts.n_pairs.max(1) as f64
+        );
+    }
     let cost = if args.flag("constructive") {
         CostSource::Constructive
     } else {
@@ -711,6 +941,49 @@ mod tests {
         run(&argv(&format!(
             "simulate --ref {d}/ref.fasta --reads {d}/reads.fastq --low-th 0 \
              --engine bitpal --threads 2"
+        )))
+        .unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn paired_synth_map_evaluate_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("dartpim-pe-{}", std::process::id()));
+        let d = dir.to_str().unwrap();
+        run(&argv(&format!("synth --out-dir {d} --len 80000 --reads 30 --paired"))).unwrap();
+        // two-file and interleaved sources must produce identical TSVs
+        run(&argv(&format!(
+            "map --ref {d}/ref.fasta --reads {d}/reads_1.fastq --reads2 {d}/reads_2.fastq \
+             --low-th 0 --out {d}/two.tsv"
+        )))
+        .unwrap();
+        run(&argv(&format!(
+            "map --ref {d}/ref.fasta --reads {d}/reads_interleaved.fastq --interleaved \
+             --low-th 0 --out {d}/il.tsv"
+        )))
+        .unwrap();
+        let two = std::fs::read_to_string(dir.join("two.tsv")).unwrap();
+        let il = std::fs::read_to_string(dir.join("il.tsv")).unwrap();
+        assert_eq!(two, il, "two-file and interleaved sources must agree byte-for-byte");
+        assert!(two.lines().count() > 50, "most mates should map:\n{two}");
+        assert!(two.starts_with("pair_id\tmate\t"), "paired TSV schema:\n{two}");
+        assert!(two.contains("proper"), "proper pairs expected:\n{two}");
+        // sharded paired mapping stays byte-identical
+        run(&argv(&format!(
+            "map --ref {d}/ref.fasta --reads {d}/reads_1.fastq --reads2 {d}/reads_2.fastq \
+             --low-th 0 --threads 3 --out {d}/two3.tsv"
+        )))
+        .unwrap();
+        let two3 = std::fs::read_to_string(dir.join("two3.tsv")).unwrap();
+        assert_eq!(two, two3, "sharded paired mapping must be byte-identical");
+        run(&argv(&format!(
+            "evaluate --ref {d}/ref.fasta --reads {d}/reads_1.fastq --reads2 {d}/reads_2.fastq \
+             --truth {d}/truth.tsv --low-th 0"
+        )))
+        .unwrap();
+        run(&argv(&format!(
+            "simulate --ref {d}/ref.fasta --reads {d}/reads_interleaved.fastq --interleaved \
+             --low-th 0"
         )))
         .unwrap();
         std::fs::remove_dir_all(&dir).ok();

@@ -28,6 +28,11 @@ pub struct WorkTag {
     pub xbar: u32,
     /// Reverse-complement orientation of the read.
     pub reverse: bool,
+    /// Mate index within the read's pair (0 = R1 / single-end, 1 = R2).
+    /// Provenance: pair arbitration groups candidates by read id and
+    /// cross-checks this tag against the paired layout at resolution
+    /// (`coordinator::pair`), catching any routing/pairing id desync.
+    pub mate: u8,
 }
 
 /// One batch ready for the engine. Reads are shared slices (one
@@ -135,6 +140,7 @@ mod tests {
                 pl: i as i64 * 10,
                 xbar: i,
                 reverse: false,
+                mate: 0,
             },
             Arc::from(vec![0u8; READ_LEN]),
             vec![1u8; window_len(READ_LEN)],

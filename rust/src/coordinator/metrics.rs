@@ -47,6 +47,14 @@ pub struct Metrics {
     pub affine_batches: u64,
     /// Affine results whose traceback could not be reconstructed.
     pub traceback_failures: u64,
+    /// Read pairs resolved as proper pairs (orientation + insert window)
+    /// by the epoch-boundary pair arbitration. Zero in single-end runs.
+    pub proper_pairs: u64,
+    /// Mates recovered by the rescue scan near their partner's locus.
+    pub rescued_mates: u64,
+    /// Banded WF instances spent by the rescue scan (always on the
+    /// scalar engine, so the count is engine-invariant).
+    pub rescue_instances: u64,
     /// Per-crossbar routed pair counts (bottleneck analysis).
     pub pairs_per_xbar: HashMap<u32, u64>,
     /// Per-crossbar affine instance counts.
@@ -82,6 +90,9 @@ impl Metrics {
         self.linear_batches += m.linear_batches;
         self.affine_batches += m.affine_batches;
         self.traceback_failures += m.traceback_failures;
+        self.proper_pairs += m.proper_pairs;
+        self.rescued_mates += m.rescued_mates;
+        self.rescue_instances += m.rescue_instances;
         for (k, v) in m.pairs_per_xbar {
             *self.pairs_per_xbar.entry(k).or_default() += v;
         }
@@ -112,6 +123,9 @@ impl Metrics {
         m.insert("filter_passed".to_string(), self.filter_passed);
         m.insert("reads_with_candidates".to_string(), self.reads_with_candidates);
         m.insert("traceback_failures".to_string(), self.traceback_failures);
+        m.insert("proper_pairs".to_string(), self.proper_pairs);
+        m.insert("rescued_mates".to_string(), self.rescued_mates);
+        m.insert("rescue_instances".to_string(), self.rescue_instances);
         for (k, v) in &self.pairs_per_xbar {
             m.insert(format!("xbar{k}:pairs"), *v);
         }
@@ -122,7 +136,9 @@ impl Metrics {
     }
 
     /// Convert measured counters into simulator counts (the bridge from
-    /// the live run to Eq. 6/7 projections).
+    /// the live run to Eq. 6/7 projections). Pair totals are a
+    /// simulator-side concept (`Metrics` has no per-pair availability
+    /// counter) and are left at zero.
     pub fn to_sim_counts(&self) -> SimCounts {
         SimCounts {
             n_reads: self.n_reads,
@@ -137,6 +153,8 @@ impl Metrics {
             bottleneck_affine: self.affine_per_xbar.values().copied().max().unwrap_or(0),
             active_xbars: self.pairs_per_xbar.len() as u64,
             reads_with_candidates: self.reads_with_candidates,
+            n_pairs: 0,
+            pairs_with_candidates: 0,
         }
     }
 

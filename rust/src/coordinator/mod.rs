@@ -15,6 +15,12 @@
 //!                  worker that runs FIFO admission, filtering,
 //!                  alignment, and traceback over one shard's disjoint
 //!                  slice with O(batch) in-flight state
+//! * [`pair`]     — epoch-boundary proper-pair arbitration for
+//!                  paired-end runs: FR orientation + insert-window
+//!                  scoring over full candidate lists, single-end
+//!                  fallback, and scalar-engine mate rescue — all
+//!                  epoch-stateless, preserving byte-identical output
+//!                  across threads × engine × epoch
 //! * [`state`]    — per-read best-so-far PL aggregation, the main
 //!                  RISC-V's bookkeeping (step 7), with the deterministic
 //!                  tie-break that makes the shard merge order-free
@@ -38,11 +44,13 @@
 pub mod batcher;
 pub mod fifo;
 pub mod metrics;
+pub mod pair;
 pub mod pipeline;
 pub mod router;
 pub mod scheduler;
 pub mod shard;
 pub mod state;
 
+pub use pair::{PairStatus, PairingConfig};
 pub use pipeline::{default_threads, FilterPolicy, FinalMapping, Pipeline, PipelineConfig};
 pub use router::{Router, Target};

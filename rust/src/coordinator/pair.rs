@@ -1,0 +1,406 @@
+//! Proper-pair arbitration for paired-end mapping.
+//!
+//! Real short-read workloads are overwhelmingly paired: the sequencer
+//! reads both ends of a ~350 bp fragment, so the two mates of a pair
+//! must map in opposite orientations (FR) at a distance drawn from the
+//! library's insert-size distribution. That joint constraint is a major
+//! accuracy lever — a read that is ambiguous on its own (a repeat copy)
+//! is usually unambiguous once its mate pins the fragment.
+//!
+//! The pipeline realizes pairing as an **epoch-boundary arbitration
+//! stage** that runs on the coordinator after the shard workers drain:
+//!
+//! 1. every surviving affine outcome of the epoch is grouped per read
+//!    ([`super::state::PairCandidates`]) and canonically sorted, so the
+//!    candidate lists are identical for any shard interleaving;
+//! 2. for each pair, all R1 × R2 candidate combinations in proper FR
+//!    orientation with an insert inside
+//!    [`PairingConfig::insert_min`]..[`PairingConfig::insert_max`] are
+//!    scored by combined affine distance (deterministic lexicographic
+//!    tie-break), and the best proper combination wins;
+//! 3. pairs with no proper combination fall back to each mate's
+//!    **single-end decision** (the head of its canonical candidate
+//!    list, which equals the [`super::state::BestSoFar`] winner
+//!    exactly — a pair with one unmappable mate degrades to the
+//!    single-end result);
+//! 4. optionally, a mate with *no* candidates is **rescued**: a banded
+//!    WF scan over the insert window implied by its partner's mapping,
+//!    always on the scalar engine so the result is engine-invariant.
+//!
+//! Determinism (the pipeline's sixth invariant): pair resolution is a
+//! pure function of one epoch's candidate multiset, the read sequences,
+//! the reference, and the [`PairingConfig`]. No state crosses epoch
+//! boundaries, epochs always end on pair boundaries, and rescue runs on
+//! the fixed scalar engine — so paired output is byte-identical for
+//! every threads × engine × epoch setting, exactly like single-end
+//! output. `tests/golden_e2e.rs` and `tests/pair_parity.rs` hold this.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::genome::revcomp;
+use crate::index::MinimizerIndex;
+use crate::params::{ETH, SAT_AFFINE};
+use crate::runtime::{RustEngine, WfEngine};
+
+use super::batcher::WorkTag;
+use super::metrics::Metrics;
+use super::pipeline::FinalMapping;
+use super::shard::decode_affine;
+use super::state::AffineOutcome;
+
+/// Paired-end resolution policy ([`super::PipelineConfig::pairing`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PairingConfig {
+    /// Smallest outer fragment length accepted as a proper pair.
+    pub insert_min: u32,
+    /// Largest outer fragment length accepted as a proper pair.
+    pub insert_max: u32,
+    /// Attempt to rescue a candidate-less mate by scanning the insert
+    /// window implied by its partner's mapping.
+    pub rescue: bool,
+}
+
+impl Default for PairingConfig {
+    fn default() -> Self {
+        PairingConfig { insert_min: 50, insert_max: 1000, rescue: true }
+    }
+}
+
+/// How a read's final mapping was decided.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PairStatus {
+    /// Single-end run: no pair arbitration applied.
+    #[default]
+    Unpaired,
+    /// Both mates placed by a proper-pair combination (FR orientation,
+    /// insert inside the window).
+    Proper,
+    /// Paired run, but this mate kept its single-end decision (no
+    /// proper combination existed for the pair).
+    Single,
+    /// This mate had no candidates of its own and was recovered by the
+    /// rescue scan near its partner's locus.
+    Rescued,
+}
+
+impl PairStatus {
+    /// The TSV spelling of the status (`map` paired output column 8).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PairStatus::Unpaired => "unpaired",
+            PairStatus::Proper => "proper",
+            PairStatus::Single => "single",
+            PairStatus::Rescued => "rescued",
+        }
+    }
+}
+
+/// Upper bound on rescue anchors per mate (a safety valve for absurd
+/// insert windows; the default window needs ~160).
+const MAX_RESCUE_ANCHORS: usize = 2048;
+
+/// Resolve one epoch's pairs into per-read decisions.
+///
+/// `lists` holds the canonically sorted candidate list of each read in
+/// the epoch (`lists[i]` is read `start + i`; `lists.len()` is even and
+/// reads `2k`/`2k+1` are mates). `seqs[i]` is the forward (as-sequenced)
+/// sequence of read `start + i`, used only by the rescue scan.
+pub(crate) fn resolve_epoch_pairs(
+    start: u32,
+    lists: Vec<Vec<AffineOutcome>>,
+    seqs: &[Arc<[u8]>],
+    index: &MinimizerIndex,
+    pcfg: &PairingConfig,
+    metrics: &mut Metrics,
+) -> Result<Vec<Option<FinalMapping>>> {
+    debug_assert_eq!(lists.len() % 2, 0, "epochs end on pair boundaries");
+    debug_assert_eq!(lists.len(), seqs.len());
+    let mut out: Vec<Option<FinalMapping>> = Vec::with_capacity(lists.len());
+    let mut it = lists.into_iter();
+    let mut slot = 0usize;
+    while let (Some(l1), Some(l2)) = (it.next(), it.next()) {
+        let (id1, id2) = (start + slot as u32, start + slot as u32 + 1);
+        // the mate tag each outcome carried through the shard workers
+        // must agree with the paired id layout the arbitration assumes —
+        // a mismatch means routing and pairing disagree about which read
+        // is which mate
+        debug_assert!(l1.iter().all(|o| o.mate == 0), "R1 list holds a mate-1 outcome");
+        debug_assert!(l2.iter().all(|o| o.mate == 1), "R2 list holds a mate-0 outcome");
+        match best_proper_combination(&l1, &l2, index.read_len, pcfg) {
+            Some((i1, i2)) => {
+                metrics.proper_pairs += 1;
+                out.push(Some(final_mapping(id1, &l1[i1], l1.len() as u32, PairStatus::Proper)));
+                out.push(Some(final_mapping(id2, &l2[i2], l2.len() as u32, PairStatus::Proper)));
+            }
+            None => {
+                let d1 = singleton_decision(id1, &l1);
+                let d2 = singleton_decision(id2, &l2);
+                let (d1, d2) = match (d1, d2) {
+                    // exactly one mate mapped: try to rescue the other
+                    // near its partner's locus
+                    (Some(a), None) if pcfg.rescue => {
+                        let r = rescue_mate(&a, &seqs[slot + 1], id2, 1, index, pcfg, metrics)?;
+                        (Some(a), r)
+                    }
+                    (None, Some(b)) if pcfg.rescue => {
+                        let r = rescue_mate(&b, &seqs[slot], id1, 0, index, pcfg, metrics)?;
+                        (r, Some(b))
+                    }
+                    other => other,
+                };
+                out.push(d1);
+                out.push(d2);
+            }
+        }
+        slot += 2;
+    }
+    Ok(out)
+}
+
+/// Build the per-read decision from a winning candidate.
+fn final_mapping(
+    read_id: u32,
+    o: &AffineOutcome,
+    candidates: u32,
+    pair: PairStatus,
+) -> FinalMapping {
+    FinalMapping {
+        read_id,
+        pos: o.pos,
+        dist: o.dist,
+        cigar: o.cigar.clone(),
+        candidates,
+        reverse: o.reverse,
+        pair,
+    }
+}
+
+/// The single-end fallback decision: the head of the canonical list
+/// (identical to the [`super::state::BestSoFar`] winner), tagged
+/// [`PairStatus::Single`].
+fn singleton_decision(read_id: u32, list: &[AffineOutcome]) -> Option<FinalMapping> {
+    list.first().map(|o| final_mapping(read_id, o, list.len() as u32, PairStatus::Single))
+}
+
+/// Scan all R1 × R2 candidate combinations for the best proper pair:
+/// opposite orientations, forward mate upstream, outer insert inside the
+/// configured window. Score is combined affine distance with a full
+/// lexicographic tie-break `(dist, pos1, pos2, key1, key2)`, so the
+/// winning combination is unique and arrival-order independent.
+/// Returns the winning indices into the (sorted) lists.
+fn best_proper_combination(
+    l1: &[AffineOutcome],
+    l2: &[AffineOutcome],
+    read_len: usize,
+    pcfg: &PairingConfig,
+) -> Option<(usize, usize)> {
+    let mut best: Option<((i32, i64, i64, u64, u64), (usize, usize))> = None;
+    for (i1, c1) in l1.iter().enumerate() {
+        if let Some(((bd, ..), _)) = best {
+            // lists are dist-sorted: once c1 alone exceeds the best
+            // combined distance, no later combination can win
+            if c1.dist > bd {
+                break;
+            }
+        }
+        for (i2, c2) in l2.iter().enumerate() {
+            if c1.reverse == c2.reverse {
+                continue; // FR requires opposite orientations
+            }
+            let (fwd, rev) = if c1.reverse { (c2, c1) } else { (c1, c2) };
+            if rev.pos < fwd.pos {
+                continue; // forward mate must be upstream
+            }
+            let insert = rev.pos + read_len as i64 - fwd.pos;
+            if insert < pcfg.insert_min as i64 || insert > pcfg.insert_max as i64 {
+                continue;
+            }
+            let score = (c1.dist + c2.dist, c1.pos, c2.pos, c1.key, c2.key);
+            let better = match &best {
+                None => true,
+                Some((b, _)) => score < *b,
+            };
+            if better {
+                best = Some((score, (i1, i2)));
+            }
+        }
+    }
+    best.map(|(_, idx)| idx)
+}
+
+/// Rescue scan: the mate had no candidates of its own, but its partner
+/// mapped — so if the pair is real, the mate lies in the partner's
+/// insert window in the opposite orientation. Sweep banded WF anchors
+/// across that window (always on the scalar engine, so the outcome is
+/// identical whatever engine the run used) and take the best surviving
+/// alignment, if any.
+fn rescue_mate(
+    partner: &FinalMapping,
+    mate_seq: &Arc<[u8]>,
+    read_id: u32,
+    mate: u8,
+    index: &MinimizerIndex,
+    pcfg: &PairingConfig,
+    metrics: &mut Metrics,
+) -> Result<Option<FinalMapping>> {
+    let rl = index.read_len as i64;
+    // Expected leftmost position range of the rescued mate under the
+    // insert window (FR orientation, partner's side known).
+    let (lo, hi) = if partner.reverse {
+        // partner is the downstream reverse mate; rescued mate is
+        // forward, upstream: insert = partner.pos + rl - a
+        (partner.pos + rl - pcfg.insert_max as i64, partner.pos + rl - pcfg.insert_min as i64)
+    } else {
+        // partner is the upstream forward mate; rescued mate is
+        // reverse, downstream: insert = a + rl - partner.pos
+        (partner.pos + pcfg.insert_min as i64 - rl, partner.pos + pcfg.insert_max as i64 - rl)
+    };
+    let lo = lo.max(0);
+    let hi = hi.min(index.reference.len() as i64 - 1);
+    if hi < lo {
+        return Ok(None);
+    }
+    let expected_reverse = !partner.reverse;
+    let query: Vec<u8> =
+        if expected_reverse { revcomp(mate_seq) } else { mate_seq.as_ref().to_vec() };
+
+    // Anchor sweep: the band reaches ±eth around each anchor, so a step
+    // of eth covers every position in [lo, hi] with margin.
+    let span = (hi - lo) as usize + 1;
+    let step = (ETH.max(1)).max(span.div_ceil(MAX_RESCUE_ANCHORS)) as i64;
+    let mut anchors: Vec<u32> = Vec::with_capacity(span / step as usize + 1);
+    let mut a = lo;
+    while a <= hi {
+        anchors.push(a as u32);
+        a += step;
+    }
+    metrics.rescue_instances += anchors.len() as u64;
+
+    let wins: Vec<Vec<u8>> = anchors.iter().map(|&p| index.window_for(p, 0)).collect();
+    let rr: Vec<&[u8]> = anchors.iter().map(|_| query.as_slice()).collect();
+    let ww: Vec<&[u8]> = wins.iter().map(|w| w.as_slice()).collect();
+    let mut engine = RustEngine;
+    let lin = engine.linear_batch(&rr, &ww)?;
+
+    // Affine-align the filter survivors and keep the best decodable
+    // outcome by the canonical rank.
+    let survivors: Vec<usize> =
+        (0..anchors.len()).filter(|&i| lin.best[i] <= ETH as i32).collect();
+    if survivors.is_empty() {
+        return Ok(None);
+    }
+    let arr: Vec<&[u8]> = survivors.iter().map(|_| query.as_slice()).collect();
+    let aww: Vec<&[u8]> = survivors.iter().map(|&i| ww[i]).collect();
+    let aff = engine.affine_batch(&arr, &aww)?;
+    let mut best: Option<AffineOutcome> = None;
+    for (si, &i) in survivors.iter().enumerate() {
+        if aff.best[si] >= SAT_AFFINE {
+            continue;
+        }
+        let tag = WorkTag {
+            read_id,
+            // rescue instances sit outside the routed pair-id space;
+            // the anchor makes the arbitration key total
+            pair_id: u32::MAX,
+            ref_pos: anchors[i],
+            read_offset: 0,
+            pl: anchors[i] as i64,
+            xbar: u32::MAX,
+            reverse: expected_reverse,
+            mate,
+        };
+        let decoded = decode_affine(
+            &tag,
+            aff.best[si],
+            aff.best_j[si] as usize,
+            &aff.dirs[si],
+            &query,
+            metrics,
+        );
+        if let Some(o) = decoded {
+            let better = match &best {
+                None => true,
+                Some(b) => o.rank() < b.rank(),
+            };
+            if better {
+                best = Some(o);
+            }
+        }
+    }
+    Ok(best.map(|o| {
+        metrics.rescued_mates += 1;
+        final_mapping(read_id, &o, 1, PairStatus::Rescued)
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::Cigar;
+
+    fn cand(pos: i64, dist: i32, reverse: bool, key: u64) -> AffineOutcome {
+        AffineOutcome {
+            read_id: 0,
+            pos,
+            dist,
+            cigar: Cigar(vec![]),
+            reverse,
+            mate: 0,
+            key,
+        }
+    }
+
+    fn pcfg() -> PairingConfig {
+        PairingConfig { insert_min: 100, insert_max: 500, rescue: true }
+    }
+
+    #[test]
+    fn proper_combination_requires_fr_orientation_and_insert_window() {
+        let rl = 100usize;
+        // R1 forward at 1000, R2 reverse at 1250: insert 350 — proper
+        let l1 = vec![cand(1000, 1, false, 1)];
+        let l2 = vec![cand(1250, 1, true, 2)];
+        assert_eq!(best_proper_combination(&l1, &l2, rl, &pcfg()), Some((0, 0)));
+
+        // same orientation: never proper
+        let l2_same = vec![cand(1250, 0, false, 2)];
+        assert_eq!(best_proper_combination(&l1, &l2_same, rl, &pcfg()), None);
+
+        // insert outside the window
+        let l2_far = vec![cand(3000, 0, true, 2)];
+        assert_eq!(best_proper_combination(&l1, &l2_far, rl, &pcfg()), None);
+
+        // reverse mate upstream of the forward mate: not FR
+        let l2_up = vec![cand(700, 0, true, 2)];
+        assert_eq!(best_proper_combination(&l1, &l2_up, rl, &pcfg()), None);
+
+        // RF with R1 reverse / R2 forward is fine the other way around
+        let l1r = vec![cand(1250, 1, true, 1)];
+        let l2f = vec![cand(1000, 1, false, 2)];
+        assert_eq!(best_proper_combination(&l1r, &l2f, rl, &pcfg()), Some((0, 0)));
+    }
+
+    #[test]
+    fn concordant_candidates_beat_lone_better_distance() {
+        let rl = 100usize;
+        // R1: a dist-0 decoy at 5000 and the true dist-1 locus at 1000.
+        // Lists arrive canonically sorted (dist-ascending).
+        let l1 = vec![cand(5000, 0, false, 1), cand(1000, 1, false, 2)];
+        // R2 maps only near the true fragment: the decoy has no proper
+        // partner, so arbitration must pick the concordant combination.
+        let l2 = vec![cand(1250, 1, true, 3)];
+        assert_eq!(best_proper_combination(&l1, &l2, rl, &pcfg()), Some((1, 0)));
+    }
+
+    #[test]
+    fn combination_score_breaks_ties_deterministically() {
+        let rl = 100usize;
+        // two proper combinations with equal combined distance: the
+        // lexicographic (pos1, pos2, key…) tie-break picks the leftmost
+        let l1 = vec![cand(1000, 1, false, 1), cand(1010, 1, false, 2)];
+        let l2 = vec![cand(1250, 1, true, 3), cand(1260, 1, true, 4)];
+        assert_eq!(best_proper_combination(&l1, &l2, rl, &pcfg()), Some((0, 0)));
+    }
+}

@@ -56,9 +56,10 @@ use crate::pim::DartPimConfig;
 use crate::runtime::{EngineKind, WfEngine};
 
 use super::metrics::Metrics;
+use super::pair::{resolve_epoch_pairs, PairStatus, PairingConfig};
 use super::router::Router;
 use super::shard::{ShardItem, ShardWorker};
-use super::state::{AffineOutcome, BestSoFar};
+use super::state::{AffineOutcome, BestSoFar, PairCandidates};
 
 /// Which filtered instances advance to affine alignment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -128,6 +129,13 @@ pub struct PipelineConfig {
     /// mapping decision (engine numerics are per-instance), only
     /// latency/memory. Defaults to [`STREAM_EPOCH_READS`].
     pub stream_epoch: usize,
+    /// Paired-end resolution policy. `Some` treats the read stream as
+    /// interleaved mates (R1 at even ids, R2 at odd ids — the layout
+    /// every paired source in this crate produces) and runs proper-pair
+    /// arbitration at every epoch boundary (see [`super::pair`]);
+    /// epochs then always end on pair boundaries and the stream length
+    /// must be even. `None` (default) is single-end mapping.
+    pub pairing: Option<PairingConfig>,
 }
 
 impl Default for PipelineConfig {
@@ -140,6 +148,7 @@ impl Default for PipelineConfig {
             threads: default_threads(),
             worker_engine: crate::runtime::default_engine(),
             stream_epoch: STREAM_EPOCH_READS,
+            pairing: None,
         }
     }
 }
@@ -159,6 +168,10 @@ pub struct FinalMapping {
     pub candidates: u32,
     /// true if the read mapped in reverse-complement orientation.
     pub reverse: bool,
+    /// How the decision was made: [`PairStatus::Unpaired`] in
+    /// single-end runs; proper / single-end-fallback / rescued in
+    /// paired runs (see [`super::pair`]).
+    pub pair: PairStatus,
 }
 
 /// Message streamed to one shard worker.
@@ -289,11 +302,15 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
         let cfg = &self.cfg;
         let engine = &mut self.engine;
         let epoch = cfg.stream_epoch.max(1);
+        let pairing = cfg.pairing.as_ref();
 
         let t_start = Instant::now();
         let mut metrics = Metrics::default();
         let mut worker = ShardWorker::new(index, cfg);
         let mut chunk: Vec<ShardItem> = Vec::new();
+        // forward sequences of the current epoch's reads, retained only
+        // in paired mode (the rescue scan needs them at emission)
+        let mut epoch_seqs: Vec<Arc<[u8]>> = Vec::new();
         let mut t_route = Duration::ZERO;
         let mut next_pair = 0u32;
         let mut next_id = 0u32;
@@ -302,20 +319,32 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
             let rec = rec?;
             let read = rec.borrow();
             let t0 = Instant::now();
-            route_read(router, index, cfg.handle_revcomp, next_id, read, &mut next_pair, |it| {
-                chunk.push(it)
-            });
+            let fwd = route_read(
+                router,
+                index,
+                cfg.handle_revcomp,
+                next_id,
+                read,
+                &mut next_pair,
+                |it| chunk.push(it),
+            );
+            if pairing.is_some() {
+                epoch_seqs.push(fwd);
+            }
             t_route += t0.elapsed();
             worker.ingest(&mut *engine, chunk.drain(..))?;
             next_id = bump_read_id(next_id)?;
-            if (next_id - epoch_start) as usize >= epoch {
+            if epoch_boundary(epoch_start, next_id, epoch, pairing.is_some()) {
                 let outs = worker.drain(&mut *engine)?;
-                emit_epoch(epoch_start, next_id, outs, sink, &mut metrics)?;
+                let span = (epoch_start, next_id);
+                emit_epoch(index, pairing, &mut epoch_seqs, span, outs, sink, &mut metrics)?;
                 epoch_start = next_id;
             }
         }
+        check_even_paired_stream(pairing.is_some(), next_id)?;
         let (outs, m) = worker.finish(&mut *engine)?;
-        emit_epoch(epoch_start, next_id, outs, sink, &mut metrics)?;
+        let span = (epoch_start, next_id);
+        emit_epoch(index, pairing, &mut epoch_seqs, span, outs, sink, &mut metrics)?;
         metrics.merge(m);
         metrics.t_seed += t_route;
         metrics.n_reads = u64::from(next_id);
@@ -336,6 +365,7 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
         let router = &self.router;
         let cfg = &self.cfg;
         let epoch = cfg.stream_epoch.max(1);
+        let pairing = cfg.pairing.as_ref();
 
         let t_start = Instant::now();
         let (mut metrics, n_reads) = thread::scope(|s| -> Result<(Metrics, u32)> {
@@ -354,6 +384,7 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
             // producer (this thread): pull, route, partition, send
             let mut pending: Vec<Vec<ShardItem>> =
                 (0..n_shards).map(|_| Vec::with_capacity(SHARD_CHUNK)).collect();
+            let mut epoch_seqs: Vec<Arc<[u8]>> = Vec::new();
             let mut metrics = Metrics::default();
             let mut t_route = Duration::ZERO;
             let mut next_pair = 0u32;
@@ -363,7 +394,7 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
                 let rec = rec?;
                 let read = rec.borrow();
                 let t0 = Instant::now();
-                route_read(
+                let fwd = route_read(
                     router,
                     index,
                     cfg.handle_revcomp,
@@ -384,17 +415,23 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
                         }
                     },
                 );
+                if pairing.is_some() {
+                    epoch_seqs.push(fwd);
+                }
                 t_route += t0.elapsed();
                 next_id = bump_read_id(next_id)?;
-                if (next_id - epoch_start) as usize >= epoch {
+                if epoch_boundary(epoch_start, next_id, epoch, pairing.is_some()) {
+                    let outs = flush_epoch(&txs, &orx, &handles, &mut pending)?;
                     let span = (epoch_start, next_id);
-                    flush_epoch(&txs, &orx, &handles, &mut pending, span, sink, &mut metrics)?;
+                    emit_epoch(index, pairing, &mut epoch_seqs, span, outs, sink, &mut metrics)?;
                     epoch_start = next_id;
                 }
             }
+            check_even_paired_stream(pairing.is_some(), next_id)?;
             // final (possibly partial or empty) epoch, then hang up
+            let outs = flush_epoch(&txs, &orx, &handles, &mut pending)?;
             let span = (epoch_start, next_id);
-            flush_epoch(&txs, &orx, &handles, &mut pending, span, sink, &mut metrics)?;
+            emit_epoch(index, pairing, &mut epoch_seqs, span, outs, sink, &mut metrics)?;
             drop(txs);
             for h in handles {
                 let m = h.join().map_err(|_| anyhow!("shard worker panicked"))?;
@@ -415,10 +452,28 @@ fn bump_read_id(next_id: u32) -> Result<u32> {
     next_id.checked_add(1).ok_or_else(|| anyhow!("read stream exceeds u32 read ids"))
 }
 
+/// True when read `next_id` closes the current epoch. In paired mode an
+/// epoch may only close on a pair boundary (even id), so both mates of
+/// every pair resolve inside one epoch — the invariant that keeps pair
+/// arbitration epoch-stateless.
+fn epoch_boundary(epoch_start: u32, next_id: u32, epoch: usize, paired: bool) -> bool {
+    (next_id - epoch_start) as usize >= epoch && (!paired || next_id % 2 == 0)
+}
+
+/// Paired streams must hold complete pairs: an odd read count means R1/R2
+/// inputs desynchronized upstream of the pipeline.
+fn check_even_paired_stream(paired: bool, n_reads: u32) -> Result<()> {
+    if paired && n_reads % 2 != 0 {
+        bail!("paired mapping requires an even read stream; got {n_reads} reads");
+    }
+    Ok(())
+}
+
 /// Route one read (both orientations when revcomp handling is on) into
 /// [`ShardItem`]s, assigning globally sequential pair ids. The oriented
 /// sequences are materialized once per read as shared slices; every
-/// routed pair clones the refcount, not the bases.
+/// routed pair clones the refcount, not the bases. Returns the forward
+/// sequence slice (retained per epoch in paired mode for mate rescue).
 fn route_read(
     router: &Router,
     index: &MinimizerIndex,
@@ -427,9 +482,10 @@ fn route_read(
     read: &ReadRecord,
     next_pair: &mut u32,
     mut emit: impl FnMut(ShardItem),
-) {
+) -> Arc<[u8]> {
+    let fwd: Arc<[u8]> = Arc::from(read.seq.as_slice());
     let mut oriented: Vec<(Arc<[u8]>, bool)> = Vec::with_capacity(2);
-    oriented.push((Arc::from(read.seq.as_slice()), false));
+    oriented.push((fwd.clone(), false));
     if handle_revcomp {
         oriented.push((Arc::from(crate::genome::revcomp(&read.seq)), true));
     }
@@ -444,10 +500,12 @@ fn route_read(
                 kmer: pair.kmer,
                 target: pair.target,
                 reverse,
+                mate: (read_id % 2) as u8,
                 seq: seq.clone(),
             });
         }
     }
+    fwd
 }
 
 /// One shard worker's thread body: build the engine locally, ingest item
@@ -497,21 +555,13 @@ fn worker_loop(
 
 /// Epoch barrier: ship each shard's leftover chunk plus a flush marker,
 /// collect exactly one ack per worker (or a worker's terminal error),
-/// then fold the epoch's outcomes and emit reads `[start, end)` through
-/// the sink in order.
-#[allow(clippy::too_many_arguments)]
-fn flush_epoch<S>(
+/// and return the epoch's merged outcomes for emission.
+fn flush_epoch(
     txs: &[mpsc::SyncSender<WorkerMsg>],
     orx: &mpsc::Receiver<EpochAck>,
     handles: &[thread::ScopedJoinHandle<'_, Metrics>],
     pending: &mut [Vec<ShardItem>],
-    (start, end): (u32, u32),
-    sink: &mut S,
-    metrics: &mut Metrics,
-) -> Result<()>
-where
-    S: FnMut(u32, Option<FinalMapping>) -> Result<()>,
-{
+) -> Result<Vec<AffineOutcome>> {
     for (sh, tx) in txs.iter().enumerate() {
         if !pending[sh].is_empty() {
             let items = std::mem::take(&mut pending[sh]);
@@ -559,7 +609,7 @@ where
             Some((_, Err(e))) => return Err(e),
         }
     }
-    emit_epoch(start, end, outcomes, sink, metrics)
+    Ok(outcomes)
 }
 
 /// Fold one epoch's outcomes into per-read decisions and push reads
@@ -567,9 +617,17 @@ where
 /// rests on the emission-order arbitration key ([`AffineOutcome::key`]):
 /// folding outcomes in *any* arrival order yields identical winners, so
 /// thread count and epoch size never change a byte of output.
+///
+/// Single-end runs aggregate through [`BestSoFar`]; paired runs keep the
+/// full per-read candidate lists and resolve them through the
+/// epoch-stateless pair arbitration ([`super::pair`]), consuming the
+/// epoch's retained forward sequences (`epoch_seqs`) for mate rescue.
+#[allow(clippy::too_many_arguments)]
 fn emit_epoch<S>(
-    start: u32,
-    end: u32,
+    index: &MinimizerIndex,
+    pairing: Option<&PairingConfig>,
+    epoch_seqs: &mut Vec<Arc<[u8]>>,
+    (start, end): (u32, u32),
     outcomes: Vec<AffineOutcome>,
     sink: &mut S,
     metrics: &mut Metrics,
@@ -577,28 +635,55 @@ fn emit_epoch<S>(
 where
     S: FnMut(u32, Option<FinalMapping>) -> Result<()>,
 {
-    let mut best = BestSoFar::new((end - start) as usize);
-    for mut o in outcomes {
-        debug_assert!(o.read_id >= start && o.read_id < end, "outcome outside its epoch");
-        o.read_id -= start;
-        best.update(o);
-    }
-    for (i, m) in best.into_mappings().into_iter().enumerate() {
+    let n = (end - start) as usize;
+    let decisions: Vec<Option<FinalMapping>> = match pairing {
+        None => {
+            let mut best = BestSoFar::new(n);
+            for mut o in outcomes {
+                debug_assert!(o.read_id >= start && o.read_id < end, "outcome outside its epoch");
+                o.read_id -= start;
+                best.update(o);
+            }
+            best.into_mappings()
+                .into_iter()
+                .enumerate()
+                .map(|(i, m)| {
+                    m.map(|b| FinalMapping {
+                        read_id: start + i as u32,
+                        pos: b.pos,
+                        dist: b.dist,
+                        cigar: b.cigar,
+                        candidates: b.candidates,
+                        reverse: b.reverse,
+                        pair: PairStatus::Unpaired,
+                    })
+                })
+                .collect()
+        }
+        Some(pcfg) => {
+            debug_assert_eq!(epoch_seqs.len(), n, "one retained sequence per epoch read");
+            let mut cands = PairCandidates::new(n);
+            for mut o in outcomes {
+                debug_assert!(o.read_id >= start && o.read_id < end, "outcome outside its epoch");
+                o.read_id -= start;
+                cands.push(o);
+            }
+            let lists = cands.into_sorted();
+            let out = resolve_epoch_pairs(start, lists, epoch_seqs, index, pcfg, metrics)?;
+            epoch_seqs.clear();
+            out
+        }
+    };
+    for (i, m) in decisions.into_iter().enumerate() {
         let read_id = start + i as u32;
-        if m.is_some() {
+        // rescued mates had no surviving affine candidate of their own
+        // (that is the rescue precondition) — they are tracked by
+        // `rescued_mates`, not here, so this counter keeps its meaning
+        // and its bridge to the simulator's filter-derived counts
+        if m.as_ref().is_some_and(|fm| fm.pair != PairStatus::Rescued) {
             metrics.reads_with_candidates += 1;
         }
-        sink(
-            read_id,
-            m.map(|b| FinalMapping {
-                read_id,
-                pos: b.pos,
-                dist: b.dist,
-                cigar: b.cigar,
-                candidates: b.candidates,
-                reverse: b.reverse,
-            }),
-        )?;
+        sink(read_id, m)?;
     }
     Ok(())
 }
@@ -859,6 +944,120 @@ mod tests {
         let (mappings, metrics) = p.map_reads(&[]).unwrap();
         assert!(mappings.is_empty());
         assert_eq!(metrics.n_reads, 0);
+    }
+
+    #[test]
+    fn paired_mapping_resolves_proper_pairs_near_truth() {
+        use crate::genome::synth::PairSimConfig;
+        let g = SynthConfig { len: 120_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = PairSimConfig { n_pairs: 30, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        let c = PipelineConfig {
+            handle_revcomp: true,
+            pairing: Some(PairingConfig::default()),
+            ..cfg()
+        };
+        let mut p = Pipeline::new(&idx, c, RustEngine);
+        let (mappings, metrics) = p.map_reads(&reads).unwrap();
+        assert_eq!(mappings.len(), 60);
+        assert!(metrics.proper_pairs >= 22, "proper pairs: {}", metrics.proper_pairs);
+        let mut near = 0;
+        for r in &reads {
+            if let Some(m) = &mappings[r.id as usize] {
+                if (m.pos - r.truth_pos as i64).abs() <= 5 {
+                    near += 1;
+                    if m.pair == PairStatus::Proper {
+                        // FR: R1 forward, R2 reverse (synthetic pairs
+                        // are always sequenced fragment-forward)
+                        assert_eq!(m.reverse, r.id % 2 == 1, "read {}", r.id);
+                    }
+                }
+            }
+        }
+        assert!(near >= 52, "near = {near}/60; {}", metrics.summary());
+    }
+
+    #[test]
+    fn paired_output_is_identical_across_threads_and_epochs() {
+        use crate::genome::synth::PairSimConfig;
+        let g = SynthConfig { len: 100_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = PairSimConfig { n_pairs: 25, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        let run = |threads: usize, epoch: usize| {
+            let c = PipelineConfig {
+                handle_revcomp: true,
+                pairing: Some(PairingConfig::default()),
+                threads,
+                stream_epoch: epoch,
+                ..cfg()
+            };
+            let mut p = Pipeline::new(&idx, c, RustEngine);
+            let (m, x) = p.map_reads(&reads).unwrap();
+            let rendered: Vec<_> = m
+                .iter()
+                .flatten()
+                .map(|f| {
+                    (f.read_id, f.pos, f.dist, f.cigar.to_string(), f.reverse, f.pair.as_str())
+                })
+                .collect();
+            (rendered, x.invariant_counters())
+        };
+        let (base, bc) = run(1, STREAM_EPOCH_READS);
+        assert!(!base.is_empty());
+        // epoch 7 is odd on purpose: boundaries must defer to the next
+        // pair boundary without changing a single decision
+        for (threads, epoch) in [(1usize, 7usize), (4, 7), (4, 16), (3, 2)] {
+            let (m, c) = run(threads, epoch);
+            assert_eq!(base, m, "threads={threads} epoch={epoch}");
+            assert_eq!(bc, c, "threads={threads} epoch={epoch}");
+        }
+    }
+
+    #[test]
+    fn pair_with_unmappable_mate_degrades_to_single_end() {
+        use crate::genome::synth::PairSimConfig;
+        use crate::util::SmallRng;
+        let g = SynthConfig { len: 90_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let mut reads = PairSimConfig { n_pairs: 12, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        // garbage R2s: unmappable and unrescuable (random sequence)
+        let mut rng = SmallRng::seed_from_u64(0xBAD2);
+        for r in reads.iter_mut().filter(|r| r.id % 2 == 1) {
+            r.seq = (0..READ_LEN).map(|_| rng.gen_range(0..4u8)).collect();
+        }
+        let run = |pairing: Option<PairingConfig>| {
+            let c = PipelineConfig { handle_revcomp: true, pairing, ..cfg() };
+            Pipeline::new(&idx, c, RustEngine).map_reads(&reads).unwrap().0
+        };
+        let paired = run(Some(PairingConfig::default()));
+        let single = run(None);
+        for r in reads.iter().filter(|r| r.id % 2 == 0) {
+            match (&paired[r.id as usize], &single[r.id as usize]) {
+                (None, None) => {}
+                (Some(a), Some(b)) => assert_eq!(
+                    (a.pos, a.dist, a.cigar.to_string(), a.candidates, a.reverse),
+                    (b.pos, b.dist, b.cigar.to_string(), b.candidates, b.reverse),
+                    "read {}: the mapped mate must keep its single-end decision",
+                    r.id
+                ),
+                _ => panic!("presence mismatch at read {}", r.id),
+            }
+        }
+    }
+
+    #[test]
+    fn paired_mapping_rejects_odd_streams() {
+        let (idx, reads) = setup(5);
+        let c = PipelineConfig {
+            pairing: Some(PairingConfig::default()),
+            ..cfg()
+        };
+        let mut p = Pipeline::new(&idx, c, RustEngine);
+        let err = p.map_reads(&reads).unwrap_err();
+        assert!(err.to_string().contains("even"), "{err}");
     }
 
     #[test]

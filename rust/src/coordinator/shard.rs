@@ -81,6 +81,12 @@ pub struct ShardItem {
     pub target: Target,
     /// Reverse-complement orientation of `seq`.
     pub reverse: bool,
+    /// Mate index within the read's pair (0 = R1, 1 = R2; `read_id % 2`
+    /// under the paired layout, ignored in single-end runs); carried
+    /// through to [`AffineOutcome`] as provenance, which the
+    /// epoch-boundary pair arbitration cross-checks against the paired
+    /// id layout.
+    pub mate: u8,
     /// The oriented read sequence (shared with the other items of the
     /// same oriented read).
     pub seq: Arc<[u8]>,
@@ -165,6 +171,7 @@ impl<'a> ShardWorker<'a> {
                                 pl: pos as i64 - item.read_offset as i64,
                                 xbar: u32::MAX, // RISC-V pool, not a crossbar
                                 reverse: item.reverse,
+                                mate: item.mate,
                             },
                             item.seq.clone(),
                         ));
@@ -212,6 +219,7 @@ impl<'a> ShardWorker<'a> {
                             // this occurrence's segment row
                             xbar: first + (i / cfg.dart.linear_rows) as u32,
                             reverse: item.reverse,
+                            mate: item.mate,
                         };
                         let win = index.window_for(pos, item.read_offset as usize);
                         self.metrics.linear_instances += 1;
@@ -408,8 +416,9 @@ pub fn run_shard<'a, E: WfEngine + ?Sized>(
 }
 
 /// Turn one affine result into an outcome (traceback + position
-/// refinement). `None` for saturated or irrecoverable paths.
-fn decode_affine(
+/// refinement). `None` for saturated or irrecoverable paths. Also used
+/// by the pair-arbitration mate-rescue scan ([`super::pair`]).
+pub(crate) fn decode_affine(
     tag: &WorkTag,
     dist: i32,
     best_j: usize,
@@ -429,6 +438,7 @@ fn decode_affine(
                 dist,
                 cigar: Cigar::from_ops(&aln.ops),
                 reverse: tag.reverse,
+                mate: tag.mate,
                 key: emission_key(tag.pair_id, tag.ref_pos),
             })
         }
@@ -465,6 +475,7 @@ mod tests {
                     kmer: pair.kmer,
                     target: pair.target,
                     reverse: false,
+                    mate: 0,
                     seq: seq.clone(),
                 });
                 next_pair += 1;

@@ -26,11 +26,26 @@ pub struct AffineOutcome {
     pub cigar: Cigar,
     /// Reverse-complement orientation.
     pub reverse: bool,
+    /// Mate index within the read's pair (0 = R1 / single-end, 1 = R2);
+    /// provenance from [`super::batcher::WorkTag`], cross-checked by the
+    /// pair arbitration against the paired id layout.
+    pub mate: u8,
     /// Deterministic arbitration key: `pair_id << 32 | ref_pos`, i.e. the
     /// serial emission order of the WF instance. Breaks full
     /// `(dist, pos, reverse)` ties so the winning candidate (and its
     /// CIGAR) is identical for every shard interleaving.
     pub key: u64,
+}
+
+impl AffineOutcome {
+    /// The canonical candidate ordering `(dist, pos, reverse, key)` —
+    /// the same total order [`BestSoFar::update`] minimizes over, so
+    /// sorting a candidate list and taking the head reproduces the
+    /// single-end winner exactly. `key` is unique per instance, making
+    /// the order total and therefore independent of arrival order.
+    pub fn rank(&self) -> (i32, i64, bool, u64) {
+        (self.dist, self.pos, self.reverse, self.key)
+    }
 }
 
 /// Final per-read decision.
@@ -110,13 +125,55 @@ impl BestSoFar {
     }
 }
 
+/// Order-independent *full* candidate aggregation: where [`BestSoFar`]
+/// keeps one winner per read, this keeps every surviving affine outcome,
+/// because proper-pair arbitration must score combinations of R1 × R2
+/// candidates — the single best of each mate is not enough. Bounded by
+/// the streaming epoch (candidate lists are dropped at every emission),
+/// and canonicalized on extraction so any arrival interleaving yields
+/// identical lists.
+#[derive(Debug, Default)]
+pub struct PairCandidates {
+    slots: Vec<Vec<AffineOutcome>>,
+}
+
+impl PairCandidates {
+    /// Empty candidate lists for `n_reads` reads.
+    pub fn new(n_reads: usize) -> Self {
+        PairCandidates { slots: (0..n_reads).map(|_| Vec::new()).collect() }
+    }
+
+    /// Append one outcome to its read's list (any arrival order).
+    pub fn push(&mut self, o: AffineOutcome) {
+        self.slots[o.read_id as usize].push(o);
+    }
+
+    /// Consume into per-read candidate lists in the canonical
+    /// [`AffineOutcome::rank`] order (head == the [`BestSoFar`] winner),
+    /// independent of the order outcomes arrived in.
+    pub fn into_sorted(mut self) -> Vec<Vec<AffineOutcome>> {
+        for list in &mut self.slots {
+            list.sort_by_key(|o| o.rank());
+        }
+        self.slots
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::proptest::check;
 
     fn o(read_id: u32, pos: i64, dist: i32) -> AffineOutcome {
-        AffineOutcome { read_id, pos, dist, cigar: Cigar(vec![]), reverse: false, key: 0 }
+        AffineOutcome {
+            read_id,
+            pos,
+            dist,
+            cigar: Cigar(vec![]),
+            reverse: false,
+            mate: 0,
+            key: 0,
+        }
     }
 
     fn ok(read_id: u32, pos: i64, dist: i32, key: u64) -> AffineOutcome {
@@ -155,6 +212,30 @@ mod tests {
         b.update(ok(0, 10, 3, 7));
         assert_eq!(a.get(0).unwrap().key, 2);
         assert_eq!(b.get(0).unwrap().key, 2);
+    }
+
+    #[test]
+    fn pair_candidates_head_matches_best_so_far_in_any_order() {
+        check("pair-candidate canonicalization", 0x9A12, 50, |rng| {
+            let n = rng.gen_range(1..15usize);
+            let outcomes: Vec<AffineOutcome> = (0..n)
+                .map(|i| ok(0, rng.gen_range(0..200i64), rng.gen_range(0..10i32), i as u64))
+                .collect();
+            let mut fwd = PairCandidates::new(1);
+            let mut rev = PairCandidates::new(1);
+            let mut best = BestSoFar::new(1);
+            for o in outcomes.iter().cloned() {
+                fwd.push(o.clone());
+                best.update(o);
+            }
+            for o in outcomes.iter().rev().cloned() {
+                rev.push(o);
+            }
+            let (f, r) = (fwd.into_sorted(), rev.into_sorted());
+            let keys = |v: &[AffineOutcome]| v.iter().map(|o| o.key).collect::<Vec<_>>();
+            assert_eq!(keys(&f[0]), keys(&r[0]), "canonical order is arrival-independent");
+            assert_eq!(f[0][0].key, best.get(0).unwrap().key, "head == BestSoFar winner");
+        });
     }
 
     #[test]

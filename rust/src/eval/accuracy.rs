@@ -49,6 +49,115 @@ impl AccuracyReport {
     }
 }
 
+/// Pair-aware accuracy summary (paired-end runs).
+///
+/// A *mate* is correct when its mapped position is within tolerance of
+/// its simulated origin; a *pair* is correct when both mates are. The
+/// interesting comparison is `mate_accuracy()` against the same metric
+/// of a single-end run over the same records: proper-pair arbitration
+/// disambiguates repeat-placed reads, so the paired number should
+/// dominate (held by `tests/pair_parity.rs`).
+#[derive(Debug, Clone)]
+pub struct PairAccuracyReport {
+    /// Read pairs evaluated.
+    pub n_pairs: usize,
+    /// Individual mates evaluated (`2 * n_pairs`).
+    pub n_reads: usize,
+    /// Mates the pipeline mapped.
+    pub mate_mapped: usize,
+    /// Mates mapped within tolerance of their simulated origin.
+    pub mate_correct: usize,
+    /// Pairs with both mates mapped.
+    pub both_mapped: usize,
+    /// Pairs with both mates within tolerance of their origins.
+    pub pair_correct: usize,
+    /// Mates whose decision was a proper-pair resolution.
+    pub proper_mates: usize,
+    /// Mates recovered by the rescue scan.
+    pub rescued_mates: usize,
+    /// Position tolerance used.
+    pub tolerance: i64,
+}
+
+impl PairAccuracyReport {
+    /// Fraction of pairs fully recovered (both mates near truth).
+    pub fn pair_recall(&self) -> f64 {
+        if self.n_pairs == 0 {
+            return 0.0;
+        }
+        self.pair_correct as f64 / self.n_pairs as f64
+    }
+
+    /// Fraction of all mates mapped near their origin (directly
+    /// comparable to [`AccuracyReport::accuracy_vs_truth`]).
+    pub fn mate_accuracy(&self) -> f64 {
+        if self.n_reads == 0 {
+            return 0.0;
+        }
+        self.mate_correct as f64 / self.n_reads as f64
+    }
+
+    /// Fraction of *mapped* mates that are near their origin (mapping
+    /// precision; wrong placements dilute it).
+    pub fn mate_precision(&self) -> f64 {
+        if self.mate_mapped == 0 {
+            return 0.0;
+        }
+        self.mate_correct as f64 / self.mate_mapped as f64
+    }
+}
+
+/// Score a paired run against the simulated ground truth. `reads` must
+/// be the paired layout (R1 at even ids, R2 at odd ids) and `mappings`
+/// the matching decision vector.
+pub fn evaluate_pair_accuracy(
+    reads: &[ReadRecord],
+    mappings: &[Option<FinalMapping>],
+    tolerance: i64,
+) -> PairAccuracyReport {
+    assert_eq!(reads.len(), mappings.len());
+    assert_eq!(reads.len() % 2, 0, "paired evaluation needs complete pairs");
+    let mut r = PairAccuracyReport {
+        n_pairs: reads.len() / 2,
+        n_reads: reads.len(),
+        mate_mapped: 0,
+        mate_correct: 0,
+        both_mapped: 0,
+        pair_correct: 0,
+        proper_mates: 0,
+        rescued_mates: 0,
+        tolerance,
+    };
+    let near = |read: &ReadRecord| -> (bool, bool) {
+        match &mappings[read.id as usize] {
+            None => (false, false),
+            Some(m) => (true, (m.pos - read.truth_pos as i64).abs() <= tolerance),
+        }
+    };
+    for pair in reads.chunks_exact(2) {
+        let (m1, ok1) = near(&pair[0]);
+        let (m2, ok2) = near(&pair[1]);
+        r.mate_mapped += usize::from(m1) + usize::from(m2);
+        r.mate_correct += usize::from(ok1) + usize::from(ok2);
+        if m1 && m2 {
+            r.both_mapped += 1;
+        }
+        if ok1 && ok2 {
+            r.pair_correct += 1;
+        }
+        for read in pair {
+            if let Some(m) = &mappings[read.id as usize] {
+                match m.pair {
+                    crate::coordinator::PairStatus::Proper => r.proper_mates += 1,
+                    crate::coordinator::PairStatus::Rescued => r.rescued_mates += 1,
+                    _ => {}
+                }
+            }
+        }
+    }
+    r
+}
+
 /// Compare pipeline mappings against the oracle and the simulated truth.
 pub fn evaluate_accuracy(
     index: &MinimizerIndex,
@@ -117,6 +226,39 @@ mod tests {
         assert!(rep.accuracy_vs_oracle() > 0.9, "vs oracle: {}", rep.accuracy_vs_oracle());
         assert!(rep.oracle_exact <= rep.oracle_near);
         assert!(rep.mapped <= rep.n_reads);
+    }
+
+    #[test]
+    fn paired_accuracy_beats_or_matches_single_end_on_paired_reads() {
+        use crate::coordinator::PairingConfig;
+        use crate::genome::synth::PairSimConfig;
+        let g = SynthConfig { len: 100_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = PairSimConfig { n_pairs: 40, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        let run = |pairing: Option<PairingConfig>| {
+            let cfg = PipelineConfig {
+                dart: DartPimConfig { low_th: 0, ..Default::default() },
+                handle_revcomp: true,
+                pairing,
+                ..Default::default()
+            };
+            Pipeline::new(&idx, cfg, RustEngine).map_reads(&reads).unwrap().0
+        };
+        let paired = run(Some(PairingConfig::default()));
+        let single = run(None);
+        let pr = evaluate_pair_accuracy(&reads, &paired, 5);
+        let sr = evaluate_pair_accuracy(&reads, &single, 5);
+        assert_eq!(pr.n_pairs, 40);
+        assert!(pr.pair_recall() > 0.85, "pair recall {}", pr.pair_recall());
+        assert!(
+            pr.mate_accuracy() >= sr.mate_accuracy(),
+            "pairing must not lose accuracy: paired {} vs single {}",
+            pr.mate_accuracy(),
+            sr.mate_accuracy()
+        );
+        assert!(pr.proper_mates > 0);
+        assert!(pr.mate_precision() >= pr.mate_accuracy());
     }
 
     #[test]

@@ -13,4 +13,4 @@ pub mod accuracy;
 pub mod datavolume;
 pub mod figures;
 
-pub use accuracy::{evaluate_accuracy, AccuracyReport};
+pub use accuracy::{evaluate_accuracy, evaluate_pair_accuracy, AccuracyReport, PairAccuracyReport};

@@ -173,6 +173,132 @@ fn truncated(ordinal: u64, name: &str, missing: &str) -> io::Error {
     io::Error::new(io::ErrorKind::UnexpectedEof, format!("truncated {who}: missing {missing}"))
 }
 
+/// The mate-agnostic base name of a read: `frag/1` and `frag/2` (the
+/// conventional paired-end suffixes) both canonicalize to `frag`; names
+/// without a mate suffix are returned unchanged.
+pub fn mate_base_name(name: &str) -> &str {
+    name.strip_suffix("/1").or_else(|| name.strip_suffix("/2")).unwrap_or(name)
+}
+
+/// How a paired stream sources its records.
+enum PairSource<R1: BufRead, R2: BufRead> {
+    /// Two parallel files (R1, R2), zipped record by record.
+    TwoFiles(FastqStream<R1>, FastqStream<R2>),
+    /// One interleaved stream: records alternate R1, R2, R1, R2, …
+    Interleaved(FastqStream<R1>),
+}
+
+/// Incremental paired-FASTQ parser: an iterator of
+/// `io::Result<(FastqRecord, FastqRecord)>` yielding one (R1, R2) pair
+/// at a time, from either two parallel files or one interleaved stream.
+/// Memory is O(1) in the stream length, like [`FastqStream`].
+///
+/// Structural errors are positioned: a stream that ends with an
+/// unmatched mate, or a pair whose mate names disagree (after stripping
+/// the conventional `/1` / `/2` suffixes, see [`mate_base_name`]),
+/// errors with the 1-based pair ordinal and the read name(s) involved.
+/// Like the underlying parser, the stream fuses after the first error.
+pub struct PairedFastqStream<R1: BufRead, R2: BufRead> {
+    src: PairSource<R1, R2>,
+    /// Pairs successfully yielded so far.
+    pairs: u64,
+    done: bool,
+}
+
+impl<R: BufRead> PairedFastqStream<R, R> {
+    /// Pair up one interleaved stream (R1, R2 records alternating).
+    pub fn interleaved(reader: R) -> Self {
+        PairedFastqStream {
+            src: PairSource::Interleaved(FastqStream::new(reader)),
+            pairs: 0,
+            done: false,
+        }
+    }
+}
+
+impl<R1: BufRead, R2: BufRead> PairedFastqStream<R1, R2> {
+    /// Zip two parallel files (`reads_1.fastq`, `reads_2.fastq`).
+    pub fn two_files(r1: R1, r2: R2) -> Self {
+        PairedFastqStream {
+            src: PairSource::TwoFiles(FastqStream::new(r1), FastqStream::new(r2)),
+            pairs: 0,
+            done: false,
+        }
+    }
+
+    /// Pairs successfully yielded so far.
+    pub fn pairs_read(&self) -> u64 {
+        self.pairs
+    }
+
+    fn next_pair(&mut self) -> io::Result<Option<(FastqRecord, FastqRecord)>> {
+        let ordinal = self.pairs + 1;
+        let (r1, r2) = match &mut self.src {
+            PairSource::TwoFiles(s1, s2) => {
+                let mates = (s1.next().transpose()?, s2.next().transpose()?);
+                match mates {
+                    (None, None) => return Ok(None),
+                    (Some(r1), None) => {
+                        return Err(unmatched(ordinal, &r1.name, "R2 input ended"));
+                    }
+                    (None, Some(r2)) => {
+                        return Err(unmatched(ordinal, &r2.name, "R1 input ended"));
+                    }
+                    (Some(r1), Some(r2)) => (r1, r2),
+                }
+            }
+            PairSource::Interleaved(s) => {
+                let Some(r1) = s.next().transpose()? else {
+                    return Ok(None);
+                };
+                let Some(r2) = s.next().transpose()? else {
+                    return Err(unmatched(ordinal, &r1.name, "interleaved input ended mid-pair"));
+                };
+                (r1, r2)
+            }
+        };
+        if mate_base_name(&r1.name) != mate_base_name(&r2.name) {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "read pair #{ordinal}: mate names disagree (R1 {:?} vs R2 {:?})",
+                    r1.name, r2.name
+                ),
+            ));
+        }
+        self.pairs = ordinal;
+        Ok(Some((r1, r2)))
+    }
+}
+
+fn unmatched(ordinal: u64, name: &str, what: &str) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::UnexpectedEof,
+        format!("read pair #{ordinal}: {what}; read {name:?} has no mate"),
+    )
+}
+
+impl<R1: BufRead, R2: BufRead> Iterator for PairedFastqStream<R1, R2> {
+    type Item = io::Result<(FastqRecord, FastqRecord)>;
+
+    fn next(&mut self) -> Option<io::Result<(FastqRecord, FastqRecord)>> {
+        if self.done {
+            return None;
+        }
+        match self.next_pair() {
+            Ok(Some(pair)) => Some(Ok(pair)),
+            Ok(None) => {
+                self.done = true;
+                None
+            }
+            Err(e) => {
+                self.done = true;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
 /// Parse FASTQ from any reader into a vector (thin wrapper over
 /// [`FastqStream`]; prefer the stream for large inputs).
 pub fn read_fastq<R: Read>(r: R) -> io::Result<Vec<FastqRecord>> {
@@ -285,5 +411,86 @@ mod tests {
         let mut s = FastqStream::new(&b"@r\nACGT\n+\nII\n@next\nAC\n+\nII\n"[..]);
         assert!(s.next().unwrap().is_err());
         assert!(s.next().is_none(), "no resynchronization after a parse error");
+    }
+
+    #[test]
+    fn mate_base_name_strips_conventional_suffixes() {
+        assert_eq!(mate_base_name("frag7/1"), "frag7");
+        assert_eq!(mate_base_name("frag7/2"), "frag7");
+        assert_eq!(mate_base_name("frag7"), "frag7");
+        assert_eq!(mate_base_name("frag/3"), "frag/3", "only /1 and /2 are mate suffixes");
+    }
+
+    #[test]
+    fn paired_two_files_zips_records() {
+        let r1 = b"@a/1\nACGT\n+\nIIII\n@b/1\nTTTT\n+\nIIII\n";
+        let r2 = b"@a/2\nCCCC\n+\nIIII\n@b/2\nGGGG\n+\nIIII\n";
+        let mut s = PairedFastqStream::two_files(&r1[..], &r2[..]);
+        let (a1, a2) = s.next().unwrap().unwrap();
+        assert_eq!((a1.name.as_str(), a2.name.as_str()), ("a/1", "a/2"));
+        assert_eq!(s.pairs_read(), 1);
+        let (b1, b2) = s.next().unwrap().unwrap();
+        assert_eq!(b1.seq, encode_seq(b"TTTT"));
+        assert_eq!(b2.seq, encode_seq(b"GGGG"));
+        assert!(s.next().is_none());
+        assert!(s.next().is_none(), "paired stream is fused");
+        assert_eq!(s.pairs_read(), 2);
+    }
+
+    #[test]
+    fn paired_interleaved_takes_records_two_at_a_time() {
+        let il = b"@a/1\nAC\n+\nII\n@a/2\nGT\n+\nII\n@b/1\nTT\n+\nII\n@b/2\nAA\n+\nII\n";
+        let pairs: Vec<_> =
+            PairedFastqStream::interleaved(&il[..]).collect::<io::Result<_>>().unwrap();
+        assert_eq!(pairs.len(), 2);
+        assert_eq!(pairs[1].0.name, "b/1");
+        assert_eq!(pairs[1].1.name, "b/2");
+    }
+
+    #[test]
+    fn unmatched_mate_errors_name_the_pair_and_read() {
+        // R2 file one record short
+        let r1 = b"@a/1\nAC\n+\nII\n@b/1\nGT\n+\nII\n";
+        let r2 = b"@a/2\nCC\n+\nII\n";
+        let mut s = PairedFastqStream::two_files(&r1[..], &r2[..]);
+        assert!(s.next().unwrap().is_ok());
+        let err = s.next().unwrap().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("#2") && msg.contains("b/1"), "{msg}");
+        assert!(msg.contains("R2"), "{msg}");
+        assert!(s.next().is_none(), "fused after the structural error");
+
+        // R1 file one record short: symmetric
+        let mut s = PairedFastqStream::two_files(&r2[..], &r1[..]);
+        assert!(s.next().unwrap().is_ok());
+        let msg = s.next().unwrap().unwrap_err().to_string();
+        assert!(msg.contains("#2") && msg.contains("b/1") && msg.contains("R1"), "{msg}");
+
+        // interleaved stream ends mid-pair
+        let il = b"@a/1\nAC\n+\nII\n@a/2\nGT\n+\nII\n@c/1\nTT\n+\nII\n";
+        let mut s = PairedFastqStream::interleaved(&il[..]);
+        assert!(s.next().unwrap().is_ok());
+        let msg = s.next().unwrap().unwrap_err().to_string();
+        assert!(msg.contains("#2") && msg.contains("c/1") && msg.contains("mid-pair"), "{msg}");
+    }
+
+    #[test]
+    fn mate_name_mismatch_errors_name_both_reads() {
+        let r1 = b"@a/1\nAC\n+\nII\n";
+        let r2 = b"@z/2\nCC\n+\nII\n";
+        let mut s = PairedFastqStream::two_files(&r1[..], &r2[..]);
+        let msg = s.next().unwrap().unwrap_err().to_string();
+        assert!(msg.contains("#1") && msg.contains("a/1") && msg.contains("z/2"), "{msg}");
+    }
+
+    #[test]
+    fn paired_stream_propagates_parse_errors() {
+        // a malformed record inside R2 surfaces the underlying parser's
+        // positioned error, not a bogus pairing error
+        let r1 = b"@a/1\nAC\n+\nII\n";
+        let r2 = b"@a/2\nACGT\n+\nII\n";
+        let mut s = PairedFastqStream::two_files(&r1[..], &r2[..]);
+        let msg = s.next().unwrap().unwrap_err().to_string();
+        assert!(msg.contains("a/2") && msg.contains('4') && msg.contains('2'), "{msg}");
     }
 }

@@ -9,4 +9,4 @@ pub mod mutate;
 pub mod synth;
 
 pub use encode::{decode_seq, encode_seq, revcomp, Seq, BASE_A, BASE_C, BASE_G, BASE_N, BASE_T};
-pub use synth::{ReadRecord, ReadSimConfig, SynthConfig};
+pub use synth::{PairSimConfig, ReadRecord, ReadSimConfig, SynthConfig};

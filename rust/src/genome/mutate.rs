@@ -68,6 +68,12 @@ impl Donor {
     pub fn is_empty(&self) -> bool {
         self.seq.is_empty()
     }
+
+    /// The donor→reference coordinate map as a closure, the shape the
+    /// read simulators take (`cfg.simulate(&donor.seq, donor.mapper())`).
+    pub fn mapper(&self) -> impl Fn(usize) -> u32 + '_ {
+        move |p| self.to_ref(p)
+    }
 }
 
 impl MutateConfig {

@@ -158,7 +158,14 @@ impl ReadSimConfig {
             let max_start = donor.len() - self.read_len - 8;
             let start = rng.gen_range(0..max_start);
             let template = &donor[start..start + self.read_len + 8];
-            let (seq, errors) = self.apply_errors(&mut rng, template);
+            let (seq, errors) = sequencing_errors(
+                &mut rng,
+                template,
+                self.read_len,
+                self.sub_rate,
+                self.ins_rate,
+                self.del_rate,
+            );
             out.push(ReadRecord {
                 id: id as u32,
                 seq,
@@ -168,44 +175,171 @@ impl ReadSimConfig {
         }
         out
     }
+}
 
-    fn apply_errors(&self, rng: &mut SmallRng, template: &[u8]) -> (Seq, u32) {
-        let mut errors = 0u32;
-        let mut seq = Vec::with_capacity(self.read_len);
-        let mut t = 0usize; // template cursor
-        // At most one indel event per read (Illumina-like).
-        let ins_at = if rng.gen_bool(self.ins_rate) {
-            errors += 1;
-            Some(rng.gen_range(1..self.read_len - 1))
-        } else {
-            None
-        };
-        let del_at = if ins_at.is_none() && rng.gen_bool(self.del_rate) {
-            errors += 1;
-            Some(rng.gen_range(1..self.read_len - 1))
-        } else {
-            None
-        };
-        while seq.len() < self.read_len {
-            if Some(seq.len()) == ins_at {
-                seq.push(rng.gen_range(0..4u8)); // inserted base
-                continue;
-            }
-            if Some(seq.len()) == del_at && t + 1 < template.len() {
-                t += 1; // skip a template base
-            }
-            let mut b = template[t.min(template.len() - 1)];
-            t += 1;
-            if b > 3 {
-                b = rng.gen_range(0..4u8);
-            }
-            if rng.gen_bool(self.sub_rate) {
-                b = mutate_base(rng, b);
-                errors += 1;
-            }
-            seq.push(b);
+/// Apply the Illumina-like error model to one template: at most one
+/// indel event per read, independent per-base substitutions. Shared by
+/// the single-end and paired simulators so both mates of a pair carry
+/// exactly the same error profile.
+pub(crate) fn sequencing_errors(
+    rng: &mut SmallRng,
+    template: &[u8],
+    read_len: usize,
+    sub_rate: f64,
+    ins_rate: f64,
+    del_rate: f64,
+) -> (Seq, u32) {
+    let mut errors = 0u32;
+    let mut seq = Vec::with_capacity(read_len);
+    let mut t = 0usize; // template cursor
+    // At most one indel event per read (Illumina-like).
+    let ins_at = if rng.gen_bool(ins_rate) {
+        errors += 1;
+        Some(rng.gen_range(1..read_len - 1))
+    } else {
+        None
+    };
+    let del_at = if ins_at.is_none() && rng.gen_bool(del_rate) {
+        errors += 1;
+        Some(rng.gen_range(1..read_len - 1))
+    } else {
+        None
+    };
+    while seq.len() < read_len {
+        if Some(seq.len()) == ins_at {
+            seq.push(rng.gen_range(0..4u8)); // inserted base
+            continue;
         }
-        (seq, errors)
+        if Some(seq.len()) == del_at && t + 1 < template.len() {
+            t += 1; // skip a template base
+        }
+        let mut b = template[t.min(template.len() - 1)];
+        t += 1;
+        if b > 3 {
+            b = rng.gen_range(0..4u8);
+        }
+        if rng.gen_bool(sub_rate) {
+            b = mutate_base(rng, b);
+            errors += 1;
+        }
+        seq.push(b);
+    }
+    (seq, errors)
+}
+
+/// Paired-end read simulator: samples a fragment of
+/// `insert_mean ± insert_sd` bases from the donor and reports both ends
+/// in standard Illumina FR orientation — R1 is the forward strand of the
+/// fragment start, R2 the reverse complement of the fragment end.
+///
+/// Insert sizes are drawn from an Irwin–Hall approximation of a normal
+/// (the sum of 12 uniforms), which keeps generation exactly reproducible
+/// across platforms (no transcendental libm calls).
+#[derive(Debug, Clone)]
+pub struct PairSimConfig {
+    /// Number of read *pairs* to simulate (2× this many records).
+    pub n_pairs: usize,
+    /// Read length of each mate in bases.
+    pub read_len: usize,
+    /// Mean fragment (insert) length, outer distance R1-start..R2-end.
+    pub insert_mean: usize,
+    /// Fragment-length standard deviation.
+    pub insert_sd: usize,
+    /// Per-base substitution rate (per mate).
+    pub sub_rate: f64,
+    /// Per-mate insertion probability.
+    pub ins_rate: f64,
+    /// Per-mate deletion probability.
+    pub del_rate: f64,
+    /// RNG seed (deterministic pair set for a given config).
+    pub seed: u64,
+}
+
+impl Default for PairSimConfig {
+    fn default() -> Self {
+        PairSimConfig {
+            n_pairs: 500,
+            read_len: crate::params::READ_LEN,
+            insert_mean: 350,
+            insert_sd: 30,
+            sub_rate: 0.004,
+            ins_rate: 0.02,
+            del_rate: 0.02,
+            seed: 0xDA27_0004,
+        }
+    }
+}
+
+impl PairSimConfig {
+    /// Sample an insert length: `mean + (IrwinHall(12) - 6) * sd`,
+    /// clamped so the fragment always holds two non-overlapping mates.
+    fn sample_insert(&self, rng: &mut SmallRng, donor_len: usize) -> usize {
+        let mut s = 0.0f64;
+        for _ in 0..12 {
+            s += rng.next_f64();
+        }
+        let raw = self.insert_mean as f64 + (s - 6.0) * self.insert_sd as f64;
+        let lo = 2 * self.read_len;
+        let hi = donor_len.saturating_sub(16).max(lo);
+        (raw as i64).clamp(lo as i64, hi as i64) as usize
+    }
+
+    /// Sample pairs from `donor`, reporting each mate's leftmost base in
+    /// reference coordinates via `donor_to_ref`. The result is a flat
+    /// record vector with dense ids: R1 of pair `i` at id `2i`, R2 at
+    /// id `2i + 1` (the layout the paired mapping pipeline consumes).
+    pub fn simulate(&self, donor: &[u8], donor_to_ref: impl Fn(usize) -> u32) -> Vec<ReadRecord> {
+        assert!(
+            donor.len() > 2 * self.read_len + 24,
+            "donor shorter than two mates plus slack"
+        );
+        let mut rng = SmallRng::seed_from_u64(self.seed);
+        let mut out = Vec::with_capacity(2 * self.n_pairs);
+        for pair in 0..self.n_pairs {
+            let insert = self.sample_insert(&mut rng, donor.len());
+            let max_start = donor.len() - insert - 8;
+            let start = rng.gen_range(0..max_start.max(1));
+            // R1: forward strand of the fragment start.
+            let t1 = &donor[start..start + self.read_len + 8];
+            let (seq1, err1) = sequencing_errors(
+                &mut rng,
+                t1,
+                self.read_len,
+                self.sub_rate,
+                self.ins_rate,
+                self.del_rate,
+            );
+            // R2: reverse complement of the fragment end (template is
+            // the revcomp of the donor tail, so errors apply to the
+            // as-sequenced orientation exactly like R1).
+            let r2_start = start + insert - self.read_len;
+            // revcomp so template[0] is the fragment's last base (R2's
+            // first sequenced base); the 8-base indel slack extends past
+            // the read's tail, i.e. below r2_start in donor coordinates
+            let t2: Seq =
+                super::encode::revcomp(&donor[r2_start.saturating_sub(8)..start + insert]);
+            let (seq2, err2) = sequencing_errors(
+                &mut rng,
+                &t2,
+                self.read_len,
+                self.sub_rate,
+                self.ins_rate,
+                self.del_rate,
+            );
+            out.push(ReadRecord {
+                id: 2 * pair as u32,
+                seq: seq1,
+                truth_pos: donor_to_ref(start),
+                errors: err1,
+            });
+            out.push(ReadRecord {
+                id: 2 * pair as u32 + 1,
+                seq: seq2,
+                truth_pos: donor_to_ref(r2_start),
+                errors: err2,
+            });
+        }
+        out
     }
 }
 
@@ -275,6 +409,65 @@ mod tests {
             let p = r.truth_pos as usize;
             assert_eq!(&genome[p..p + 100], &r.seq[..], "read should equal its origin");
         }
+    }
+
+    #[test]
+    fn error_free_pairs_match_reference_in_fr_orientation() {
+        let genome = SynthConfig { len: 50_000, ..Default::default() }.generate();
+        let cfg = PairSimConfig {
+            n_pairs: 40,
+            read_len: 100,
+            sub_rate: 0.0,
+            ins_rate: 0.0,
+            del_rate: 0.0,
+            ..Default::default()
+        };
+        let reads = cfg.simulate(&genome, |p| p as u32);
+        assert_eq!(reads.len(), 80);
+        for pair in 0..40 {
+            let r1 = &reads[2 * pair];
+            let r2 = &reads[2 * pair + 1];
+            assert_eq!(r1.id, 2 * pair as u32);
+            assert_eq!(r2.id, 2 * pair as u32 + 1);
+            assert_eq!((r1.errors, r2.errors), (0, 0));
+            let p1 = r1.truth_pos as usize;
+            let p2 = r2.truth_pos as usize;
+            // R1 is the forward fragment start
+            assert_eq!(&genome[p1..p1 + 100], &r1.seq[..]);
+            // R2 is the reverse complement of the fragment end
+            assert_eq!(
+                crate::genome::revcomp(&genome[p2..p2 + 100]),
+                r2.seq,
+                "pair {pair}"
+            );
+            // FR orientation: R2's leftmost base sits downstream of R1,
+            // and the outer distance tracks the configured insert model
+            let insert = p2 + 100 - p1;
+            assert!(p2 >= p1, "pair {pair}: R2 upstream of R1");
+            assert!(
+                (200..=530).contains(&insert),
+                "pair {pair}: insert {insert} outside the sampling envelope"
+            );
+        }
+    }
+
+    #[test]
+    fn pair_simulation_is_reproducible_and_inserts_track_mean() {
+        let genome = SynthConfig { len: 80_000, ..Default::default() }.generate();
+        let cfg = PairSimConfig { n_pairs: 200, ..Default::default() };
+        let a = cfg.simulate(&genome, |p| p as u32);
+        let b = cfg.simulate(&genome, |p| p as u32);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.id, x.truth_pos, &x.seq), (y.id, y.truth_pos, &y.seq));
+        }
+        let mean: f64 = (0..200)
+            .map(|i| {
+                (a[2 * i + 1].truth_pos as f64 + cfg.read_len as f64) - a[2 * i].truth_pos as f64
+            })
+            .sum::<f64>()
+            / 200.0;
+        assert!((mean - 350.0).abs() < 15.0, "mean insert {mean}");
     }
 
     #[test]

@@ -100,6 +100,13 @@ pub struct SimCounts {
     pub active_xbars: u64,
     /// Reads with at least one surviving (affine-aligned) PL.
     pub reads_with_candidates: u64,
+    /// Read pairs in the workload (paired simulations only; zero for
+    /// single-end runs).
+    pub n_pairs: u64,
+    /// Pairs where *both* mates survive the filter — the input
+    /// availability of the live pipeline's proper-pair arbitration
+    /// (paired simulations only).
+    pub pairs_with_candidates: u64,
 }
 
 impl SimCounts {
@@ -152,6 +159,10 @@ impl ReadFlags {
             self.words.resize(w + 1, 0);
         }
         self.words[w] |= 1u64 << (i % 64);
+    }
+
+    fn get(&self, i: u64) -> bool {
+        self.words.get((i / 64) as usize).is_some_and(|w| w & (1u64 << (i % 64)) != 0)
     }
 
     fn union(&mut self, other: &ReadFlags) {
@@ -334,6 +345,45 @@ impl<'a> FullSystemSim<'a> {
         I: IntoIterator<Item = Result<R>>,
         R: std::borrow::Borrow<crate::genome::ReadRecord>,
     {
+        self.simulate_stream_inner(reads, n_threads, engine, false)
+    }
+
+    /// [`Self::simulate_stream`] over a **paired** read stream (R1 at
+    /// even stream indices, R2 at odd — the layout of every paired
+    /// source in this crate). Mirrors the live pipeline's paired intake:
+    /// the stream must hold complete pairs (an odd read count errors),
+    /// every mate is seeded in **both orientations** (paired `map`
+    /// forces reverse-complement handling, since R2 is sequenced from
+    /// the opposite strand), and the counts additionally report
+    /// `n_pairs` and `pairs_with_candidates` — how many pairs reach the
+    /// proper-pair arbitration with both mates alive. The per-instance
+    /// counters therefore match a single-end simulation over the same
+    /// reads *plus their reverse complements*, because pairing changes
+    /// arbitration, not the WF workload of an oriented read set.
+    pub fn simulate_stream_paired<I, R>(
+        &self,
+        reads: I,
+        n_threads: usize,
+        engine: EngineKind,
+    ) -> Result<SimCounts>
+    where
+        I: IntoIterator<Item = Result<R>>,
+        R: std::borrow::Borrow<crate::genome::ReadRecord>,
+    {
+        self.simulate_stream_inner(reads, n_threads, engine, true)
+    }
+
+    fn simulate_stream_inner<I, R>(
+        &self,
+        reads: I,
+        n_threads: usize,
+        engine: EngineKind,
+        paired: bool,
+    ) -> Result<SimCounts>
+    where
+        I: IntoIterator<Item = Result<R>>,
+        R: std::borrow::Borrow<crate::genome::ReadRecord>,
+    {
         let n = n_threads.max(1);
         let (shards, n_reads) = if n == 1 {
             // serial: one persistent shard fed inline
@@ -343,14 +393,14 @@ impl<'a> FullSystemSim<'a> {
             for rec in reads {
                 let rec = rec?;
                 let ri = sim_read_id(n_reads)?;
-                self.seed_into(ri, rec.borrow(), 1, |_, item| chunk.push(item));
+                self.seed_into(ri, rec.borrow(), 1, paired, |_, item| chunk.push(item));
                 self.sim_ingest(&mut shard, chunk.drain(..));
                 n_reads += 1;
             }
             shard.drain();
             (vec![shard], n_reads)
         } else {
-            self.simulate_stream_threaded(reads, n, engine)?
+            self.simulate_stream_threaded(reads, n, engine, paired)?
         };
 
         // deterministic merge: sums and disjoint map unions
@@ -378,6 +428,16 @@ impl<'a> FullSystemSim<'a> {
         c.k_linear = pairs_per_xbar.values().copied().max().unwrap_or(0);
         c.bottleneck_affine = affine_per_xbar.values().copied().max().unwrap_or(0);
         c.active_xbars = pairs_per_xbar.len() as u64;
+        if paired {
+            anyhow::ensure!(
+                n_reads % 2 == 0,
+                "paired simulation requires an even read stream; got {n_reads} reads"
+            );
+            c.n_pairs = n_reads / 2;
+            c.pairs_with_candidates = (0..c.n_pairs)
+                .filter(|&p| candidates.get(2 * p) && candidates.get(2 * p + 1))
+                .count() as u64;
+        }
         Ok(c)
     }
 
@@ -388,6 +448,7 @@ impl<'a> FullSystemSim<'a> {
         reads: I,
         n: usize,
         engine: EngineKind,
+        paired: bool,
     ) -> Result<(Vec<SimShard>, u64)>
     where
         I: IntoIterator<Item = Result<R>>,
@@ -415,7 +476,7 @@ impl<'a> FullSystemSim<'a> {
             for rec in reads {
                 let rec = rec?;
                 let ri = sim_read_id(n_reads)?;
-                self.seed_into(ri, rec.borrow(), n, |sh, item| {
+                self.seed_into(ri, rec.borrow(), n, paired, |sh, item| {
                     pending[sh].push(item);
                     if pending[sh].len() >= SIM_CHUNK {
                         let full = std::mem::replace(
@@ -443,21 +504,32 @@ impl<'a> FullSystemSim<'a> {
     }
 
     /// Seed one read and emit its productive (read, minimizer) pairs,
-    /// tagged with the owning shard under an `n`-way partition.
+    /// tagged with the owning shard under an `n`-way partition. In
+    /// paired mode every mate is seeded in **both** orientations —
+    /// paired mapping forces reverse-complement handling in the live
+    /// pipeline (R2 is sequenced from the opposite strand), so the
+    /// simulated workload routes the same oriented read set.
     fn seed_into(
         &self,
         ri: u32,
         read: &crate::genome::ReadRecord,
         n: usize,
+        paired: bool,
         mut emit: impl FnMut(usize, SimItem),
     ) {
-        let seq: Arc<[u8]> = Arc::from(read.seq.as_slice());
-        for seed in seed_read(self.index, &read.seq) {
-            if self.index.occurrences(seed.kmer).is_empty() {
-                continue;
+        let mut oriented: Vec<Arc<[u8]>> = Vec::with_capacity(2);
+        oriented.push(Arc::from(read.seq.as_slice()));
+        if paired {
+            oriented.push(Arc::from(crate::genome::revcomp(&read.seq)));
+        }
+        for seq in oriented {
+            for seed in seed_read(self.index, &seq) {
+                if self.index.occurrences(seed.kmer).is_empty() {
+                    continue;
+                }
+                let sh = shard_of(seed.kmer, n);
+                emit(sh, SimItem { ri, seed, seq: seq.clone() });
             }
-            let sh = shard_of(seed.kmer, n);
-            emit(sh, SimItem { ri, seed, seq: seq.clone() });
         }
     }
 
@@ -644,6 +716,51 @@ mod tests {
                 .unwrap_err();
             assert!(err.to_string().contains("bad record"), "n={n}");
         }
+    }
+
+    #[test]
+    fn paired_stream_counts_pairs_and_matches_both_orientation_workload() {
+        let g = SynthConfig { len: 100_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = crate::genome::synth::PairSimConfig { n_pairs: 40, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        let sim = FullSystemSim::new(&idx, DartPimConfig { low_th: 1, ..Default::default() });
+        // baseline: the oriented read set the live paired pipeline
+        // routes — every mate forward AND reverse-complemented — fed as
+        // one single-end stream (2x the records)
+        let mut both = reads.clone();
+        both.extend(reads.iter().map(|r| crate::genome::ReadRecord {
+            id: 80 + r.id,
+            seq: crate::genome::revcomp(&r.seq),
+            truth_pos: r.truth_pos,
+            errors: r.errors,
+        }));
+        let single = sim.simulate_stream(both.iter().map(Ok), 1, EngineKind::Rust).unwrap();
+        for n in [1usize, 3] {
+            let c = sim
+                .simulate_stream_paired(reads.iter().map(Ok), n, EngineKind::Rust)
+                .unwrap();
+            // pairing is an arbitration-layer concept: the simulated WF
+            // workload equals the both-orientations single-end run
+            assert_eq!(c.routed_pairs, single.routed_pairs, "n={n}");
+            assert_eq!(c.riscv_pairs, single.riscv_pairs, "n={n}");
+            assert_eq!(c.linear_instances, single.linear_instances, "n={n}");
+            assert_eq!(c.affine_instances, single.affine_instances, "n={n}");
+            assert_eq!(c.k_linear, single.k_linear, "n={n}");
+            assert_eq!(c.active_xbars, single.active_xbars, "n={n}");
+            assert_eq!(c.n_reads, 80, "n={n}");
+            assert_eq!(c.n_pairs, 40, "n={n}");
+            // nearly every pair reaches arbitration with both mates
+            // alive: R1 survives forward, R2 via its reverse complement
+            assert!(c.pairs_with_candidates >= 28, "n={n}: {}", c.pairs_with_candidates);
+            assert!(2 * c.pairs_with_candidates <= c.reads_with_candidates, "n={n}");
+        }
+        assert_eq!(single.n_pairs, 0, "single-end runs report no pairs");
+        // odd streams are rejected
+        let err = sim
+            .simulate_stream_paired(reads[..3].iter().map(Ok), 1, EngineKind::Rust)
+            .unwrap_err();
+        assert!(err.to_string().contains("even"), "{err}");
     }
 
     #[test]

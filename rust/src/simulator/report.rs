@@ -134,6 +134,9 @@ pub fn scale_counts(c: &SimCounts, target_reads: u64, cfg: &DartPimConfig) -> Si
         bottleneck_affine: (k_linear as f64 * affine_ratio).round() as u64,
         active_xbars: c.active_xbars,
         reads_with_candidates: s(c.reads_with_candidates),
+        // pair totals scale like every other per-read quantity
+        n_pairs: s(c.n_pairs),
+        pairs_with_candidates: s(c.pairs_with_candidates),
     }
 }
 
@@ -164,6 +167,9 @@ pub fn paper_workload_counts(cfg: &DartPimConfig) -> SimCounts {
         bottleneck_affine: cfg.max_reads as u64,
         active_xbars: 8 * 1024 * 1024,
         reads_with_candidates: n_reads,
+        // the paper's workload is modelled single-end
+        n_pairs: 0,
+        pairs_with_candidates: 0,
     }
 }
 
@@ -226,6 +232,8 @@ mod tests {
             active_xbars: 5000,
             reads_with_candidates: 990,
             dropped_pairs: 0,
+            n_pairs: 500,
+            pairs_with_candidates: 490,
         };
         let big = scale_counts(&small, 389_000_000, &cfg);
         assert_eq!(big.n_reads, 389_000_000);

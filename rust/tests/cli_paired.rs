@@ -1,0 +1,186 @@
+//! CLI error paths for paired-end input: every structural failure —
+//! mismatched R1/R2 record counts, mate-name mismatches, conflicting
+//! paired flags, paired stdin misuse, length-divergent mates — must
+//! abort with an error that locates the problem (1-based record/pair
+//! ordinal and read name), and the interleaved-stdin happy path must be
+//! byte-identical to a file-fed run in a real subprocess.
+
+use std::io::Write as _;
+use std::process::{Command, Stdio};
+
+use dart_pim::cli;
+
+fn run(cmd: &str) -> anyhow::Result<()> {
+    let argv: Vec<String> = cmd.split_whitespace().map(|s| s.to_string()).collect();
+    cli::run(&argv)
+}
+
+fn setup(tag: &str) -> (std::path::PathBuf, String) {
+    let dir = std::env::temp_dir().join(format!("dartpim-clip-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let d = dir.to_str().unwrap().to_string();
+    run(&format!("synth --out-dir {d} --len 60000 --reads 8 --paired")).unwrap();
+    (dir, d)
+}
+
+#[test]
+fn mismatched_mate_counts_error_names_pair_and_read() {
+    let (dir, d) = setup("counts");
+    // drop the last record (4 lines) of R2
+    let r2 = std::fs::read_to_string(dir.join("reads_2.fastq")).unwrap();
+    let lines: Vec<&str> = r2.lines().collect();
+    let truncated: String =
+        lines[..lines.len() - 4].iter().map(|l| format!("{l}\n")).collect();
+    std::fs::write(dir.join("short_2.fastq"), truncated).unwrap();
+    let err = run(&format!(
+        "map --ref {d}/ref.fasta --reads {d}/reads_1.fastq --reads2 {d}/short_2.fastq \
+         --low-th 0 --out {d}/x.tsv"
+    ))
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("#8") && msg.contains("pair7/1") && msg.contains("R2"),
+        "error must locate the unmatched mate: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mate_name_mismatch_error_names_both_reads() {
+    let (dir, d) = setup("names");
+    // rename the *second* R2 record so the failure is mid-stream
+    let r2 = std::fs::read_to_string(dir.join("reads_2.fastq")).unwrap();
+    let renamed = r2.replace("@pair1/2", "@intruder/2");
+    std::fs::write(dir.join("renamed_2.fastq"), renamed).unwrap();
+    let err = run(&format!(
+        "map --ref {d}/ref.fasta --reads {d}/reads_1.fastq --reads2 {d}/renamed_2.fastq \
+         --low-th 0 --out {d}/x.tsv"
+    ))
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("#2") && msg.contains("pair1/1") && msg.contains("intruder/2"),
+        "error must name the pair ordinal and both reads: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn interleaved_conflicts_with_reads2() {
+    let (dir, d) = setup("conflict");
+    let err = run(&format!(
+        "map --ref {d}/ref.fasta --reads {d}/reads_1.fastq --reads2 {d}/reads_2.fastq \
+         --interleaved --out {d}/x.tsv"
+    ))
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("--reads2") && msg.contains("--interleaved"),
+        "error must name the conflicting flags: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn double_stdin_paired_input_is_rejected_with_guidance() {
+    let (dir, d) = setup("stdin2");
+    let err = run(&format!("map --ref {d}/ref.fasta --reads - --reads2 - --out {d}/x.tsv"))
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("stdin") && msg.contains("--interleaved"),
+        "error must point at the interleaved alternative: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn interleaved_stream_ending_mid_pair_errors_with_position() {
+    let (dir, d) = setup("odd");
+    // drop the final record so the interleaved stream holds 15 records
+    let il = std::fs::read_to_string(dir.join("reads_interleaved.fastq")).unwrap();
+    let lines: Vec<&str> = il.lines().collect();
+    let odd: String = lines[..lines.len() - 4].iter().map(|l| format!("{l}\n")).collect();
+    std::fs::write(dir.join("odd.fastq"), odd).unwrap();
+    let err = run(&format!(
+        "map --ref {d}/ref.fasta --reads {d}/odd.fastq --interleaved --low-th 0 --out {d}/x.tsv"
+    ))
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("#8") && msg.contains("pair7/1") && msg.contains("mid-pair"),
+        "error must locate the unmatched interleaved record: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn length_divergent_mate_errors_with_ordinal_and_name() {
+    let (dir, d) = setup("lens");
+    // shrink the second R2 record's sequence+quality to 30 bp
+    let r2 = std::fs::read_to_string(dir.join("reads_2.fastq")).unwrap();
+    let mut lines: Vec<String> = r2.lines().map(|l| l.to_string()).collect();
+    lines[5] = lines[5][..30].to_string(); // pair1/2 sequence
+    lines[7] = lines[7][..30].to_string(); // pair1/2 quality
+    let patched: String = lines.iter().map(|l| format!("{l}\n")).collect();
+    std::fs::write(dir.join("short_read_2.fastq"), patched).unwrap();
+    let err = run(&format!(
+        "map --ref {d}/ref.fasta --reads {d}/reads_1.fastq --reads2 {d}/short_read_2.fastq \
+         --low-th 0 --out {d}/x.tsv"
+    ))
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("#2") && msg.contains("pair1/2") && msg.contains("30"),
+        "error must locate the divergent mate: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Paired stdin happy path, as a real subprocess: `--interleaved
+/// --reads -` fed the interleaved FASTQ over stdin must emit exactly
+/// the bytes of the file-fed two-file run.
+#[test]
+fn interleaved_stdin_matches_file_fed_paired_run() {
+    let (dir, d) = setup("stdinok");
+    run(&format!(
+        "map --ref {d}/ref.fasta --reads {d}/reads_1.fastq --reads2 {d}/reads_2.fastq \
+         --low-th 0 --threads 2 --out {d}/file.tsv"
+    ))
+    .unwrap();
+    let expected = std::fs::read_to_string(dir.join("file.tsv")).unwrap();
+    assert!(expected.lines().count() > 8, "most mates should map:\n{expected}");
+
+    let fastq = std::fs::read(dir.join("reads_interleaved.fastq")).unwrap();
+    let mut child = Command::new(env!("CARGO_BIN_EXE_dart-pim"))
+        .args([
+            "map",
+            "--ref",
+            &format!("{d}/ref.fasta"),
+            "--reads",
+            "-",
+            "--interleaved",
+            "--low-th",
+            "0",
+            "--threads",
+            "2",
+        ])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn dart-pim");
+    child.stdin.as_mut().unwrap().write_all(&fastq).unwrap();
+    let out = child.wait_with_output().unwrap();
+    assert!(
+        out.status.success(),
+        "paired stdin map failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_eq!(
+        expected,
+        String::from_utf8_lossy(&out.stdout),
+        "interleaved stdin must be byte-identical to the file-fed paired run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

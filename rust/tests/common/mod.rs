@@ -1,0 +1,163 @@
+//! Shared test-support: the randomized workload builders and TSV
+//! renderers that the determinism/parity suites and the benches all
+//! use. One definition, so "the same workload shape" means exactly
+//! that across `engine_parity_bitpal`, `stream_parity`,
+//! `shard_determinism`, `pair_parity`, and the engine benches (which
+//! include this file via `#[path]`).
+//!
+//! Each integration-test binary compiles its own copy and typically
+//! uses a subset, hence the module-wide dead_code allowance.
+#![allow(dead_code)]
+
+use dart_pim::coordinator::FinalMapping;
+use dart_pim::genome::mutate::MutateConfig;
+use dart_pim::genome::synth::{PairSimConfig, ReadSimConfig, SynthConfig};
+use dart_pim::genome::ReadRecord;
+use dart_pim::index::MinimizerIndex;
+use dart_pim::params::{window_len, ETH, K, READ_LEN, W};
+use dart_pim::util::SmallRng;
+
+/// Donor-derived randomized single-end workload (SNPs + indels between
+/// donor and reference, sequencing errors on top) — the standard shape
+/// of the determinism suites, chosen so ties and near-ties actually
+/// occur.
+pub fn workload_sized(genome_len: usize, n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
+    let genome = SynthConfig { len: genome_len, ..Default::default() }.generate();
+    let donor = MutateConfig::default().apply(&genome);
+    let idx = MinimizerIndex::build(genome, K, W, READ_LEN);
+    let reads =
+        ReadSimConfig { n_reads, ..Default::default() }.simulate(&donor.seq, donor.mapper());
+    (idx, reads)
+}
+
+/// [`workload_sized`] at the suites' historical default genome size.
+pub fn workload(n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
+    workload_sized(250_000, n_reads)
+}
+
+/// Donor-derived randomized *paired* workload: FR pairs with the
+/// default insert model, in the paired id layout (R1 at `2i`, R2 at
+/// `2i + 1`).
+pub fn paired_workload(
+    genome_len: usize,
+    n_pairs: usize,
+) -> (MinimizerIndex, Vec<ReadRecord>) {
+    let genome = SynthConfig { len: genome_len, ..Default::default() }.generate();
+    let donor = MutateConfig::default().apply(&genome);
+    let idx = MinimizerIndex::build(genome, K, W, READ_LEN);
+    let reads =
+        PairSimConfig { n_pairs, ..Default::default() }.simulate(&donor.seq, donor.mapper());
+    (idx, reads)
+}
+
+/// Render mappings exactly like `dart-pim map` writes its single-end
+/// TSV rows, so "byte-identical" means what the CLI user sees.
+pub fn render(mappings: &[Option<FinalMapping>]) -> String {
+    let mut out = String::new();
+    for m in mappings.iter().flatten() {
+        out.push_str(&format!(
+            "{}\t{}\t{}\t{}\t{}\t{}\n",
+            m.read_id,
+            m.pos,
+            if m.reverse { '-' } else { '+' },
+            m.dist,
+            m.cigar,
+            m.candidates
+        ));
+    }
+    out
+}
+
+/// Render mappings exactly like `dart-pim map` writes its *paired* TSV
+/// rows (pair_id, mate, …, pair status).
+pub fn render_paired(mappings: &[Option<FinalMapping>]) -> String {
+    let mut out = String::new();
+    for m in mappings.iter().flatten() {
+        out.push_str(&format!(
+            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+            m.read_id / 2,
+            m.read_id % 2 + 1,
+            m.pos,
+            if m.reverse { '-' } else { '+' },
+            m.dist,
+            m.cigar,
+            m.candidates,
+            m.pair.as_str()
+        ));
+    }
+    out
+}
+
+/// Borrow a `Vec<Vec<u8>>` batch as the `&[&[u8]]` shape engines take.
+pub fn as_slices(v: &[Vec<u8>]) -> Vec<&[u8]> {
+    v.iter().map(|x| x.as_slice()).collect()
+}
+
+/// One random (read, window) pair in one of several adversarial shapes
+/// (pure random / planted with edits straddling the eth boundary /
+/// all-mismatch / N-alphabet) — the engine-parity fuzz unit.
+pub fn rand_instance(rng: &mut SmallRng, n: usize) -> (Vec<u8>, Vec<u8>) {
+    let wl = window_len(n);
+    match rng.gen_range(0..5u32) {
+        // pure random (usually saturates)
+        0 => {
+            let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
+            let win: Vec<u8> = (0..wl).map(|_| rng.gen_range(0..4)).collect();
+            (read, win)
+        }
+        // planted at a random band shift with 0..=8 substitutions, so
+        // distances land on both sides of the eth boundary
+        1 | 2 => {
+            let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
+            let mut win: Vec<u8> = (0..wl).map(|_| rng.gen_range(0..4)).collect();
+            let shift = rng.gen_range(0..=2 * ETH);
+            win[shift..shift + n].copy_from_slice(&read);
+            for _ in 0..rng.gen_range(0..=8usize) {
+                let p = rng.gen_range(shift..shift + n);
+                win[p] = (win[p] + rng.gen_range(1..4u8)) % 4;
+            }
+            (read, win)
+        }
+        // all-mismatch (the saturation fixed point / early-exit path)
+        3 => (vec![0u8; n], vec![1u8; wl]),
+        // alphabet with N bases (code 4 never matches, even vs itself)
+        _ => {
+            let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..5)).collect();
+            let mut win: Vec<u8> = (0..wl).map(|_| rng.gen_range(0..5)).collect();
+            let shift = rng.gen_range(0..=2 * ETH);
+            win[shift..shift + n].copy_from_slice(&read);
+            (read, win)
+        }
+    }
+}
+
+/// A batch of [`rand_instance`]s.
+pub fn rand_batch(rng: &mut SmallRng, b: usize, n: usize) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let mut reads = Vec::with_capacity(b);
+    let mut wins = Vec::with_capacity(b);
+    for _ in 0..b {
+        let (r, w) = rand_instance(rng, n);
+        reads.push(r);
+        wins.push(w);
+    }
+    (reads, wins)
+}
+
+/// A batch of `b` random reads, each planted exactly (no errors) at the
+/// band anchor of an otherwise-random window — the standard engine
+/// micro-bench workload (shared with the benches so printed and
+/// recorded comparisons measure exactly the same batch shape).
+pub fn planted_wf_batch(rng: &mut SmallRng, b: usize) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let reads: Vec<Vec<u8>> =
+        (0..b).map(|_| (0..READ_LEN).map(|_| rng.gen_range(0..4)).collect()).collect();
+    let wins: Vec<Vec<u8>> = reads
+        .iter()
+        .map(|r| {
+            let mut w: Vec<u8> =
+                (0..window_len(READ_LEN)).map(|_| rng.gen_range(0..4)).collect();
+            w[ETH..ETH + READ_LEN].copy_from_slice(r);
+            w
+        })
+        .collect();
+    (reads, wins)
+}

@@ -6,61 +6,12 @@
 //! points (all-mismatch reads, N bases), and instances that straddle
 //! the `dist == eth` filter boundary.
 
+mod common;
+
+use common::{as_slices, rand_batch};
 use dart_pim::params::{window_len, ETH, SAT_LINEAR};
 use dart_pim::runtime::{BitpalEngine, RustEngine, WfEngine};
 use dart_pim::util::proptest::check;
-use dart_pim::util::SmallRng;
-
-fn as_slices(v: &[Vec<u8>]) -> Vec<&[u8]> {
-    v.iter().map(|x| x.as_slice()).collect()
-}
-
-/// One random (read, window) pair in one of several adversarial shapes.
-fn rand_instance(rng: &mut SmallRng, n: usize) -> (Vec<u8>, Vec<u8>) {
-    let wl = window_len(n);
-    match rng.gen_range(0..5u32) {
-        // pure random (usually saturates)
-        0 => {
-            let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
-            let win: Vec<u8> = (0..wl).map(|_| rng.gen_range(0..4)).collect();
-            (read, win)
-        }
-        // planted at a random band shift with 0..=8 substitutions, so
-        // distances land on both sides of the eth boundary
-        1 | 2 => {
-            let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
-            let mut win: Vec<u8> = (0..wl).map(|_| rng.gen_range(0..4)).collect();
-            let shift = rng.gen_range(0..=2 * ETH);
-            win[shift..shift + n].copy_from_slice(&read);
-            for _ in 0..rng.gen_range(0..=8usize) {
-                let p = rng.gen_range(shift..shift + n);
-                win[p] = (win[p] + rng.gen_range(1..4u8)) % 4;
-            }
-            (read, win)
-        }
-        // all-mismatch (the saturation fixed point / early-exit path)
-        3 => (vec![0u8; n], vec![1u8; wl]),
-        // alphabet with N bases (code 4 never matches, even vs itself)
-        _ => {
-            let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..5)).collect();
-            let mut win: Vec<u8> = (0..wl).map(|_| rng.gen_range(0..5)).collect();
-            let shift = rng.gen_range(0..=2 * ETH);
-            win[shift..shift + n].copy_from_slice(&read);
-            (read, win)
-        }
-    }
-}
-
-fn rand_batch(rng: &mut SmallRng, b: usize, n: usize) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
-    let mut reads = Vec::with_capacity(b);
-    let mut wins = Vec::with_capacity(b);
-    for _ in 0..b {
-        let (r, w) = rand_instance(rng, n);
-        reads.push(r);
-        wins.push(w);
-    }
-    (reads, wins)
-}
 
 #[test]
 fn linear_batch_parity_randomized() {

@@ -1,0 +1,152 @@
+//! Paired-end parity and determinism: proper-pair arbitration must be a
+//! pure function of the epoch's candidates — byte-identical across
+//! threads × engines × epoch sizes — must degrade to the single-end
+//! decision when a mate is unmappable, and must not lose accuracy
+//! against a single-end run of the same records. Randomized donor
+//! workload (SNPs + indels + sequencing errors + garbage mates), the
+//! same shape as the other determinism suites.
+
+mod common;
+
+use common::{paired_workload, render_paired};
+use dart_pim::coordinator::{PairStatus, PairingConfig, Pipeline, PipelineConfig};
+use dart_pim::eval::evaluate_pair_accuracy;
+use dart_pim::genome::ReadRecord;
+use dart_pim::index::MinimizerIndex;
+use dart_pim::params::READ_LEN;
+use dart_pim::pim::DartPimConfig;
+use dart_pim::runtime::EngineKind;
+use dart_pim::util::SmallRng;
+
+fn cfg(
+    threads: usize,
+    engine: EngineKind,
+    stream_epoch: usize,
+    pairing: Option<PairingConfig>,
+) -> PipelineConfig {
+    PipelineConfig {
+        dart: DartPimConfig { low_th: 1, ..Default::default() },
+        handle_revcomp: true,
+        threads,
+        worker_engine: engine,
+        stream_epoch,
+        pairing,
+        ..Default::default()
+    }
+}
+
+fn run_paired(
+    idx: &MinimizerIndex,
+    reads: &[ReadRecord],
+    threads: usize,
+    engine: EngineKind,
+    epoch: usize,
+) -> (String, std::collections::BTreeMap<String, u64>) {
+    let pairing = Some(PairingConfig::default());
+    let mut p = Pipeline::new(idx, cfg(threads, engine, epoch, pairing), engine.build());
+    let (m, metrics) = p.map_reads(reads).unwrap();
+    (render_paired(&m), metrics.invariant_counters())
+}
+
+/// The paired TSV must be byte-identical for every threads × engine ×
+/// epoch combination — including odd epochs, which must defer to the
+/// next pair boundary.
+#[test]
+fn paired_output_is_byte_identical_across_threads_engines_epochs() {
+    let (idx, reads) = paired_workload(250_000, 150);
+    let (base, base_counters) = run_paired(&idx, &reads, 1, EngineKind::Rust, 4096);
+    assert!(!base.is_empty(), "workload must map mates");
+    assert!(base.contains("proper"), "workload must resolve proper pairs");
+    for threads in [1usize, 4] {
+        for engine in [EngineKind::Rust, EngineKind::Bitpal] {
+            for epoch in [17usize, 64, 4096] {
+                let (tsv, counters) = run_paired(&idx, &reads, threads, engine, epoch);
+                assert_eq!(
+                    base,
+                    tsv,
+                    "threads={threads} engine={} epoch={epoch}",
+                    engine.name()
+                );
+                assert_eq!(base_counters, counters);
+            }
+        }
+    }
+}
+
+/// Randomized degradation sweep: scatter unmappable mates through the
+/// pair set; every pair with a garbage mate must resolve its good mate
+/// to exactly the single-end decision (same pos/dist/CIGAR/candidates),
+/// and the garbage mate must stay unmapped.
+#[test]
+fn pairs_with_unmappable_mates_degrade_to_single_end_decisions() {
+    let (idx, mut reads) = paired_workload(200_000, 120);
+    let mut rng = SmallRng::seed_from_u64(0xDE6D);
+    let mut garbage: Vec<u32> = Vec::new();
+    for pair in 0..120u32 {
+        if rng.gen_bool(0.25) {
+            // kill one mate at random (either side)
+            let victim = 2 * pair + rng.gen_range(0..2u32);
+            reads[victim as usize].seq = (0..READ_LEN).map(|_| rng.gen_range(0..4u8)).collect();
+            garbage.push(victim);
+        }
+    }
+    assert!(garbage.len() > 15, "sweep needs a meaningful garbage fraction");
+
+    let paired = {
+        let pairing = Some(PairingConfig::default());
+        let mut p =
+            Pipeline::new(&idx, cfg(1, EngineKind::Rust, 4096, pairing), EngineKind::Rust.build());
+        p.map_reads(&reads).unwrap().0
+    };
+    let single = {
+        let c = cfg(1, EngineKind::Rust, 4096, None);
+        let mut p = Pipeline::new(&idx, c, EngineKind::Rust.build());
+        p.map_reads(&reads).unwrap().0
+    };
+    for &victim in &garbage {
+        assert!(paired[victim as usize].is_none(), "garbage mate {victim} must stay unmapped");
+        let partner = victim ^ 1;
+        match (&paired[partner as usize], &single[partner as usize]) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(
+                    (a.pos, a.dist, a.cigar.to_string(), a.candidates, a.reverse),
+                    (b.pos, b.dist, b.cigar.to_string(), b.candidates, b.reverse),
+                    "partner {partner} of garbage mate {victim} must keep its single-end decision"
+                );
+                assert_eq!(a.pair, PairStatus::Single);
+            }
+            _ => panic!("presence mismatch for partner {partner}"),
+        }
+    }
+}
+
+/// The acceptance bar: pair-aware accuracy on a mutated-donor workload
+/// is at least the single-end accuracy over the same records, and
+/// proper pairs carry the bulk of the decisions.
+#[test]
+fn pairing_does_not_lose_accuracy_and_mostly_resolves_proper() {
+    let (idx, reads) = paired_workload(250_000, 150);
+    let run = |pairing| {
+        let mut p =
+            Pipeline::new(&idx, cfg(1, EngineKind::Rust, 4096, pairing), EngineKind::Rust.build());
+        p.map_reads(&reads).unwrap()
+    };
+    let (paired, metrics) = run(Some(PairingConfig::default()));
+    let (single, _) = run(None);
+    let pr = evaluate_pair_accuracy(&reads, &paired, 5);
+    let sr = evaluate_pair_accuracy(&reads, &single, 5);
+    assert!(
+        pr.mate_accuracy() >= sr.mate_accuracy(),
+        "pair-aware accuracy {} must be >= single-end {} on the same reads",
+        pr.mate_accuracy(),
+        sr.mate_accuracy()
+    );
+    assert!(pr.pair_recall() > 0.85, "pair recall {}", pr.pair_recall());
+    assert!(
+        metrics.proper_pairs as f64 >= 0.8 * pr.n_pairs as f64,
+        "proper pairs {}/{}",
+        metrics.proper_pairs,
+        pr.n_pairs
+    );
+}

@@ -8,40 +8,17 @@
 //! indels between donor and reference, sequencing errors on top) — the
 //! same shape as the e2e suite, so ties and near-ties actually occur.
 
-use dart_pim::coordinator::{FilterPolicy, FinalMapping, Pipeline, PipelineConfig};
-use dart_pim::genome::mutate::MutateConfig;
-use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+mod common;
+
+use common::{render, workload_sized};
+use dart_pim::coordinator::{FilterPolicy, Pipeline, PipelineConfig};
 use dart_pim::genome::ReadRecord;
 use dart_pim::index::MinimizerIndex;
-use dart_pim::params::{K, READ_LEN, W};
 use dart_pim::pim::DartPimConfig;
 use dart_pim::runtime::{BitpalEngine, EngineKind, RustEngine};
 
 fn workload(n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
-    let genome = SynthConfig { len: 300_000, ..Default::default() }.generate();
-    let donor = MutateConfig::default().apply(&genome);
-    let idx = MinimizerIndex::build(genome, K, W, READ_LEN);
-    let reads =
-        ReadSimConfig { n_reads, ..Default::default() }.simulate(&donor.seq, |p| donor.to_ref(p));
-    (idx, reads)
-}
-
-/// Render mappings exactly like `dart-pim map` writes its TSV, so
-/// "byte-identical" means what the CLI user sees.
-fn render(mappings: &[Option<FinalMapping>]) -> String {
-    let mut out = String::new();
-    for m in mappings.iter().flatten() {
-        out.push_str(&format!(
-            "{}\t{}\t{}\t{}\t{}\t{}\n",
-            m.read_id,
-            m.pos,
-            if m.reverse { '-' } else { '+' },
-            m.dist,
-            m.cigar,
-            m.candidates
-        ));
-    }
-    out
+    workload_sized(300_000, n_reads)
 }
 
 fn run(

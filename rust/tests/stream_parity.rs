@@ -6,47 +6,16 @@
 //! ingestion path: streaming changes *when* work happens, never *what*
 //! comes out.
 
+mod common;
+
 use std::io::Write as _;
 use std::process::{Command, Stdio};
 
+use common::{render, workload};
 use dart_pim::cli;
 use dart_pim::coordinator::{FinalMapping, Pipeline, PipelineConfig};
-use dart_pim::genome::mutate::MutateConfig;
-use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
-use dart_pim::genome::ReadRecord;
-use dart_pim::index::MinimizerIndex;
-use dart_pim::params::{K, READ_LEN, W};
 use dart_pim::pim::DartPimConfig;
 use dart_pim::runtime::EngineKind;
-
-/// Donor-derived randomized workload (SNPs + indels + sequencing
-/// errors), the same shape as the determinism suite so ties and
-/// near-ties actually occur.
-fn workload(n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
-    let genome = SynthConfig { len: 250_000, ..Default::default() }.generate();
-    let donor = MutateConfig::default().apply(&genome);
-    let idx = MinimizerIndex::build(genome, K, W, READ_LEN);
-    let reads =
-        ReadSimConfig { n_reads, ..Default::default() }.simulate(&donor.seq, |p| donor.to_ref(p));
-    (idx, reads)
-}
-
-/// Render mappings exactly like `dart-pim map` writes its TSV rows.
-fn render(mappings: &[Option<FinalMapping>]) -> String {
-    let mut out = String::new();
-    for m in mappings.iter().flatten() {
-        out.push_str(&format!(
-            "{}\t{}\t{}\t{}\t{}\t{}\n",
-            m.read_id,
-            m.pos,
-            if m.reverse { '-' } else { '+' },
-            m.dist,
-            m.cigar,
-            m.candidates
-        ));
-    }
-    out
-}
 
 fn cfg(threads: usize, engine: EngineKind, stream_epoch: usize) -> PipelineConfig {
     PipelineConfig {
