@@ -1,6 +1,8 @@
-//! Bench: sharded-pipeline throughput scaling — end-to-end `map_reads`
-//! reads/s at 1/2/4 worker threads for each host engine (`rust` scalar
-//! vs `bitpal` bit-parallel), plus the isolated filter-stage comparison,
+//! Bench: sharded-pipeline throughput scaling — end-to-end mapping
+//! reads/s (both the `map_reads` collect wrapper and the streaming
+//! `map_stream` path) at 1/2/4 worker threads for each host engine
+//! (`rust` scalar vs `bitpal` bit-parallel), plus the isolated
+//! filter-stage comparison,
 //! recorded to `BENCH_pipeline.json` at the repository root so future
 //! PRs have a perf trajectory to compare against.
 //!

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   synth     — generate a synthetic reference + read set
 //!   map       — run the DART-PIM pipeline end to end
+//!   serve     — long-lived mapping daemon: index loaded once, many
+//!               concurrent FASTQ sessions over a Unix socket (SERVING.md)
 //!   evaluate  — map + accuracy vs oracle and simulated truth
 //!   simulate  — full-system simulation + Eq. 6/7 report (+ paper-scale
 //!               projection)
@@ -111,6 +113,11 @@ COMMANDS
             [--max-reads 25000] [--low-th 3] [--batch 256] [--min-only]
             [--revcomp] [--threads 1] [--stream-epoch 2048]
             [--out mappings.tsv]
+  serve     --socket /path/daemon.sock | --tcp HOST:PORT
+            (--ref R.fasta [--read-len 150] | --index index.bin)
+            [--engine rust|bitpal] [--threads 1] [--stream-epoch 2048]
+            [--max-reads 25000] [--low-th 3] [--batch 256] [--min-only]
+            [--revcomp] [--insert-min 50] [--insert-max 1000] [--no-rescue]
   evaluate  --ref R.fasta --reads R.fastq --truth truth.tsv
             [--reads2 R2.fastq | --interleaved]
             [--engine xla|rust|bitpal] [--tolerance 5] [--threads 1]
@@ -146,6 +153,15 @@ numerics) and, like rust, is Send — both compose with --threads N.
 DART_PIM_ENGINE sets the default worker engine. --engine xla is always
 single-threaded (the PJRT client cannot be shared across threads);
 combining it with --threads N > 1 warns and runs with 1.
+
+SERVE: `serve` keeps the index resident and maps many concurrent FASTQ
+streams over one worker pool. Each connection is a session: handshake
+`DART/1 mode=<se|pe> [framing=<framed|raw>]`, stream FASTQ (interleaved
+pairs for pe), receive exactly the TSV bytes `map` would emit for the
+same input and flags (determinism invariant 7), plus a per-session
+metrics line. SIGTERM drains gracefully: accepting stops, in-flight
+sessions run to completion, the daemon exits 0. SERVING.md specifies
+the wire protocol and failure modes and walks a socat example.
 ";
 
 /// Entry point; returns the process exit code.
@@ -155,6 +171,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "synth" => cmd_synth(&args),
         "index" => cmd_index(&args),
         "map" => cmd_map(&args),
+        "serve" => cmd_serve(&args),
         "evaluate" => cmd_evaluate(&args),
         "simulate" => cmd_simulate(&args),
         "figures" => cmd_figures(&args),
@@ -297,22 +314,25 @@ fn open_reads(path: &str) -> Result<Box<dyn BufRead>> {
     }
 }
 
-/// Start streaming `--reads`: peeks the first record to fix the read
-/// length (which determines the index geometry), then yields
+/// Start streaming single-end FASTQ from any byte source (a file,
+/// stdin, a daemon session's socket): peeks the first record to fix the
+/// read length (which determines the index geometry), then yields
 /// `ReadRecord`s with dense sequential ids. Parser memory is O(1) in
 /// the stream length; a length-divergent or malformed record errors
-/// with its ordinal and name.
-fn stream_reads(path: &str) -> Result<(usize, impl Iterator<Item = Result<ReadRecord>>)> {
-    let mut stream = FastqStream::new(open_reads(path)?);
+/// with its ordinal and name. `label` names the source in every error.
+pub(crate) fn stream_reads_from(
+    reader: Box<dyn BufRead>,
+    label: String,
+) -> Result<(usize, impl Iterator<Item = Result<ReadRecord>>)> {
+    let mut stream = FastqStream::new(reader);
     let first = match stream.next() {
-        None => bail!("empty FASTQ {path}"),
-        Some(r) => r.with_context(|| format!("reading FASTQ {path}"))?,
+        None => bail!("empty {label}"),
+        Some(r) => r.with_context(|| format!("reading {label}"))?,
     };
     let read_len = first.seq.len();
-    anyhow::ensure!(read_len > 0, "first FASTQ record of {path} has an empty sequence");
-    let path_owned = path.to_string();
+    anyhow::ensure!(read_len > 0, "first record of {label} has an empty sequence");
     let iter = std::iter::once(Ok(first))
-        .chain(stream.map(move |r| r.with_context(|| format!("reading FASTQ {path_owned}"))))
+        .chain(stream.map(move |r| r.with_context(|| format!("reading {label}"))))
         .enumerate()
         .map(move |(i, r)| {
             let rec = r?;
@@ -328,6 +348,11 @@ fn stream_reads(path: &str) -> Result<(usize, impl Iterator<Item = Result<ReadRe
             Ok(ReadRecord { id: i as u32, seq: rec.seq, truth_pos: 0, errors: 0 })
         });
     Ok((read_len, iter))
+}
+
+/// [`stream_reads_from`] over the `--reads` path (`-` = stdin).
+fn stream_reads(path: &str) -> Result<(usize, impl Iterator<Item = Result<ReadRecord>>)> {
+    stream_reads_from(open_reads(path)?, format!("FASTQ {path}"))
 }
 
 /// True when the arguments select paired-end input, after validating
@@ -363,13 +388,27 @@ fn stream_paired_reads(
     } else {
         format!("paired FASTQ {r1_path} + {}", args.get("reads2").unwrap_or("?"))
     };
-    let mut stream: Box<dyn Iterator<Item = io::Result<(FastqRecord, FastqRecord)>>> =
+    let stream: Box<dyn Iterator<Item = io::Result<(FastqRecord, FastqRecord)>>> =
         if args.flag("interleaved") {
             Box::new(PairedFastqStream::interleaved(open_reads(r1_path)?))
         } else {
             let r2_path = args.get("reads2").context("--reads2 required")?;
             Box::new(PairedFastqStream::two_files(open_reads(r1_path)?, open_reads(r2_path)?))
         };
+    stream_paired_from(stream, label)
+}
+
+/// Start streaming an already-paired record source (a two-file zip, an
+/// interleaved file, or a daemon session's interleaved socket stream):
+/// peeks the first pair to fix the read length, then yields
+/// `ReadRecord`s in the paired layout (R1 of pair `i` at id `2i`, R2 at
+/// `2i + 1`). Structural errors (unmatched mate, mate-name mismatch,
+/// length divergence) name the 1-based pair ordinal and the read name;
+/// `label` names the source in every error.
+pub(crate) fn stream_paired_from(
+    mut stream: Box<dyn Iterator<Item = io::Result<(FastqRecord, FastqRecord)>>>,
+    label: String,
+) -> Result<(usize, Box<dyn Iterator<Item = Result<ReadRecord>>>)> {
     let first = match stream.next() {
         None => bail!("empty {label}"),
         Some(p) => p.with_context(|| format!("reading {label}"))?,
@@ -471,6 +510,94 @@ fn load_truth(path: &str, n: usize) -> Result<Vec<u32>> {
     Ok(truth)
 }
 
+/// Paired-end arbitration policy from the CLI flags — `map` applies it
+/// when the input is paired; `serve` applies it to every `mode=pe`
+/// session, so both front ends resolve pairs under identical policy.
+pub(crate) fn pairing_from_args(args: &Args) -> Result<PairingConfig> {
+    let insert_min = args.get_usize("insert-min", 50)? as u32;
+    let insert_max = args.get_usize("insert-max", 1000)? as u32;
+    anyhow::ensure!(
+        insert_min <= insert_max,
+        "--insert-min {insert_min} exceeds --insert-max {insert_max}"
+    );
+    Ok(PairingConfig { insert_min, insert_max, rescue: !args.flag("no-rescue") })
+}
+
+/// The [`PipelineConfig`] built from the CLI flags `map` and `serve`
+/// share. Producer-side policy (`handle_revcomp`, `pairing`) stays at
+/// its single-end defaults; the caller layers it per run (`map`) or per
+/// session (`serve`). Constructing both front ends' configs through
+/// this one function is what keeps `serve` in flag-for-flag lockstep
+/// with `map` — the precondition for determinism invariant 7.
+pub(crate) fn shared_pipeline_config(
+    args: &Args,
+    worker_engine: EngineKind,
+) -> Result<PipelineConfig> {
+    Ok(PipelineConfig {
+        dart: dart_config(args)?,
+        batch_size: args.get_usize("batch", 256)?,
+        filter_policy: if args.flag("min-only") {
+            FilterPolicy::MinOnly
+        } else {
+            FilterPolicy::AllPassing
+        },
+        handle_revcomp: false,
+        threads: args.get_usize("threads", default_threads())?,
+        worker_engine,
+        // emission/memory granularity only — never changes output bytes
+        // (tests/golden_e2e.rs sweeps it against the default)
+        stream_epoch: args
+            .get_usize("stream-epoch", crate::coordinator::pipeline::STREAM_EPOCH_READS)?
+            .max(1),
+        pairing: None,
+    })
+}
+
+/// Write the mapping TSV header — one schema for single-end runs, one
+/// for paired (shared by `map`'s file sink and every `serve` session,
+/// so the two paths cannot drift apart byte-wise).
+pub(crate) fn write_tsv_header(out: &mut dyn Write, paired: bool) -> io::Result<()> {
+    if paired {
+        out.write_all(b"pair_id\tmate\tpos\tstrand\tdist\tcigar\tcandidates\tpair\n")
+    } else {
+        out.write_all(b"read_id\tpos\tstrand\tdist\tcigar\tcandidates\n")
+    }
+}
+
+/// Write one mapping decision as a TSV row (see [`write_tsv_header`]
+/// for the schema; rows appear only for mapped reads/mates).
+pub(crate) fn write_tsv_row(
+    out: &mut dyn Write,
+    paired: bool,
+    m: &crate::coordinator::FinalMapping,
+) -> io::Result<()> {
+    if paired {
+        writeln!(
+            out,
+            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
+            m.read_id / 2,
+            m.read_id % 2 + 1,
+            m.pos,
+            if m.reverse { '-' } else { '+' },
+            m.dist,
+            m.cigar,
+            m.candidates,
+            m.pair.as_str()
+        )
+    } else {
+        writeln!(
+            out,
+            "{}\t{}\t{}\t{}\t{}\t{}",
+            m.read_id,
+            m.pos,
+            if m.reverse { '-' } else { '+' },
+            m.dist,
+            m.cigar,
+            m.candidates
+        )
+    }
+}
+
 /// Stream a read set through the pipeline on the `--engine` selected by
 /// the CLI; per-read decisions leave through `sink` in read order as
 /// they become final (the single engine-dispatch site — `map` streams
@@ -492,37 +619,11 @@ where
         READ_LEN
     );
     let paired = paired_mode(args)?;
-    let pairing = if paired {
-        let insert_min = args.get_usize("insert-min", 50)? as u32;
-        let insert_max = args.get_usize("insert-max", 1000)? as u32;
-        anyhow::ensure!(
-            insert_min <= insert_max,
-            "--insert-min {insert_min} exceeds --insert-max {insert_max}"
-        );
-        Some(PairingConfig { insert_min, insert_max, rescue: !args.flag("no-rescue") })
-    } else {
-        None
-    };
-    let cfg = PipelineConfig {
-        dart: dart_config(args)?,
-        batch_size: args.get_usize("batch", 256)?,
-        filter_policy: if args.flag("min-only") {
-            FilterPolicy::MinOnly
-        } else {
-            FilterPolicy::AllPassing
-        },
-        // paired mapping needs both strands: R2 is sequenced from the
-        // opposite strand of its fragment
-        handle_revcomp: args.flag("revcomp") || paired,
-        threads: args.get_usize("threads", default_threads())?,
-        // emission/memory granularity only — never changes output bytes
-        // (tests/golden_e2e.rs sweeps it against the default)
-        stream_epoch: args
-            .get_usize("stream-epoch", crate::coordinator::pipeline::STREAM_EPOCH_READS)?
-            .max(1),
-        pairing,
-        ..Default::default()
-    };
+    let mut cfg = shared_pipeline_config(args, crate::runtime::default_engine())?;
+    // paired mapping needs both strands: R2 is sequenced from the
+    // opposite strand of its fragment
+    cfg.handle_revcomp = args.flag("revcomp") || paired;
+    cfg.pairing = if paired { Some(pairing_from_args(args)?) } else { None };
     // Default engine: the PJRT path when it is compiled in, else the
     // DART_PIM_ENGINE host engine (identical numerics; see the
     // engine_parity and engine_parity_bitpal suites).
@@ -587,59 +688,106 @@ fn cmd_map(args: &Args) -> Result<()> {
     let (read_len, paired, reads) = stream_input(args)?;
     let index = load_or_build_index(args, read_len)?;
     let out_path = args.get("out");
-    let mut out: Box<dyn Write> = match out_path {
-        Some(path) => {
-            let f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    // write through a `.tmp` sibling so a mid-stream failure (malformed
+    // FASTQ record, worker error) never leaves a truncated TSV at the
+    // requested path — the rename happens only after a clean flush
+    let tmp_path = out_path.map(|p| format!("{p}.tmp"));
+    let mut out: Box<dyn Write> = match &tmp_path {
+        Some(tmp) => {
+            let f = std::fs::File::create(tmp).with_context(|| format!("creating {tmp}"))?;
             Box::new(io::BufWriter::new(f))
         }
         None => Box::new(io::BufWriter::new(io::stdout())),
     };
-    if paired {
-        out.write_all(b"pair_id\tmate\tpos\tstrand\tdist\tcigar\tcandidates\tpair\n")?;
-    } else {
-        out.write_all(b"read_id\tpos\tstrand\tdist\tcigar\tcandidates\n")?;
-    }
     // streaming TSV emitter: rows leave as epochs complete, so memory
     // stays O(epoch + threads x batch) no matter the FASTQ size (stdin
     // included); row order and bytes are identical for every --threads
     // and --engine setting
-    let metrics = run_pipeline_stream(args, &index, reads, |_, m| {
-        if let Some(m) = m {
-            if paired {
-                writeln!(
-                    out,
-                    "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}",
-                    m.read_id / 2,
-                    m.read_id % 2 + 1,
-                    m.pos,
-                    if m.reverse { '-' } else { '+' },
-                    m.dist,
-                    m.cigar,
-                    m.candidates,
-                    m.pair.as_str()
-                )?;
-            } else {
-                writeln!(
-                    out,
-                    "{}\t{}\t{}\t{}\t{}\t{}",
-                    m.read_id,
-                    m.pos,
-                    if m.reverse { '-' } else { '+' },
-                    m.dist,
-                    m.cigar,
-                    m.candidates
-                )?;
+    let result = (|| -> Result<crate::coordinator::metrics::Metrics> {
+        write_tsv_header(&mut out, paired)?;
+        let metrics = run_pipeline_stream(args, &index, reads, |_, m| {
+            if let Some(m) = m {
+                write_tsv_row(&mut out, paired, &m)?;
             }
-        }
-        Ok(())
-    })?;
-    out.flush()?;
+            Ok(())
+        })?;
+        out.flush()?;
+        Ok(metrics)
+    })();
     drop(out);
-    eprintln!("{}", metrics.summary());
-    if let Some(path) = out_path {
-        eprintln!("wrote {path}");
+    match result {
+        Ok(metrics) => {
+            if let (Some(path), Some(tmp)) = (out_path, &tmp_path) {
+                std::fs::rename(tmp, path)
+                    .with_context(|| format!("renaming {tmp} to {path}"))?;
+            }
+            eprintln!("{}", metrics.summary());
+            if let Some(path) = out_path {
+                eprintln!("wrote {path}");
+            }
+            Ok(())
+        }
+        Err(e) => {
+            if let Some(tmp) = &tmp_path {
+                let _ = std::fs::remove_file(tmp);
+            }
+            Err(e)
+        }
     }
-    Ok(())
+}
+
+/// `serve`: bring up the long-lived mapping daemon (SERVING.md). The
+/// index loads once; every connection becomes a session multiplexed
+/// onto one shared worker pool.
+#[cfg(unix)]
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine_name = args.get("engine").unwrap_or(crate::runtime::default_engine().name());
+    let engine = EngineKind::from_name(engine_name).with_context(|| {
+        format!(
+            "serve shards sessions across thread-constructible engines \
+             (rust|bitpal), not {engine_name:?}"
+        )
+    })?;
+    let mut cfg = shared_pipeline_config(args, engine)?;
+    cfg.threads = cfg.threads.max(1);
+    // The daemon fixes the read length up front (it determines the index
+    // geometry); sessions whose streams diverge are rejected at intake.
+    let index = if let Some(idx_path) = args.get("index") {
+        let idx = crate::index::load_index(idx_path)
+            .with_context(|| format!("loading index {idx_path}"))?;
+        if let Some(rl) = args.get("read-len") {
+            let rl: usize = rl.parse().context("--read-len expects an integer")?;
+            anyhow::ensure!(
+                idx.read_len == rl,
+                "index {idx_path} was built for {} bp reads, --read-len says {rl}",
+                idx.read_len
+            );
+        }
+        idx
+    } else {
+        let ref_path = args.get("ref").context("--ref or --index required")?;
+        let read_len = args.get_usize("read-len", READ_LEN)?;
+        let reference = load_reference(ref_path)?;
+        MinimizerIndex::build(reference, K, W, read_len)
+    };
+    let template = crate::serve::SessionTemplate {
+        cfg,
+        pairing: pairing_from_args(args)?,
+        revcomp: args.flag("revcomp"),
+    };
+    let bind = match (args.get("socket"), args.get("tcp")) {
+        (Some(_), Some(_)) => bail!("--socket and --tcp are mutually exclusive"),
+        (Some(path), None) => crate::serve::Bind::Unix(path.into()),
+        (None, Some(addr)) => crate::serve::Bind::Tcp(addr.to_string()),
+        (None, None) => bail!("serve requires --socket PATH or --tcp HOST:PORT"),
+    };
+    crate::serve::run_daemon(&index, template, bind)
+}
+
+/// `serve` needs Unix-domain sockets and POSIX signal numbers.
+#[cfg(not(unix))]
+fn cmd_serve(_args: &Args) -> Result<()> {
+    bail!("the serve daemon requires a Unix platform")
 }
 
 fn cmd_evaluate(args: &Args) -> Result<()> {
@@ -907,6 +1055,37 @@ mod tests {
         assert!(
             msg.contains("no sequences") && msg.contains("empty.fasta"),
             "index error must name the file: {msg}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_map_leaves_no_output_file() {
+        let dir = std::env::temp_dir().join(format!("dartpim-atomic-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let fa = dir.join("ref.fasta");
+        std::fs::write(&fa, format!(">r\n{}\n", "ACGTTGCAAGCT".repeat(500))).unwrap();
+        // second record diverges in length -> the pipeline errors
+        // mid-stream, after the TSV header has already been written
+        let fq = dir.join("bad.fastq");
+        std::fs::write(&fq, "@r0\nACGTACGTACGTACGT\n+\nIIIIIIIIIIIIIIII\n@r1\nACGT\n+\nIIII\n")
+            .unwrap();
+        let out = dir.join("map.tsv");
+        let err = run(&argv(&format!(
+            "map --ref {} --reads {} --out {}",
+            fa.display(),
+            fq.display(),
+            out.display()
+        )))
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("uniform read length"),
+            "expected the length-divergence error, got: {err:#}"
+        );
+        assert!(!out.exists(), "failed map must not leave a partial {}", out.display());
+        assert!(
+            !dir.join("map.tsv.tmp").exists(),
+            "failed map must remove its temporary output file"
         );
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -26,9 +26,15 @@
 //!                  tie-break that makes the shard merge order-free
 //! * [`metrics`]  — mergeable counters that feed the full-system
 //!                  simulator's Eq. 6/7 reports
+//! * [`pool`]     — the shared shard-worker pool and the session
+//!                  abstraction: long-lived workers (one engine + one
+//!                  per-session `ShardWorker` each) that one stream
+//!                  (`map`) or many concurrent streams (`serve`)
+//!                  multiplex onto, with per-session epochs, metrics,
+//!                  and teardown
 //! * [`pipeline`] — the end-to-end mapper: `Pipeline::map_stream` pulls
 //!                  reads from any source (FASTQ file, stdin, generator),
-//!                  feeds shard workers through bounded backpressured
+//!                  feeds the worker pool through bounded backpressured
 //!                  channels, and emits decisions in read order at epoch
 //!                  boundaries — memory O(epoch + threads × batch),
 //!                  output byte-identical for every thread count and
@@ -39,13 +45,15 @@
 //!                  production streaming path
 //!
 //! See `ARCHITECTURE.md` at the repository root for the dataflow diagram
-//! and the threading/determinism contract.
+//! and the threading/determinism contract (invariants 1–7), and
+//! `SERVING.md` for the daemon built on [`pool`].
 
 pub mod batcher;
 pub mod fifo;
 pub mod metrics;
 pub mod pair;
 pub mod pipeline;
+pub mod pool;
 pub mod router;
 pub mod scheduler;
 pub mod shard;

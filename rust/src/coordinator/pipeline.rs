@@ -41,17 +41,23 @@
 //! host mirror of the paper's per-crossbar data organization (§V-B).
 //! Output is byte-identical for every thread count, engine kind, and
 //! epoch size; see [`super::shard`] for the determinism contract.
+//!
+//! The sharded path is implemented by [`super::pool`]: a
+//! [`super::pool::WorkerPool`] of long-lived shard workers plus a
+//! single [`super::pool::MapSession`] driving this one read stream.
+//! The `serve` daemon runs the same two pieces with *many* concurrent
+//! sessions on one pool, which is why a session's bytes cannot differ
+//! from a standalone `map` run (determinism invariant 7).
 
 use std::borrow::Borrow;
-use std::sync::{mpsc, Arc};
-use std::thread;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::align::Cigar;
 use crate::genome::ReadRecord;
-use crate::index::{shard_of, MinimizerIndex};
+use crate::index::MinimizerIndex;
 use crate::pim::DartPimConfig;
 use crate::runtime::{EngineKind, WfEngine};
 
@@ -86,12 +92,14 @@ pub fn default_threads() -> usize {
 }
 
 /// Number of [`ShardItem`]s streamed to a worker per channel send.
-const SHARD_CHUNK: usize = 512;
+pub(crate) const SHARD_CHUNK: usize = 512;
 /// Bounded depth of each worker's item channel (backpressure, like the
 /// hardware Reads FIFO bounds the read stream): at most
 /// `CHANNEL_DEPTH × SHARD_CHUNK` items are queued per shard before the
-/// producer's routing stalls.
-const CHANNEL_DEPTH: usize = 4;
+/// producer's routing stalls. In a multi-session daemon the channels
+/// are shared, so one stalled session backpressures its peers too —
+/// see SERVING.md.
+pub(crate) const CHANNEL_DEPTH: usize = 4;
 /// Default [`PipelineConfig::stream_epoch`].
 pub const STREAM_EPOCH_READS: usize = 2048;
 
@@ -173,17 +181,6 @@ pub struct FinalMapping {
     /// paired runs (see [`super::pair`]).
     pub pair: PairStatus,
 }
-
-/// Message streamed to one shard worker.
-enum WorkerMsg {
-    /// A chunk of routed items, in emission order.
-    Items(Vec<ShardItem>),
-    /// Epoch barrier: drain and ack with the outcomes so far.
-    Flush,
-}
-
-/// One worker's answer to a [`WorkerMsg::Flush`] (or its terminal error).
-type EpochAck = (usize, Result<Vec<AffineOutcome>>);
 
 /// The mapper.
 ///
@@ -352,103 +349,24 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
         Ok(metrics)
     }
 
-    /// Sharded streaming: feed persistent per-shard workers over bounded
-    /// channels, with an epoch flush/ack barrier for ordered emission.
+    /// Sharded streaming: a [`super::pool::WorkerPool`] of persistent
+    /// per-shard workers fed over bounded channels by one
+    /// [`super::pool::MapSession`], with an epoch flush/ack barrier for
+    /// ordered emission. The daemon (`dart-pim serve`) runs the same
+    /// pool with many concurrent sessions.
     fn map_stream_sharded<I, R, S>(&mut self, reads: I, sink: &mut S) -> Result<Metrics>
     where
         I: IntoIterator<Item = Result<R>>,
         R: Borrow<ReadRecord>,
         S: FnMut(u32, Option<FinalMapping>) -> Result<()>,
     {
-        let n_shards = self.cfg.threads;
-        let index = self.index;
-        let router = &self.router;
-        let cfg = &self.cfg;
-        let epoch = cfg.stream_epoch.max(1);
-        let pairing = cfg.pairing.as_ref();
-
-        let t_start = Instant::now();
-        let (mut metrics, n_reads) = thread::scope(|s| -> Result<(Metrics, u32)> {
-            let (otx, orx) = mpsc::channel::<EpochAck>();
-            let mut txs = Vec::with_capacity(n_shards);
-            let mut handles = Vec::with_capacity(n_shards);
-            for sh in 0..n_shards {
-                let (tx, rx) = mpsc::sync_channel::<WorkerMsg>(CHANNEL_DEPTH);
-                txs.push(tx);
-                let otx = otx.clone();
-                handles.push(s.spawn(move || worker_loop(index, cfg, sh, rx, otx)));
-            }
-            // only workers hold ack senders: a hangup means they all died
-            drop(otx);
-
-            // producer (this thread): pull, route, partition, send
-            let mut pending: Vec<Vec<ShardItem>> =
-                (0..n_shards).map(|_| Vec::with_capacity(SHARD_CHUNK)).collect();
-            let mut epoch_seqs: Vec<Arc<[u8]>> = Vec::new();
-            let mut metrics = Metrics::default();
-            let mut t_route = Duration::ZERO;
-            let mut next_pair = 0u32;
-            let mut next_id = 0u32;
-            let mut epoch_start = 0u32;
-            for rec in reads {
-                let rec = rec?;
-                let read = rec.borrow();
-                let t0 = Instant::now();
-                let fwd = route_read(
-                    router,
-                    index,
-                    cfg.handle_revcomp,
-                    next_id,
-                    read,
-                    &mut next_pair,
-                    |item| {
-                        let sh = shard_of(item.kmer, n_shards);
-                        pending[sh].push(item);
-                        if pending[sh].len() >= SHARD_CHUNK {
-                            let full = std::mem::replace(
-                                &mut pending[sh],
-                                Vec::with_capacity(SHARD_CHUNK),
-                            );
-                            // a send error means the worker died; the
-                            // flush barrier below surfaces its error
-                            let _ = txs[sh].send(WorkerMsg::Items(full));
-                        }
-                    },
-                );
-                if pairing.is_some() {
-                    epoch_seqs.push(fwd);
-                }
-                t_route += t0.elapsed();
-                next_id = bump_read_id(next_id)?;
-                if epoch_boundary(epoch_start, next_id, epoch, pairing.is_some()) {
-                    let outs = flush_epoch(&txs, &orx, &handles, &mut pending)?;
-                    let span = (epoch_start, next_id);
-                    emit_epoch(index, pairing, &mut epoch_seqs, span, outs, sink, &mut metrics)?;
-                    epoch_start = next_id;
-                }
-            }
-            check_even_paired_stream(pairing.is_some(), next_id)?;
-            // final (possibly partial or empty) epoch, then hang up
-            let outs = flush_epoch(&txs, &orx, &handles, &mut pending)?;
-            let span = (epoch_start, next_id);
-            emit_epoch(index, pairing, &mut epoch_seqs, span, outs, sink, &mut metrics)?;
-            drop(txs);
-            for h in handles {
-                let m = h.join().map_err(|_| anyhow!("shard worker panicked"))?;
-                metrics.merge(m);
-            }
-            metrics.t_seed += t_route;
-            Ok((metrics, next_id))
-        })?;
-        metrics.n_reads = u64::from(n_reads);
-        metrics.t_total = t_start.elapsed();
-        Ok(metrics)
+        super::pool::map_stream_pooled(self.index, &self.router, &self.cfg, reads, sink)
     }
 }
 
 /// Advance the dense read-id counter (u32 ids cap a single run at ~4.3 G
 /// reads — an order of magnitude above the paper's 389 M workload).
-fn bump_read_id(next_id: u32) -> Result<u32> {
+pub(crate) fn bump_read_id(next_id: u32) -> Result<u32> {
     next_id.checked_add(1).ok_or_else(|| anyhow!("read stream exceeds u32 read ids"))
 }
 
@@ -456,13 +374,13 @@ fn bump_read_id(next_id: u32) -> Result<u32> {
 /// epoch may only close on a pair boundary (even id), so both mates of
 /// every pair resolve inside one epoch — the invariant that keeps pair
 /// arbitration epoch-stateless.
-fn epoch_boundary(epoch_start: u32, next_id: u32, epoch: usize, paired: bool) -> bool {
+pub(crate) fn epoch_boundary(epoch_start: u32, next_id: u32, epoch: usize, paired: bool) -> bool {
     (next_id - epoch_start) as usize >= epoch && (!paired || next_id % 2 == 0)
 }
 
 /// Paired streams must hold complete pairs: an odd read count means R1/R2
 /// inputs desynchronized upstream of the pipeline.
-fn check_even_paired_stream(paired: bool, n_reads: u32) -> Result<()> {
+pub(crate) fn check_even_paired_stream(paired: bool, n_reads: u32) -> Result<()> {
     if paired && n_reads % 2 != 0 {
         bail!("paired mapping requires an even read stream; got {n_reads} reads");
     }
@@ -474,7 +392,7 @@ fn check_even_paired_stream(paired: bool, n_reads: u32) -> Result<()> {
 /// sequences are materialized once per read as shared slices; every
 /// routed pair clones the refcount, not the bases. Returns the forward
 /// sequence slice (retained per epoch in paired mode for mate rescue).
-fn route_read(
+pub(crate) fn route_read(
     router: &Router,
     index: &MinimizerIndex,
     handle_revcomp: bool,
@@ -508,110 +426,6 @@ fn route_read(
     fwd
 }
 
-/// One shard worker's thread body: build the engine locally, ingest item
-/// chunks as they stream in (overlapping the producer's routing), drain
-/// and ack at every flush barrier, and return the shard's metrics at
-/// hangup. Failures are delivered through the ack channel so the
-/// coordinator never blocks on a dead worker.
-fn worker_loop(
-    index: &MinimizerIndex,
-    cfg: &PipelineConfig,
-    sh: usize,
-    rx: mpsc::Receiver<WorkerMsg>,
-    otx: mpsc::Sender<EpochAck>,
-) -> Metrics {
-    // the engine is constructed on its owning thread (every EngineKind
-    // variant is Send-safe to build and run here; the PJRT engine never
-    // is)
-    let mut engine = cfg.worker_engine.build();
-    let mut worker = ShardWorker::new(index, cfg);
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            WorkerMsg::Items(items) => {
-                if let Err(e) = worker.ingest(engine.as_mut(), items) {
-                    let _ = otx.send((sh, Err(e)));
-                    return Metrics::default();
-                }
-            }
-            WorkerMsg::Flush => {
-                let ack = worker.drain(engine.as_mut());
-                let failed = ack.is_err();
-                let _ = otx.send((sh, ack));
-                if failed {
-                    return Metrics::default();
-                }
-            }
-        }
-    }
-    // the producer hangs up only after a final flush: nothing is pending
-    match worker.finish(engine.as_mut()) {
-        Ok((rest, metrics)) => {
-            debug_assert!(rest.is_empty(), "hangup after a final flush leaves no work");
-            metrics
-        }
-        Err(_) => Metrics::default(),
-    }
-}
-
-/// Epoch barrier: ship each shard's leftover chunk plus a flush marker,
-/// collect exactly one ack per worker (or a worker's terminal error),
-/// and return the epoch's merged outcomes for emission.
-fn flush_epoch(
-    txs: &[mpsc::SyncSender<WorkerMsg>],
-    orx: &mpsc::Receiver<EpochAck>,
-    handles: &[thread::ScopedJoinHandle<'_, Metrics>],
-    pending: &mut [Vec<ShardItem>],
-) -> Result<Vec<AffineOutcome>> {
-    for (sh, tx) in txs.iter().enumerate() {
-        if !pending[sh].is_empty() {
-            let items = std::mem::take(&mut pending[sh]);
-            let _ = tx.send(WorkerMsg::Items(items));
-        }
-        let _ = tx.send(WorkerMsg::Flush);
-    }
-    let mut acked = vec![false; txs.len()];
-    let mut n_acked = 0usize;
-    let mut outcomes: Vec<AffineOutcome> = Vec::new();
-    while n_acked < txs.len() {
-        let msg: Option<EpochAck> = match orx.recv_timeout(Duration::from_millis(100)) {
-            Ok(m) => Some(m),
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                // a worker that died without an ack or an error message
-                // (i.e. panicked) would otherwise hang the run forever
-                let dead = acked.iter().zip(handles).any(|(&a, h)| !a && h.is_finished());
-                if !dead {
-                    None
-                } else if let Ok(m) = orx.try_recv() {
-                    // the dying worker's final message raced the timeout
-                    // (its send happened-before the exit we observed):
-                    // handle it normally instead of masking the cause
-                    Some(m)
-                } else {
-                    // exited with no message at all: the worker panicked.
-                    // Returning unwinds the scope, whose implicit join
-                    // re-raises that panic with its original payload —
-                    // a worker panic surfaces as a panic, not this Err.
-                    bail!("shard worker terminated without delivering epoch results");
-                }
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                bail!("all shard workers disconnected mid-epoch");
-            }
-        };
-        match msg {
-            None => {}
-            Some((sh, Ok(outs))) => {
-                debug_assert!(!acked[sh], "one ack per worker per flush");
-                acked[sh] = true;
-                n_acked += 1;
-                outcomes.extend(outs);
-            }
-            Some((_, Err(e))) => return Err(e),
-        }
-    }
-    Ok(outcomes)
-}
-
 /// Fold one epoch's outcomes into per-read decisions and push reads
 /// `[start, end)` through the sink in ascending id order. Correctness
 /// rests on the emission-order arbitration key ([`AffineOutcome::key`]):
@@ -623,7 +437,7 @@ fn flush_epoch(
 /// epoch-stateless pair arbitration ([`super::pair`]), consuming the
 /// epoch's retained forward sequences (`epoch_seqs`) for mate rescue.
 #[allow(clippy::too_many_arguments)]
-fn emit_epoch<S>(
+pub(crate) fn emit_epoch<S>(
     index: &MinimizerIndex,
     pairing: Option<&PairingConfig>,
     epoch_seqs: &mut Vec<Arc<[u8]>>,

@@ -1,0 +1,685 @@
+//! Shared shard-worker pool with session multiplexing — the daemon-era
+//! generalization of the sharded streaming pipeline.
+//!
+//! [`super::pipeline::Pipeline::map_stream`] owns exactly one read
+//! stream for the lifetime of its worker threads. A serving daemon
+//! (`dart-pim serve`) inverts that: the workers outlive any one stream,
+//! and several concurrent streams (sessions) multiplex onto them. This
+//! module splits the old monolith into the two halves that makes
+//! possible:
+//!
+//! * [`WorkerPool`] — N long-lived shard workers, spawned once per
+//!   process (scoped threads, so they may borrow the index). Each worker
+//!   owns one engine and a map of **per-session** [`ShardWorker`]s, so
+//!   FIFO maxReads accounting — the only state that persists across
+//!   epoch drains — is session-scoped and two clients can never perturb
+//!   each other's admission decisions.
+//! * [`MapSession`] — one read stream's producer-side state: routing,
+//!   pair-id assignment, epoch accounting, retained epoch sequences for
+//!   mate rescue, and epoch-ordered emission. Dropping a session (e.g.
+//!   a client hangup mid-stream) retires its state in every worker.
+//!
+//! # Determinism (invariant 7)
+//!
+//! A session's output is byte-identical to a standalone
+//! `Pipeline::map_stream` run over the same reads with the same
+//! configuration, regardless of what other sessions are doing:
+//!
+//! * each session has a single producer, and std `mpsc` channels are
+//!   FIFO per sender, so a session's items reach each shard in exactly
+//!   the order the single-stream pipeline would send them;
+//! * the shard partition (`shard_of`) and epoch boundaries depend only
+//!   on the session's own reads;
+//! * engines are stateless between batches, so interleaving another
+//!   session's batches between ours changes no numerics;
+//! * per-session `ShardWorker`s isolate the FIFO cap state (above).
+//!
+//! `tests/serve_e2e.rs` and the CI serve-smoke job hold this contract
+//! over real sockets.
+
+use std::borrow::Borrow;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::genome::ReadRecord;
+use crate::index::{shard_of, MinimizerIndex};
+
+use super::metrics::Metrics;
+use super::pipeline::{
+    bump_read_id, check_even_paired_stream, emit_epoch, epoch_boundary, route_read,
+    FinalMapping, PipelineConfig, CHANNEL_DEPTH, SHARD_CHUNK,
+};
+use super::router::Router;
+use super::shard::{ShardItem, ShardWorker};
+use super::state::AffineOutcome;
+
+/// One worker's answer to a flush request: its shard index plus the
+/// epoch's outcomes (or the session's terminal error).
+type ShardAck = (usize, Result<Vec<AffineOutcome>>);
+
+/// Message streamed to one pooled shard worker. Every variant is tagged
+/// with the session it belongs to; flush/close replies travel back over
+/// a per-request ack channel carried inside the message, so no
+/// cross-session reply routing exists to get wrong.
+enum PoolMsg {
+    /// A chunk of one session's routed items, in emission order.
+    Items {
+        /// Originating session.
+        session: u64,
+        /// The routed items.
+        items: Vec<ShardItem>,
+    },
+    /// Epoch barrier for one session: drain its shard state and ack
+    /// with the outcomes so far (or its terminal error, exactly once).
+    Flush {
+        /// Originating session.
+        session: u64,
+        /// Where to deliver this shard's ack.
+        ack: mpsc::Sender<ShardAck>,
+    },
+    /// Session teardown: finish and discard the session's shard state,
+    /// acking with this shard's per-session metrics.
+    Close {
+        /// Originating session.
+        session: u64,
+        /// Where to deliver this shard's metrics.
+        ack: mpsc::Sender<(usize, Metrics)>,
+    },
+}
+
+/// Clears the worker's liveness flag when its thread exits for any
+/// reason — including a panic unwind — so producers waiting on an ack
+/// can distinguish "slow" from "dead".
+struct AliveGuard(Arc<AtomicBool>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::SeqCst);
+    }
+}
+
+/// A pool of long-lived shard workers that sessions multiplex onto.
+///
+/// Cloning the handle clones the senders; workers exit when every
+/// handle (and every session) has been dropped. Spawn once per process
+/// inside a [`thread::scope`] so workers may borrow the index:
+///
+/// ```
+/// use dart_pim::coordinator::pool::{MapSession, WorkerPool};
+/// use dart_pim::coordinator::{PipelineConfig, Router};
+/// use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
+/// use dart_pim::index::MinimizerIndex;
+/// use dart_pim::params::{K, READ_LEN, W};
+///
+/// let genome = SynthConfig { len: 30_000, ..Default::default() }.generate();
+/// let index = MinimizerIndex::build(genome, K, W, READ_LEN);
+/// let reads = ReadSimConfig { n_reads: 4, ..Default::default() }
+///     .simulate(&index.reference, |p| p as u32);
+/// let cfg = PipelineConfig::default();
+/// let router = Router::new(&index, &cfg.dart);
+/// let metrics = std::thread::scope(|s| {
+///     let pool = WorkerPool::spawn(s, &index, &cfg, 2);
+///     let mut session = MapSession::new(0, &index, &router, cfg.clone(), &pool);
+///     let mut sink = |_, _| Ok(());
+///     for r in &reads {
+///         session.push(r, &mut sink).unwrap();
+///     }
+///     session.finish(&mut sink).unwrap()
+/// });
+/// assert_eq!(metrics.n_reads, 4);
+/// ```
+#[derive(Clone)]
+pub struct WorkerPool {
+    txs: Vec<mpsc::SyncSender<PoolMsg>>,
+    alive: Vec<Arc<AtomicBool>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n_shards` (≥ 1) workers on scope `s`. Each worker builds
+    /// its engine from `cfg.worker_engine` on its own thread and serves
+    /// every session's slice of the minimizer-hash partition. Sessions
+    /// may use a config that differs from the pool's in `pairing` /
+    /// `handle_revcomp` (producer/emission-side policy); the
+    /// worker-side fields (`dart`, `batch_size`, `filter_policy`,
+    /// `worker_engine`) are fixed at spawn for all sessions.
+    pub fn spawn<'scope, 'env>(
+        s: &'scope thread::Scope<'scope, 'env>,
+        index: &'env MinimizerIndex,
+        cfg: &'env PipelineConfig,
+        n_shards: usize,
+    ) -> WorkerPool {
+        let n = n_shards.max(1);
+        let mut txs = Vec::with_capacity(n);
+        let mut alive = Vec::with_capacity(n);
+        for sh in 0..n {
+            let (tx, rx) = mpsc::sync_channel::<PoolMsg>(CHANNEL_DEPTH);
+            let flag = Arc::new(AtomicBool::new(true));
+            txs.push(tx);
+            alive.push(flag.clone());
+            s.spawn(move || pool_worker(index, cfg, sh, rx, flag));
+        }
+        WorkerPool { txs, alive }
+    }
+
+    /// Number of shard workers.
+    pub fn n_shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// True while every worker thread is still running. A false answer
+    /// means a worker panicked or exited early: in-flight sessions will
+    /// fail their next flush, and the panic payload re-raises when the
+    /// spawning scope joins.
+    pub fn healthy(&self) -> bool {
+        self.alive.iter().all(|a| a.load(Ordering::SeqCst))
+    }
+}
+
+/// One pooled worker's thread body: one engine, one
+/// per-session [`ShardWorker`] map, plus a poisoned-session map so a
+/// failed session reports its error exactly once (at its next flush)
+/// without taking the worker — or any other session — down with it.
+fn pool_worker(
+    index: &MinimizerIndex,
+    cfg: &PipelineConfig,
+    sh: usize,
+    rx: mpsc::Receiver<PoolMsg>,
+    alive: Arc<AtomicBool>,
+) {
+    let _guard = AliveGuard(alive);
+    // the engine is constructed on its owning thread (every EngineKind
+    // variant is Send-safe to build and run here; the PJRT engine never
+    // is). It is shared across sessions: engines are stateless between
+    // batches, so session interleaving cannot change any numerics.
+    let mut engine = cfg.worker_engine.build();
+    let mut sessions: HashMap<u64, ShardWorker<'_>> = HashMap::new();
+    let mut poisoned: HashMap<u64, anyhow::Error> = HashMap::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            PoolMsg::Items { session, items } => {
+                if poisoned.contains_key(&session) {
+                    continue;
+                }
+                let worker = sessions
+                    .entry(session)
+                    .or_insert_with(|| ShardWorker::new(index, cfg));
+                if let Err(e) = worker.ingest(engine.as_mut(), items) {
+                    sessions.remove(&session);
+                    poisoned.insert(session, e);
+                }
+            }
+            PoolMsg::Flush { session, ack } => {
+                if let Some(e) = poisoned.remove(&session) {
+                    let _ = ack.send((sh, Err(e)));
+                    continue;
+                }
+                let worker = sessions
+                    .entry(session)
+                    .or_insert_with(|| ShardWorker::new(index, cfg));
+                match worker.drain(engine.as_mut()) {
+                    Ok(outs) => {
+                        let _ = ack.send((sh, Ok(outs)));
+                    }
+                    Err(e) => {
+                        sessions.remove(&session);
+                        let _ = ack.send((sh, Err(e)));
+                    }
+                }
+            }
+            PoolMsg::Close { session, ack } => {
+                poisoned.remove(&session);
+                let metrics = match sessions.remove(&session) {
+                    // a close always follows a final flush, so finish
+                    // has no pending work left; an error here (already
+                    // reported through that flush) yields empty metrics
+                    Some(w) => {
+                        w.finish(engine.as_mut()).map(|(_, m)| m).unwrap_or_default()
+                    }
+                    None => Metrics::default(),
+                };
+                let _ = ack.send((sh, metrics));
+            }
+        }
+    }
+    // all pool handles and sessions hung up: nothing left to serve
+}
+
+/// One read stream's producer-side mapping state, multiplexed onto a
+/// [`WorkerPool`]: routing, pair-id assignment, epoch accounting, and
+/// epoch-ordered emission. Create with [`MapSession::new`], feed with
+/// [`MapSession::push`], and settle with [`MapSession::finish`];
+/// dropping an unfinished session (client hangup) retires its worker
+/// state without blocking.
+pub struct MapSession<'a> {
+    id: u64,
+    index: &'a MinimizerIndex,
+    router: &'a Router,
+    cfg: PipelineConfig,
+    txs: Vec<mpsc::SyncSender<PoolMsg>>,
+    alive: Vec<Arc<AtomicBool>>,
+    pending: Vec<Vec<ShardItem>>,
+    epoch_seqs: Vec<Arc<[u8]>>,
+    metrics: Metrics,
+    t_route: Duration,
+    t_start: Instant,
+    next_pair: u32,
+    next_id: u32,
+    epoch_start: u32,
+    closed: bool,
+}
+
+impl<'a> MapSession<'a> {
+    /// Open session `id` (unique among live sessions on this pool) with
+    /// its own `cfg`. The config may differ from the pool's only in the
+    /// producer/emission-side fields (`pairing`, `handle_revcomp`);
+    /// worker-side fields must match the pool's, which executes every
+    /// session with the config it was spawned with.
+    pub fn new(
+        id: u64,
+        index: &'a MinimizerIndex,
+        router: &'a Router,
+        cfg: PipelineConfig,
+        pool: &WorkerPool,
+    ) -> MapSession<'a> {
+        let n = pool.txs.len();
+        MapSession {
+            id,
+            index,
+            router,
+            cfg,
+            txs: pool.txs.clone(),
+            alive: pool.alive.clone(),
+            pending: (0..n).map(|_| Vec::with_capacity(SHARD_CHUNK)).collect(),
+            epoch_seqs: Vec::new(),
+            metrics: Metrics::default(),
+            t_route: Duration::ZERO,
+            t_start: Instant::now(),
+            next_pair: 0,
+            next_id: 0,
+            epoch_start: 0,
+            closed: false,
+        }
+    }
+
+    /// Route one read into the pool and, at epoch boundaries, emit the
+    /// finished epoch's decisions through `sink` (every read id exactly
+    /// once, ascending, `None` for unmapped) — the per-read step of
+    /// [`super::pipeline::Pipeline::map_stream`]'s loop.
+    pub fn push<S>(&mut self, read: &ReadRecord, sink: &mut S) -> Result<()>
+    where
+        S: FnMut(u32, Option<FinalMapping>) -> Result<()>,
+    {
+        let t0 = Instant::now();
+        let n_shards = self.txs.len();
+        let id = self.id;
+        let pending = &mut self.pending;
+        let txs = &self.txs;
+        let fwd = route_read(
+            self.router,
+            self.index,
+            self.cfg.handle_revcomp,
+            self.next_id,
+            read,
+            &mut self.next_pair,
+            |item| {
+                let sh = shard_of(item.kmer, n_shards);
+                pending[sh].push(item);
+                if pending[sh].len() >= SHARD_CHUNK {
+                    let full =
+                        std::mem::replace(&mut pending[sh], Vec::with_capacity(SHARD_CHUNK));
+                    // a send error means the worker died; the flush
+                    // barrier below surfaces the failure
+                    let _ = txs[sh].send(PoolMsg::Items { session: id, items: full });
+                }
+            },
+        );
+        if self.cfg.pairing.is_some() {
+            self.epoch_seqs.push(fwd);
+        }
+        self.t_route += t0.elapsed();
+        self.next_id = bump_read_id(self.next_id)?;
+        let epoch = self.cfg.stream_epoch.max(1);
+        if epoch_boundary(self.epoch_start, self.next_id, epoch, self.cfg.pairing.is_some()) {
+            self.emit_finished_epoch(sink)?;
+        }
+        Ok(())
+    }
+
+    /// Settle the stream: final (possibly partial) epoch, worker-side
+    /// teardown, and the session's merged metrics.
+    pub fn finish<S>(mut self, sink: &mut S) -> Result<Metrics>
+    where
+        S: FnMut(u32, Option<FinalMapping>) -> Result<()>,
+    {
+        check_even_paired_stream(self.cfg.pairing.is_some(), self.next_id)?;
+        self.emit_finished_epoch(sink)?;
+        // close out the per-session worker state, merging each shard's
+        // metrics contribution
+        let (ack_tx, ack_rx) = mpsc::channel::<(usize, Metrics)>();
+        for tx in &self.txs {
+            let _ = tx.send(PoolMsg::Close { session: self.id, ack: ack_tx.clone() });
+        }
+        drop(ack_tx);
+        self.closed = true;
+        let mut acked = vec![false; self.txs.len()];
+        let mut n_acked = 0usize;
+        while n_acked < self.txs.len() {
+            if let Some((sh, m)) = self.recv_ack(&ack_rx, &acked)? {
+                debug_assert!(!acked[sh], "one close ack per shard");
+                acked[sh] = true;
+                n_acked += 1;
+                self.metrics.merge(m);
+            }
+        }
+        self.metrics.t_seed += self.t_route;
+        self.metrics.n_reads = u64::from(self.next_id);
+        self.metrics.t_total = self.t_start.elapsed();
+        Ok(std::mem::take(&mut self.metrics))
+    }
+
+    /// Reads mapped so far (the session's dense read-id high-water mark).
+    pub fn n_reads(&self) -> u32 {
+        self.next_id
+    }
+
+    /// Flush the epoch that just closed (or the final partial epoch)
+    /// and push its decisions through the sink.
+    fn emit_finished_epoch<S>(&mut self, sink: &mut S) -> Result<()>
+    where
+        S: FnMut(u32, Option<FinalMapping>) -> Result<()>,
+    {
+        let outs = self.flush()?;
+        let span = (self.epoch_start, self.next_id);
+        emit_epoch(
+            self.index,
+            self.cfg.pairing.as_ref(),
+            &mut self.epoch_seqs,
+            span,
+            outs,
+            sink,
+            &mut self.metrics,
+        )?;
+        self.epoch_start = self.next_id;
+        Ok(())
+    }
+
+    /// Epoch barrier: ship each shard's leftover chunk plus a flush
+    /// marker, collect exactly one ack per worker (or the session's
+    /// terminal error), and return the epoch's merged outcomes.
+    fn flush(&mut self) -> Result<Vec<AffineOutcome>> {
+        let (ack_tx, ack_rx) = mpsc::channel::<ShardAck>();
+        for (sh, tx) in self.txs.iter().enumerate() {
+            if !self.pending[sh].is_empty() {
+                let items = std::mem::take(&mut self.pending[sh]);
+                let _ = tx.send(PoolMsg::Items { session: self.id, items });
+            }
+            let _ = tx.send(PoolMsg::Flush { session: self.id, ack: ack_tx.clone() });
+        }
+        drop(ack_tx);
+        let mut acked = vec![false; self.txs.len()];
+        let mut n_acked = 0usize;
+        let mut outcomes: Vec<AffineOutcome> = Vec::new();
+        while n_acked < self.txs.len() {
+            if let Some((sh, ack)) = self.recv_ack(&ack_rx, &acked)? {
+                let outs = ack?;
+                debug_assert!(!acked[sh], "one ack per worker per flush");
+                acked[sh] = true;
+                n_acked += 1;
+                outcomes.extend(outs);
+            }
+        }
+        Ok(outcomes)
+    }
+
+    /// Receive one ack with dead-worker detection: a worker that exits
+    /// without acking (a panic) would otherwise hang the session
+    /// forever. `Ok(None)` means "nothing yet, try again".
+    fn recv_ack<T>(
+        &self,
+        rx: &mpsc::Receiver<(usize, T)>,
+        acked: &[bool],
+    ) -> Result<Option<(usize, T)>> {
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(m) => Ok(Some(m)),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let dead = acked
+                    .iter()
+                    .zip(&self.alive)
+                    .any(|(&a, alive)| !a && !alive.load(Ordering::SeqCst));
+                if !dead {
+                    Ok(None)
+                } else if let Ok(m) = rx.try_recv() {
+                    // the dying worker's final message raced the timeout
+                    // (its send happened-before the exit we observed):
+                    // handle it normally instead of masking the cause
+                    Ok(Some(m))
+                } else {
+                    // exited with no message at all: the worker
+                    // panicked. The panic payload re-raises when the
+                    // spawning scope joins its threads.
+                    bail!("shard worker terminated without delivering session results");
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                bail!("all shard workers disconnected mid-session");
+            }
+        }
+    }
+}
+
+impl Drop for MapSession<'_> {
+    /// Retire the session's worker-side state on abort (error return or
+    /// client hangup): send a fire-and-forget close so per-session
+    /// `ShardWorker`s do not accumulate in a long-lived daemon. The
+    /// replies land on a receiver we drop immediately; dead workers'
+    /// sends fail silently, which is exactly what we want here.
+    fn drop(&mut self) {
+        if !self.closed {
+            let (ack_tx, _ack_rx) = mpsc::channel::<(usize, Metrics)>();
+            for tx in &self.txs {
+                let _ = tx.send(PoolMsg::Close { session: self.id, ack: ack_tx.clone() });
+            }
+        }
+    }
+}
+
+/// Drive a whole read stream through a fresh single-session pool — the
+/// implementation of [`super::pipeline::Pipeline::map_stream`]'s
+/// sharded path, kept here so the pipeline and the daemon share one
+/// code path for everything past routing.
+pub(crate) fn map_stream_pooled<I, R, S>(
+    index: &MinimizerIndex,
+    router: &Router,
+    cfg: &PipelineConfig,
+    reads: I,
+    sink: &mut S,
+) -> Result<Metrics>
+where
+    I: IntoIterator<Item = Result<R>>,
+    R: Borrow<ReadRecord>,
+    S: FnMut(u32, Option<FinalMapping>) -> Result<()>,
+{
+    let t_start = Instant::now();
+    let mut metrics = thread::scope(|s| -> Result<Metrics> {
+        let pool = WorkerPool::spawn(s, index, cfg, cfg.threads);
+        let mut session = MapSession::new(0, index, router, cfg.clone(), &pool);
+        for rec in reads {
+            let rec = rec?;
+            session.push(rec.borrow(), sink)?;
+        }
+        session.finish(sink)
+        // an early Err drops `session` (fire-and-forget close) and the
+        // pool handle; every sender gone => workers exit; a worker
+        // panic re-raises at the implicit scope join, preserving the
+        // old map_stream_sharded contract
+    })?;
+    metrics.t_total = t_start.elapsed();
+    Ok(metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::synth::{ReadSimConfig, SynthConfig};
+    use crate::params::{K, READ_LEN, W};
+    use crate::runtime::RustEngine;
+
+    fn setup(n_reads: usize) -> (MinimizerIndex, Vec<ReadRecord>) {
+        let g = SynthConfig { len: 80_000, ..Default::default() }.generate();
+        let idx = MinimizerIndex::build(g, K, W, READ_LEN);
+        let reads = ReadSimConfig { n_reads, ..Default::default() }
+            .simulate(&idx.reference, |p| p as u32);
+        (idx, reads)
+    }
+
+    fn cfg(threads: usize, stream_epoch: usize) -> PipelineConfig {
+        PipelineConfig {
+            dart: crate::pim::DartPimConfig { low_th: 0, ..Default::default() },
+            threads,
+            stream_epoch,
+            worker_engine: crate::runtime::EngineKind::Rust,
+            ..Default::default()
+        }
+    }
+
+    fn render(m: &[Option<FinalMapping>]) -> Vec<(u32, i64, i32, String, u32, bool)> {
+        m.iter()
+            .flatten()
+            .map(|f| (f.read_id, f.pos, f.dist, f.cigar.to_string(), f.candidates, f.reverse))
+            .collect()
+    }
+
+    fn run_session(
+        idx: &MinimizerIndex,
+        router: &Router,
+        pool: &WorkerPool,
+        cfg: &PipelineConfig,
+        id: u64,
+        reads: &[ReadRecord],
+    ) -> (Vec<Option<FinalMapping>>, Metrics) {
+        let mut out = Vec::new();
+        let mut sink = |_, m| {
+            out.push(m);
+            Ok(())
+        };
+        let mut session = MapSession::new(id, idx, router, cfg.clone(), pool);
+        for r in reads {
+            session.push(r, &mut sink).unwrap();
+        }
+        let m = session.finish(&mut sink).unwrap();
+        (out, m)
+    }
+
+    /// Two sessions interleaved read-by-read on one pool each match
+    /// their own standalone single-stream run — the in-process heart of
+    /// determinism invariant 7.
+    #[test]
+    fn interleaved_sessions_match_standalone_runs() {
+        let (idx, reads) = setup(36);
+        let (a_reads, b_reads): (Vec<_>, Vec<_>) =
+            reads.iter().cloned().partition(|r| r.id % 2 == 0);
+        let a_reads: Vec<ReadRecord> = a_reads
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut r)| {
+                r.id = i as u32;
+                r
+            })
+            .collect();
+        let b_reads: Vec<ReadRecord> = b_reads
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut r)| {
+                r.id = i as u32;
+                r
+            })
+            .collect();
+        let c = cfg(3, 5);
+        let standalone = |rs: &[ReadRecord]| {
+            let mut p = crate::coordinator::Pipeline::new(&idx, c.clone(), RustEngine);
+            render(&p.map_reads(rs).unwrap().0)
+        };
+        let want_a = standalone(&a_reads);
+        let want_b = standalone(&b_reads);
+        let router = Router::new(&idx, &c.dart);
+        let (got_a, got_b, ma, mb) = thread::scope(|s| {
+            let pool = WorkerPool::spawn(s, &idx, &c, c.threads);
+            let mut out_a = Vec::new();
+            let mut out_b = Vec::new();
+            let mut sink_a = |_, m| {
+                out_a.push(m);
+                Ok(())
+            };
+            let mut sink_b = |_, m| {
+                out_b.push(m);
+                Ok(())
+            };
+            let mut sa = MapSession::new(1, &idx, &router, c.clone(), &pool);
+            let mut sb = MapSession::new(2, &idx, &router, c.clone(), &pool);
+            // strict read-by-read interleaving across the shared pool
+            for (ra, rb) in a_reads.iter().zip(&b_reads) {
+                sa.push(ra, &mut sink_a).unwrap();
+                sb.push(rb, &mut sink_b).unwrap();
+            }
+            let ma = sa.finish(&mut sink_a).unwrap();
+            let mb = sb.finish(&mut sink_b).unwrap();
+            (render(&out_a), render(&out_b), ma, mb)
+        });
+        assert_eq!(want_a, got_a, "session A corrupted by interleaving");
+        assert_eq!(want_b, got_b, "session B corrupted by interleaving");
+        assert_eq!(ma.n_reads, a_reads.len() as u64);
+        assert_eq!(mb.n_reads, b_reads.len() as u64);
+        assert!(ma.linear_instances > 0 && mb.linear_instances > 0);
+    }
+
+    /// A dropped (aborted) session must not leak state that perturbs a
+    /// later session with the same id.
+    #[test]
+    fn dropped_session_state_is_retired() {
+        let (idx, reads) = setup(20);
+        let c = cfg(2, 4);
+        let router = Router::new(&idx, &c.dart);
+        let want = {
+            let mut p = crate::coordinator::Pipeline::new(&idx, c.clone(), RustEngine);
+            render(&p.map_reads(&reads).unwrap().0)
+        };
+        let got = thread::scope(|s| {
+            let pool = WorkerPool::spawn(s, &idx, &c, c.threads);
+            {
+                // feed half a stream, then hang up without finishing
+                let mut aborted = MapSession::new(7, &idx, &router, c.clone(), &pool);
+                let mut sink = |_, _| Ok(());
+                for r in &reads[..10] {
+                    aborted.push(r, &mut sink).unwrap();
+                }
+                drop(aborted);
+            }
+            // same session id, fresh stream: must start from clean state
+            let (out, m) = run_session(&idx, &router, &pool, &c, 7, &reads);
+            assert_eq!(m.n_reads, reads.len() as u64);
+            render(&out)
+        });
+        assert_eq!(want, got, "retired session state leaked into its successor");
+    }
+
+    #[test]
+    fn pool_reports_healthy_and_sessions_settle_empty_streams() {
+        let (idx, _) = setup(1);
+        let c = cfg(4, 8);
+        let router = Router::new(&idx, &c.dart);
+        thread::scope(|s| {
+            let pool = WorkerPool::spawn(s, &idx, &c, c.threads);
+            assert!(pool.healthy());
+            assert_eq!(pool.n_shards(), 4);
+            let (out, m) = run_session(&idx, &router, &pool, &c, 1, &[]);
+            assert!(out.is_empty());
+            assert_eq!(m.n_reads, 0);
+            assert!(pool.healthy());
+        });
+    }
+}

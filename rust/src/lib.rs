@@ -19,8 +19,10 @@
 //! them from the hot path.
 //!
 //! Start with [`coordinator::pipeline::Pipeline`] (end-to-end mapping) or
-//! the `examples/` directory. `DESIGN.md` maps every paper table/figure
-//! to the module and bench that regenerates it.
+//! the `examples/` directory; the [`serve`] module (Unix only) wraps the
+//! same pipeline in a long-lived daemon that maps many concurrent FASTQ
+//! streams over one resident index (SERVING.md). `DESIGN.md` maps every
+//! paper table/figure to the module and bench that regenerates it.
 
 // Every public item must be documented: the crate is the reference map
 // between the paper's figures/equations and the code, so an undocumented
@@ -49,6 +51,8 @@ pub mod index;
 pub mod pim;
 pub mod runtime;
 pub mod seeding;
+#[cfg(unix)]
+pub mod serve;
 pub mod simulator;
 pub mod util;
 

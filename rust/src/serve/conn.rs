@@ -1,0 +1,205 @@
+//! One connection = one session: handshake, FASTQ intake, mapping
+//! through a pooled [`MapSession`], and the TSV/metrics response.
+//!
+//! Everything here is best-effort toward the *client* and precise
+//! toward the *daemon*: a session failure is reported on the wire when
+//! the transport still works, and always lands in the returned
+//! [`SessionOutcome`] so the accept loop can log and count it. A failed
+//! session never takes the daemon down — its worker-side state is
+//! retired when the [`MapSession`] drops (see `coordinator::pool`).
+
+use std::io::{self, BufRead, Read, Write};
+
+use anyhow::Result;
+
+use crate::cli;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::{MapSession, WorkerPool};
+use crate::coordinator::{FinalMapping, Router};
+use crate::genome::fastq::{FastqRecord, PairedFastqStream};
+use crate::genome::ReadRecord;
+use crate::index::MinimizerIndex;
+
+use super::protocol::{
+    read_handshake, FrameReader, FrameWriter, Framing, Mode, KIND_ERROR, KIND_METRICS,
+};
+use super::{SessionTemplate, Stream};
+
+/// What the accept loop learns when a handler thread settles.
+pub(crate) struct SessionOutcome {
+    /// The session's merged metrics, when it completed cleanly.
+    pub(crate) metrics: Option<Metrics>,
+    /// The failure rendered for the daemon log, when it did not.
+    pub(crate) error: Option<String>,
+}
+
+/// The per-session metrics line (the `M` frame payload, also echoed to
+/// the daemon log and aggregated daemon-wide).
+pub(crate) fn metrics_line(m: &Metrics) -> String {
+    format!(
+        "reads={} proper_pairs={} wf_calls={} wall_ms={}",
+        m.n_reads,
+        m.proper_pairs,
+        m.linear_instances + m.affine_instances,
+        m.t_total.as_millis()
+    )
+}
+
+/// The server→client channel in whichever transport the handshake
+/// picked. TSV rows buffer here; the terminal metrics/error follows the
+/// framing rules in `protocol`.
+enum OutChan {
+    /// Raw bytes; errors become a trailing `#!error:` line.
+    Raw(io::BufWriter<Stream>),
+    /// `D` frames, terminated by one `M` or `E` frame.
+    Framed(io::BufWriter<FrameWriter<Stream>>),
+}
+
+impl Write for OutChan {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            OutChan::Raw(w) => w.write(buf),
+            OutChan::Framed(w) => w.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            OutChan::Raw(w) => w.flush(),
+            OutChan::Framed(w) => w.flush(),
+        }
+    }
+}
+
+impl OutChan {
+    /// Seal a successful session: flush the TSV and, in framed mode,
+    /// append the metrics frame.
+    fn finish_ok(&mut self, metrics_line: &str) -> io::Result<()> {
+        match self {
+            OutChan::Raw(w) => w.flush(),
+            OutChan::Framed(w) => {
+                w.flush()?;
+                w.get_mut().frame(KIND_METRICS, metrics_line.as_bytes())
+            }
+        }
+    }
+
+    /// Report a session failure on the wire, best-effort (the client
+    /// may be the reason the session failed).
+    fn report_err(&mut self, msg: &str) {
+        match self {
+            OutChan::Raw(w) => {
+                // TSV rows never start with '#', so the trailer is
+                // unambiguous even after partial output
+                let _ = w.flush();
+                let _ = writeln!(w.get_mut(), "#!error: {msg}");
+                let _ = w.get_mut().flush();
+            }
+            OutChan::Framed(w) => {
+                let _ = w.flush();
+                let _ = w.get_mut().frame(KIND_ERROR, msg.as_bytes());
+            }
+        }
+    }
+}
+
+/// Serve one accepted connection to completion. Runs on its own thread;
+/// never panics the daemon for client-induced failures.
+pub(crate) fn handle_connection(
+    mut stream: Stream,
+    session_id: u64,
+    index: &MinimizerIndex,
+    router: &Router,
+    template: &SessionTemplate,
+    pool: &WorkerPool,
+) -> SessionOutcome {
+    let hs = match read_handshake(&mut stream) {
+        Ok(h) => h,
+        Err(e) => {
+            // no transport negotiated yet: answer in the raw dialect
+            let msg = format!("{e:#}");
+            let _ = writeln!(stream, "#!error: {msg}");
+            return SessionOutcome { metrics: None, error: Some(msg) };
+        }
+    };
+    let read_half = match stream.try_clone() {
+        Ok(r) => r,
+        Err(e) => {
+            let msg = format!("splitting the connection: {e}");
+            let _ = writeln!(stream, "#!error: {msg}");
+            return SessionOutcome { metrics: None, error: Some(msg) };
+        }
+    };
+    let reader: Box<dyn Read> = match hs.framing {
+        Framing::Raw => Box::new(read_half),
+        Framing::Framed => Box::new(FrameReader::new(read_half)),
+    };
+    let mut out = match hs.framing {
+        Framing::Raw => OutChan::Raw(io::BufWriter::new(stream)),
+        Framing::Framed => OutChan::Framed(io::BufWriter::new(FrameWriter::new(stream))),
+    };
+    match run_session(reader, &mut out, hs.mode, session_id, index, router, template, pool) {
+        Ok(metrics) => {
+            let line = metrics_line(&metrics);
+            match out.finish_ok(&line) {
+                Ok(()) => SessionOutcome { metrics: Some(metrics), error: None },
+                // mapped fine, but the client vanished before the tail
+                Err(e) => SessionOutcome {
+                    metrics: Some(metrics),
+                    error: Some(format!("writing the response tail: {e}")),
+                },
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            out.report_err(&msg);
+            SessionOutcome { metrics: None, error: Some(msg) }
+        }
+    }
+}
+
+/// The session body: intake → pooled mapping → TSV rows in read order.
+/// Byte parity with `map` holds because intake, config, sharding, and
+/// row rendering are the same code `cmd_map` runs (invariant 7).
+#[allow(clippy::too_many_arguments)]
+fn run_session(
+    reader: Box<dyn Read>,
+    out: &mut OutChan,
+    mode: Mode,
+    session_id: u64,
+    index: &MinimizerIndex,
+    router: &Router,
+    template: &SessionTemplate,
+    pool: &WorkerPool,
+) -> Result<Metrics> {
+    let cfg = template.session_cfg(mode);
+    let paired = cfg.pairing.is_some();
+    let label = format!("session {session_id} FASTQ stream");
+    let buf: Box<dyn BufRead> = Box::new(io::BufReader::new(reader));
+    let (read_len, reads): (usize, Box<dyn Iterator<Item = Result<ReadRecord>>>) = if paired {
+        let pairs: Box<dyn Iterator<Item = io::Result<(FastqRecord, FastqRecord)>>> =
+            Box::new(PairedFastqStream::interleaved(buf));
+        cli::stream_paired_from(pairs, label)?
+    } else {
+        let (rl, it) = cli::stream_reads_from(buf, label)?;
+        (rl, Box::new(it))
+    };
+    anyhow::ensure!(
+        read_len == index.read_len,
+        "session streams {read_len} bp reads, but this daemon's index was built for {} bp \
+         (restart serve with --read-len {read_len} to serve them)",
+        index.read_len
+    );
+    cli::write_tsv_header(out, paired)?;
+    let mut sink = |_id: u32, m: Option<FinalMapping>| -> Result<()> {
+        if let Some(m) = m {
+            cli::write_tsv_row(out, paired, &m)?;
+        }
+        Ok(())
+    };
+    let mut session = MapSession::new(session_id, index, router, cfg, pool);
+    for read in reads {
+        session.push(&read?, &mut sink)?;
+    }
+    session.finish(&mut sink)
+}

@@ -1,0 +1,335 @@
+//! `dart-pim serve` — the long-lived mapping daemon.
+//!
+//! The daemon loads the minimizer index once, spawns one shared
+//! shard-worker pool (`coordinator::pool`), and then accepts concurrent
+//! FASTQ streams over a Unix-domain socket (or TCP behind `--tcp`).
+//! Each accepted connection becomes a *session*: a handler thread reads
+//! the client's handshake and FASTQ, routes reads through a
+//! [`crate::coordinator::pool::MapSession`] multiplexed onto the shared
+//! workers, and streams the TSV rows back in read order. For any single
+//! client the response bytes are identical to `map` on the same input
+//! and flags — determinism invariant 7 (ARCHITECTURE.md).
+//!
+//! Module map:
+//!
+//! * [`protocol`] — the DART/1 handshake and frame codec (SERVING.md is
+//!   the normative spec)
+//! * `conn`       — per-connection session driver (private)
+//! * `signal`     — the SIGTERM/SIGINT drain latch (private)
+//!
+//! # Drain
+//!
+//! SIGTERM/SIGINT latch a flag; the nonblocking accept loop notices it,
+//! stops accepting, joins every in-flight session (their blocking socket
+//! I/O is *not* interrupted — the handler threads run to completion),
+//! logs the aggregate metrics, removes the socket file, and returns
+//! `Ok(())` so the process exits 0.
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pool::WorkerPool;
+use crate::coordinator::{PairingConfig, PipelineConfig, Router};
+use crate::index::MinimizerIndex;
+
+mod conn;
+pub mod protocol;
+mod signal;
+
+/// How often the accept loop polls for connections, finished sessions,
+/// and the drain latch. Latency floor for accepting a connection;
+/// irrelevant once a session is running (handlers block on their own
+/// sockets).
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// The daemon-wide session policy: the worker pool's pipeline config
+/// plus the producer-side knobs each session instantiates per its
+/// handshake mode.
+pub struct SessionTemplate {
+    /// The pool's config. Worker-side fields (engine, batch, filter
+    /// policy, DART parameters) are shared by every session; the
+    /// producer-side fields are overridden per session by
+    /// [`SessionTemplate::session_cfg`].
+    pub cfg: PipelineConfig,
+    /// Pair arbitration policy applied to every `mode=pe` session.
+    pub pairing: PairingConfig,
+    /// `--revcomp`: map both strands in single-end sessions too
+    /// (`mode=pe` always does).
+    pub revcomp: bool,
+}
+
+impl SessionTemplate {
+    /// The session config for a handshake `mode` — exactly what
+    /// `cmd_map` builds for the same flags, which is what makes the
+    /// byte-parity invariant hold.
+    fn session_cfg(&self, mode: protocol::Mode) -> PipelineConfig {
+        let mut cfg = self.cfg.clone();
+        match mode {
+            protocol::Mode::Single => {
+                cfg.handle_revcomp = self.revcomp;
+                cfg.pairing = None;
+            }
+            protocol::Mode::Paired => {
+                cfg.handle_revcomp = true;
+                cfg.pairing = Some(self.pairing.clone());
+            }
+        }
+        cfg
+    }
+}
+
+/// Where the daemon listens.
+pub enum Bind {
+    /// A Unix-domain socket at this path — created at startup (the path
+    /// must not exist) and removed on exit.
+    Unix(PathBuf),
+    /// A TCP listen address, e.g. `127.0.0.1:7777`.
+    Tcp(String),
+}
+
+/// The two listener transports behind one accept interface.
+enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Listener::Unix(l) => l.set_nonblocking(nb),
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> io::Result<Stream> {
+        match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+        }
+    }
+}
+
+/// One accepted connection, either transport. Sessions split it into a
+/// read half and a write half via [`Stream::try_clone`].
+pub(crate) enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    pub(crate) fn try_clone(&self) -> io::Result<Stream> {
+        match self {
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+        }
+    }
+
+    /// Sockets accepted from a nonblocking listener can inherit the
+    /// nonblocking flag on some platforms; sessions want blocking I/O.
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_nonblocking(nb),
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// Removes the Unix socket file when the daemon winds down, on every
+/// exit path (including errors).
+struct SocketGuard(Option<PathBuf>);
+
+impl Drop for SocketGuard {
+    fn drop(&mut self) {
+        if let Some(p) = &self.0 {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Daemon-wide aggregates across settled sessions.
+#[derive(Default)]
+struct DaemonStats {
+    sessions: u64,
+    failed: u64,
+    metrics: Metrics,
+}
+
+/// Run the daemon until a drain signal: bind, accept, one handler
+/// thread per connection, all sessions multiplexed onto one worker
+/// pool. Returns `Ok(())` after a graceful drain (so `serve` exits 0
+/// under SIGTERM) and `Err` for daemon-level failures (bad bind,
+/// accept-loop I/O errors, dead worker pool).
+pub fn run_daemon(index: &MinimizerIndex, template: SessionTemplate, bind: Bind) -> Result<()> {
+    signal::install();
+    let (listener, _guard, addr) = match &bind {
+        Bind::Unix(path) => {
+            if path.exists() {
+                bail!(
+                    "socket path {} already exists — another daemon may be running \
+                     (remove the stale file to rebind)",
+                    path.display()
+                );
+            }
+            let l = UnixListener::bind(path)
+                .with_context(|| format!("binding unix socket {}", path.display()))?;
+            (Listener::Unix(l), SocketGuard(Some(path.clone())), format!("unix:{}", path.display()))
+        }
+        Bind::Tcp(spec) => {
+            let l = TcpListener::bind(spec).with_context(|| format!("binding tcp {spec}"))?;
+            (Listener::Tcp(l), SocketGuard(None), format!("tcp:{spec}"))
+        }
+    };
+    listener.set_nonblocking(true).context("making the listener nonblocking")?;
+    let router = Router::new(index, &template.cfg.dart);
+    let n_shards = template.cfg.threads.max(1);
+    let stats = Mutex::new(DaemonStats::default());
+    eprintln!(
+        "serve: listening on {addr} ({} bp reads, {} shard worker(s), engine {})",
+        index.read_len,
+        n_shards,
+        template.cfg.worker_engine.name()
+    );
+    let result = thread::scope(|s| -> Result<()> {
+        let pool = WorkerPool::spawn(s, index, &template.cfg, n_shards);
+        let mut handles: Vec<(u64, thread::ScopedJoinHandle<'_, conn::SessionOutcome>)> =
+            Vec::new();
+        let mut next_session: u64 = 0;
+        while !signal::shutting_down() {
+            match listener.accept() {
+                Ok(stream) => {
+                    // handlers want blocking I/O even if the socket
+                    // inherited the listener's nonblocking flag
+                    if let Err(e) = stream.set_nonblocking(false) {
+                        eprintln!("serve: rejecting connection: {e}");
+                        continue;
+                    }
+                    let id = next_session;
+                    next_session += 1;
+                    let session_pool = pool.clone();
+                    let router = &router;
+                    let template = &template;
+                    let h = s.spawn(move || {
+                        conn::handle_connection(stream, id, index, router, template, &session_pool)
+                    });
+                    handles.push((id, h));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    reap_finished(&mut handles, &stats);
+                    if !pool.healthy() {
+                        // sessions cannot settle without their workers;
+                        // fail loudly rather than serve hung clients
+                        drain(handles, &stats);
+                        bail!("a shard worker terminated; shutting the daemon down");
+                    }
+                    thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    drain(handles, &stats);
+                    return Err(e).context("accepting a connection");
+                }
+            }
+        }
+        let in_flight = handles.iter().filter(|(_, h)| !h.is_finished()).count();
+        eprintln!("serve: drain requested; finishing {in_flight} in-flight session(s)");
+        drain(handles, &stats);
+        Ok(())
+    });
+    let stats = stats.into_inner().unwrap_or_else(|e| e.into_inner());
+    eprintln!(
+        "serve: {} session(s) served, {} failed; aggregate: {}",
+        stats.sessions,
+        stats.failed,
+        conn::metrics_line(&stats.metrics)
+    );
+    result
+}
+
+/// Settle every handler that has already finished, without blocking on
+/// the ones still streaming.
+fn reap_finished(
+    handles: &mut Vec<(u64, thread::ScopedJoinHandle<'_, conn::SessionOutcome>)>,
+    stats: &Mutex<DaemonStats>,
+) {
+    let mut i = 0;
+    while i < handles.len() {
+        if handles[i].1.is_finished() {
+            let (id, h) = handles.swap_remove(i);
+            settle(id, h, stats);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Join every remaining handler (the drain path: blocks until in-flight
+/// sessions run to completion).
+fn drain(
+    handles: Vec<(u64, thread::ScopedJoinHandle<'_, conn::SessionOutcome>)>,
+    stats: &Mutex<DaemonStats>,
+) {
+    for (id, h) in handles {
+        settle(id, h, stats);
+    }
+}
+
+/// Fold one settled session into the daemon log and aggregates.
+fn settle(
+    id: u64,
+    h: thread::ScopedJoinHandle<'_, conn::SessionOutcome>,
+    stats: &Mutex<DaemonStats>,
+) {
+    let mut st = stats.lock().unwrap_or_else(|e| e.into_inner());
+    st.sessions += 1;
+    match h.join() {
+        Ok(outcome) => {
+            if let Some(m) = &outcome.metrics {
+                eprintln!("serve: session {id} done: {}", conn::metrics_line(m));
+            }
+            if let Some(err) = &outcome.error {
+                st.failed += 1;
+                eprintln!("serve: session {id} failed: {err}");
+            }
+            if let Some(m) = outcome.metrics {
+                st.metrics.merge(m);
+            }
+        }
+        Err(_) => {
+            st.failed += 1;
+            eprintln!("serve: session {id} handler panicked");
+        }
+    }
+}

@@ -1,0 +1,402 @@
+//! The `dart-pim serve` wire protocol: a one-line handshake followed by
+//! either raw bytes or length-prefixed frames. SERVING.md is the
+//! normative spec; this module is its implementation plus unit tests.
+//!
+//! # Handshake
+//!
+//! The client's first line (ASCII, `\n`-terminated, ≤ 256 bytes):
+//!
+//! ```text
+//! DART/1 mode=<se|pe> [framing=<framed|raw>]
+//! ```
+//!
+//! `mode=se` streams single-end FASTQ; `mode=pe` streams interleaved
+//! pairs (R1, R2, R1, …). `framing` defaults to `framed`.
+//!
+//! # Framed mode
+//!
+//! After the handshake, every byte in both directions travels in frames
+//! of `[kind: 1 byte][len: u32 big-endian][payload: len bytes]`:
+//!
+//! * client → server: `D` (FASTQ bytes, arbitrary chunking) and `F`
+//!   (finish, len 0 — end of the read stream);
+//! * server → client: `D` (TSV bytes), then exactly one `M` (final
+//!   per-session metrics line) on success or `E` (error message) on
+//!   failure.
+//!
+//! A connection that closes before `F` is a client hangup and fails the
+//! session ([`FrameReader`] surfaces it as `UnexpectedEof`), which is
+//! the reason framed mode exists: raw TCP/Unix EOF cannot distinguish
+//! "done" from "died".
+//!
+//! # Raw mode
+//!
+//! No framing in either direction: the client streams FASTQ and
+//! half-closes (EOF = end of stream); the server answers with exactly
+//! the TSV bytes `map` would write (byte parity, invariant 7). On error
+//! the server appends one `#!error: …` line — distinguishable because
+//! TSV rows never start with `#` — and closes. Raw mode is what
+//! `socat`/`nc` speak; see SERVING.md for a worked example.
+
+use std::io::{self, Read, Write};
+
+/// Frame kind: FASTQ or TSV payload bytes.
+pub const KIND_DATA: u8 = b'D';
+/// Frame kind: end of the client's read stream (len 0).
+pub const KIND_FINISH: u8 = b'F';
+/// Frame kind: the server's final metrics line (success).
+pub const KIND_METRICS: u8 = b'M';
+/// Frame kind: the server's error message (failure).
+pub const KIND_ERROR: u8 = b'E';
+
+/// Upper bound on a single frame's payload, to fail fast on garbage
+/// headers (e.g. a client that skipped the handshake line).
+pub const MAX_FRAME_LEN: usize = 1 << 26;
+
+/// Longest accepted handshake line, terminator included.
+const MAX_HANDSHAKE: usize = 256;
+
+/// Whether a session streams single-end reads or interleaved pairs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Single-end FASTQ.
+    Single,
+    /// Interleaved paired FASTQ (R1 at even records, R2 at odd).
+    Paired,
+}
+
+/// Whether a session speaks frames or raw bytes after the handshake.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framing {
+    /// Length-prefixed frames both ways (the default).
+    Framed,
+    /// Raw FASTQ in, raw TSV out; client EOF ends the stream.
+    Raw,
+}
+
+/// A parsed handshake line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Handshake {
+    /// Single-end or interleaved-paired input.
+    pub mode: Mode,
+    /// Framed or raw transport.
+    pub framing: Framing,
+}
+
+/// Read and parse the handshake line, byte-at-a-time so no stream bytes
+/// beyond the terminating `\n` are consumed (the FASTQ or the first
+/// frame begins immediately after it).
+pub fn read_handshake<R: Read>(r: &mut R) -> anyhow::Result<Handshake> {
+    let mut line = Vec::with_capacity(64);
+    loop {
+        let mut b = [0u8; 1];
+        match r.read(&mut b) {
+            Ok(0) => anyhow::bail!("connection closed before a handshake line"),
+            Ok(_) => {
+                if b[0] == b'\n' {
+                    break;
+                }
+                line.push(b[0]);
+                anyhow::ensure!(
+                    line.len() <= MAX_HANDSHAKE,
+                    "handshake line exceeds {MAX_HANDSHAKE} bytes; expected \
+                     `DART/1 mode=<se|pe> [framing=<framed|raw>]`"
+                );
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let text = std::str::from_utf8(&line).map_err(|_| {
+        anyhow::anyhow!("handshake line is not UTF-8; expected `DART/1 mode=<se|pe> ...`")
+    })?;
+    parse_handshake(text.trim_end_matches('\r'))
+}
+
+/// Parse the handshake text (no trailing newline). Unknown tokens are
+/// rejected rather than ignored so protocol drift fails loudly.
+pub fn parse_handshake(text: &str) -> anyhow::Result<Handshake> {
+    let mut tokens = text.split_whitespace();
+    let magic = tokens.next().unwrap_or("");
+    anyhow::ensure!(
+        magic == "DART/1",
+        "unknown protocol greeting {magic:?}; this daemon speaks DART/1"
+    );
+    let mut mode: Option<Mode> = None;
+    let mut framing = Framing::Framed;
+    for tok in tokens {
+        match tok.split_once('=') {
+            Some(("mode", "se")) => mode = Some(Mode::Single),
+            Some(("mode", "pe")) => mode = Some(Mode::Paired),
+            Some(("framing", "framed")) => framing = Framing::Framed,
+            Some(("framing", "raw")) => framing = Framing::Raw,
+            _ => anyhow::bail!(
+                "unknown handshake token {tok:?}; expected mode=<se|pe> and \
+                 optionally framing=<framed|raw>"
+            ),
+        }
+    }
+    let mode = mode.ok_or_else(|| anyhow::anyhow!("handshake is missing mode=<se|pe>"))?;
+    Ok(Handshake { mode, framing })
+}
+
+/// Adapts a framed client stream into a plain [`Read`] over the FASTQ
+/// payload bytes: `D` frames concatenate, `F` is EOF. A transport EOF
+/// *before* `F` is a client hangup and surfaces as
+/// [`io::ErrorKind::UnexpectedEof`] — the failure-mode detection raw
+/// mode cannot offer.
+pub struct FrameReader<R: Read> {
+    inner: R,
+    /// Payload bytes left in the current `D` frame.
+    remaining: usize,
+    /// `F` seen: everything after is EOF.
+    finished: bool,
+}
+
+impl<R: Read> FrameReader<R> {
+    /// Wrap a transport positioned just past the handshake line.
+    pub fn new(inner: R) -> Self {
+        FrameReader { inner, remaining: 0, finished: false }
+    }
+}
+
+impl<R: Read> Read for FrameReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        while !self.finished && self.remaining == 0 {
+            let mut hdr = [0u8; 5];
+            self.inner.read_exact(&mut hdr).map_err(|e| {
+                if e.kind() == io::ErrorKind::UnexpectedEof {
+                    io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "client hung up mid-stream (connection closed without a finish frame)",
+                    )
+                } else {
+                    e
+                }
+            })?;
+            let len = u32::from_be_bytes([hdr[1], hdr[2], hdr[3], hdr[4]]) as usize;
+            match hdr[0] {
+                KIND_FINISH => self.finished = true,
+                KIND_DATA => {
+                    if len > MAX_FRAME_LEN {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!("frame length {len} exceeds the {MAX_FRAME_LEN} byte cap"),
+                        ));
+                    }
+                    self.remaining = len;
+                }
+                other => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("unknown client frame kind {:?}", other as char),
+                    ));
+                }
+            }
+        }
+        if self.finished {
+            return Ok(0);
+        }
+        let want = buf.len().min(self.remaining);
+        let got = loop {
+            match self.inner.read(&mut buf[..want]) {
+                Ok(n) => break n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        };
+        if got == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "client hung up mid-frame",
+            ));
+        }
+        self.remaining -= got;
+        Ok(got)
+    }
+}
+
+/// Adapts a plain [`Write`] into the framed server→client channel:
+/// every `write` becomes one `D` frame (wrap in a
+/// [`io::BufWriter`] so frames coalesce to its buffer size), and
+/// [`FrameWriter::frame`] emits the terminal `M`/`E` frame.
+pub struct FrameWriter<W: Write> {
+    inner: W,
+}
+
+impl<W: Write> FrameWriter<W> {
+    /// Wrap a transport write half.
+    pub fn new(inner: W) -> Self {
+        FrameWriter { inner }
+    }
+
+    /// Emit one frame of the given kind and flush the transport.
+    pub fn frame(&mut self, kind: u8, payload: &[u8]) -> io::Result<()> {
+        let mut hdr = [0u8; 5];
+        hdr[0] = kind;
+        hdr[1..].copy_from_slice(&(payload.len() as u32).to_be_bytes());
+        self.inner.write_all(&hdr)?;
+        self.inner.write_all(payload)?;
+        self.inner.flush()
+    }
+}
+
+impl<W: Write> Write for FrameWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if !buf.is_empty() {
+            let mut hdr = [0u8; 5];
+            hdr[0] = KIND_DATA;
+            hdr[1..].copy_from_slice(&(buf.len() as u32).to_be_bytes());
+            self.inner.write_all(&hdr)?;
+            self.inner.write_all(buf)?;
+        }
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Client-side helper for tests and tools: collect a framed server
+/// response into (TSV bytes, metrics line, error message).
+pub fn read_framed_response<R: Read>(
+    r: &mut R,
+) -> anyhow::Result<(Vec<u8>, Option<String>, Option<String>)> {
+    let mut tsv = Vec::new();
+    let mut metrics = None;
+    let mut error = None;
+    loop {
+        let mut hdr = [0u8; 5];
+        match r.read_exact(&mut hdr) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let len = u32::from_be_bytes([hdr[1], hdr[2], hdr[3], hdr[4]]) as usize;
+        anyhow::ensure!(len <= MAX_FRAME_LEN, "server frame length {len} exceeds cap");
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload)?;
+        match hdr[0] {
+            KIND_DATA => tsv.extend_from_slice(&payload),
+            KIND_METRICS => metrics = Some(String::from_utf8_lossy(&payload).into_owned()),
+            KIND_ERROR => error = Some(String::from_utf8_lossy(&payload).into_owned()),
+            other => anyhow::bail!("unknown server frame kind {:?}", other as char),
+        }
+    }
+    Ok((tsv, metrics, error))
+}
+
+/// Client-side helper: wrap `payload` as one `D` frame.
+pub fn encode_data_frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(5 + payload.len());
+    out.push(KIND_DATA);
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Client-side helper: the 5-byte `F` (finish) frame.
+pub fn finish_frame() -> [u8; 5] {
+    [KIND_FINISH, 0, 0, 0, 0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handshake_parses_modes_and_framing() {
+        let h = parse_handshake("DART/1 mode=se").unwrap();
+        assert_eq!(h, Handshake { mode: Mode::Single, framing: Framing::Framed });
+        let h = parse_handshake("DART/1 mode=pe framing=raw").unwrap();
+        assert_eq!(h, Handshake { mode: Mode::Paired, framing: Framing::Raw });
+        let h = parse_handshake("DART/1 framing=framed mode=pe").unwrap();
+        assert_eq!(h, Handshake { mode: Mode::Paired, framing: Framing::Framed });
+    }
+
+    #[test]
+    fn handshake_rejects_garbage() {
+        assert!(parse_handshake("HTTP/1.1 GET /").is_err());
+        assert!(parse_handshake("DART/1").is_err(), "mode is required");
+        assert!(parse_handshake("DART/1 mode=tripled").is_err());
+        assert!(parse_handshake("DART/1 mode=se compression=zstd").is_err());
+        let err = read_handshake(&mut io::Cursor::new(b"".to_vec())).unwrap_err();
+        assert!(format!("{err:#}").contains("before a handshake"));
+    }
+
+    #[test]
+    fn read_handshake_consumes_exactly_one_line() {
+        let mut cur = io::Cursor::new(b"DART/1 mode=se framing=raw\n@r0\nACGT\n".to_vec());
+        let h = read_handshake(&mut cur).unwrap();
+        assert_eq!(h.framing, Framing::Raw);
+        let mut rest = String::new();
+        cur.read_to_string(&mut rest).unwrap();
+        assert_eq!(rest, "@r0\nACGT\n", "no FASTQ bytes may be swallowed");
+    }
+
+    #[test]
+    fn frames_roundtrip_through_reader_and_writer() {
+        // writer side: two data chunks + finish
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&encode_data_frame(b"@r0\nAC"));
+        wire.extend_from_slice(&encode_data_frame(b""));
+        wire.extend_from_slice(&encode_data_frame(b"GT\n+\nII\n"));
+        wire.extend_from_slice(&finish_frame());
+        let mut rd = FrameReader::new(io::Cursor::new(wire));
+        let mut got = String::new();
+        rd.read_to_string(&mut got).unwrap();
+        assert_eq!(got, "@r0\nACGT\n+\nII\n");
+        // EOF is sticky after F
+        let mut buf = [0u8; 4];
+        assert_eq!(rd.read(&mut buf).unwrap(), 0);
+    }
+
+    #[test]
+    fn hangup_without_finish_frame_is_an_error() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&encode_data_frame(b"@r0\nACGT\n"));
+        // connection drops here: no F frame
+        let mut rd = FrameReader::new(io::Cursor::new(wire));
+        let mut got = Vec::new();
+        let err = rd.read_to_end(&mut got).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        assert!(err.to_string().contains("finish frame"), "{err}");
+    }
+
+    #[test]
+    fn truncated_frame_payload_is_an_error() {
+        let mut wire = encode_data_frame(b"@r0\nACGT\n");
+        wire.truncate(wire.len() - 3);
+        let mut rd = FrameReader::new(io::Cursor::new(wire));
+        let mut got = Vec::new();
+        let err = rd.read_to_end(&mut got).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn unknown_frame_kind_is_rejected() {
+        let wire = vec![b'Z', 0, 0, 0, 0];
+        let mut rd = FrameReader::new(io::Cursor::new(wire));
+        let mut got = Vec::new();
+        let err = rd.read_to_end(&mut got).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn frame_writer_emits_one_data_frame_per_write_plus_terminal_frame() {
+        let mut fw = FrameWriter::new(Vec::new());
+        fw.write_all(b"read_id\tpos\n").unwrap();
+        fw.write_all(b"0\t42\n").unwrap();
+        fw.frame(KIND_METRICS, b"reads=1").unwrap();
+        let wire = fw.inner;
+        let mut cur = io::Cursor::new(wire);
+        let (tsv, metrics, error) = read_framed_response(&mut cur).unwrap();
+        assert_eq!(tsv, b"read_id\tpos\n0\t42\n");
+        assert_eq!(metrics.as_deref(), Some("reads=1"));
+        assert_eq!(error, None);
+    }
+}

@@ -1,0 +1,48 @@
+//! Minimal async-signal-safe SIGTERM/SIGINT latch for the daemon.
+//!
+//! This offline build vendors no `libc`/`signal-hook`, so the handler
+//! is registered through the C `signal(2)` entry point directly. The
+//! handler only stores to an atomic — one of the few operations that
+//! are async-signal-safe — and the accept loop polls the latch.
+//!
+//! glibc's `signal()` installs BSD semantics (`SA_RESTART`): blocking
+//! socket reads *resume* after the handler runs instead of failing with
+//! `EINTR`. That is exactly the drain behavior we want — in-flight
+//! sessions keep streaming to completion after SIGTERM — while the
+//! accept loop notices the latch because it is nonblocking and sleeps
+//! in short intervals (see [`super`]).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Set by the handler; polled by the accept loop.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Linux signal numbers (asm-generic, which x86-64/aarch64 share).
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+
+extern "C" {
+    /// C library `signal(2)`: returns the previous handler address.
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+/// The handler: latch and return. No allocation, no locks, no I/O.
+extern "C" fn on_signal(_signum: i32) {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Install the drain latch for SIGTERM and SIGINT. Idempotent.
+pub fn install() {
+    let handler = on_signal as extern "C" fn(i32);
+    // SAFETY: `signal` is the C library entry point; the handler is an
+    // `extern "C" fn(i32)` that only performs an atomic store.
+    unsafe {
+        signal(SIGTERM, handler as usize);
+        signal(SIGINT, handler as usize);
+    }
+}
+
+/// True once a drain signal has been received.
+pub fn shutting_down() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}

@@ -1,0 +1,332 @@
+//! End-to-end tests for `dart-pim serve`: a real daemon subprocess on a
+//! Unix socket, exercised by real clients.
+//!
+//! The core claim is determinism invariant 7 (ARCHITECTURE.md): for any
+//! single client, the TSV bytes that come back over the socket are
+//! identical to what `map` writes for the same input and flags — for
+//! both framings, both modes, engines {rust, bitpal} × threads {1, 4}.
+//! On top of parity: concurrent sessions don't corrupt each other, a
+//! malformed stream fails only its own session, and SIGTERM drains
+//! in-flight sessions to completion before the daemon exits 0.
+#![cfg(unix)]
+
+use std::io::{Read, Write};
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::time::{Duration, Instant};
+
+use dart_pim::cli;
+use dart_pim::serve::protocol::{encode_data_frame, finish_frame, read_framed_response};
+
+static DAEMON_SEQ: AtomicU32 = AtomicU32::new(0);
+
+fn fixtures() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden")
+}
+
+/// The golden fixtures use 100 bp reads; every daemon here must be told
+/// so (`serve` fixes the index geometry at startup).
+const FIXTURE_READ_LEN: &str = "100";
+
+struct Daemon {
+    child: Child,
+    sock: PathBuf,
+}
+
+impl Daemon {
+    /// Start a daemon on the golden reference with `--low-th 0` (the
+    /// fixtures' setting) plus `extra` flags, and wait for its socket.
+    fn start(extra: &[&str]) -> Daemon {
+        let seq = DAEMON_SEQ.fetch_add(1, Ordering::Relaxed);
+        let sock = std::env::temp_dir()
+            .join(format!("dartpim-serve-{}-{seq}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&sock);
+        let fx = fixtures();
+        let mut child = Command::new(env!("CARGO_BIN_EXE_dart-pim"))
+            .arg("serve")
+            .arg("--ref")
+            .arg(fx.join("ref.fasta"))
+            .arg("--read-len")
+            .arg(FIXTURE_READ_LEN)
+            .arg("--low-th")
+            .arg("0")
+            .arg("--socket")
+            .arg(&sock)
+            .args(extra)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning the serve daemon");
+        let t0 = Instant::now();
+        while !sock.exists() {
+            if let Some(status) = child.try_wait().expect("polling the daemon") {
+                panic!("daemon exited during startup: {status}");
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "daemon socket {} never appeared",
+                sock.display()
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        Daemon { child, sock }
+    }
+
+    fn sigterm(&self) {
+        let ok = Command::new("kill")
+            .arg("-TERM")
+            .arg(self.child.id().to_string())
+            .status()
+            .expect("running kill")
+            .success();
+        assert!(ok, "kill -TERM failed");
+    }
+
+    fn wait_exit(&mut self) -> std::process::ExitStatus {
+        self.child.wait().expect("waiting for the daemon")
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        let _ = std::fs::remove_file(&self.sock);
+    }
+}
+
+/// Reference output: run `map` in-process with the given flags and
+/// return the TSV bytes it writes.
+fn map_tsv(input_flags: &str, engine_flags: &str) -> String {
+    let fx = fixtures();
+    let seq = DAEMON_SEQ.fetch_add(1, Ordering::Relaxed);
+    let out = std::env::temp_dir().join(format!("dartpim-serve-map-{}-{seq}.tsv", std::process::id()));
+    let cmd = format!(
+        "map --ref {} {input_flags} --low-th 0 {engine_flags} --out {}",
+        fx.join("ref.fasta").display(),
+        out.display()
+    );
+    let argv: Vec<String> = cmd.split_whitespace().map(|s| s.to_string()).collect();
+    cli::run(&argv).unwrap_or_else(|e| panic!("`{cmd}` failed: {e:#}"));
+    let tsv = std::fs::read_to_string(&out).unwrap();
+    let _ = std::fs::remove_file(&out);
+    tsv
+}
+
+/// One framed session: handshake, FASTQ in `chunk`-byte data frames, a
+/// finish frame, then the server's full response.
+fn framed_session(
+    sock: &Path,
+    mode: &str,
+    fastq: &[u8],
+    chunk: usize,
+) -> (Vec<u8>, Option<String>, Option<String>) {
+    let mut s = UnixStream::connect(sock).expect("connecting to the daemon");
+    writeln!(s, "DART/1 mode={mode}").unwrap();
+    for c in fastq.chunks(chunk.max(1)) {
+        s.write_all(&encode_data_frame(c)).unwrap();
+    }
+    s.write_all(&finish_frame()).unwrap();
+    s.flush().unwrap();
+    read_framed_response(&mut s).expect("reading the framed response")
+}
+
+/// One raw session: handshake, FASTQ bytes, half-close, then everything
+/// the server sends back.
+fn raw_session(sock: &Path, mode: &str, fastq: &[u8]) -> Vec<u8> {
+    let mut s = UnixStream::connect(sock).expect("connecting to the daemon");
+    writeln!(s, "DART/1 mode={mode} framing=raw").unwrap();
+    s.write_all(fastq).unwrap();
+    s.flush().unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut out = Vec::new();
+    s.read_to_end(&mut out).unwrap();
+    out
+}
+
+#[test]
+fn serve_matches_map_byte_for_byte_across_engines_and_threads() {
+    let fx = fixtures();
+    let se = std::fs::read(fx.join("reads_se.fastq")).unwrap();
+    let pe = std::fs::read(fx.join("reads_interleaved.fastq")).unwrap();
+    let se_input = format!("--reads {}", fx.join("reads_se.fastq").display());
+    let pe_input = format!("--reads {} --interleaved", fx.join("reads_interleaved.fastq").display());
+    for engine in ["rust", "bitpal"] {
+        for threads in ["1", "4"] {
+            let flags = format!("--engine {engine} --threads {threads}");
+            let want_se = map_tsv(&se_input, &flags);
+            let want_pe = map_tsv(&pe_input, &flags);
+            let daemon = Daemon::start(&["--engine", engine, "--threads", threads]);
+
+            let (tsv, metrics, error) = framed_session(&daemon.sock, "se", &se, 4096);
+            assert_eq!(error, None, "[{flags}] single-end session failed");
+            assert_eq!(
+                String::from_utf8(tsv).unwrap(),
+                want_se,
+                "[{flags}] framed single-end bytes must match `map`"
+            );
+            let metrics = metrics.expect("metrics frame");
+            assert!(
+                metrics.starts_with("reads=12 "),
+                "[{flags}] 12 reads streamed, got: {metrics}"
+            );
+
+            let (tsv, metrics, error) = framed_session(&daemon.sock, "pe", &pe, 4096);
+            assert_eq!(error, None, "[{flags}] paired session failed");
+            assert_eq!(
+                String::from_utf8(tsv).unwrap(),
+                want_pe,
+                "[{flags}] framed paired bytes must match `map --interleaved`"
+            );
+            assert!(
+                metrics.expect("metrics frame").starts_with("reads=16 "),
+                "[{flags}] 8 pairs = 16 reads"
+            );
+
+            // raw mode: the response is *exactly* the map TSV bytes
+            let raw = raw_session(&daemon.sock, "se", &se);
+            assert_eq!(
+                String::from_utf8(raw).unwrap(),
+                want_se,
+                "[{flags}] raw single-end bytes must match `map`"
+            );
+            let raw = raw_session(&daemon.sock, "pe", &pe);
+            assert_eq!(
+                String::from_utf8(raw).unwrap(),
+                want_pe,
+                "[{flags}] raw paired bytes must match `map --interleaved`"
+            );
+        }
+    }
+}
+
+#[test]
+fn concurrent_sessions_are_isolated() {
+    let fx = fixtures();
+    let se = std::fs::read(fx.join("reads_se.fastq")).unwrap();
+    let pe = std::fs::read(fx.join("reads_interleaved.fastq")).unwrap();
+    let want_se = map_tsv(
+        &format!("--reads {}", fx.join("reads_se.fastq").display()),
+        "--threads 2 --stream-epoch 4",
+    );
+    let want_pe = map_tsv(
+        &format!("--reads {} --interleaved", fx.join("reads_interleaved.fastq").display()),
+        "--threads 2 --stream-epoch 4",
+    );
+    // small epochs + tiny frames force the two sessions' epochs to
+    // interleave on the shared workers
+    let daemon = Daemon::start(&["--threads", "2", "--stream-epoch", "4"]);
+    let outputs = std::thread::scope(|s| {
+        let h1 = s.spawn(|| slow_framed_session(&daemon.sock, "se", &se));
+        let h2 = s.spawn(|| slow_framed_session(&daemon.sock, "pe", &pe));
+        (h1.join().unwrap(), h2.join().unwrap())
+    });
+    let (tsv, metrics, error) = outputs.0;
+    assert_eq!(error, None, "single-end session failed");
+    assert!(metrics.is_some());
+    assert_eq!(
+        String::from_utf8(tsv).unwrap(),
+        want_se,
+        "concurrent single-end session must still match `map`"
+    );
+    let (tsv, metrics, error) = outputs.1;
+    assert_eq!(error, None, "paired session failed");
+    assert!(metrics.is_some());
+    assert_eq!(
+        String::from_utf8(tsv).unwrap(),
+        want_pe,
+        "concurrent paired session must still match `map --interleaved`"
+    );
+}
+
+/// Like [`framed_session`] but dribbles 64-byte frames with pauses, so
+/// two of these genuinely overlap on the daemon.
+fn slow_framed_session(
+    sock: &Path,
+    mode: &str,
+    fastq: &[u8],
+) -> (Vec<u8>, Option<String>, Option<String>) {
+    let mut s = UnixStream::connect(sock).expect("connecting to the daemon");
+    writeln!(s, "DART/1 mode={mode}").unwrap();
+    for c in fastq.chunks(64) {
+        s.write_all(&encode_data_frame(c)).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    s.write_all(&finish_frame()).unwrap();
+    s.flush().unwrap();
+    read_framed_response(&mut s).expect("reading the framed response")
+}
+
+#[test]
+fn malformed_fastq_poisons_only_its_own_session() {
+    let fx = fixtures();
+    let se = std::fs::read(fx.join("reads_se.fastq")).unwrap();
+    let want_se =
+        map_tsv(&format!("--reads {}", fx.join("reads_se.fastq").display()), "--threads 2");
+    let daemon = Daemon::start(&["--threads", "2"]);
+
+    // mid-stream corruption: good records, then a length-divergent one
+    let mut bad = se.clone();
+    bad.extend_from_slice(b"@short\nACGT\n+\nIIII\n");
+    let (_, metrics, error) = framed_session(&daemon.sock, "se", &bad, 4096);
+    let error = error.expect("the corrupted session must fail");
+    assert!(
+        error.contains("uniform read length"),
+        "error should name the malformed record: {error}"
+    );
+    assert_eq!(metrics, None, "a failed session reports no metrics frame");
+
+    // outright garbage, raw framing: the error travels as a trailer line
+    let raw = raw_session(&daemon.sock, "se", b"this is not fastq\n");
+    let text = String::from_utf8_lossy(&raw);
+    assert!(text.lines().any(|l| l.starts_with("#!error: ")), "raw error trailer: {text}");
+
+    // the daemon and its workers survive: a clean session still matches
+    let (tsv, _, error) = framed_session(&daemon.sock, "se", &se, 4096);
+    assert_eq!(error, None, "session after a poisoned one must succeed");
+    assert_eq!(
+        String::from_utf8(tsv).unwrap(),
+        want_se,
+        "session after a poisoned one must still match `map`"
+    );
+}
+
+#[test]
+fn sigterm_drains_in_flight_sessions_and_exits_zero() {
+    let fx = fixtures();
+    let se = std::fs::read(fx.join("reads_se.fastq")).unwrap();
+    let want_se =
+        map_tsv(&format!("--reads {}", fx.join("reads_se.fastq").display()), "--threads 1");
+    let mut daemon = Daemon::start(&["--threads", "1"]);
+
+    // open a session and stream only half of the FASTQ...
+    let mut s = UnixStream::connect(&daemon.sock).unwrap();
+    writeln!(s, "DART/1 mode=se").unwrap();
+    let half = se.len() / 2;
+    s.write_all(&encode_data_frame(&se[..half])).unwrap();
+    s.flush().unwrap();
+
+    // ...signal the drain while the session is in flight...
+    daemon.sigterm();
+    std::thread::sleep(Duration::from_millis(300));
+
+    // ...then finish the stream: the draining daemon must still serve
+    // the complete, byte-correct response
+    s.write_all(&encode_data_frame(&se[half..])).unwrap();
+    s.write_all(&finish_frame()).unwrap();
+    s.flush().unwrap();
+    let (tsv, metrics, error) = read_framed_response(&mut s).unwrap();
+    assert_eq!(error, None, "drained session must complete cleanly");
+    assert!(metrics.is_some(), "drained session still reports metrics");
+    assert_eq!(
+        String::from_utf8(tsv).unwrap(),
+        want_se,
+        "a session caught by SIGTERM must still produce the full `map` bytes"
+    );
+
+    let status = daemon.wait_exit();
+    assert!(status.success(), "graceful drain must exit 0, got {status}");
+    assert!(!daemon.sock.exists(), "the daemon must remove its socket file on exit");
+}
