@@ -2,9 +2,10 @@
 //! reads/s (both the `map_reads` collect wrapper and the streaming
 //! `map_stream` path) at 1/2/4 worker threads for each host engine
 //! (`rust` scalar vs `bitpal` bit-parallel), plus the isolated
-//! filter-stage comparison,
-//! recorded to `BENCH_pipeline.json` at the repository root so future
-//! PRs have a perf trajectory to compare against.
+//! filter-stage comparison and the `--simd` lane-width sweep
+//! (off/u64/wide, with the wide-vs-u64 >= 4x structural check at
+//! batch >= 256), recorded to `BENCH_pipeline.json` at the repository
+//! root so future PRs have a perf trajectory to compare against.
 //!
 //!     cargo bench --bench pipeline_scaling
 //!     cargo bench --bench pipeline_scaling -- --smoke  # CI: tiny run, no JSON
@@ -26,7 +27,7 @@ use dart_pim::genome::synth::{ReadSimConfig, SynthConfig};
 use dart_pim::index::MinimizerIndex;
 use dart_pim::params::{K, READ_LEN, W};
 use dart_pim::pim::DartPimConfig;
-use dart_pim::runtime::{EngineKind, WfEngine};
+use dart_pim::runtime::{BitpalEngine, EngineKind, SimdMode, WfEngine};
 use dart_pim::util::bench::bench_units;
 use dart_pim::util::json::Json;
 use dart_pim::util::SmallRng;
@@ -38,6 +39,9 @@ const ENGINES: [EngineKind; 2] = [EngineKind::Rust, EngineKind::Bitpal];
 /// Filter-stage batch sizes for the bitpal-vs-rust comparison (the >= 2x
 /// target applies from one full 64-lane word up).
 const FILTER_BATCHES: [usize; 3] = [32, 64, 256];
+/// Lane-width sweep batches: the >= 4x wide-vs-u64 target applies from
+/// batch 256 up (every 256/512-bit lane full).
+const SIMD_BATCHES: [usize; 4] = [64, 128, 256, 512];
 
 fn main() {
     let smoke = std::env::args().skip(1).any(|a| a == "--smoke");
@@ -140,6 +144,48 @@ fn main() {
         filter_rows.push((b, rs.throughput(), bs.throughput()));
     }
 
+    // ---- lane-width sweep: --simd off / u64 / wide on the isolated
+    // filter stage (the tentpole's structural check: wide >= 4x u64 at
+    // batch >= 256 when a wide kernel resolved on this host) ----
+    let wide_bits = BitpalEngine::with_mode(SimdMode::Wide).width_bits();
+    println!("\n== filter stage: simd lane sweep (wide resolves to {wide_bits} bits) ==");
+    // (off_tp, u64_tp, wide_tp) per batch
+    let mut simd_rows: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for b in SIMD_BATCHES {
+        let (fr, fw) = planted_wf_batch(&mut rng, b);
+        let rr: Vec<&[u8]> = fr.iter().map(|v| v.as_slice()).collect();
+        let ww: Vec<&[u8]> = fw.iter().map(|v| v.as_slice()).collect();
+        let iters = if smoke { 1 } else { 40 };
+        let mut tps = [0.0f64; 3];
+        let modes = [SimdMode::Off, SimdMode::U64, SimdMode::Wide];
+        for (i, mode) in modes.into_iter().enumerate() {
+            let mut e = BitpalEngine::with_mode(mode);
+            let s = bench_units(
+                &format!("simd={:<4} filter b={b}", mode.name()),
+                0,
+                iters,
+                b as f64,
+                &mut || {
+                    std::hint::black_box(e.linear_batch(&rr, &ww).unwrap());
+                },
+            );
+            println!("{s}");
+            tps[i] = s.throughput();
+        }
+        let wide_vs_u64 = tps[2] / tps[1].max(1e-12);
+        let verdict = if smoke {
+            "(smoke run; not a measurement)"
+        } else if wide_bits <= 64 {
+            "(no wide kernel on this host; target moot)"
+        } else if b >= 256 && wide_vs_u64 < 4.0 {
+            "** below the 4x target **"
+        } else {
+            ""
+        };
+        println!("  -> wide/u64 {wide_vs_u64:.2}x {verdict}");
+        simd_rows.push((b, tps[0], tps[1], tps[2]));
+    }
+
     if smoke {
         println!("smoke run: skipping BENCH_pipeline.json (numbers are not measurements)");
         return;
@@ -194,9 +240,26 @@ fn main() {
             })
             .collect(),
     );
+    let simd_json = Json::Arr(
+        simd_rows
+            .iter()
+            .map(|&(b, off_tp, u64_tp, wide_tp)| {
+                let wide_vs_u64 = wide_tp / u64_tp.max(1e-12);
+                Json::obj(vec![
+                    ("batch", b.into()),
+                    ("off_instances_per_s", off_tp.into()),
+                    ("u64_instances_per_s", u64_tp.into()),
+                    ("wide_instances_per_s", wide_tp.into()),
+                    ("wide_vs_u64", wide_vs_u64.into()),
+                    ("meets_4x", Json::Bool(b >= 256 && wide_vs_u64 >= 4.0)),
+                ])
+            })
+            .collect(),
+    );
     let j = Json::obj(vec![
         ("bench", Json::Str("pipeline_scaling".into())),
         ("measured", Json::Bool(true)),
+        ("simd_wide_bits", wide_bits.into()),
         (
             "workload",
             Json::obj(vec![
@@ -210,6 +273,7 @@ fn main() {
         ("engines", engines_json),
         ("map_stream", stream_json),
         ("filter_stage_bitpal_vs_rust", filter_json),
+        ("filter_stage_simd", simd_json),
     ]);
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pipeline.json");
     std::fs::write(out, j.pretty()).expect("write BENCH_pipeline.json");

@@ -6,9 +6,12 @@
 //!     cargo bench --bench wf_engines
 //!     cargo bench --bench wf_engines -- --smoke   # CI: compile + run, tiny iters
 //!
-//! The headline number is the filter-stage comparison: `bitpal` advances
-//! 64 instances per word op (one lane each), so its `linear_batch`
-//! should beat `rust` by >= 2x at batch >= 64.
+//! The headline number is the filter-stage comparison: `bitpal`
+//! advances one instance per bit lane, so its `linear_batch` should
+//! beat `rust` by >= 2x from one full word up — and the SIMD-wide
+//! kernel (`--simd wide`: 256-bit AVX2 / 512-bit AVX-512 lanes) targets
+//! a further >= 4x over the plain u64 word at batch >= 256, where every
+//! lane is full (the structural check the tentpole records).
 
 // the workload builders live with the test suites: one definition of
 // "the standard engine batch" shared by tests and benches
@@ -23,7 +26,7 @@ use dart_pim::params::{K, READ_LEN, W};
 use dart_pim::pim::DartPimConfig;
 #[cfg(feature = "pjrt")]
 use dart_pim::runtime::XlaEngine;
-use dart_pim::runtime::{BitpalEngine, EngineKind, RustEngine, WfEngine};
+use dart_pim::runtime::{BitpalEngine, EngineKind, RustEngine, SimdMode, WfEngine};
 use dart_pim::util::bench::bench_units;
 use dart_pim::util::SmallRng;
 
@@ -89,6 +92,63 @@ fn filter_stage_comparison(rng: &mut SmallRng, smoke: bool) {
     }
 }
 
+/// The tentpole lane-width comparison: `--simd wide` vs `--simd u64` on
+/// the linear filter, at batches large enough to fill every wide lane.
+/// Structural check: >= 4x at batch >= 256 when a wide kernel resolved
+/// (on a 64-bit-only host wide == u64 and the check is moot).
+fn simd_width_comparison(rng: &mut SmallRng, smoke: bool) {
+    let wide_bits = BitpalEngine::with_mode(SimdMode::Wide).width_bits();
+    println!("\n== filter stage: simd wide ({wide_bits}-bit) vs u64 (instances/s) ==");
+    let iters = if smoke { 2 } else { 40 };
+    let warmup = if smoke { 0 } else { 3 };
+    for b in [64usize, 256, 512] {
+        let (reads, wins) = mk_batch(rng, b);
+        let rr: Vec<&[u8]> = reads.iter().map(|v| v.as_slice()).collect();
+        let ww: Vec<&[u8]> = wins.iter().map(|v| v.as_slice()).collect();
+        let mut u64e = BitpalEngine::with_mode(SimdMode::U64);
+        let us = bench_units(&format!("u64  filter b={b}"), warmup, iters, b as f64, &mut || {
+            std::hint::black_box(u64e.linear_batch(&rr, &ww).unwrap());
+        });
+        let mut wide = BitpalEngine::with_mode(SimdMode::Wide);
+        let ws = bench_units(&format!("wide filter b={b}"), warmup, iters, b as f64, &mut || {
+            std::hint::black_box(wide.linear_batch(&rr, &ww).unwrap());
+        });
+        println!("{us}");
+        println!("{ws}");
+        let speedup = ws.throughput() / us.throughput().max(1e-12);
+        let verdict = if smoke {
+            "(smoke run; not a measurement)"
+        } else if wide_bits <= 64 {
+            "(no wide kernel on this host)"
+        } else if b >= 256 && speedup < 4.0 {
+            "** below the 4x target **"
+        } else {
+            ""
+        };
+        println!("  -> wide/u64 speedup at b={b}: {speedup:.2}x {verdict}");
+    }
+    // the affine stage is bit-sliced too: wide vs the scalar fallback
+    for b in [64usize, 256] {
+        let (reads, wins) = mk_batch(rng, b);
+        let rr: Vec<&[u8]> = reads.iter().map(|v| v.as_slice()).collect();
+        let ww: Vec<&[u8]> = wins.iter().map(|v| v.as_slice()).collect();
+        let mut off = BitpalEngine::with_mode(SimdMode::Off);
+        let os = bench_units(&format!("off  affine b={b}"), warmup, iters, b as f64, &mut || {
+            std::hint::black_box(off.affine_batch(&rr, &ww).unwrap());
+        });
+        let mut wide = BitpalEngine::with_mode(SimdMode::Wide);
+        let ws = bench_units(&format!("wide affine b={b}"), warmup, iters, b as f64, &mut || {
+            std::hint::black_box(wide.affine_batch(&rr, &ww).unwrap());
+        });
+        println!("{os}");
+        println!("{ws}");
+        println!(
+            "  -> wide/scalar affine speedup at b={b}: {:.2}x",
+            ws.throughput() / os.throughput().max(1e-12)
+        );
+    }
+}
+
 #[cfg(feature = "pjrt")]
 fn xla_engine_suite(rng: &mut SmallRng, smoke: bool) {
     match XlaEngine::load_default() {
@@ -107,10 +167,15 @@ fn main() {
     let mut rng = SmallRng::seed_from_u64(9);
     println!("== WF engine micro-bench (units = WF instances) ==");
     engine_suite("rust", &mut RustEngine, &mut rng, smoke);
-    engine_suite("bitpal", &mut BitpalEngine::new(), &mut rng, smoke);
+    // bitpal at every --simd mode: the default wide kernel, the plain
+    // 64-bit word, and the scalar fallback (all byte-identical outputs)
+    engine_suite("bitpal-wide", &mut BitpalEngine::with_mode(SimdMode::Wide), &mut rng, smoke);
+    engine_suite("bitpal-u64", &mut BitpalEngine::with_mode(SimdMode::U64), &mut rng, smoke);
+    engine_suite("bitpal-off", &mut BitpalEngine::with_mode(SimdMode::Off), &mut rng, smoke);
     xla_engine_suite(&mut rng, smoke);
 
     filter_stage_comparison(&mut rng, smoke);
+    simd_width_comparison(&mut rng, smoke);
 
     println!("\n== end-to-end pipeline (host reads/s) ==");
     let (genome_len, n_reads, iters) = if smoke { (60_000, 100, 1) } else { (500_000, 2000, 3) };

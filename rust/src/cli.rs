@@ -28,7 +28,7 @@ use crate::index::MinimizerIndex;
 use crate::params::{K, READ_LEN, W};
 use crate::pim::xbar_sim::{self, CostSource};
 use crate::pim::DartPimConfig;
-use crate::runtime::{BitpalEngine, EngineKind, RustEngine};
+use crate::runtime::{BitpalEngine, EngineKind, RustEngine, SimdMode};
 #[cfg(feature = "pjrt")]
 use crate::runtime::XlaEngine;
 use crate::simulator::report::{build_report, scale_counts};
@@ -111,20 +111,23 @@ COMMANDS
             [--reads2 R2.fastq | --interleaved]
             [--insert-min 50] [--insert-max 1000] [--no-rescue]
             [--max-reads 25000] [--low-th 3] [--batch 256] [--min-only]
-            [--revcomp] [--threads 1] [--stream-epoch 2048]
-            [--out mappings.tsv]
+            [--revcomp] [--threads 1] [--simd u64|wide|off]
+            [--stream-epoch 2048] [--out mappings.tsv]
   serve     --socket /path/daemon.sock | --tcp HOST:PORT
             (--ref R.fasta [--read-len 150] | --index index.bin)
             [--engine rust|bitpal] [--threads 1] [--stream-epoch 2048]
             [--max-reads 25000] [--low-th 3] [--batch 256] [--min-only]
             [--revcomp] [--insert-min 50] [--insert-max 1000] [--no-rescue]
+            [--simd u64|wide|off]
   evaluate  --ref R.fasta --reads R.fastq --truth truth.tsv
             [--reads2 R2.fastq | --interleaved]
             [--engine xla|rust|bitpal] [--tolerance 5] [--threads 1]
+            [--simd u64|wide|off]
   simulate  --ref R.fasta --reads R.fastq|- [--engine rust|bitpal]
             [--reads2 R2.fastq | --interleaved]
             [--max-reads 25000] [--low-th 3] [--scale 389000000]
             [--batched-affine] [--constructive] [--threads 1]
+            [--simd u64|wide|off]
   figures   [--fig 8|9|10a|10b|10c|table4|motivation|headline|all]
   crossbar
   config
@@ -148,11 +151,17 @@ where pair is proper|single|rescued; rows appear only for mapped mates.
 Output stays byte-identical for every --threads/--engine/epoch setting.
 
 ENGINES: `rust` is the scalar reference engine; `bitpal` computes the
-linear filter bit-parallel (64 instances per machine word, identical
-numerics) and, like rust, is Send — both compose with --threads N.
-DART_PIM_ENGINE sets the default worker engine. --engine xla is always
-single-threaded (the PJRT client cannot be shared across threads);
-combining it with --threads N > 1 warns and runs with 1.
+linear filter AND the affine stage bit-parallel (one instance per bit
+lane, identical numerics) and, like rust, is Send — both compose with
+--threads N. `--simd` picks the bitpal lane width: `u64` forces plain
+64-bit machine words, `wide` (the default) runtime-detects the widest
+SIMD register (AVX-512 512-bit / AVX2 256-bit / 128-bit otherwise),
+`off` falls back to the scalar per-instance loops. DART_PIM_SIMD sets
+the default; output bytes are identical in every mode (determinism
+invariant 8). DART_PIM_ENGINE sets the default worker engine.
+--engine xla is always single-threaded (the PJRT client cannot be
+shared across threads); combining it with --threads N > 1 warns and
+runs with 1.
 
 SERVE: `serve` keeps the index resident and maps many concurrent FASTQ
 streams over one worker pool. Each connection is a session: handshake
@@ -523,6 +532,18 @@ pub(crate) fn pairing_from_args(args: &Args) -> Result<PairingConfig> {
     Ok(PairingConfig { insert_min, insert_max, rescue: !args.flag("no-rescue") })
 }
 
+/// The bitpal SIMD lane mode from `--simd` (falling back to
+/// `DART_PIM_SIMD`, then `wide`). Shared by every front end that
+/// constructs an engine, so the flag means the same thing everywhere —
+/// and, per determinism invariant 8, never changes output bytes.
+pub(crate) fn simd_from_args(args: &Args) -> Result<SimdMode> {
+    match args.get("simd") {
+        None => Ok(crate::runtime::default_simd_mode()),
+        Some(name) => SimdMode::from_name(name)
+            .with_context(|| format!("unknown --simd {name:?} (u64|wide|off)")),
+    }
+}
+
 /// The [`PipelineConfig`] built from the CLI flags `map` and `serve`
 /// share. Producer-side policy (`handle_revcomp`, `pairing`) stays at
 /// its single-end defaults; the caller layers it per run (`map`) or per
@@ -544,6 +565,7 @@ pub(crate) fn shared_pipeline_config(
         handle_revcomp: false,
         threads: args.get_usize("threads", default_threads())?,
         worker_engine,
+        simd: simd_from_args(args)?,
         // emission/memory granularity only — never changes output bytes
         // (tests/golden_e2e.rs sweeps it against the default)
         stream_epoch: args
@@ -638,7 +660,8 @@ where
             // bit-parallel filter engine; Send, so worker shards run it
             // too and --threads N composes
             let cfg = PipelineConfig { worker_engine: EngineKind::Bitpal, ..cfg };
-            Pipeline::new(index, cfg, BitpalEngine::new()).map_stream(reads, sink)
+            let engine = BitpalEngine::with_mode(cfg.simd);
+            Pipeline::new(index, cfg, engine).map_stream(reads, sink)
         }
         #[cfg(feature = "pjrt")]
         "xla" => {
@@ -856,14 +879,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
              (rust|bitpal), not {engine_name:?}"
         )
     })?;
+    let simd = simd_from_args(args)?;
     let sim = FullSystemSim::new(&index, cfg.clone());
     // streams the FASTQ through the bounded sim shards (O(batch) in
     // flight), exactly like `map`; paired sources mirror the live
     // pipeline's mate orientation and report pair availability
     let counts = if paired {
-        sim.simulate_stream_paired(reads, threads, engine)?
+        sim.simulate_stream_paired(reads, threads, engine, simd)?
     } else {
-        sim.simulate_stream(reads, threads, engine)?
+        sim.simulate_stream(reads, threads, engine, simd)?
     };
     if paired {
         println!(

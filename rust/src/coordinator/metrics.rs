@@ -45,6 +45,13 @@ pub struct Metrics {
     pub linear_batches: u64,
     /// Engine calls made by the affine alignment stage (ditto).
     pub affine_batches: u64,
+    /// Resolved SIMD lane width (bits) of the worker engines; 0 when
+    /// the engine is scalar (`rust`, or `--simd off`). A gauge, not a
+    /// count: [`Metrics::merge`] takes the max, and it is deliberately
+    /// OUTSIDE [`Metrics::invariant_counters`] — lane width is a
+    /// dispatch detail that must never show up in workload counters,
+    /// exactly like batch shape.
+    pub simd_width: u64,
     /// Affine results whose traceback could not be reconstructed.
     pub traceback_failures: u64,
     /// Read pairs resolved as proper pairs (orientation + insert window)
@@ -89,6 +96,7 @@ impl Metrics {
         self.reads_with_candidates += m.reads_with_candidates;
         self.linear_batches += m.linear_batches;
         self.affine_batches += m.affine_batches;
+        self.simd_width = self.simd_width.max(m.simd_width);
         self.traceback_failures += m.traceback_failures;
         self.proper_pairs += m.proper_pairs;
         self.rescued_mates += m.rescued_mates;
@@ -243,10 +251,24 @@ mod tests {
 
     #[test]
     fn invariant_counters_exclude_batch_shape() {
-        let m =
-            Metrics { n_reads: 1, linear_batches: 42, affine_batches: 17, ..Default::default() };
+        let m = Metrics {
+            n_reads: 1,
+            linear_batches: 42,
+            affine_batches: 17,
+            simd_width: 256,
+            ..Default::default()
+        };
         let c = m.invariant_counters();
         assert_eq!(c["n_reads"], 1);
         assert!(!c.keys().any(|k| k.contains("batch")));
+        assert!(!c.keys().any(|k| k.contains("simd")), "lane width is not a workload counter");
+    }
+
+    #[test]
+    fn simd_width_merges_as_a_gauge() {
+        let mut a = Metrics { simd_width: 64, ..Default::default() };
+        a.merge(Metrics { simd_width: 512, ..Default::default() });
+        a.merge(Metrics { simd_width: 0, ..Default::default() });
+        assert_eq!(a.simd_width, 512, "merge takes the max, not the sum");
     }
 }

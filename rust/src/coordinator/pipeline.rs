@@ -59,7 +59,7 @@ use crate::align::Cigar;
 use crate::genome::ReadRecord;
 use crate::index::MinimizerIndex;
 use crate::pim::DartPimConfig;
-use crate::runtime::{EngineKind, WfEngine};
+use crate::runtime::{EngineKind, SimdMode, WfEngine};
 
 use super::metrics::Metrics;
 use super::pair::{resolve_epoch_pairs, PairStatus, PairingConfig};
@@ -130,6 +130,14 @@ pub struct PipelineConfig {
     /// [`crate::runtime::default_engine`] (the `DART_PIM_ENGINE`
     /// environment variable, else the scalar Rust engine).
     pub worker_engine: EngineKind,
+    /// SIMD lane mode for worker-built bit-parallel engines
+    /// ([`EngineKind::build_simd`]): pin the classic `u64` word, pick
+    /// the widest host lane, or force the scalar fallback. Like the
+    /// engine choice and thread count, the mode never changes any
+    /// mapping byte (determinism invariant 8) — only throughput.
+    /// Defaults to [`crate::runtime::default_simd_mode`] (the
+    /// `DART_PIM_SIMD` environment variable, else the widest lane).
+    pub simd: SimdMode,
     /// Reads per streaming epoch: the emission / memory granularity of
     /// [`Pipeline::map_stream`]. Peak aggregation state is O(epoch)
     /// reads regardless of input size; mapping decisions are emitted in
@@ -155,6 +163,7 @@ impl Default for PipelineConfig {
             handle_revcomp: false,
             threads: default_threads(),
             worker_engine: crate::runtime::default_engine(),
+            simd: crate::runtime::default_simd_mode(),
             stream_epoch: STREAM_EPOCH_READS,
             pairing: None,
         }

@@ -146,7 +146,7 @@ impl WorkerPool {
     /// may use a config that differs from the pool's in `pairing` /
     /// `handle_revcomp` (producer/emission-side policy); the
     /// worker-side fields (`dart`, `batch_size`, `filter_policy`,
-    /// `worker_engine`) are fixed at spawn for all sessions.
+    /// `worker_engine`, `simd`) are fixed at spawn for all sessions.
     pub fn spawn<'scope, 'env>(
         s: &'scope thread::Scope<'scope, 'env>,
         index: &'env MinimizerIndex,
@@ -195,8 +195,9 @@ fn pool_worker(
     // the engine is constructed on its owning thread (every EngineKind
     // variant is Send-safe to build and run here; the PJRT engine never
     // is). It is shared across sessions: engines are stateless between
-    // batches, so session interleaving cannot change any numerics.
-    let mut engine = cfg.worker_engine.build();
+    // batches, so session interleaving cannot change any numerics —
+    // and neither can the SIMD lane width (invariant 8).
+    let mut engine = cfg.worker_engine.build_simd(cfg.simd);
     let mut sessions: HashMap<u64, ShardWorker<'_>> = HashMap::new();
     let mut poisoned: HashMap<u64, anyhow::Error> = HashMap::new();
     while let Ok(msg) = rx.recv() {

@@ -130,10 +130,18 @@ pub struct ShardWorker<'a> {
 impl<'a> ShardWorker<'a> {
     /// Empty worker for one shard.
     pub fn new(index: &'a MinimizerIndex, cfg: &'a PipelineConfig) -> Self {
+        // report the configured lane width of the bit-parallel worker
+        // engine — a dispatch gauge, outside the invariant counters
+        let simd_width = match cfg.worker_engine {
+            crate::runtime::EngineKind::Bitpal => {
+                cfg.simd.resolve().map_or(0, |w| w.bits() as u64)
+            }
+            _ => 0,
+        };
         ShardWorker {
             index,
             cfg,
-            metrics: Metrics::default(),
+            metrics: Metrics { simd_width, ..Metrics::default() },
             fifos: HashMap::new(),
             linear_batcher: Batcher::new(cfg.batch_size, index.read_len),
             affine_batcher: Batcher::new(cfg.batch_size, index.read_len),

@@ -1,0 +1,321 @@
+//! Bit-sliced (bit-plane) banded affine WF — the lane-parallel affine
+//! stage of the bitpal engine.
+//!
+//! The linear filter has a pure boolean delta form (one plane per band
+//! coordinate), but the affine recurrence carries three value layers
+//! (D/M1/M2) plus 4-bit traceback directions, so deltas don't close over
+//! it. Instead this module does what the paper's crossbars do for
+//! arbitrary arithmetic (§IV: bit-serial MAGIC NOR over all rows at
+//! once): it **bit-slices** the values. Every layer value at band
+//! coordinate `j` is stored as [`B`] = 6 bit planes of a [`LaneWord`],
+//! bit `k` of plane `p` holding bit `p` of instance `k`'s value. Adds
+//! are ripple-carry over the planes, comparisons are borrow chains, and
+//! selects are masks — each plane op advances *every lane at once*,
+//! exactly the row-parallel compute the paper maps to memristive rows.
+//!
+//! # Exactness vs [`crate::align::banded_affine::affine_wf_band`]
+//!
+//! 6 planes represent `0..=63`. The scalar kernel's values are bounded:
+//! layer inputs are clamped to `SAT_AFFINE = 31` every row, so within a
+//! row `ext <= 32`, `opn <= 33`, `m1new <= 32`, `a <= 32`, `vsub <= 32`,
+//! and `cbase <= 34` for `j >= 1`. The only unbounded scalar quantity is
+//! the `BIG` pseudo-infinity seeding the M2 chain; substituting
+//! [`INF`] = 62 preserves every comparison because 62 exceeds every real
+//! operand above and `INF + W_EX = 63` still fits the planes. All
+//! min/`<`/`<=` tie-breaks (prefer-open, sub < M1 < M2) are computed
+//! with the same operand order as the scalar kernel, so values, bands,
+//! and packed direction bytes are byte-identical — held by
+//! `tests/engine_parity_bitpal.rs` and the unit tests below.
+
+use crate::align::banded_linear::best_of_band;
+use crate::params::{BAND, SAT_AFFINE, W_EX, W_OP, W_SUB};
+
+use super::engine::AffineBatch;
+use super::lanes::LaneWord;
+
+/// Bit planes per value: enough for `0..=63`.
+const B: usize = 6;
+
+/// Pseudo-infinity seeding the M2 chain (replaces the scalar `BIG`;
+/// see the module docs for why 62 is exact here).
+const INF: i32 = 62;
+
+// The plane count and clamp trick below hard-code the parameter values;
+// fail the build, not the output, if they ever drift.
+const _: () = assert!(SAT_AFFINE == 31 && W_SUB == 1 && W_OP == 1 && W_EX == 1);
+
+/// One bit-sliced number: plane `p` holds bit `p` of every lane's value.
+type Num<W> = [W; B];
+
+/// Broadcast a constant into all lanes.
+#[inline(always)]
+fn splat<W: LaneWord>(v: i32) -> Num<W> {
+    std::array::from_fn(|p| if (v >> p) & 1 == 1 { W::ONES } else { W::ZERO })
+}
+
+/// Lane-wise `x + c` by ripple carry (no overflow by the bounds above).
+#[inline(always)]
+fn add_const<W: LaneWord>(x: &Num<W>, c: i32) -> Num<W> {
+    let mut out = [W::ZERO; B];
+    let mut carry = W::ZERO;
+    for p in 0..B {
+        let cb = if (c >> p) & 1 == 1 { W::ONES } else { W::ZERO };
+        let axc = x[p].xor(cb);
+        out[p] = axc.xor(carry);
+        carry = x[p].and(cb).or(carry.and(axc));
+    }
+    out
+}
+
+/// Lane mask of `a < b` (borrow-out of `a - b` over the planes).
+#[inline(always)]
+fn lt<W: LaneWord>(a: &Num<W>, b: &Num<W>) -> W {
+    let mut borrow = W::ZERO;
+    for p in 0..B {
+        let na = a[p].not();
+        borrow = na.and(b[p]).or(borrow.and(na.or(b[p])));
+    }
+    borrow
+}
+
+/// Lane mask of `a <= b`.
+#[inline(always)]
+fn le<W: LaneWord>(a: &Num<W>, b: &Num<W>) -> W {
+    lt(b, a).not()
+}
+
+/// Lane-wise `mask ? a : b`.
+#[inline(always)]
+fn select<W: LaneWord>(mask: W, a: &Num<W>, b: &Num<W>) -> Num<W> {
+    std::array::from_fn(|p| a[p].and(mask).or(b[p].andnot(mask)))
+}
+
+/// Lane-wise `min(a, b)` (ties keep `b`, matching `i32::min` values).
+#[inline(always)]
+fn min_n<W: LaneWord>(a: &Num<W>, b: &Num<W>) -> Num<W> {
+    select(lt(a, b), a, b)
+}
+
+/// Lane-wise `min(x, SAT_AFFINE)` for `x in 0..=63`: bit 5 set means
+/// `x >= 32 > 31`, so OR it into the low planes and clear it.
+#[inline(always)]
+fn clamp_sat<W: LaneWord>(x: &Num<W>) -> Num<W> {
+    let m = x[B - 1];
+    std::array::from_fn(|p| if p < B - 1 { x[p].or(m) } else { W::ZERO })
+}
+
+/// Read lane `k` of a bit-sliced number back as a scalar.
+#[inline(always)]
+fn decode<W: LaneWord>(x: &Num<W>, k: usize) -> i32 {
+    let mut v = 0i32;
+    for (p, plane) in x.iter().enumerate() {
+        v |= i32::from(plane.lane(k)) << p;
+    }
+    v
+}
+
+/// Reusable scratch for [`affine_chunk`] (match planes + direction
+/// planes), kept across batches to avoid per-call allocation.
+#[derive(Debug)]
+pub(crate) struct AffineScratch<W: LaneWord> {
+    /// Match planes: `mt[i][j]` bit `k` = lane `k` matches at (row `i`,
+    /// band `j`) — the *complement* polarity of the linear `mm` words.
+    mt: Vec<[W; BAND]>,
+    /// Direction planes per `(row, j)`: `[dd0, dd1, m1dir, m2dir]`.
+    dirs: Vec<[W; 4]>,
+}
+
+// Manual impl: the derive would demand `W: Default`, which `LaneWord`
+// deliberately does not imply.
+impl<W: LaneWord> Default for AffineScratch<W> {
+    fn default() -> Self {
+        AffineScratch { mt: Vec::new(), dirs: Vec::new() }
+    }
+}
+
+/// Run one `<= W::BITS`-instance chunk of the bit-sliced affine kernel
+/// and append per-lane results (band, best, packed dirs) to `out`.
+///
+/// Inactive lanes compute on all-mismatch planes (every value stays in
+/// bounds either way) and are never read back.
+pub(crate) fn affine_chunk<W: LaneWord>(
+    scratch: &mut AffineScratch<W>,
+    reads: &[&[u8]],
+    wins: &[&[u8]],
+    out: &mut AffineBatch,
+) {
+    let lanes = reads.len();
+    debug_assert!(lanes >= 1 && lanes <= W::BITS);
+    let n = reads[0].len();
+
+    // ---- match planes ----
+    scratch.mt.clear();
+    scratch.mt.resize(n, [W::ZERO; BAND]);
+    for (k, (r, w)) in reads.iter().zip(wins).enumerate() {
+        for (i, mrow) in scratch.mt.iter_mut().enumerate() {
+            let rb = r[i];
+            let g = &w[i..i + BAND];
+            for j in 0..BAND {
+                if rb == g[j] && rb < 4 {
+                    mrow[j].set_lane(k);
+                }
+            }
+        }
+    }
+    scratch.dirs.clear();
+    scratch.dirs.resize(n * BAND, [W::ZERO; 4]);
+
+    // ---- layer state: anchored init row |j - eth| for D, SAT for M1/M2 ----
+    let init = crate::align::banded_linear::init_band();
+    let mut d: [Num<W>; BAND] = std::array::from_fn(|j| splat(init[j]));
+    let mut m1: [Num<W>; BAND] = std::array::from_fn(|_| splat(SAT_AFFINE));
+    let mut m2: [Num<W>; BAND] = std::array::from_fn(|_| splat(SAT_AFFINE));
+    let sat: Num<W> = splat(SAT_AFFINE);
+
+    let mut m1new: [Num<W>; BAND] = std::array::from_fn(|_| splat(0));
+    let mut m1dir = [W::ZERO; BAND];
+    let mut m2raw: [Num<W>; BAND] = std::array::from_fn(|_| splat(0));
+    let mut m2dir = [W::ZERO; BAND];
+    let mut acc: [Num<W>; BAND] = std::array::from_fn(|_| splat(0));
+
+    for (i, mrow) in scratch.mt.iter().enumerate() {
+        // M1 (vertical: consume read base, gap in reference)
+        for j in 0..BAND {
+            let (up_m1, up_d) = if j < BAND - 1 { (&m1[j + 1], &d[j + 1]) } else { (&sat, &sat) };
+            let ext = add_const(up_m1, W_EX);
+            let opn = add_const(up_d, W_OP + W_EX);
+            let open_loses = lt(&ext, &opn); // prefer open on ties
+            m1new[j] = select(open_loses, &ext, &opn);
+            m1dir[j] = open_loses;
+            acc[j] = min_n(&m1new[j], &add_const(&d[j], W_SUB));
+        }
+        // M2 (horizontal) via the folded serial chain
+        let mut prev: Num<W> = splat(INF);
+        for j in 0..BAND {
+            let cbase = if j == 0 {
+                splat(INF)
+            } else {
+                add_const(&select(mrow[j - 1], &d[j - 1], &acc[j - 1]), W_OP + W_EX)
+            };
+            let pext = add_const(&prev, W_EX);
+            let ext_wins = lt(&pext, &cbase); // prefer open on ties
+            m2raw[j] = select(ext_wins, &pext, &cbase);
+            m2dir[j] = ext_wins;
+            prev = m2raw[j];
+        }
+        // D with deterministic origin priority: match, then sub<M1<M2.
+        for j in 0..BAND {
+            let vsub = add_const(&d[j], W_SUB);
+            let sub_wins = le(&vsub, &m1new[j]).and(le(&vsub, &m2raw[j]));
+            let m1_le_m2 = le(&m1new[j], &m2raw[j]);
+            let dn_nm = min_n(&min_n(&vsub, &m1new[j]), &m2raw[j]);
+            let mat = mrow[j];
+            // dd encodes D_MATCH=0 / D_SUB=1 / D_M1=2 / D_M2=3 as two planes
+            let dd0 = sub_wins.or(m1_le_m2.not()).andnot(mat);
+            let dd1 = sub_wins.not().andnot(mat);
+            let dn = select(mat, &d[j], &dn_nm);
+            d[j] = clamp_sat(&dn);
+            scratch.dirs[i * BAND + j] = [dd0, dd1, m1dir[j], m2dir[j]];
+        }
+        for j in 0..BAND {
+            m1[j] = clamp_sat(&m1new[j]);
+            m2[j] = clamp_sat(&m2raw[j]);
+        }
+    }
+
+    // ---- per-lane readback: band + best + packed 4-bit dirs ----
+    for k in 0..lanes {
+        let mut band = [0i32; BAND];
+        for (j, num) in d.iter().enumerate() {
+            band[j] = decode(num, k);
+        }
+        let (best, best_j) = best_of_band(&band);
+        let mut dirs = Vec::with_capacity(n * BAND);
+        for planes in &scratch.dirs {
+            let byte = u8::from(planes[0].lane(k))
+                | u8::from(planes[1].lane(k)) << 1
+                | u8::from(planes[2].lane(k)) << 2
+                | u8::from(planes[3].lane(k)) << 3;
+            dirs.push(byte);
+        }
+        out.band.push(band);
+        out.best.push(best);
+        out.best_j.push(best_j as u32);
+        out.dirs.push(dirs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::align::banded_affine::affine_wf_band;
+    use crate::params::{window_len, ETH};
+    use crate::util::SmallRng;
+
+    #[test]
+    fn sliced_arithmetic_matches_scalar() {
+        for a in 0..=34i32 {
+            for b in 0..=34i32 {
+                let an = splat::<u64>(a);
+                let bn = splat::<u64>(b);
+                assert_eq!(decode(&add_const(&an, 2), 0), a + 2, "{a}+2");
+                assert_eq!(lt(&an, &bn).lane(0), a < b, "{a}<{b}");
+                assert_eq!(le(&an, &bn).lane(0), a <= b, "{a}<={b}");
+                assert_eq!(decode(&min_n(&an, &bn), 0), a.min(b), "min({a},{b})");
+            }
+            assert_eq!(decode(&clamp_sat(&splat::<u64>(a)), 0), a.min(SAT_AFFINE));
+        }
+        assert_eq!(decode(&clamp_sat(&splat::<u64>(INF + 1)), 0), SAT_AFFINE);
+    }
+
+    fn rand_pair(rng: &mut SmallRng, n: usize, planted: bool) -> (Vec<u8>, Vec<u8>) {
+        let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..5)).collect();
+        let mut win: Vec<u8> = (0..window_len(n)).map(|_| rng.gen_range(0..4)).collect();
+        if planted {
+            win[ETH..ETH + n].copy_from_slice(&read);
+            for _ in 0..rng.gen_range(0..4usize) {
+                let p = rng.gen_range(ETH..ETH + n);
+                win[p] = (win[p] + rng.gen_range(1..4u8)) % 4;
+            }
+        }
+        (read, win)
+    }
+
+    fn chunk_parity<W: LaneWord>(seed: u64, b: usize, n: usize) {
+        let mut rng = SmallRng::seed_from_u64(seed);
+        let pairs: Vec<(Vec<u8>, Vec<u8>)> =
+            (0..b).map(|i| rand_pair(&mut rng, n, i % 2 == 0)).collect();
+        let rr: Vec<&[u8]> = pairs.iter().map(|(r, _)| r.as_slice()).collect();
+        let ww: Vec<&[u8]> = pairs.iter().map(|(_, w)| w.as_slice()).collect();
+        let mut out = AffineBatch {
+            band: Vec::new(),
+            best: Vec::new(),
+            best_j: Vec::new(),
+            dirs: Vec::new(),
+        };
+        affine_chunk::<W>(&mut AffineScratch::default(), &rr, &ww, &mut out);
+        for (k, (r, w)) in pairs.iter().enumerate() {
+            let res = affine_wf_band(r, w);
+            assert_eq!(out.band[k], res.band, "seed={seed} lane={k} band");
+            assert_eq!(out.dirs[k], res.dirs, "seed={seed} lane={k} dirs");
+        }
+    }
+
+    #[test]
+    fn chunk_matches_scalar_oracle_at_every_width() {
+        chunk_parity::<u64>(0xAF01, 64, 30);
+        chunk_parity::<u64>(0xAF02, 17, 64);
+        chunk_parity::<[u64; 2]>(0xAF03, 128, 17);
+        chunk_parity::<[u64; 4]>(0xAF04, 256, 30);
+        chunk_parity::<[u64; 4]>(0xAF05, 70, 30);
+        chunk_parity::<[u64; 8]>(0xAF06, 300, 17);
+    }
+
+    #[test]
+    fn pseudo_infinity_clears_the_real_value_range() {
+        // Every real operand of an M2 comparison is <= 34 (module docs);
+        // INF and INF + W_EX must stay above that and inside the planes.
+        assert!(INF > 2 + SAT_AFFINE + W_SUB + 1);
+        assert!(INF + W_EX < (1 << B));
+    }
+}

@@ -1,19 +1,26 @@
-//! Bit-parallel batched linear-filter engine (`--engine bitpal`).
+//! Bit-parallel batched WF engine (`--engine bitpal`), generic over the
+//! machine lane width.
 //!
 //! The paper's speedup comes from executing the optimized Wagner-Fischer
 //! recurrence bit-serially across *all crossbar rows at once* (§IV,
 //! Fig. 5): every crossbar row holds one WF instance, and one broadcast
-//! MAGIC op sequence advances every instance by one DP cell. The closest
-//! host analog inverts the axes: a 64-bit machine word holds **one bit
-//! lane per instance slot**, and one word op advances up to 64 instances
-//! by one DP cell — the Myers/BitPal family of bit-parallel alignment
-//! encodings (Alser et al. 2020; Diab et al. 2022), re-derived here for
-//! the paper's *banded, anchored, saturating* linear recurrence.
+//! MAGIC op sequence advances every instance by one DP cell. The host
+//! analog inverts the axes: a machine word holds **one bit lane per
+//! instance slot**, and one word op advances every resident instance by
+//! one DP cell — the Myers/BitPal family of bit-parallel alignment
+//! encodings (Alser et al. 2020; Diab et al. 2022), re-derived for the
+//! paper's *banded, anchored, saturating* recurrences. How many
+//! instances one op advances is exactly the word width, so the kernels
+//! here are generic over [`LaneWord`]: `u64` (64 lanes), or `[u64; N]`
+//! for 128/256/512-bit lanes compiled to vector code on x86_64 (AVX2 /
+//! AVX-512-selected) via `#[target_feature]` wrapper functions. The
+//! [`SimdMode`] knob (`--simd`, `DART_PIM_SIMD`) picks the width at
+//! runtime; `off` drops to the scalar reference kernels.
 //!
-//! # Delta encoding
+//! # Delta encoding (linear filter)
 //!
 //! Band values are never materialized during the scan. Per band
-//! coordinate `j` the engine tracks, as one `u64` word each:
+//! coordinate `j` the engine tracks, as one lane word each:
 //!
 //! * `hp[j]` / `hm[j]` — the **horizontal delta** `V[j] - V[j-1]` of the
 //!   current row, which is always in `{-1, 0, +1}` (`hp` = +1 lanes,
@@ -31,8 +38,10 @@
 //!
 //! and the new horizontal deltas follow from
 //! `ΔH'[j] = ΔH[j] + d[j] - d[j-1]` (provably back in `{-1, 0, +1}`).
-//! One row of one 64-instance batch therefore costs ~13 word ops per
-//! band coordinate instead of 64 scalar min-chains.
+//! The absolute anchor value `V[row][0]` is carried as a bit-sliced
+//! ripple counter (one increment-by-`d[0]` per row), so the scan does no
+//! per-lane scalar work at all; lanes are only read back once at the
+//! end.
 //!
 //! Two exactness arguments make the output identical to
 //! [`super::RustEngine`]:
@@ -45,116 +54,376 @@
 //!   early exit returns exactly the all-`SAT` band the full recurrence
 //!   would produce, so not early-exiting here changes nothing.
 //!
-//! The affine stage keeps exact scalar WF + traceback: only filter
-//! *survivors* reach it (a few percent of instances), and the packed
-//! 4-bit direction planes it must emit have no bit-parallel encoding
-//! with the same numerics contract. `tests/engine_parity_bitpal.rs`
-//! holds both stages to exact agreement with [`super::RustEngine`].
+//! The affine stage no longer serializes survivors through the scalar
+//! kernel: it runs the bit-sliced plane arithmetic of
+//! [`super::bitpal_affine`], byte-identical to `scalar_affine_batch`.
+//! `tests/engine_parity_bitpal.rs` holds both stages to exact agreement
+//! with [`super::RustEngine`] at every lane width.
 
 use anyhow::Result;
 
 use crate::align::banded_linear::best_of_band;
 use crate::params::{BAND, ETH, SAT_LINEAR};
 
-use super::engine::{check_batch, scalar_affine_batch, AffineBatch, LinearBatch, WfEngine};
+use super::bitpal_affine::{affine_chunk, AffineScratch};
+use super::engine::{
+    check_batch, scalar_affine_batch, scalar_linear_batch, AffineBatch, LinearBatch, WfEngine,
+};
+use super::lanes::{default_simd_mode, LaneWord, SimdMode, SimdWidth};
 
-/// Instance slots per machine word: one bit lane each.
-pub const LANES: usize = 64;
+/// Widest supported lane (bits); bounds the v0-counter plane count so
+/// `64 * 2^V0_PLANES` instance rows can never overflow it.
+const MAX_LANES: usize = 512;
 
-/// Bit-parallel linear filter + exact scalar affine fallback.
+/// Bit planes of the v0 ripple counter (`v0 <= read_len`, so 16 planes
+/// cover every read shorter than 64 kbp).
+const V0_PLANES: usize = 16;
+
+/// Run one `<= W::BITS`-instance chunk of the delta-encoded linear
+/// filter and append per-lane results to `out`.
 ///
-/// `Send` (unlike the PJRT engine), so shard workers can own one and the
-/// engine composes with `--threads N`.
-#[derive(Debug, Default, Clone)]
-pub struct BitpalEngine {
-    /// Mismatch words, `mm[i][j]` = one bit per lane — scratch reused
-    /// across batches to avoid per-call allocation.
-    mm: Vec<[u64; BAND]>,
-}
+/// Inactive lanes (`reads.len() < W::BITS`) compute on all-zero
+/// mismatch words; their results are simply never read back.
+#[inline(always)]
+fn linear_chunk<W: LaneWord>(
+    mm: &mut Vec<[W; BAND]>,
+    reads: &[&[u8]],
+    wins: &[&[u8]],
+    out: &mut LinearBatch,
+) {
+    let lanes = reads.len();
+    debug_assert!(lanes >= 1 && lanes <= W::BITS && W::BITS <= MAX_LANES);
+    let n = reads[0].len();
+    debug_assert!(n < 1 << V0_PLANES, "read too long for the v0 counter");
 
-impl BitpalEngine {
-    /// A fresh engine (no artifacts to load; state is scratch only).
-    pub fn new() -> Self {
-        BitpalEngine::default()
-    }
-
-    /// Run one <= 64-instance chunk and append its results to `out`.
-    ///
-    /// Inactive lanes (`reads.len() < 64`) compute on all-zero mismatch
-    /// words; their results are simply never read back.
-    fn linear_chunk(&mut self, reads: &[&[u8]], wins: &[&[u8]], out: &mut LinearBatch) {
-        let lanes = reads.len();
-        debug_assert!(lanes >= 1 && lanes <= LANES);
-        let n = reads[0].len();
-
-        // ---- mismatch words: mm[i][j] bit k = lane k mismatches at
-        // (row i, band j); the `r >= 4` term keeps N bases unmatchable,
-        // exactly as in the scalar kernel ----
-        self.mm.clear();
-        self.mm.resize(n, [0u64; BAND]);
-        for (k, (r, w)) in reads.iter().zip(wins).enumerate() {
-            for (i, mrow) in self.mm.iter_mut().enumerate() {
-                let rb = r[i];
-                let g = &w[i..i + BAND];
-                for j in 0..BAND {
-                    let mm = rb != g[j] || rb >= 4;
-                    mrow[j] |= u64::from(mm) << k;
+    // ---- mismatch words: mm[i][j] bit k = lane k mismatches at
+    // (row i, band j); the `r >= 4` term keeps N bases unmatchable,
+    // exactly as in the scalar kernel ----
+    mm.clear();
+    mm.resize(n, [W::ZERO; BAND]);
+    for (k, (r, w)) in reads.iter().zip(wins).enumerate() {
+        for (i, mrow) in mm.iter_mut().enumerate() {
+            let rb = r[i];
+            let g = &w[i..i + BAND];
+            for j in 0..BAND {
+                if rb != g[j] || rb >= 4 {
+                    mrow[j].set_lane(k);
                 }
             }
         }
+    }
 
-        // ---- delta state of the anchored init row |j - eth|:
-        // descending toward the anchor, ascending after it ----
-        let mut hp = [0u64; BAND];
-        let mut hm = [0u64; BAND];
+    // ---- delta state of the anchored init row |j - eth|:
+    // descending toward the anchor, ascending after it ----
+    let mut hp = [W::ZERO; BAND];
+    let mut hm = [W::ZERO; BAND];
+    for j in 1..BAND {
+        if j <= ETH {
+            hm[j] = W::ONES;
+        } else {
+            hp[j] = W::ONES;
+        }
+    }
+    // bit-sliced count of d[0] increments: V[row][0] = eth + decode(v0)
+    let mut v0 = [W::ZERO; V0_PLANES];
+
+    // ---- the scan: one anti-diagonal of all lanes per word op ----
+    let mut d = [W::ZERO; BAND];
+    for row in mm.iter() {
+        d[0] = row[0].andnot(hm[1]);
         for j in 1..BAND {
-            if j <= ETH {
-                hm[j] = !0;
-            } else {
-                hp[j] = !0;
-            }
+            // j = BAND-1 has no top neighbour: its min-term can
+            // never hit zero, so the mask is all-ones
+            let t = row[j].andnot(hp[j].andnot(d[j - 1]));
+            d[j] = if j < BAND - 1 { t.andnot(hm[j + 1]) } else { t };
         }
-        // absolute value of V[row][0] per lane (init row: |0 - eth|)
-        let mut v0 = [ETH as i32; LANES];
+        for j in 1..BAND {
+            let bp = d[j].andnot(d[j - 1]); // ΔH' contribution +1
+            let bm = d[j - 1].andnot(d[j]); // ΔH' contribution -1
+            let nhp = hp[j].andnot(bm).or(bp.andnot(hm[j]));
+            let nhm = hm[j].andnot(bp).or(bm.andnot(hp[j]));
+            hp[j] = nhp;
+            hm[j] = nhm;
+        }
+        // v0 += d[0], lane-wise, by ripple carry over the planes
+        let mut carry = d[0];
+        for c in v0.iter_mut() {
+            let nc = c.xor(carry);
+            carry = c.and(carry);
+            *c = nc;
+        }
+    }
 
-        // ---- the scan: one anti-diagonal of all lanes per word op ----
-        let mut d = [0u64; BAND];
-        for row in &self.mm {
-            d[0] = row[0] & !hm[1];
-            for j in 1..BAND {
-                // j = BAND-1 has no top neighbour: its min-term can
-                // never hit zero, so the mask is all-ones
-                let top_nonzero = if j < BAND - 1 { !hm[j + 1] } else { !0 };
-                d[j] = row[j] & top_nonzero & !(hp[j] & !d[j - 1]);
-            }
-            for j in 1..BAND {
-                let bp = d[j] & !d[j - 1]; // ΔH' contribution +1
-                let bm = !d[j] & d[j - 1]; // ΔH' contribution -1
-                let nhp = (hp[j] & !bm) | (bp & !hm[j]);
-                let nhm = (hm[j] & !bp) | (bm & !hp[j]);
-                hp[j] = nhp;
-                hm[j] = nhm;
-            }
-            let d0 = d[0];
-            for (k, v) in v0.iter_mut().enumerate().take(lanes) {
-                *v += ((d0 >> k) & 1) as i32;
-            }
+    // ---- reconstruct per-lane bands (clamp once, at the end) ----
+    for k in 0..lanes {
+        let mut v = ETH as i32;
+        for (p, c) in v0.iter().enumerate() {
+            v += i32::from(c.lane(k)) << p;
+        }
+        let mut band = [0i32; BAND];
+        band[0] = v.min(SAT_LINEAR);
+        for j in 1..BAND {
+            v += i32::from(hp[j].lane(k)) - i32::from(hm[j].lane(k));
+            band[j] = v.min(SAT_LINEAR);
+        }
+        let (best, best_j) = best_of_band(&band);
+        out.band.push(band);
+        out.best.push(best);
+        out.best_j.push(best_j as u32);
+    }
+}
+
+/// One lane-width instantiation of both bit-parallel kernels, behind a
+/// trait object so [`BitpalEngine`] can pick the width at runtime.
+trait SimdKernel: Send {
+    /// Lane count of this kernel.
+    fn width_bits(&self) -> usize;
+    /// Delta-encoded linear filter over a validated batch.
+    fn linear(&mut self, reads: &[&[u8]], wins: &[&[u8]], out: &mut LinearBatch);
+    /// Bit-sliced affine alignment over a validated batch.
+    fn affine(&mut self, reads: &[&[u8]], wins: &[&[u8]], out: &mut AffineBatch);
+}
+
+/// The portable kernel pair at width `W`: pure bitwise Rust, correct on
+/// every target. The x86_64 wrappers below recompile exactly this code
+/// under wider target features.
+struct PortableKernel<W: LaneWord> {
+    /// Linear-filter mismatch words — scratch reused across batches.
+    mm: Vec<[W; BAND]>,
+    /// Affine match/direction planes — scratch reused across batches.
+    affine: AffineScratch<W>,
+}
+
+impl<W: LaneWord> PortableKernel<W> {
+    fn new() -> Self {
+        PortableKernel { mm: Vec::new(), affine: AffineScratch::default() }
+    }
+
+    #[inline(always)]
+    fn run_linear(&mut self, reads: &[&[u8]], wins: &[&[u8]], out: &mut LinearBatch) {
+        for (rc, wc) in reads.chunks(W::BITS).zip(wins.chunks(W::BITS)) {
+            linear_chunk(&mut self.mm, rc, wc, out);
+        }
+    }
+
+    #[inline(always)]
+    fn run_affine(&mut self, reads: &[&[u8]], wins: &[&[u8]], out: &mut AffineBatch) {
+        for (rc, wc) in reads.chunks(W::BITS).zip(wins.chunks(W::BITS)) {
+            affine_chunk(&mut self.affine, rc, wc, out);
+        }
+    }
+}
+
+impl<W: LaneWord> SimdKernel for PortableKernel<W> {
+    fn width_bits(&self) -> usize {
+        W::BITS
+    }
+
+    fn linear(&mut self, reads: &[&[u8]], wins: &[&[u8]], out: &mut LinearBatch) {
+        self.run_linear(reads, wins, out);
+    }
+
+    fn affine(&mut self, reads: &[&[u8]], wins: &[&[u8]], out: &mut AffineBatch) {
+        self.run_affine(reads, wins, out);
+    }
+}
+
+/// x86_64 vector-compiled instantiations of the portable kernels.
+///
+/// No intrinsics: the `[u64; N]` plane ops are plain bitwise Rust, and
+/// the `#[target_feature]` wrappers let LLVM lower each `[u64; 4]` op
+/// to one 256-bit instruction (resp. two for `[u64; 8]`). The unsafe
+/// surface is exactly the feature precondition, discharged by runtime
+/// detection at construction time.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::*;
+
+    /// 256-bit lanes under the AVX2 target feature.
+    ///
+    /// # Safety
+    /// Construct only after `is_x86_feature_detected!("avx2")`.
+    pub(super) struct Avx2Kernel(pub(super) PortableKernel<[u64; 4]>);
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn linear_avx2(
+        k: &mut PortableKernel<[u64; 4]>,
+        reads: &[&[u8]],
+        wins: &[&[u8]],
+        out: &mut LinearBatch,
+    ) {
+        k.run_linear(reads, wins, out);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn affine_avx2(
+        k: &mut PortableKernel<[u64; 4]>,
+        reads: &[&[u8]],
+        wins: &[&[u8]],
+        out: &mut AffineBatch,
+    ) {
+        k.run_affine(reads, wins, out);
+    }
+
+    impl SimdKernel for Avx2Kernel {
+        fn width_bits(&self) -> usize {
+            256
         }
 
-        // ---- reconstruct per-lane bands (clamp once, at the end) ----
-        for k in 0..lanes {
-            let mut v = v0[k];
-            let mut band = [0i32; BAND];
-            band[0] = v.min(SAT_LINEAR);
-            for j in 1..BAND {
-                v += ((hp[j] >> k) & 1) as i32 - ((hm[j] >> k) & 1) as i32;
-                band[j] = v.min(SAT_LINEAR);
-            }
-            let (best, best_j) = best_of_band(&band);
-            out.band.push(band);
-            out.best.push(best);
-            out.best_j.push(best_j as u32);
+        fn linear(&mut self, reads: &[&[u8]], wins: &[&[u8]], out: &mut LinearBatch) {
+            // SAFETY: constructed only when AVX2 was detected at runtime.
+            unsafe { linear_avx2(&mut self.0, reads, wins, out) }
         }
+
+        fn affine(&mut self, reads: &[&[u8]], wins: &[&[u8]], out: &mut AffineBatch) {
+            // SAFETY: constructed only when AVX2 was detected at runtime.
+            unsafe { affine_avx2(&mut self.0, reads, wins, out) }
+        }
+    }
+
+    /// 512-bit lanes, selected when AVX-512F is detected.
+    ///
+    /// Compiled under the `avx2` target feature (the `avx512f`
+    /// target-feature attribute needs a newer rustc than our MSRV), so
+    /// LLVM emits two 256-bit ops per plane op — wider lanes still
+    /// halve the per-lane bookkeeping relative to 256-bit words.
+    ///
+    /// # Safety
+    /// Construct only after `is_x86_feature_detected!("avx512f")`
+    /// (which implies AVX2).
+    pub(super) struct Avx512Kernel(pub(super) PortableKernel<[u64; 8]>);
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn linear_avx512(
+        k: &mut PortableKernel<[u64; 8]>,
+        reads: &[&[u8]],
+        wins: &[&[u8]],
+        out: &mut LinearBatch,
+    ) {
+        k.run_linear(reads, wins, out);
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn affine_avx512(
+        k: &mut PortableKernel<[u64; 8]>,
+        reads: &[&[u8]],
+        wins: &[&[u8]],
+        out: &mut AffineBatch,
+    ) {
+        k.run_affine(reads, wins, out);
+    }
+
+    impl SimdKernel for Avx512Kernel {
+        fn width_bits(&self) -> usize {
+            512
+        }
+
+        fn linear(&mut self, reads: &[&[u8]], wins: &[&[u8]], out: &mut LinearBatch) {
+            // SAFETY: constructed only when AVX-512F (=> AVX2) was detected.
+            unsafe { linear_avx512(&mut self.0, reads, wins, out) }
+        }
+
+        fn affine(&mut self, reads: &[&[u8]], wins: &[&[u8]], out: &mut AffineBatch) {
+            // SAFETY: constructed only when AVX-512F (=> AVX2) was detected.
+            unsafe { affine_avx512(&mut self.0, reads, wins, out) }
+        }
+    }
+}
+
+/// The portable kernel at an explicitly forced width.
+fn portable_kernel(width: SimdWidth) -> Box<dyn SimdKernel> {
+    match width {
+        SimdWidth::W64 => Box::new(PortableKernel::<u64>::new()),
+        SimdWidth::W128 => Box::new(PortableKernel::<[u64; 2]>::new()),
+        SimdWidth::W256 => Box::new(PortableKernel::<[u64; 4]>::new()),
+        SimdWidth::W512 => Box::new(PortableKernel::<[u64; 8]>::new()),
+    }
+}
+
+/// The best kernel for `width` on this host: the vector-compiled x86
+/// wrappers when their features are present, else the portable code.
+fn make_kernel(width: SimdWidth) -> Box<dyn SimdKernel> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if width == SimdWidth::W512 && std::arch::is_x86_feature_detected!("avx512f") {
+            return Box::new(x86::Avx512Kernel(PortableKernel::new()));
+        }
+        if width == SimdWidth::W256 && std::arch::is_x86_feature_detected!("avx2") {
+            return Box::new(x86::Avx2Kernel(PortableKernel::new()));
+        }
+    }
+    portable_kernel(width)
+}
+
+/// Bit-parallel linear filter + bit-sliced affine, lane-width selected
+/// at construction.
+///
+/// `Send` (unlike the PJRT engine), so shard workers can own one and the
+/// engine composes with `--threads N`. The width NEVER changes output
+/// bytes (determinism invariant 8); `SimdMode::Off` swaps in the exact
+/// scalar reference kernels.
+pub struct BitpalEngine {
+    /// The mode this engine was built with.
+    mode: SimdMode,
+    /// Resolved lane width in bits (0 = scalar fallback).
+    width_bits: usize,
+    /// The width-specialized kernel pair; `None` = scalar fallback.
+    kern: Option<Box<dyn SimdKernel>>,
+}
+
+impl BitpalEngine {
+    /// A fresh engine at the default SIMD mode (`DART_PIM_SIMD`, else
+    /// the widest host lane).
+    pub fn new() -> Self {
+        BitpalEngine::with_mode(default_simd_mode())
+    }
+
+    /// An engine pinned to `mode` (the `--simd` flag's entry point).
+    pub fn with_mode(mode: SimdMode) -> Self {
+        match mode.resolve() {
+            None => BitpalEngine { mode, width_bits: 0, kern: None },
+            Some(w) => {
+                BitpalEngine { mode, width_bits: w.bits(), kern: Some(make_kernel(w)) }
+            }
+        }
+    }
+
+    /// An engine forced onto the *portable* kernel at an explicit width,
+    /// regardless of host features — every width is correct everywhere,
+    /// so parity suites and benches can sweep all of [`SimdWidth::all`]
+    /// on any machine.
+    pub fn portable(width: SimdWidth) -> Self {
+        BitpalEngine {
+            mode: SimdMode::Wide,
+            width_bits: width.bits(),
+            kern: Some(portable_kernel(width)),
+        }
+    }
+
+    /// The SIMD mode this engine was built with.
+    pub fn mode(&self) -> SimdMode {
+        self.mode
+    }
+
+    /// Resolved lane width in bits (0 when the scalar fallback is
+    /// active) — what the `simd_width` metrics counter reports.
+    pub fn width_bits(&self) -> usize {
+        self.width_bits
+    }
+}
+
+impl Default for BitpalEngine {
+    fn default() -> Self {
+        BitpalEngine::new()
+    }
+}
+
+impl std::fmt::Debug for BitpalEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BitpalEngine")
+            .field("simd", &self.mode.name())
+            .field("width_bits", &self.width_bits)
+            .finish()
     }
 }
 
@@ -164,21 +433,36 @@ impl WfEngine for BitpalEngine {
     }
 
     fn linear_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<LinearBatch> {
-        check_batch(reads, wins)?;
-        let mut out = LinearBatch {
-            band: Vec::with_capacity(reads.len()),
-            best: Vec::with_capacity(reads.len()),
-            best_j: Vec::with_capacity(reads.len()),
-        };
-        for (rc, wc) in reads.chunks(LANES).zip(wins.chunks(LANES)) {
-            self.linear_chunk(rc, wc, &mut out);
+        match &mut self.kern {
+            None => scalar_linear_batch(reads, wins),
+            Some(k) => {
+                check_batch(reads, wins)?;
+                let mut out = LinearBatch {
+                    band: Vec::with_capacity(reads.len()),
+                    best: Vec::with_capacity(reads.len()),
+                    best_j: Vec::with_capacity(reads.len()),
+                };
+                k.linear(reads, wins, &mut out);
+                Ok(out)
+            }
         }
-        Ok(out)
     }
 
     fn affine_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<AffineBatch> {
-        // Exact scalar affine + traceback: only filter survivors get here.
-        scalar_affine_batch(reads, wins)
+        match &mut self.kern {
+            None => scalar_affine_batch(reads, wins),
+            Some(k) => {
+                check_batch(reads, wins)?;
+                let mut out = AffineBatch {
+                    band: Vec::with_capacity(reads.len()),
+                    best: Vec::with_capacity(reads.len()),
+                    best_j: Vec::with_capacity(reads.len()),
+                    dirs: Vec::with_capacity(reads.len()),
+                };
+                k.affine(reads, wins, &mut out);
+                Ok(out)
+            }
+        }
     }
 }
 
@@ -217,28 +501,44 @@ mod tests {
         v.iter().map(|x| x.as_slice()).collect()
     }
 
-    #[test]
-    fn planted_matches_are_zero() {
-        let mut rng = SmallRng::seed_from_u64(70);
-        let (reads, wins) = planted_batch(&mut rng, 5, 40, 0);
-        let out =
-            BitpalEngine::new().linear_batch(&as_slices(&reads), &as_slices(&wins)).unwrap();
-        assert_eq!(out.best, vec![0; 5]);
-        assert_eq!(out.best_j, vec![ETH as u32; 5]);
+    /// Every engine variant the unit tests sweep: the three modes plus
+    /// all four portable widths.
+    fn variants() -> Vec<(String, BitpalEngine)> {
+        let mut v: Vec<(String, BitpalEngine)> = [SimdMode::U64, SimdMode::Wide, SimdMode::Off]
+            .into_iter()
+            .map(|m| (format!("mode={}", m.name()), BitpalEngine::with_mode(m)))
+            .collect();
+        for w in SimdWidth::all() {
+            v.push((format!("portable={}", w.bits()), BitpalEngine::portable(w)));
+        }
+        v
     }
 
     #[test]
-    fn chunking_covers_batches_beyond_64_lanes() {
+    fn planted_matches_are_zero() {
+        for (label, mut e) in variants() {
+            let mut rng = SmallRng::seed_from_u64(70);
+            let (reads, wins) = planted_batch(&mut rng, 5, 40, 0);
+            let out = e.linear_batch(&as_slices(&reads), &as_slices(&wins)).unwrap();
+            assert_eq!(out.best, vec![0; 5], "{label}");
+            assert_eq!(out.best_j, vec![ETH as u32; 5], "{label}");
+        }
+    }
+
+    #[test]
+    fn chunking_covers_batches_off_the_lane_grid() {
         let mut rng = SmallRng::seed_from_u64(71);
-        for b in [1usize, 63, 64, 65, 130] {
+        for b in [1usize, 63, 64, 65, 127, 128, 129, 130] {
             let (reads, wins) = planted_batch(&mut rng, b, 30, 2);
             let rr = as_slices(&reads);
             let ww = as_slices(&wins);
-            let bit = BitpalEngine::new().linear_batch(&rr, &ww).unwrap();
             let rust = RustEngine.linear_batch(&rr, &ww).unwrap();
-            assert_eq!(bit.best, rust.best, "b={b}");
-            assert_eq!(bit.best_j, rust.best_j, "b={b}");
-            assert_eq!(bit.band, rust.band, "b={b}");
+            for (label, mut e) in variants() {
+                let bit = e.linear_batch(&rr, &ww).unwrap();
+                assert_eq!(bit.best, rust.best, "{label} b={b}");
+                assert_eq!(bit.best_j, rust.best_j, "{label} b={b}");
+                assert_eq!(bit.band, rust.band, "{label} b={b}");
+            }
         }
     }
 
@@ -246,9 +546,11 @@ mod tests {
     fn all_mismatch_saturates_at_band_center() {
         let read = vec![0u8; 30];
         let win = vec![1u8; window_len(30)];
-        let out = BitpalEngine::new().linear_batch(&[&read], &[&win]).unwrap();
-        assert_eq!(out.best, vec![SAT_LINEAR]);
-        assert_eq!(out.best_j, vec![ETH as u32]);
+        for (label, mut e) in variants() {
+            let out = e.linear_batch(&[&read], &[&win]).unwrap();
+            assert_eq!(out.best, vec![SAT_LINEAR], "{label}");
+            assert_eq!(out.best_j, vec![ETH as u32], "{label}");
+        }
     }
 
     #[test]
@@ -256,32 +558,48 @@ mod tests {
         // base code 4 (N) mismatches even against itself
         let read = vec![4u8; 20];
         let win = vec![4u8; window_len(20)];
-        let out = BitpalEngine::new().linear_batch(&[&read], &[&win]).unwrap();
-        assert!(out.best[0] > 0);
         let rust = RustEngine.linear_batch(&[&read], &[&win]).unwrap();
-        assert_eq!(out.best, rust.best);
-        assert_eq!(out.band, rust.band);
+        assert!(rust.best[0] > 0);
+        for (label, mut e) in variants() {
+            let out = e.linear_batch(&[&read], &[&win]).unwrap();
+            assert_eq!(out.best, rust.best, "{label}");
+            assert_eq!(out.band, rust.band, "{label}");
+        }
     }
 
     #[test]
     fn rejects_malformed_batches() {
-        let mut e = BitpalEngine::new();
-        assert!(e.linear_batch(&[], &[]).is_err());
-        let r = vec![0u8; 20];
-        let w = vec![0u8; 20]; // wrong window length
-        assert!(e.linear_batch(&[&r], &[&w]).is_err());
+        for (label, mut e) in variants() {
+            assert!(e.linear_batch(&[], &[]).is_err(), "{label}");
+            let r = vec![0u8; 20];
+            let w = vec![0u8; 20]; // wrong window length
+            assert!(e.linear_batch(&[&r], &[&w]).is_err(), "{label}");
+            assert!(e.affine_batch(&[&r], &[&w]).is_err(), "{label}");
+        }
     }
 
     #[test]
-    fn affine_fallback_is_the_scalar_path() {
+    fn affine_matches_the_scalar_path_everywhere() {
         let mut rng = SmallRng::seed_from_u64(72);
-        let (reads, wins) = planted_batch(&mut rng, 6, 30, 1);
+        let (reads, wins) = planted_batch(&mut rng, 70, 30, 1);
         let rr = as_slices(&reads);
         let ww = as_slices(&wins);
-        let bit = BitpalEngine::new().affine_batch(&rr, &ww).unwrap();
         let rust = RustEngine.affine_batch(&rr, &ww).unwrap();
-        assert_eq!(bit.best, rust.best);
-        assert_eq!(bit.best_j, rust.best_j);
-        assert_eq!(bit.dirs, rust.dirs);
+        for (label, mut e) in variants() {
+            let bit = e.affine_batch(&rr, &ww).unwrap();
+            assert_eq!(bit.best, rust.best, "{label}");
+            assert_eq!(bit.best_j, rust.best_j, "{label}");
+            assert_eq!(bit.dirs, rust.dirs, "{label}");
+        }
+    }
+
+    #[test]
+    fn width_resolution_is_visible() {
+        assert_eq!(BitpalEngine::with_mode(SimdMode::U64).width_bits(), 64);
+        assert_eq!(BitpalEngine::with_mode(SimdMode::Off).width_bits(), 0);
+        assert!(BitpalEngine::with_mode(SimdMode::Wide).width_bits() >= 64);
+        for w in SimdWidth::all() {
+            assert_eq!(BitpalEngine::portable(w).width_bits(), w.bits());
+        }
     }
 }

@@ -81,9 +81,29 @@ pub(crate) fn check_batch(reads: &[&[u8]], wins: &[&[u8]]) -> Result<usize> {
     Ok(n)
 }
 
+/// Exact scalar linear filter over a batch — the reference filter path,
+/// shared by [`RustEngine`] and the bit-parallel engine's `--simd off`
+/// fallback.
+pub(crate) fn scalar_linear_batch(reads: &[&[u8]], wins: &[&[u8]]) -> Result<LinearBatch> {
+    check_batch(reads, wins)?;
+    let mut out = LinearBatch {
+        band: Vec::with_capacity(reads.len()),
+        best: Vec::with_capacity(reads.len()),
+        best_j: Vec::with_capacity(reads.len()),
+    };
+    for (r, w) in reads.iter().zip(wins) {
+        let band = linear_wf_band(r, w);
+        let (d, j) = best_of_band(&band);
+        out.band.push(band);
+        out.best.push(d);
+        out.best_j.push(j as u32);
+    }
+    Ok(out)
+}
+
 /// Exact scalar affine WF + traceback directions over a batch — the
 /// reference affine path, shared by [`RustEngine`] and the bit-parallel
-/// engine's survivor fallback.
+/// engine's `--simd off` fallback.
 pub(crate) fn scalar_affine_batch(reads: &[&[u8]], wins: &[&[u8]]) -> Result<AffineBatch> {
     check_batch(reads, wins)?;
     let mut out = AffineBatch {
@@ -134,12 +154,21 @@ impl EngineKind {
         }
     }
 
-    /// Construct the engine. Every variant is `Send`, so the result can
-    /// be built and owned by a worker thread.
+    /// Construct the engine at the default SIMD mode (`DART_PIM_SIMD`,
+    /// else the widest host lane). Every variant is `Send`, so the
+    /// result can be built and owned by a worker thread.
     pub fn build(self) -> Box<dyn WfEngine + Send> {
+        self.build_simd(super::lanes::default_simd_mode())
+    }
+
+    /// Construct the engine at an explicit SIMD mode (the
+    /// `PipelineConfig::simd` plumbing). The mode only affects the
+    /// bit-parallel engine — [`EngineKind::Rust`] is always scalar —
+    /// and never changes output bytes (determinism invariant 8).
+    pub fn build_simd(self, simd: super::lanes::SimdMode) -> Box<dyn WfEngine + Send> {
         match self {
             EngineKind::Rust => Box::new(RustEngine),
-            EngineKind::Bitpal => Box::new(super::BitpalEngine::new()),
+            EngineKind::Bitpal => Box::new(super::BitpalEngine::with_mode(simd)),
         }
     }
 }
@@ -165,20 +194,7 @@ impl WfEngine for RustEngine {
     }
 
     fn linear_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<LinearBatch> {
-        check_batch(reads, wins)?;
-        let mut out = LinearBatch {
-            band: Vec::with_capacity(reads.len()),
-            best: Vec::with_capacity(reads.len()),
-            best_j: Vec::with_capacity(reads.len()),
-        };
-        for (r, w) in reads.iter().zip(wins) {
-            let band = linear_wf_band(r, w);
-            let (d, j) = best_of_band(&band);
-            out.band.push(band);
-            out.best.push(d);
-            out.best_j.push(j as u32);
-        }
-        Ok(out)
+        scalar_linear_batch(reads, wins)
     }
 
     fn affine_batch(&mut self, reads: &[&[u8]], wins: &[&[u8]]) -> Result<AffineBatch> {
@@ -208,6 +224,20 @@ mod kind_tests {
             let mut e = kind.build();
             let out = e.linear_batch(&[&read], &[&win]).unwrap();
             assert_eq!(out.best, vec![0], "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn build_simd_spans_every_mode() {
+        use crate::runtime::lanes::SimdMode;
+        let read = vec![1u8; 20];
+        let win = vec![1u8; crate::params::window_len(20)];
+        for kind in [EngineKind::Rust, EngineKind::Bitpal] {
+            for mode in [SimdMode::U64, SimdMode::Wide, SimdMode::Off] {
+                let mut e = kind.build_simd(mode);
+                let out = e.linear_batch(&[&read], &[&win]).unwrap();
+                assert_eq!(out.best, vec![0], "{} {}", kind.name(), mode.name());
+            }
         }
     }
 }

@@ -1,0 +1,266 @@
+//! Lane-width abstraction for the bit-parallel engines.
+//!
+//! The paper's crossbar advances *every row at once*; how many rows a
+//! host word op advances is the machine's vector width. [`LaneWord`] is
+//! the word the bit-parallel kernels are generic over: `u64` (the
+//! classic 64-lane BitPal word) or `[u64; N]` for 128/256/512-bit lanes.
+//! The array forms use only portable bitwise ops, so they compile on
+//! every target; on x86_64 the engine wraps them in
+//! `#[target_feature(enable = "avx2")]` functions (see
+//! `bitpal_engine.rs`) so LLVM lowers each plane op to one (or two)
+//! vector instructions.
+//!
+//! [`SimdMode`] is the user-facing knob (`--simd`, `DART_PIM_SIMD`):
+//! `u64` pins the historical word, `wide` picks the widest lane the host
+//! supports at runtime, `off` forces the scalar reference path. The mode
+//! NEVER changes output bytes — only throughput (determinism invariant 8,
+//! ARCHITECTURE.md).
+
+/// A machine word holding one bit lane per WF instance.
+///
+/// Implementations must be pure value types: every op is lane-wise
+/// bitwise, so per-lane results are independent regardless of width.
+pub trait LaneWord: Copy + Send + 'static {
+    /// Lane count (bits) of this word.
+    const BITS: usize;
+    /// The all-zeros word.
+    const ZERO: Self;
+    /// The all-ones word.
+    const ONES: Self;
+    /// Bitwise AND.
+    fn and(self, o: Self) -> Self;
+    /// Bitwise OR.
+    fn or(self, o: Self) -> Self;
+    /// Bitwise XOR.
+    fn xor(self, o: Self) -> Self;
+    /// Bitwise NOT.
+    fn not(self) -> Self;
+    /// `self & !o` (AND-NOT: one op on most vector ISAs).
+    fn andnot(self, o: Self) -> Self;
+    /// Set bit `lane` (lane < `BITS`).
+    fn set_lane(&mut self, lane: usize);
+    /// Read bit `lane` as a bool.
+    fn lane(self, lane: usize) -> bool;
+}
+
+impl LaneWord for u64 {
+    const BITS: usize = 64;
+    const ZERO: Self = 0;
+    const ONES: Self = !0;
+    #[inline(always)]
+    fn and(self, o: Self) -> Self {
+        self & o
+    }
+    #[inline(always)]
+    fn or(self, o: Self) -> Self {
+        self | o
+    }
+    #[inline(always)]
+    fn xor(self, o: Self) -> Self {
+        self ^ o
+    }
+    #[inline(always)]
+    fn not(self) -> Self {
+        !self
+    }
+    #[inline(always)]
+    fn andnot(self, o: Self) -> Self {
+        self & !o
+    }
+    #[inline(always)]
+    fn set_lane(&mut self, lane: usize) {
+        *self |= 1u64 << lane;
+    }
+    #[inline(always)]
+    fn lane(self, lane: usize) -> bool {
+        (self >> lane) & 1 == 1
+    }
+}
+
+impl<const N: usize> LaneWord for [u64; N] {
+    const BITS: usize = 64 * N;
+    const ZERO: Self = [0; N];
+    const ONES: Self = [!0; N];
+    #[inline(always)]
+    fn and(self, o: Self) -> Self {
+        std::array::from_fn(|i| self[i] & o[i])
+    }
+    #[inline(always)]
+    fn or(self, o: Self) -> Self {
+        std::array::from_fn(|i| self[i] | o[i])
+    }
+    #[inline(always)]
+    fn xor(self, o: Self) -> Self {
+        std::array::from_fn(|i| self[i] ^ o[i])
+    }
+    #[inline(always)]
+    fn not(self) -> Self {
+        std::array::from_fn(|i| !self[i])
+    }
+    #[inline(always)]
+    fn andnot(self, o: Self) -> Self {
+        std::array::from_fn(|i| self[i] & !o[i])
+    }
+    #[inline(always)]
+    fn set_lane(&mut self, lane: usize) {
+        self[lane >> 6] |= 1u64 << (lane & 63);
+    }
+    #[inline(always)]
+    fn lane(self, lane: usize) -> bool {
+        (self[lane >> 6] >> (lane & 63)) & 1 == 1
+    }
+}
+
+/// User-facing SIMD dispatch mode (`--simd`, `DART_PIM_SIMD`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// The classic single-`u64` 64-lane word.
+    U64,
+    /// The widest lane the host supports, detected at runtime.
+    #[default]
+    Wide,
+    /// Scalar reference path: no bit-parallel kernels at all.
+    Off,
+}
+
+impl SimdMode {
+    /// Parse a mode name (`u64` / `wide` / `off`). `None` for unknown.
+    pub fn from_name(name: &str) -> Option<SimdMode> {
+        match name {
+            "u64" => Some(SimdMode::U64),
+            "wide" => Some(SimdMode::Wide),
+            "off" => Some(SimdMode::Off),
+            _ => None,
+        }
+    }
+
+    /// The mode name (matches the CLI `--simd` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::U64 => "u64",
+            SimdMode::Wide => "wide",
+            SimdMode::Off => "off",
+        }
+    }
+
+    /// The lane width this mode runs at on this host; `None` = scalar.
+    pub fn resolve(self) -> Option<SimdWidth> {
+        match self {
+            SimdMode::U64 => Some(SimdWidth::W64),
+            SimdMode::Wide => Some(detect_wide()),
+            SimdMode::Off => None,
+        }
+    }
+}
+
+/// A concrete lane width the bit-parallel kernels can run at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdWidth {
+    /// 64 lanes: one `u64`.
+    W64,
+    /// 128 lanes: `[u64; 2]` (SSE2 / NEON — baseline on x86_64/aarch64).
+    W128,
+    /// 256 lanes: `[u64; 4]` under the AVX2 target feature.
+    W256,
+    /// 512 lanes: `[u64; 8]`, selected when AVX-512F is detected.
+    W512,
+}
+
+impl SimdWidth {
+    /// Lane count (bits per plane word).
+    pub fn bits(self) -> usize {
+        match self {
+            SimdWidth::W64 => 64,
+            SimdWidth::W128 => 128,
+            SimdWidth::W256 => 256,
+            SimdWidth::W512 => 512,
+        }
+    }
+
+    /// Every width the portable kernels can be forced to (for parity
+    /// sweeps and benches; [`detect_wide`] picks what production uses).
+    pub fn all() -> [SimdWidth; 4] {
+        [SimdWidth::W64, SimdWidth::W128, SimdWidth::W256, SimdWidth::W512]
+    }
+}
+
+/// The widest lane worth running on this host, by runtime detection.
+///
+/// x86_64: AVX-512F → 512, AVX2 → 256, else 128 (SSE2 is baseline).
+/// aarch64: 128 (NEON is baseline). Other targets: 128 — the portable
+/// `[u64; 2]` kernel is still correct and usually beats one `u64` by
+/// amortizing the per-row scalar bookkeeping.
+pub fn detect_wide() -> SimdWidth {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            SimdWidth::W512
+        } else if std::arch::is_x86_feature_detected!("avx2") {
+            SimdWidth::W256
+        } else {
+            SimdWidth::W128
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        SimdWidth::W128
+    }
+}
+
+/// Default SIMD mode: the `DART_PIM_SIMD` environment variable when it
+/// names a mode (CI re-runs the suite under `off` and `wide`), else
+/// [`SimdMode::Wide`] — the contract that width never changes bytes
+/// makes the fastest lane a safe default.
+pub fn default_simd_mode() -> SimdMode {
+    std::env::var("DART_PIM_SIMD")
+        .ok()
+        .and_then(|v| SimdMode::from_name(&v))
+        .unwrap_or(SimdMode::Wide)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn word_ops_roundtrip<W: LaneWord>() {
+        let mut a = W::ZERO;
+        let mut b = W::ZERO;
+        a.set_lane(0);
+        a.set_lane(W::BITS - 1);
+        b.set_lane(W::BITS - 1);
+        assert!(a.lane(0) && a.lane(W::BITS - 1) && !a.lane(1));
+        assert!(!a.and(b).lane(0) && a.and(b).lane(W::BITS - 1));
+        assert!(a.or(b).lane(0));
+        assert!(a.xor(b).lane(0) && !a.xor(b).lane(W::BITS - 1));
+        assert!(a.not().lane(1) && !a.not().lane(0));
+        assert!(a.andnot(b).lane(0) && !a.andnot(b).lane(W::BITS - 1));
+        assert!(W::ONES.lane(0) && W::ONES.lane(W::BITS - 1));
+    }
+
+    #[test]
+    fn lane_words_implement_the_same_algebra() {
+        word_ops_roundtrip::<u64>();
+        word_ops_roundtrip::<[u64; 2]>();
+        word_ops_roundtrip::<[u64; 4]>();
+        word_ops_roundtrip::<[u64; 8]>();
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in [SimdMode::U64, SimdMode::Wide, SimdMode::Off] {
+            assert_eq!(SimdMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(SimdMode::from_name("avx2"), None);
+    }
+
+    #[test]
+    fn resolution_is_sane() {
+        assert_eq!(SimdMode::U64.resolve(), Some(SimdWidth::W64));
+        assert_eq!(SimdMode::Off.resolve(), None);
+        let wide = SimdMode::Wide.resolve().unwrap();
+        assert!(wide.bits() >= 64, "wide must never be narrower than u64");
+        for w in SimdWidth::all() {
+            assert_eq!(w.bits() % 64, 0);
+        }
+    }
+}

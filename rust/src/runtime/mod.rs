@@ -13,19 +13,25 @@
 //! RISC-V-offload compute path); `tests/engine_parity.rs` holds the two
 //! engines to exact agreement. [`bitpal_engine::BitpalEngine`] is the
 //! bit-parallel host analog of the crossbars' row-parallel compute
-//! (§IV/Fig. 5): a delta-encoded linear filter with one word lane per
-//! instance, exact-scalar affine for survivors, same numerics contract
-//! (`tests/engine_parity_bitpal.rs`). [`engine::EngineKind`] is the
-//! factory shard workers use to construct their thread-local engine.
+//! (§IV/Fig. 5): a delta-encoded linear filter plus a bit-sliced affine
+//! stage ([`bitpal_affine`]) with one word lane per instance, generic
+//! over the machine lane width ([`lanes`]: `u64` up to 512-bit words,
+//! runtime-detected via `--simd` / `DART_PIM_SIMD`), same numerics
+//! contract at every width (`tests/engine_parity_bitpal.rs`).
+//! [`engine::EngineKind`] is the factory shard workers use to construct
+//! their thread-local engine.
 
 pub mod artifacts;
+pub mod bitpal_affine;
 pub mod bitpal_engine;
 pub mod engine;
+pub mod lanes;
 #[cfg(feature = "pjrt")]
 pub mod xla_engine;
 
 pub use artifacts::ArtifactManifest;
 pub use bitpal_engine::BitpalEngine;
 pub use engine::{default_engine, AffineBatch, EngineKind, LinearBatch, RustEngine, WfEngine};
+pub use lanes::{default_simd_mode, LaneWord, SimdMode, SimdWidth};
 #[cfg(feature = "pjrt")]
 pub use xla_engine::XlaEngine;

@@ -216,11 +216,14 @@ pub fn run_daemon(index: &MinimizerIndex, template: SessionTemplate, bind: Bind)
     let router = Router::new(index, &template.cfg.dart);
     let n_shards = template.cfg.threads.max(1);
     let stats = Mutex::new(DaemonStats::default());
+    // SIMD lane selection is per-daemon (workers build their engines at
+    // spawn), never per-session — the banner is the place to see it
     eprintln!(
-        "serve: listening on {addr} ({} bp reads, {} shard worker(s), engine {})",
+        "serve: listening on {addr} ({} bp reads, {} shard worker(s), engine {}, simd {})",
         index.read_len,
         n_shards,
-        template.cfg.worker_engine.name()
+        template.cfg.worker_engine.name(),
+        template.cfg.simd.name()
     );
     let result = thread::scope(|s| -> Result<()> {
         let pool = WorkerPool::spawn(s, index, &template.cfg, n_shards);

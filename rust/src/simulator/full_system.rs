@@ -43,7 +43,7 @@ use anyhow::Result;
 use crate::index::{shard_of, MinimizerIndex};
 use crate::params::ETH;
 use crate::pim::DartPimConfig;
-use crate::runtime::{default_engine, EngineKind, WfEngine};
+use crate::runtime::{default_engine, default_simd_mode, EngineKind, SimdMode, WfEngine};
 use crate::seeding::{seed_read, ReadSeed};
 
 /// Engine flush size for the shard filter pass (the largest artifact
@@ -212,14 +212,14 @@ struct SimShard {
 }
 
 impl SimShard {
-    fn new(engine: EngineKind) -> Self {
+    fn new(engine: EngineKind, simd: SimdMode) -> Self {
         SimShard {
             counts: SimCounts::default(),
             pairs_per_xbar: HashMap::new(),
             affine_per_xbar: HashMap::new(),
             candidates: ReadFlags::default(),
             pending: Vec::with_capacity(SIM_FILTER_BATCH),
-            engine: engine.build(),
+            engine: engine.build_simd(simd),
         }
     }
 
@@ -315,7 +315,7 @@ impl<'a> FullSystemSim<'a> {
         n_threads: usize,
         engine: EngineKind,
     ) -> SimCounts {
-        self.simulate_stream(reads.iter().map(Ok), n_threads, engine)
+        self.simulate_stream(reads.iter().map(Ok), n_threads, engine, default_simd_mode())
             .expect("slice-backed simulation cannot fail")
     }
 
@@ -340,12 +340,13 @@ impl<'a> FullSystemSim<'a> {
         reads: I,
         n_threads: usize,
         engine: EngineKind,
+        simd: SimdMode,
     ) -> Result<SimCounts>
     where
         I: IntoIterator<Item = Result<R>>,
         R: std::borrow::Borrow<crate::genome::ReadRecord>,
     {
-        self.simulate_stream_inner(reads, n_threads, engine, false)
+        self.simulate_stream_inner(reads, n_threads, engine, simd, false)
     }
 
     /// [`Self::simulate_stream`] over a **paired** read stream (R1 at
@@ -365,12 +366,13 @@ impl<'a> FullSystemSim<'a> {
         reads: I,
         n_threads: usize,
         engine: EngineKind,
+        simd: SimdMode,
     ) -> Result<SimCounts>
     where
         I: IntoIterator<Item = Result<R>>,
         R: std::borrow::Borrow<crate::genome::ReadRecord>,
     {
-        self.simulate_stream_inner(reads, n_threads, engine, true)
+        self.simulate_stream_inner(reads, n_threads, engine, simd, true)
     }
 
     fn simulate_stream_inner<I, R>(
@@ -378,6 +380,7 @@ impl<'a> FullSystemSim<'a> {
         reads: I,
         n_threads: usize,
         engine: EngineKind,
+        simd: SimdMode,
         paired: bool,
     ) -> Result<SimCounts>
     where
@@ -387,7 +390,7 @@ impl<'a> FullSystemSim<'a> {
         let n = n_threads.max(1);
         let (shards, n_reads) = if n == 1 {
             // serial: one persistent shard fed inline
-            let mut shard = SimShard::new(engine);
+            let mut shard = SimShard::new(engine, simd);
             let mut n_reads = 0u64;
             let mut chunk: Vec<SimItem> = Vec::new();
             for rec in reads {
@@ -400,7 +403,7 @@ impl<'a> FullSystemSim<'a> {
             shard.drain();
             (vec![shard], n_reads)
         } else {
-            self.simulate_stream_threaded(reads, n, engine, paired)?
+            self.simulate_stream_threaded(reads, n, engine, simd, paired)?
         };
 
         // deterministic merge: sums and disjoint map unions
@@ -448,6 +451,7 @@ impl<'a> FullSystemSim<'a> {
         reads: I,
         n: usize,
         engine: EngineKind,
+        simd: SimdMode,
         paired: bool,
     ) -> Result<(Vec<SimShard>, u64)>
     where
@@ -461,7 +465,7 @@ impl<'a> FullSystemSim<'a> {
                 let (tx, rx) = mpsc::sync_channel::<Vec<SimItem>>(SIM_CHANNEL_DEPTH);
                 txs.push(tx);
                 handles.push(s.spawn(move || {
-                    let mut shard = SimShard::new(engine);
+                    let mut shard = SimShard::new(engine, simd);
                     while let Ok(items) = rx.recv() {
                         self.sim_ingest(&mut shard, items);
                     }
@@ -699,7 +703,7 @@ mod tests {
         let slice = sim.simulate(&reads);
         for n in [1usize, 3] {
             let c = sim
-                .simulate_stream(reads.iter().cloned().map(Ok), n, EngineKind::Rust)
+                .simulate_stream(reads.iter().cloned().map(Ok), n, EngineKind::Rust, SimdMode::Off)
                 .unwrap();
             assert_eq!(c.routed_pairs, slice.routed_pairs, "n={n}");
             assert_eq!(c.reads_with_candidates, slice.reads_with_candidates, "n={n}");
@@ -712,6 +716,7 @@ mod tests {
                         .chain(std::iter::once(Err(anyhow::anyhow!("bad record")))),
                     n,
                     EngineKind::Rust,
+                    SimdMode::Off,
                 )
                 .unwrap_err();
             assert!(err.to_string().contains("bad record"), "n={n}");
@@ -735,10 +740,12 @@ mod tests {
             truth_pos: r.truth_pos,
             errors: r.errors,
         }));
-        let single = sim.simulate_stream(both.iter().map(Ok), 1, EngineKind::Rust).unwrap();
+        let single = sim
+            .simulate_stream(both.iter().map(Ok), 1, EngineKind::Rust, SimdMode::Off)
+            .unwrap();
         for n in [1usize, 3] {
             let c = sim
-                .simulate_stream_paired(reads.iter().map(Ok), n, EngineKind::Rust)
+                .simulate_stream_paired(reads.iter().map(Ok), n, EngineKind::Rust, SimdMode::Off)
                 .unwrap();
             // pairing is an arbitration-layer concept: the simulated WF
             // workload equals the both-orientations single-end run
@@ -758,7 +765,7 @@ mod tests {
         assert_eq!(single.n_pairs, 0, "single-end runs report no pairs");
         // odd streams are rejected
         let err = sim
-            .simulate_stream_paired(reads[..3].iter().map(Ok), 1, EngineKind::Rust)
+            .simulate_stream_paired(reads[..3].iter().map(Ok), 1, EngineKind::Rust, SimdMode::Off)
             .unwrap_err();
         assert!(err.to_string().contains("even"), "{err}");
     }

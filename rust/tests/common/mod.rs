@@ -143,6 +143,30 @@ pub fn rand_batch(rng: &mut SmallRng, b: usize, n: usize) -> (Vec<Vec<u8>>, Vec<
     (reads, wins)
 }
 
+/// A corpus of [`rand_batch`]es holding at least `min_instances` WF
+/// instances in total: batch sizes land off the lane grid on purpose
+/// (1..=130 uniformly, so every 64/128/256/512-bit tail path is hit)
+/// and read lengths cycle through the shapes the engines must chunk
+/// correctly (tiny, sub-word, READ_LEN-scale, long). One definition so
+/// the lane-width parity fortress and the SIMD determinism suite fuzz
+/// the *same* distribution; the seed is the caller's, so a failure
+/// message that prints it reproduces the corpus exactly.
+pub fn rand_wf_corpus(seed: u64, min_instances: usize) -> Vec<(Vec<Vec<u8>>, Vec<Vec<u8>>)> {
+    let mut rng = SmallRng::seed_from_u64(seed);
+    let lens = [1usize, 3, 17, 30, 64, 150];
+    let mut corpus = Vec::new();
+    let mut total = 0usize;
+    let mut li = 0usize;
+    while total < min_instances {
+        let b = rng.gen_range(1..=130usize);
+        let n = lens[li % lens.len()];
+        li += 1;
+        corpus.push(rand_batch(&mut rng, b, n));
+        total += b;
+    }
+    corpus
+}
+
 /// A batch of `b` random reads, each planted exactly (no errors) at the
 /// band anchor of an otherwise-random window — the standard engine
 /// micro-bench workload (shared with the benches so printed and

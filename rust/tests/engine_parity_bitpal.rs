@@ -1,57 +1,127 @@
-//! Bit-parallel engine parity: `BitpalEngine` must agree with
-//! `RustEngine` *exactly* — same bands, same best distances, same
-//! best-of-band tie-breaks, same affine direction planes — over
-//! randomized batches, including the shapes that stress the word-lane
-//! layout (batch sizes that don't divide 64), the recurrence's fixed
-//! points (all-mismatch reads, N bases), and instances that straddle
-//! the `dist == eth` filter boundary.
+//! The lane-width parity fortress: every `BitpalEngine` variant —
+//! `--simd u64`, `--simd wide` (whatever width this host resolves),
+//! `--simd off` (scalar fallback), and the portable kernel forced to
+//! each of the four lane widths (64/128/256/512 bits, runnable on any
+//! host) — must agree with `RustEngine` *exactly*. Same bands, same
+//! best distances, same best-of-band tie-breaks, same affine direction
+//! planes, over ≥10k randomized linear instances and a dedicated
+//! affine corpus per variant, including the shapes that stress the
+//! word-lane layout (batch sizes off every lane grid), the
+//! recurrence's fixed points (all-mismatch reads, N bases), and
+//! instances that straddle the `dist == eth` filter boundary.
+//!
+//! Every randomized corpus is built from a named seed constant that
+//! appears in the failure message, so a red run reproduces exactly.
 
 mod common;
 
-use common::{as_slices, rand_batch};
+use common::{as_slices, rand_wf_corpus};
 use dart_pim::params::{window_len, ETH, SAT_LINEAR};
-use dart_pim::runtime::{BitpalEngine, RustEngine, WfEngine};
-use dart_pim::util::proptest::check;
+use dart_pim::runtime::{BitpalEngine, RustEngine, SimdMode, SimdWidth, WfEngine};
 
-#[test]
-fn linear_batch_parity_randomized() {
-    check("bitpal linear parity", 0xB17A, 40, |rng| {
-        // batch sizes deliberately off the 64-lane grid
-        let b = rng.gen_range(1..=130usize);
-        let n = [1usize, 3, 17, 30, 64, 150][rng.gen_range(0..6usize)];
-        let (reads, wins) = rand_batch(rng, b, n);
-        let rr = as_slices(&reads);
-        let ww = as_slices(&wins);
-        let rust = RustEngine.linear_batch(&rr, &ww).unwrap();
-        let bit = BitpalEngine::new().linear_batch(&rr, &ww).unwrap();
-        assert_eq!(rust.best, bit.best, "b={b} n={n}");
-        assert_eq!(rust.best_j, bit.best_j, "b={b} n={n}");
-        assert_eq!(rust.band, bit.band, "b={b} n={n}");
-    });
+/// Seed of the linear fortress corpus (≥10k instances per variant).
+const LINEAR_SEED: u64 = 0xB17A_F0B7;
+/// Seed of the affine fortress corpus (≥1.5k instances per variant).
+const AFFINE_SEED: u64 = 0xAFF1_F0B7;
+
+/// Every engine variant the fortress holds to the oracle: the three
+/// `--simd` modes as the CLI builds them, plus the portable kernel
+/// pinned to each lane width (so 256/512-bit chunking is exercised
+/// even on hosts without AVX2/AVX-512).
+fn variants() -> Vec<(String, BitpalEngine)> {
+    let mut v: Vec<(String, BitpalEngine)> = [SimdMode::U64, SimdMode::Wide, SimdMode::Off]
+        .into_iter()
+        .map(|m| (format!("mode={}", m.name()), BitpalEngine::with_mode(m)))
+        .collect();
+    for w in SimdWidth::all() {
+        v.push((format!("portable{}", w.bits()), BitpalEngine::portable(w)));
+    }
+    v
 }
 
 #[test]
-fn affine_batch_parity_randomized() {
-    check("bitpal affine parity", 0xAFF1, 25, |rng| {
-        let b = rng.gen_range(1..=70usize);
-        let n = [17usize, 30, 64, 150][rng.gen_range(0..4usize)];
-        let (reads, wins) = rand_batch(rng, b, n);
+fn linear_fortress_every_width_matches_the_oracle() {
+    let corpus = rand_wf_corpus(LINEAR_SEED, 10_000);
+    // oracle once per batch, reused across all variants
+    let oracle: Vec<_> = corpus
+        .iter()
+        .map(|(reads, wins)| {
+            RustEngine.linear_batch(&as_slices(reads), &as_slices(wins)).unwrap()
+        })
+        .collect();
+    for (name, mut engine) in variants() {
+        for (bi, ((reads, wins), rust)) in corpus.iter().zip(&oracle).enumerate() {
+            let ctx = format!(
+                "{name} batch {bi} (b={}, n={}, seed {LINEAR_SEED:#x})",
+                reads.len(),
+                reads[0].len()
+            );
+            let bit = engine.linear_batch(&as_slices(reads), &as_slices(wins)).unwrap();
+            assert_eq!(rust.best, bit.best, "best diverged: {ctx}");
+            assert_eq!(rust.best_j, bit.best_j, "best_j diverged: {ctx}");
+            assert_eq!(rust.band, bit.band, "band diverged: {ctx}");
+        }
+    }
+}
+
+#[test]
+fn affine_fortress_every_width_matches_the_oracle() {
+    let corpus = rand_wf_corpus(AFFINE_SEED, 1_500);
+    let oracle: Vec<_> = corpus
+        .iter()
+        .map(|(reads, wins)| {
+            RustEngine.affine_batch(&as_slices(reads), &as_slices(wins)).unwrap()
+        })
+        .collect();
+    for (name, mut engine) in variants() {
+        for (bi, ((reads, wins), rust)) in corpus.iter().zip(&oracle).enumerate() {
+            let ctx = format!(
+                "{name} batch {bi} (b={}, n={}, seed {AFFINE_SEED:#x})",
+                reads.len(),
+                reads[0].len()
+            );
+            let bit = engine.affine_batch(&as_slices(reads), &as_slices(wins)).unwrap();
+            assert_eq!(rust.best, bit.best, "best diverged: {ctx}");
+            assert_eq!(rust.best_j, bit.best_j, "best_j diverged: {ctx}");
+            assert_eq!(rust.band, bit.band, "band diverged: {ctx}");
+            assert_eq!(rust.dirs, bit.dirs, "dirs diverged: {ctx}");
+        }
+    }
+}
+
+/// Batch sizes sitting exactly on and around every lane-grid edge
+/// (64/128/256/512 all divide into these boundaries), fed to every
+/// variant: the tail-lane masking paths are where width bugs live.
+#[test]
+fn lane_grid_edges_are_exact_at_every_width() {
+    const EDGE_SEED: u64 = 0xED6E_5EED;
+    let mut rng = dart_pim::util::SmallRng::seed_from_u64(EDGE_SEED);
+    for b in [1usize, 63, 64, 65, 127, 128, 129, 130, 255, 256, 257, 511, 512, 513] {
+        let (reads, wins) = common::rand_batch(&mut rng, b, 30);
         let rr = as_slices(&reads);
         let ww = as_slices(&wins);
-        let rust = RustEngine.affine_batch(&rr, &ww).unwrap();
-        let bit = BitpalEngine::new().affine_batch(&rr, &ww).unwrap();
-        assert_eq!(rust.best, bit.best, "b={b} n={n}");
-        assert_eq!(rust.best_j, bit.best_j, "b={b} n={n}");
-        assert_eq!(rust.band, bit.band, "b={b} n={n}");
-        assert_eq!(rust.dirs, bit.dirs, "b={b} n={n}");
-    });
+        let lin = RustEngine.linear_batch(&rr, &ww).unwrap();
+        let aff = RustEngine.affine_batch(&rr, &ww).unwrap();
+        for (name, mut engine) in variants() {
+            let ctx = format!("{name} b={b} (seed {EDGE_SEED:#x})");
+            let bl = engine.linear_batch(&rr, &ww).unwrap();
+            assert_eq!(lin.best, bl.best, "linear best: {ctx}");
+            assert_eq!(lin.best_j, bl.best_j, "linear best_j: {ctx}");
+            assert_eq!(lin.band, bl.band, "linear band: {ctx}");
+            let ba = engine.affine_batch(&rr, &ww).unwrap();
+            assert_eq!(aff.best, ba.best, "affine best: {ctx}");
+            assert_eq!(aff.dirs, ba.dirs, "affine dirs: {ctx}");
+        }
+    }
 }
 
 /// Deterministic boundary sweep: one instance per substitution count
 /// s = 0..=12 (sub positions spaced so no cheaper gap path exists, the
 /// filler base pattern shifted so off-diagonals mismatch). The batch of
 /// 13 straddles the filter threshold instance by instance:
-/// `best == min(s, eth + 1)` with the tie-break pinned at the anchor.
+/// `best == min(s, eth + 1)` with the tie-break pinned at the anchor —
+/// checked at every lane width, since the filter boundary is where a
+/// one-off in the clamp or the counter would change routing decisions.
 #[test]
 fn boundary_instances_straddle_the_filter_threshold() {
     let n = 30;
@@ -71,15 +141,34 @@ fn boundary_instances_straddle_the_filter_threshold() {
     let rr = as_slices(&reads);
     let ww = as_slices(&wins);
     let rust = RustEngine.linear_batch(&rr, &ww).unwrap();
-    let bit = BitpalEngine::new().linear_batch(&rr, &ww).unwrap();
-    assert_eq!(rust.best, bit.best);
-    assert_eq!(rust.best_j, bit.best_j);
-    assert_eq!(rust.band, bit.band);
-    for (s, &best) in bit.best.iter().enumerate() {
-        assert_eq!(best, (s as i32).min(SAT_LINEAR), "s={s}");
+    for (name, mut engine) in variants() {
+        let bit = engine.linear_batch(&rr, &ww).unwrap();
+        assert_eq!(rust.best, bit.best, "{name}");
+        assert_eq!(rust.best_j, bit.best_j, "{name}");
+        assert_eq!(rust.band, bit.band, "{name}");
+        for (s, &best) in bit.best.iter().enumerate() {
+            assert_eq!(best, (s as i32).min(SAT_LINEAR), "{name} s={s}");
+        }
+        // the sweep really covers dist == eth and the first saturated value
+        assert!(bit.best.contains(&(ETH as i32)), "{name}");
+        assert!(bit.best.contains(&SAT_LINEAR), "{name}");
+        assert_eq!(bit.best_j[ETH], ETH as u32, "{name}: anchor tie-break at the boundary");
     }
-    // the sweep really covers dist == eth and the first saturated value
-    assert!(bit.best.contains(&(ETH as i32)));
-    assert!(bit.best.contains(&SAT_LINEAR));
-    assert_eq!(bit.best_j[ETH], ETH as u32, "anchor tie-break at the boundary");
+}
+
+/// The wide mode resolves to a real lane width on this host and the
+/// scalar fallback reports none — the dispatch surface the pipeline
+/// metrics gauge reads.
+#[test]
+fn resolved_widths_are_reported() {
+    assert_eq!(BitpalEngine::with_mode(SimdMode::U64).width_bits(), 64);
+    assert_eq!(BitpalEngine::with_mode(SimdMode::Off).width_bits(), 0);
+    let wide = BitpalEngine::with_mode(SimdMode::Wide).width_bits();
+    assert!(
+        [128, 256, 512].contains(&wide),
+        "wide must resolve to a detected SIMD width, got {wide}"
+    );
+    for w in SimdWidth::all() {
+        assert_eq!(BitpalEngine::portable(w).width_bits(), w.bits());
+    }
 }

@@ -1,0 +1,147 @@
+//! Determinism invariant 8: the SIMD lane width is a dispatch detail.
+//! `map` must emit byte-identical TSV for every `--simd` mode — across
+//! thread counts, engines, and both input layouts (single-end and
+//! interleaved paired) — and a `serve` daemon pinned to one mode must
+//! answer with the same bytes as a `map` run in another. The golden
+//! fixtures make the claim executable on the exact workload the other
+//! e2e suites pin.
+
+use std::path::PathBuf;
+
+use dart_pim::cli;
+
+fn fixtures() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden")
+}
+
+fn run(cmd: &str) {
+    let argv: Vec<String> = cmd.split_whitespace().map(|s| s.to_string()).collect();
+    cli::run(&argv).unwrap_or_else(|e| panic!("`{cmd}` failed: {e:#}"));
+}
+
+/// `map` over the golden fixtures with `flags`, returning the TSV bytes.
+fn map_tsv(tag: &str, input_flags: &str, flags: &str) -> String {
+    let fx = fixtures();
+    let out = std::env::temp_dir().join(format!(
+        "dartpim-simd-{}-{tag}.tsv",
+        std::process::id()
+    ));
+    run(&format!(
+        "map --ref {} {input_flags} --low-th 0 {flags} --out {}",
+        fx.join("ref.fasta").display(),
+        out.display()
+    ));
+    let tsv = std::fs::read_to_string(&out).unwrap();
+    let _ = std::fs::remove_file(&out);
+    tsv
+}
+
+/// The full `simd × engine × threads` sweep on both input layouts: one
+/// baseline (scalar reference engine), every other cell byte-equal.
+#[test]
+fn map_bytes_are_identical_across_simd_modes_engines_and_threads() {
+    let fx = fixtures();
+    let se_input = format!("--reads {}", fx.join("reads_se.fastq").display());
+    let pe_input =
+        format!("--reads {} --interleaved", fx.join("reads_interleaved.fastq").display());
+    for (layout, input) in [("se", &se_input), ("pe", &pe_input)] {
+        let base = map_tsv(
+            &format!("{layout}-base"),
+            input,
+            "--engine rust --threads 1 --simd off",
+        );
+        assert!(!base.is_empty(), "{layout}: baseline produced no bytes");
+        let mut cells = 0usize;
+        for engine in ["rust", "bitpal"] {
+            for simd in ["u64", "wide", "off"] {
+                for threads in [1usize, 4] {
+                    let label = format!("{layout} engine={engine} simd={simd} t={threads}");
+                    let tsv = map_tsv(
+                        &format!("{layout}-{engine}-{simd}-{threads}"),
+                        input,
+                        &format!("--engine {engine} --simd {simd} --threads {threads}"),
+                    );
+                    assert_eq!(base, tsv, "{label} diverged from the scalar baseline");
+                    cells += 1;
+                }
+            }
+        }
+        assert_eq!(cells, 12, "{layout}: the sweep must cover every combination");
+    }
+}
+
+/// An unknown `--simd` value is a loud CLI error, not a silent default.
+#[test]
+fn unknown_simd_mode_is_rejected() {
+    let fx = fixtures();
+    let cmd = format!(
+        "map --ref {} --reads {} --low-th 0 --simd avx9000 --out /dev/null",
+        fx.join("ref.fasta").display(),
+        fx.join("reads_se.fastq").display()
+    );
+    let argv: Vec<String> = cmd.split_whitespace().map(|s| s.to_string()).collect();
+    let err = cli::run(&argv).expect_err("--simd avx9000 must fail");
+    assert!(format!("{err:#}").contains("avx9000"), "error names the bad value: {err:#}");
+}
+
+/// Cross-mode serve parity: a daemon pinned to `--simd off` must answer
+/// a raw-mode session with exactly the bytes `map --simd wide` writes —
+/// the lane width cannot leak through the wire protocol either.
+#[cfg(unix)]
+#[test]
+fn serve_daemon_simd_mode_cannot_change_response_bytes() {
+    use std::io::{Read, Write};
+    use std::os::unix::net::UnixStream;
+    use std::process::{Command, Stdio};
+    use std::time::{Duration, Instant};
+
+    let fx = fixtures();
+    let want = map_tsv(
+        "serve-want",
+        &format!("--reads {}", fx.join("reads_se.fastq").display()),
+        "--engine bitpal --simd wide --threads 2",
+    );
+    let sock = std::env::temp_dir().join(format!("dartpim-simd-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&sock);
+    // golden fixtures are 100 bp reads; the daemon fixes geometry at startup
+    let mut child = Command::new(env!("CARGO_BIN_EXE_dart-pim"))
+        .args(["serve", "--read-len", "100", "--low-th", "0"])
+        .arg("--ref")
+        .arg(fx.join("ref.fasta"))
+        .args(["--engine", "bitpal", "--simd", "off", "--threads", "2"])
+        .arg("--socket")
+        .arg(&sock)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning the serve daemon");
+    let t0 = Instant::now();
+    while !sock.exists() {
+        if let Some(status) = child.try_wait().expect("polling the daemon") {
+            panic!("daemon exited during startup: {status}");
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "daemon socket never appeared");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let result = std::panic::catch_unwind(|| {
+        let fastq = std::fs::read(fx.join("reads_se.fastq")).unwrap();
+        let mut s = UnixStream::connect(&sock).expect("connecting to the daemon");
+        writeln!(s, "DART/1 mode=se framing=raw").unwrap();
+        s.write_all(&fastq).unwrap();
+        s.flush().unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut out = Vec::new();
+        s.read_to_end(&mut out).unwrap();
+        assert_eq!(
+            String::from_utf8(out).unwrap(),
+            want,
+            "serve --simd off must answer with the `map --simd wide` bytes"
+        );
+    });
+    let _ = child.kill();
+    let _ = child.wait();
+    let _ = std::fs::remove_file(&sock);
+    if let Err(e) = result {
+        std::panic::resume_unwind(e);
+    }
+}
