@@ -1,9 +1,14 @@
 # Convenience targets. The Rust workspace itself needs only cargo (no
-# network, no XLA) — see README.md.
+# network, no XLA) — see README.md. `make analyze` needs only Python.
 
 PYTHON ?= python3
 
-.PHONY: build test fmt clippy artifacts python-test
+.PHONY: analyze build test fmt clippy artifacts python-test
+
+# Toolchain-free static analysis (determinism invariants, unsafe audit,
+# MSRV, docs parity) — see tools/analyze/ and ARCHITECTURE.md.
+analyze:
+	$(PYTHON) -m tools.analyze
 
 build:
 	cargo build --release
@@ -14,8 +19,9 @@ test:
 fmt:
 	cargo fmt --all --check
 
+# Lint levels come from [workspace.lints] in Cargo.toml.
 clippy:
-	cargo clippy --workspace --all-targets -- -D warnings
+	cargo clippy --workspace --all-targets
 
 # Lower the L2 JAX graphs to HLO text artifacts for the `pjrt` engine
 # (requires jax; consumed from rust/artifacts by runtime::artifacts).

@@ -33,7 +33,12 @@ fn main() {
 
     println!("\n== Algorithm 1: linear WF cell op sequence (b = {B_LINEAR}) ==");
     let cell = linear_cell_ops(B_LINEAR);
-    println!("  {} ops, {} cycles/cell (paper: 37b+19 = {})", cell.len(), MagicOp::total(&cell), 37 * B_LINEAR + 19);
+    println!(
+        "  {} ops, {} cycles/cell (paper: 37b+19 = {})",
+        cell.len(),
+        MagicOp::total(&cell),
+        37 * B_LINEAR + 19
+    );
     let acell = affine_cell_ops(B_AFFINE);
     println!(
         "  affine cell (b = {B_AFFINE}): {} ops, {} cycles/cell (constructive)",
@@ -71,7 +76,8 @@ fn main() {
         aff.fits()
     );
     println!(
-        "  traceback: {} bits/instance across 7 rows + compute-row spare (8-row instances, 8 concurrent)",
+        "  traceback: {} bits/instance across 7 rows + compute-row spare \
+         (8-row instances, 8 concurrent)",
         traceback_bits(READ_LEN)
     );
     println!("\ncrossbar_sim OK");

@@ -170,7 +170,8 @@ fn main() -> anyhow::Result<()> {
     let sample = &reads[..reads.len().min(oracle_n)];
     let rep = evaluate_accuracy(&index, sample, &mappings[..sample.len()], 5);
     println!(
-        "accuracy (n={}, oracle {:.1?}): vs BWA-MEM-analog oracle = {:.4} (exact {:.4}) | vs simulated truth = {:.4}",
+        "accuracy (n={}, oracle {:.1?}): vs BWA-MEM-analog oracle = {:.4} (exact {:.4}) \
+         | vs simulated truth = {:.4}",
         sample.len(),
         t2.elapsed(),
         rep.accuracy_vs_oracle(),
@@ -196,7 +197,8 @@ fn main() -> anyhow::Result<()> {
     let counts = metrics.to_sim_counts();
     let report = build_report(&counts, &cfg.dart, CostSource::PaperTable4, TimingMode::PaperSerial);
     println!(
-        "\nsimulated DART-PIM on this workload: T={:.4}s (dpmem {:.4} / riscv {:.4} / readout {:.4}) \
+        "\nsimulated DART-PIM on this workload: \
+         T={:.4}s (dpmem {:.4} / riscv {:.4} / readout {:.4}) \
          E={:.2}J -> {:.2} Mreads/s",
         report.exec_time_s,
         report.t_dpmem_s,
@@ -208,7 +210,8 @@ fn main() -> anyhow::Result<()> {
     let scaled = scale_counts(&counts, 389_000_000, &cfg.dart);
     let proj = build_report(&scaled, &cfg.dart, CostSource::PaperTable4, TimingMode::PaperSerial);
     println!(
-        "projected to 389M reads (maxReads={}): T={:.1}s (dpmem {:.1} / riscv {:.1} / readout {:.1}), \
+        "projected to 389M reads (maxReads={}): \
+         T={:.1}s (dpmem {:.1} / riscv {:.1} / readout {:.1}), \
          E={:.1}kJ, {:.2} Mreads/s, {:.0}W (paper @25k: 87.2s, 26.5kJ, 4.5 Mreads/s)",
         cfg.dart.max_reads,
         proj.exec_time_s,

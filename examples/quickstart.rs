@@ -85,7 +85,10 @@ fn main() -> anyhow::Result<()> {
     }
     println!("mapped {}/{} reads within ±5 bp of their origin", correct, reads.len());
     for (i, m) in mappings.iter().flatten().take(5).enumerate() {
-        println!("  example {}: read {} -> pos {} dist {} cigar {}", i, m.read_id, m.pos, m.dist, m.cigar);
+        println!(
+            "  example {}: read {} -> pos {} dist {} cigar {}",
+            i, m.read_id, m.pos, m.dist, m.cigar
+        );
     }
     assert!(correct as f64 / reads.len() as f64 > 0.9, "quickstart accuracy regression");
     println!("quickstart OK");

@@ -1,0 +1,75 @@
+"""End-to-end tests for the dart-analyze static-analysis pass.
+
+Each directory under ``tools/analyze/fixtures/`` is a miniature
+repository with either planted violations or a clean counterexample;
+``manifest.json`` records the expected ``file:line:check`` triples.
+The analyzer is exercised the way CI runs it — as a subprocess with no
+Rust toolchain involved — so these tests also pin the exit-code and
+output contract (`path:line: [check] message` on stdout, summary on
+stderr).
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[2]
+FIXTURES = REPO / "tools" / "analyze" / "fixtures"
+MANIFEST = json.loads((FIXTURES / "manifest.json").read_text())
+
+
+def run_analyze(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.analyze", *args],
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+    )
+
+
+@pytest.mark.parametrize("case", MANIFEST["cases"], ids=[c["dir"] for c in MANIFEST["cases"]])
+def test_fixture(case):
+    root = FIXTURES / case["dir"]
+    assert root.is_dir(), f"missing fixture directory {root}"
+    p = run_analyze("--root", str(root))
+    expected = case["findings"]
+    if not expected:
+        assert p.returncode == 0, f"expected clean, got:\n{p.stdout}{p.stderr}"
+        assert "dart-analyze: clean" in p.stderr
+        return
+    assert p.returncode == 1, f"expected findings, got:\n{p.stdout}{p.stderr}"
+    out_lines = [ln for ln in p.stdout.splitlines() if ln.strip()]
+    assert len(out_lines) == len(expected), f"finding count mismatch:\n{p.stdout}"
+    for f in expected:
+        prefix = "{file}:{line}: [{check}]".format(**f)
+        assert any(ln.startswith(prefix) for ln in out_lines), f"no `{prefix}` in:\n{p.stdout}"
+
+
+def test_manifest_covers_every_fixture_dir():
+    listed = {c["dir"] for c in MANIFEST["cases"]}
+    present = {d.name for d in FIXTURES.iterdir() if d.is_dir()}
+    assert listed == present, f"manifest/fixture drift: {listed ^ present}"
+
+
+def test_check_filter_runs_only_the_named_check():
+    p = run_analyze("--root", str(FIXTURES / "msrv_bad"), "--check", "line-length")
+    assert p.returncode == 0, p.stdout + p.stderr
+    p = run_analyze("--root", str(FIXTURES / "msrv_bad"), "--check", "msrv")
+    assert p.returncode == 1, p.stdout + p.stderr
+
+
+def test_list_checks_names_them_all():
+    p = run_analyze("--list-checks")
+    assert p.returncode == 0
+    names = p.stdout.split()
+    assert len(names) == 8, names
+    for expected in ("struct-exhaustive", "determinism", "unsafe", "cli-docs"):
+        assert expected in names
+
+
+def test_full_tree_is_clean():
+    p = run_analyze()
+    assert p.returncode == 0, f"the real tree must stay clean:\n{p.stdout}{p.stderr}"

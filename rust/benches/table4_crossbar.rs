@@ -20,7 +20,8 @@ fn main() {
     let lin = linear_instance_cost(CostSource::PaperTable4);
     let aff = affine_instance_cost(CostSource::PaperTable4);
     println!(
-        "PIM instance latency @2ns: linear {:.3} ms, affine {:.3} ms (x32 / x8 instances in parallel per crossbar)\n",
+        "PIM instance latency @2ns: linear {:.3} ms, affine {:.3} ms \
+         (x32 / x8 instances in parallel per crossbar)\n",
         lin.total_cycles() as f64 * 2e-9 * 1e3,
         aff.total_cycles() as f64 * 2e-9 * 1e3
     );

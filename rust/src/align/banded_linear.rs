@@ -83,7 +83,12 @@ mod tests {
     }
 
     /// Planted window: read at `shift` with `subs` substitutions.
-    pub(crate) fn planted(rng: &mut SmallRng, n: usize, shift: usize, subs: usize) -> (Vec<u8>, Vec<u8>) {
+    pub(crate) fn planted(
+        rng: &mut SmallRng,
+        n: usize,
+        shift: usize,
+        subs: usize,
+    ) -> (Vec<u8>, Vec<u8>) {
         let read: Vec<u8> = (0..n).map(|_| rng.gen_range(0..4)).collect();
         let mut win: Vec<u8> = (0..window_len(n)).map(|_| rng.gen_range(0..4)).collect();
         win[shift..shift + n].copy_from_slice(&read);

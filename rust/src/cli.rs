@@ -825,7 +825,8 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
     let rep = crate::eval::evaluate_accuracy(&index, &reads, &mappings, tol);
     println!("{}", metrics.summary());
     println!(
-        "accuracy vs oracle (±{tol}): {:.4}  exact: {:.4}  | vs truth (±{tol}): {:.4}  mapped: {}/{}",
+        "accuracy vs oracle (±{tol}): {:.4}  exact: {:.4}  \
+         | vs truth (±{tol}): {:.4}  mapped: {}/{}",
         rep.accuracy_vs_oracle(),
         rep.oracle_exact as f64 / rep.oracle_mapped.max(1) as f64,
         rep.accuracy_vs_truth(),
@@ -1007,7 +1008,8 @@ fn cmd_config() -> Result<()> {
     let c = DartPimConfig::default();
     println!("{c:#?}");
     println!(
-        "derived: {} crossbars, {} GB, {} RISC-V cores, {} reads/FIFO, {} affine instances/crossbar",
+        "derived: {} crossbars, {} GB, {} RISC-V cores, {} reads/FIFO, \
+         {} affine instances/crossbar",
         c.total_xbars(),
         c.total_capacity_bytes() >> 30,
         c.total_riscv(),
@@ -1198,13 +1200,15 @@ mod tests {
         let d = dir.to_str().unwrap();
         run(&argv(&format!("synth --out-dir {d} --len 60000 --reads 40"))).unwrap();
         run(&argv(&format!(
-            "map --ref {d}/ref.fasta --reads {d}/reads.fastq --engine rust --low-th 0 --out {d}/map.tsv"
+            "map --ref {d}/ref.fasta --reads {d}/reads.fastq --engine rust --low-th 0 \
+             --out {d}/map.tsv"
         )))
         .unwrap();
         let tsv = std::fs::read_to_string(dir.join("map.tsv")).unwrap();
         assert!(tsv.lines().count() > 30, "most reads should map:\n{tsv}");
         run(&argv(&format!(
-            "evaluate --ref {d}/ref.fasta --reads {d}/reads.fastq --truth {d}/truth.tsv --engine rust --low-th 0"
+            "evaluate --ref {d}/ref.fasta --reads {d}/reads.fastq --truth {d}/truth.tsv \
+             --engine rust --low-th 0"
         )))
         .unwrap();
         run(&argv(&format!(
@@ -1214,7 +1218,8 @@ mod tests {
         // offline indexing: build once, map from the saved index
         run(&argv(&format!("index --ref {d}/ref.fasta --out {d}/ref.idx"))).unwrap();
         run(&argv(&format!(
-            "map --index {d}/ref.idx --reads {d}/reads.fastq --engine rust --low-th 0 --out {d}/map2.tsv"
+            "map --index {d}/ref.idx --reads {d}/reads.fastq --engine rust --low-th 0 \
+             --out {d}/map2.tsv"
         )))
         .unwrap();
         let a = std::fs::read_to_string(dir.join("map.tsv")).unwrap();
@@ -1222,7 +1227,8 @@ mod tests {
         assert_eq!(a, b, "mapping from a loaded index must be identical");
         // sharded mapping must produce byte-identical TSV output
         run(&argv(&format!(
-            "map --ref {d}/ref.fasta --reads {d}/reads.fastq --engine rust --low-th 0 --threads 3 --out {d}/map3.tsv"
+            "map --ref {d}/ref.fasta --reads {d}/reads.fastq --engine rust --low-th 0 \
+             --threads 3 --out {d}/map3.tsv"
         )))
         .unwrap();
         let c = std::fs::read_to_string(dir.join("map3.tsv")).unwrap();

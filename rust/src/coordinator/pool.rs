@@ -38,10 +38,18 @@
 //! over real sockets.
 
 use std::borrow::Borrow;
+// dart-analyze: allow(determinism): the session and poisoned maps in
+// pool_worker are the only HashMaps here and neither is ever iterated —
+// every access is keyed by session id (entry/get/remove), so the maps'
+// nondeterministic order has no observable effect; see the invariant-7
+// audit comment at their declarations.
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
+// dart-analyze: allow(determinism): Instant feeds only the stage clocks
+// (t_seed/t_total), which Metrics::invariant_counters() excludes by
+// design (invariant 4); no wall-clock value reaches emitted bytes.
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -198,6 +206,15 @@ fn pool_worker(
     // batches, so session interleaving cannot change any numerics —
     // and neither can the SIMD lane width (invariant 8).
     let mut engine = cfg.worker_engine.build_simd(cfg.simd);
+    // Invariant-7 audit: HashMap iteration order is nondeterministic,
+    // but these two maps never reach emitted bytes because they are
+    // never iterated — `sessions` is touched only via entry()/remove()
+    // keyed by the session id carried in each PoolMsg, and `poisoned`
+    // only via contains_key()/insert()/remove(). Per-session outcome
+    // *order* is fixed upstream: each session has one producer, mpsc
+    // channels are FIFO per sender, and flush acks are keyed by shard
+    // index. Switching to BTreeMap would change nothing observable; the
+    // HashMap stays for O(1) lookups on the per-item hot path.
     let mut sessions: HashMap<u64, ShardWorker<'_>> = HashMap::new();
     let mut poisoned: HashMap<u64, anyhow::Error> = HashMap::new();
     while let Ok(msg) = rx.recv() {

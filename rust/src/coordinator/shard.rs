@@ -42,8 +42,15 @@
 //!   (`linear_batches`/`affine_batches`) and wall-clock timings depend on
 //!   the shard count and epoch size.
 
+// dart-analyze: allow(determinism): the only HashMap here is the
+// per-crossbar FIFO map, accessed exclusively through entry() keyed by
+// crossbar id — it is never iterated, so its order is unobservable.
+// Order-sensitive state (pair_best) deliberately lives in a BTreeMap.
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
+// dart-analyze: allow(determinism): Instant feeds only the stage clocks
+// (t_seed/t_linear/t_affine), excluded from invariant_counters() by
+// design (invariant 4); no wall-clock value reaches emitted bytes.
 use std::time::Instant;
 
 use anyhow::Result;

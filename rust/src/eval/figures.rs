@@ -62,7 +62,8 @@ pub fn fig8() -> String {
     s.push_str("Fig. 8 — throughput vs accuracy\n");
     s.push_str(&format!("{:<28} {:>16} {:>10}\n", "system", "reads/s", "accuracy"));
     for sys in published_systems() {
-        s.push_str(&format!("{:<28} {:>16.0} {:>10.3}\n", sys.name, sys.throughput(), sys.accuracy));
+        let row = format!("{:<28} {:>16.0} {:>10.3}\n", sys.name, sys.throughput(), sys.accuracy);
+        s.push_str(&row);
     }
     for (m, r) in dartpim_model_reports() {
         s.push_str(&format!(
@@ -163,14 +164,16 @@ pub fn fig10c() -> String {
     let mut s = String::new();
     s.push_str("Fig. 10c — area breakdown (mm²)\n");
     s.push_str(&format!(
-        "crossbars {:.0}  controllers {:.1}  peripherals {:.1}  riscv {:.1}  total {:.0} (paper: 8170)\n",
+        "crossbars {:.0}  controllers {:.1}  peripherals {:.1}  riscv {:.1}  \
+         total {:.0} (paper: 8170)\n",
         a.crossbars,
         a.controllers,
         a.peripherals,
         a.riscv,
         a.total()
     ));
-    s.push_str(&format!("crossbar share: {:.1}% (paper: 96.9%)\n", 100.0 * a.crossbars / a.total()));
+    let share = 100.0 * a.crossbars / a.total();
+    s.push_str(&format!("crossbar share: {share:.1}% (paper: 96.9%)\n"));
     s
 }
 
@@ -223,7 +226,9 @@ mod tests {
     #[test]
     fn fig9_has_all_systems() {
         let t = fig9();
-        for name in ["minimap2", "Parabricks", "GenASM", "SeGraM", "GenVoM", "DART-PIM (model, 25k)"] {
+        let names =
+            ["minimap2", "Parabricks", "GenASM", "SeGraM", "GenVoM", "DART-PIM (model, 25k)"];
+        for name in names {
             assert!(t.contains(name), "missing {name} in:\n{t}");
         }
     }

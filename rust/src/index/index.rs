@@ -1,6 +1,11 @@
 //! The minimizer index: minimizer k-mer -> all reference occurrences,
 //! plus segment extraction (the data a crossbar stores at indexing time).
 
+// dart-analyze: allow(determinism): the occurrence map is iterated only
+// through iter(), whose three consumers are all order-free — Router::new
+// and save_index sort the collected entries by k-mer before use, and
+// stats() computes sums/maxes. Keyed lookups (occurrences()) carry the
+// hot path; per-minimizer position lists are sorted at build time.
 use std::collections::HashMap;
 
 use super::minimizer::minimizers;

@@ -119,6 +119,9 @@ pub fn read_index<R: Read>(r: &mut R) -> io::Result<MinimizerIndex> {
             "corrupted index: {n} minimizers declared for a {ref_len}-base reference"
         )));
     }
+    // dart-analyze: allow(determinism): deserialization target only; the
+    // constructed index is read through keyed lookups or sorted/order-free
+    // iteration (see the allow note in index.rs), never raw map order.
     let mut occurrences = std::collections::HashMap::with_capacity(n);
     for entry in 0..n {
         let m = read_u64_ctx(r, "minimizer entry")?;

@@ -120,7 +120,10 @@ mod tests {
         let first: std::collections::HashSet<u64> =
             m.iter().filter(|mm| (mm.pos as usize) < 300).map(|mm| mm.kmer).collect();
         let second: std::collections::HashSet<u64> =
-            m.iter().filter(|mm| (mm.pos as usize) >= 400 && (mm.pos as usize) < 700).map(|mm| mm.kmer).collect();
+            m.iter()
+                .filter(|mm| (mm.pos as usize) >= 400 && (mm.pos as usize) < 700)
+                .map(|mm| mm.kmer)
+                .collect();
         let shared = first.intersection(&second).count();
         assert!(shared * 2 >= first.len(), "repeat copies should share most minimizers");
     }

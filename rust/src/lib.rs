@@ -29,17 +29,9 @@
 // export is a hole in that map. CI turns this into a hard error via
 // `cargo doc` with RUSTDOCFLAGS="-D warnings".
 #![warn(missing_docs)]
-// Style lints the numeric-kernel code intentionally trips: index loops
-// mirror the paper's per-cell recurrences (`needless_range_loop`), and
-// explicit `a >= lo && a <= hi` bounds mirror Table III inequalities
-// (`manual_range_contains`). Correctness lints stay enabled.
-#![allow(clippy::needless_range_loop)]
-#![allow(clippy::manual_range_contains)]
-#![allow(clippy::redundant_closure)]
-#![allow(clippy::too_many_arguments)]
-#![allow(clippy::type_complexity)]
-#![allow(clippy::useless_vec)]
-#![allow(clippy::format_in_format_args)]
+// Clippy levels (deny-all plus the named style allows for code that
+// mirrors the paper's recurrences) live in `[workspace.lints]` in the
+// root Cargo.toml, shared by every member crate.
 
 pub mod align;
 pub mod cli;

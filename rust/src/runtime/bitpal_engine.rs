@@ -245,6 +245,9 @@ mod x86 {
     /// Construct only after `is_x86_feature_detected!("avx2")`.
     pub(super) struct Avx2Kernel(pub(super) PortableKernel<[u64; 4]>);
 
+    /// # Safety
+    /// Callable only when AVX2 is available; [`Avx2Kernel`] guarantees
+    /// this by being constructed after runtime detection.
     #[target_feature(enable = "avx2")]
     unsafe fn linear_avx2(
         k: &mut PortableKernel<[u64; 4]>,
@@ -255,6 +258,9 @@ mod x86 {
         k.run_linear(reads, wins, out);
     }
 
+    /// # Safety
+    /// Callable only when AVX2 is available; [`Avx2Kernel`] guarantees
+    /// this by being constructed after runtime detection.
     #[target_feature(enable = "avx2")]
     unsafe fn affine_avx2(
         k: &mut PortableKernel<[u64; 4]>,
@@ -293,6 +299,10 @@ mod x86 {
     /// (which implies AVX2).
     pub(super) struct Avx512Kernel(pub(super) PortableKernel<[u64; 8]>);
 
+    /// # Safety
+    /// Callable only when AVX2 is available (AVX-512F detection implies
+    /// it); [`Avx512Kernel`] guarantees this by being constructed after
+    /// runtime detection.
     #[target_feature(enable = "avx2")]
     unsafe fn linear_avx512(
         k: &mut PortableKernel<[u64; 8]>,
@@ -303,6 +313,10 @@ mod x86 {
         k.run_linear(reads, wins, out);
     }
 
+    /// # Safety
+    /// Callable only when AVX2 is available (AVX-512F detection implies
+    /// it); [`Avx512Kernel`] guarantees this by being constructed after
+    /// runtime detection.
     #[target_feature(enable = "avx2")]
     unsafe fn affine_avx512(
         k: &mut PortableKernel<[u64; 8]>,

@@ -102,6 +102,10 @@ impl XlaEngine {
         }
         // one-copy literal creation (no vec1 + reshape round trip) —
         // §Perf opt 3
+        // SAFETY: reinterprets an initialized, live &[i32] as bytes —
+        // same allocation, size_of_val-exact length, and u8 has no
+        // alignment or validity requirements. The slice outlives both
+        // uses below (r/w are borrowed for the whole call).
         let as_bytes = |v: &[i32]| unsafe {
             std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
         };

@@ -33,6 +33,9 @@ pub struct SeedHit {
 /// first occurrence (the paper routes one Reads-FIFO entry per (read,
 /// minimizer) pair; a duplicate would re-route the same pair).
 pub fn seed_read(index: &MinimizerIndex, read: &[u8]) -> Vec<ReadSeed> {
+    // dart-analyze: allow(determinism): membership test only (insert()
+    // return value); the set is never iterated, and seed emission order
+    // follows the minimizers() scan of the read.
     let mut seen = std::collections::HashSet::new();
     let mut out = Vec::new();
     for m in minimizers(read, index.k, index.w) {

@@ -52,7 +52,9 @@ mod tests {
         let msg = err
             .downcast_ref::<String>()
             .cloned()
-            .unwrap_or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()).unwrap_or_default());
+            .unwrap_or_else(|| {
+                err.downcast_ref::<&str>().map(|s| s.to_string()).unwrap_or_default()
+            });
         assert!(msg.contains("always-fails") && msg.contains("seed"), "msg={msg}");
     }
 }

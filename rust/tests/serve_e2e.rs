@@ -102,7 +102,8 @@ impl Drop for Daemon {
 fn map_tsv(input_flags: &str, engine_flags: &str) -> String {
     let fx = fixtures();
     let seq = DAEMON_SEQ.fetch_add(1, Ordering::Relaxed);
-    let out = std::env::temp_dir().join(format!("dartpim-serve-map-{}-{seq}.tsv", std::process::id()));
+    let name = format!("dartpim-serve-map-{}-{seq}.tsv", std::process::id());
+    let out = std::env::temp_dir().join(name);
     let cmd = format!(
         "map --ref {} {input_flags} --low-th 0 {engine_flags} --out {}",
         fx.join("ref.fasta").display(),
@@ -152,7 +153,8 @@ fn serve_matches_map_byte_for_byte_across_engines_and_threads() {
     let se = std::fs::read(fx.join("reads_se.fastq")).unwrap();
     let pe = std::fs::read(fx.join("reads_interleaved.fastq")).unwrap();
     let se_input = format!("--reads {}", fx.join("reads_se.fastq").display());
-    let pe_input = format!("--reads {} --interleaved", fx.join("reads_interleaved.fastq").display());
+    let pe_input =
+        format!("--reads {} --interleaved", fx.join("reads_interleaved.fastq").display());
     for engine in ["rust", "bitpal"] {
         for threads in ["1", "4"] {
             let flags = format!("--engine {engine} --threads {threads}");

@@ -1,0 +1,1 @@
+# Repository tooling namespace (stdlib-only; no third-party imports).

@@ -1,0 +1,51 @@
+"""dart-analyze: a toolchain-free static-analysis pass over the Rust tree.
+
+No container this repo grows in has ever shipped a Rust toolchain
+(ROADMAP P0), so every compile/correctness gate that *can* run without
+`cargo` must. This package mechanizes the manual "line-by-line compile
+review" that previous PRs relied on, as token-level checks on top of a
+small Rust lexer (comments, strings, and doc-comments are stripped
+before any check looks at code, so a `HashMap` in prose never trips the
+determinism check).
+
+Run it from the repository root::
+
+    python3 -m tools.analyze            # whole tree, exit 0 = clean
+    make analyze                        # same thing
+
+Checks (each name is also its annotation key):
+
+- ``struct-exhaustive`` — every literal construction of an analyzed
+  struct (``Metrics``, ``SimCounts``) names exactly the declared fields
+  or uses functional-update ``..`` syntax. Kills the E0063 class that
+  shipped in PR 5 when ``SimCounts`` grew fields.
+- ``determinism``      — ``HashMap``/``HashSet``, ``Instant``/
+  ``SystemTime``, and unseeded randomness are forbidden in
+  byte-producing modules unless annotated with a written proof.
+- ``metrics-registry`` — every ``Metrics`` counter field appears in
+  ``invariant_counters()`` or carries the non-invariant annotation.
+- ``unsafe``           — every ``unsafe`` block/fn/impl carries an
+  adjacent ``SAFETY:`` comment (or a ``# Safety`` doc section), and
+  ``#[target_feature]`` fns are reached only through runtime-detection
+  guards.
+- ``msrv``             — denylist of std APIs stabilized after the
+  declared ``rust-version = "1.74"``.
+- ``line-length``      — the rustfmt 100-column limit, enforceable
+  without rustfmt.
+- ``pub-doc``          — public items need doc comments (the
+  ``missing_docs`` gate, toolchain-free).
+- ``cli-docs``         — every ``--flag`` string in ``cli.rs`` appears
+  in README.md or SERVING.md.
+
+Annotation grammar (suppresses one check at one site, reason required)::
+
+    // dart-analyze: allow(<check>): <reason>
+
+placed either trailing on the offending line or in the comment block
+directly above it. An annotation with an unknown check name or an empty
+reason is itself a finding — there is no silent allowlisting.
+"""
+
+__all__ = ["main"]
+
+from .runner import main

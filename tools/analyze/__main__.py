@@ -1,0 +1,8 @@
+"""Entry point: ``python3 -m tools.analyze`` (see package docs)."""
+
+import sys
+
+from .runner import main
+
+if __name__ == "__main__":
+    sys.exit(main())

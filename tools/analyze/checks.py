@@ -1,0 +1,547 @@
+"""The checks. Each takes the parsed tree and yields findings.
+
+Every check name doubles as its annotation key — see the package doc
+for the ``// dart-analyze: allow(<check>): <reason>`` grammar. A check
+asks :meth:`SourceFile.allowed` *only* at a genuine violation site, so
+the runner can flag never-consulted annotations as stale.
+"""
+
+from __future__ import annotations
+
+import re
+
+from . import config
+from .model import Finding, SourceFile
+
+FLAG_RE = re.compile(r"--[a-z][a-z0-9-]*")
+
+_ITEM_KEYWORDS = {
+    "fn",
+    "struct",
+    "enum",
+    "trait",
+    "const",
+    "static",
+    "type",
+    "mod",
+    "union",
+}
+
+# A `Name {` where the previous token is one of these is a declaration,
+# type position, or body brace — not a struct literal.
+_NOT_A_LITERAL_BEFORE = {"struct", "enum", "union", "trait", "impl", "for", "mod", "dyn", "->"}
+
+
+# ---------------------------------------------------------------------
+# shared parsing helpers
+
+
+def _angle_delta(text: str) -> int:
+    """Angle-bracket depth contribution of one token (`<<`/`>>` are
+    single tokens after lexing)."""
+    return {"<": 1, "<<": 2, ">": -1, ">>": -2}.get(text, 0)
+
+
+def _skip_attr(sf: SourceFile, i: int) -> int:
+    """If tokens[i] starts an attribute (`#[..]` / `#![..]`), return the
+    index just past it; else return i."""
+    toks = sf.tokens
+    j = i
+    if j < len(toks) and toks[j].text == "#":
+        j += 1
+        if j < len(toks) and toks[j].text == "!":
+            j += 1
+        if j < len(toks) and toks[j].text == "[":
+            return sf._match(j, "[", "]") + 1
+    return i
+
+
+def parse_struct_decls(files: dict[str, SourceFile]):
+    """All `struct Name { fields }` declarations in the tree:
+    name -> list of (path, line, [(field, first_type_token)])."""
+    decls: dict[str, list] = {}
+    for sf in files.values():
+        toks = sf.tokens
+        for i, t in enumerate(toks):
+            if t.text != "struct" or t.kind != "ident":
+                continue
+            if i + 1 >= len(toks) or toks[i + 1].kind != "ident":
+                continue
+            name = toks[i + 1].text
+            j = i + 2
+            # skip generics on the declaration
+            angle = 0
+            while j < len(toks):
+                angle += _angle_delta(toks[j].text)
+                if toks[j].text == "{" and angle == 0:
+                    break
+                if toks[j].text == ";" and angle == 0:
+                    j = -1  # unit / tuple struct: nothing to check
+                    break
+                if toks[j].text == "(" and angle == 0:
+                    j = -1  # tuple struct
+                    break
+                j += 1
+            if j == -1 or j >= len(toks):
+                continue
+            fields = _parse_struct_fields(sf, j)
+            decls.setdefault(name, []).append((sf.path, t.line, fields))
+    return decls
+
+
+def _parse_struct_fields(sf: SourceFile, i_open: int):
+    """Fields of a struct body opened at token ``i_open``:
+    [(name, first_type_token, decl_line)]."""
+    toks = sf.tokens
+    close = sf._match(i_open, "{", "}")
+    fields = []
+    j = i_open + 1
+    while j < close:
+        j = _skip_attr(sf, j)
+        if j >= close:
+            break
+        if toks[j].text == "pub":
+            j += 1
+            if j < close and toks[j].text == "(":
+                j = sf._match(j, "(", ")") + 1
+        if (
+            j + 1 < close
+            and toks[j].kind == "ident"
+            and toks[j + 1].text == ":"
+        ):
+            name_tok = toks[j]
+            # first identifier of the type, for the timing-type exemption
+            k = j + 2
+            type_tok = toks[k].text if k < close else ""
+            fields.append((name_tok.text, type_tok, name_tok.line))
+        # advance to the `,` that ends this field (angle-aware)
+        depth = angle = 0
+        while j < close:
+            txt = toks[j].text
+            if txt in "([{":
+                depth += 1
+            elif txt in ")]}":
+                depth -= 1
+            angle += _angle_delta(txt) if depth == 0 else 0
+            if txt == "," and depth == 0 and angle <= 0:
+                j += 1
+                break
+            j += 1
+    return fields
+
+
+def _literal_sites(sf: SourceFile, names):
+    """Token indices of `Name {` struct-literal/pattern sites in ``sf``."""
+    toks = sf.tokens
+    for i, t in enumerate(toks):
+        if t.kind != "ident" or t.text not in names:
+            continue
+        if i + 1 >= len(toks) or toks[i + 1].text != "{":
+            continue
+        prev = toks[i - 1].text if i > 0 else ""
+        if prev in _NOT_A_LITERAL_BEFORE:
+            continue
+        yield i
+
+
+def _parse_literal_body(sf: SourceFile, i_open: int):
+    """Field names and rest-ness of the literal body opened at
+    ``i_open``: (set_of_names, has_rest)."""
+    toks = sf.tokens
+    close = sf._match(i_open, "{", "}")
+    names: set[str] = set()
+    has_rest = False
+    j = i_open + 1
+    while j < close:
+        if toks[j].text == "..":
+            has_rest = True
+            break  # functional update / rest pattern ends the list
+        if toks[j].kind == "ident":
+            names.add(toks[j].text)
+        # skip this entry's value up to the next top-level `,`
+        depth = 0
+        while j < close:
+            txt = toks[j].text
+            if txt in "([{":
+                depth += 1
+            elif txt in ")]}":
+                depth -= 1
+            if txt == "," and depth == 0:
+                j += 1
+                break
+            j += 1
+    return names, has_rest
+
+
+# ---------------------------------------------------------------------
+# checks
+
+
+def check_struct_exhaustive(files, tree):
+    decls = parse_struct_decls(files)
+    out = []
+    for name in config.EXHAUSTIVE_STRUCTS:
+        for d in decls.get(name, []):
+            _, _, fields = d
+            declared = {f[0] for f in fields}
+            for sf in files.values():
+                for i in _literal_sites(sf, {name}):
+                    line = sf.tokens[i].line
+                    used, has_rest = _parse_literal_body(sf, i + 1)
+                    unknown = sorted(used - declared)
+                    missing = sorted(declared - used)
+                    msgs = []
+                    if unknown:
+                        msgs.append(f"unknown field(s) {', '.join(unknown)}")
+                    if missing and not has_rest:
+                        msgs.append(
+                            f"missing field(s) {', '.join(missing)} and no `..` base"
+                        )
+                    if msgs and not sf.allowed("struct-exhaustive", line):
+                        out.append(
+                            Finding(
+                                sf.path,
+                                line,
+                                "struct-exhaustive",
+                                f"`{name}` literal is not exhaustive: "
+                                + "; ".join(msgs)
+                                + f" (declared at {d[0]}:{d[1]})",
+                            )
+                        )
+    return out
+
+
+def check_determinism(files, tree):
+    out = []
+    for sf in files.values():
+        if not sf.path.startswith(tuple(d + "/" for d in config.BYTE_PRODUCING_DIRS)):
+            continue
+        for category, idents in config.DETERMINISM_HAZARDS.items():
+            first = next(
+                (
+                    t
+                    for t in sf.tokens
+                    if t.kind == "ident" and t.text in idents and not sf.in_test(t.line)
+                ),
+                None,
+            )
+            if first is None:
+                continue
+            if sf.allowed("determinism", first.line):
+                continue
+            out.append(
+                Finding(
+                    sf.path,
+                    first.line,
+                    "determinism",
+                    f"{category} hazard `{first.text}` in byte-producing module; "
+                    "prove iteration order / wall clock / randomness never reaches "
+                    "emitted bytes with `// dart-analyze: allow(determinism): "
+                    "<proof>` at this first use, or remove it",
+                )
+            )
+    return out
+
+
+def check_metrics_registry(files, tree):
+    out = []
+    for sf in files.values():
+        toks = sf.tokens
+        has_registry = any(
+            t.text == "invariant_counters" and i > 0 and toks[i - 1].text == "fn"
+            for i, t in enumerate(toks)
+        )
+        decl_idx = next(
+            (
+                i
+                for i, t in enumerate(toks)
+                if t.text == "struct" and i + 1 < len(toks) and toks[i + 1].text == "Metrics"
+            ),
+            None,
+        )
+        if not has_registry or decl_idx is None:
+            continue
+        # fields
+        j = decl_idx + 2
+        while j < len(toks) and toks[j].text != "{":
+            j += 1
+        fields = _parse_struct_fields(sf, j)
+        # idents mentioned as `self.<x>` inside invariant_counters body
+        registered: set[str] = set()
+        for i, t in enumerate(toks):
+            if t.text == "invariant_counters" and toks[i - 1].text == "fn":
+                k = i
+                while k < len(toks) and toks[k].text != "{":
+                    k += 1
+                body_end = sf._match(k, "{", "}")
+                for m in range(k, body_end):
+                    if (
+                        toks[m].text == "self"
+                        and m + 2 < body_end
+                        and toks[m + 1].text == "."
+                        and toks[m + 2].kind == "ident"
+                    ):
+                        registered.add(toks[m + 2].text)
+        for name, type_tok, line in fields:
+            if type_tok in config.METRICS_TIMING_TYPES:
+                continue
+            if name in registered:
+                continue
+            if sf.allowed("metrics-registry", line):
+                continue
+            out.append(
+                Finding(
+                    sf.path,
+                    line,
+                    "metrics-registry",
+                    f"`Metrics::{name}` is not in invariant_counters() and carries "
+                    "no `// dart-analyze: allow(metrics-registry): <why it is not "
+                    "a workload invariant>` annotation (invariant 4)",
+                )
+            )
+    return out
+
+
+def check_unsafe(files, tree):
+    out = []
+    tf_fns: list[tuple[str, str]] = []  # (path, fn name)
+    for sf in files.values():
+        toks = sf.tokens
+        for i, t in enumerate(toks):
+            # record #[target_feature] fn names
+            if (
+                t.text == "target_feature"
+                and i >= 2
+                and toks[i - 1].text == "["
+                and toks[i - 2].text == "#"
+            ):
+                k = sf._match(i - 1, "[", "]") + 1
+                while k < len(toks) and toks[k].text != "fn":
+                    k = max(k + 1, _skip_attr(sf, k))
+                if k + 1 < len(toks) and toks[k + 1].kind == "ident":
+                    tf_fns.append((sf.path, toks[k + 1].text))
+                if "is_x86_feature_detected" not in sf.text:
+                    out.append(
+                        Finding(
+                            sf.path,
+                            t.line,
+                            "unsafe",
+                            "#[target_feature] fn in a file with no "
+                            "is_x86_feature_detected! runtime guard",
+                        )
+                    )
+            if t.kind != "ident" or t.text != "unsafe":
+                continue
+            nxt = toks[i + 1].text if i + 1 < len(toks) else ""
+            if nxt == "fn":
+                if i + 2 < len(toks) and toks[i + 2].text == "(":
+                    continue  # `unsafe fn(..)` pointer type, not a decl
+                ok = sf.has_adjacent(t.line, "SAFETY") or sf.has_adjacent(t.line, "# Safety")
+                what = "unsafe fn"
+            elif nxt == "{":
+                ok = sf.has_adjacent(t.line, "SAFETY")
+                what = "unsafe block"
+            elif nxt in ("impl", "extern", "trait"):
+                ok = sf.has_adjacent(t.line, "SAFETY") or sf.has_adjacent(t.line, "# Safety")
+                what = f"unsafe {nxt}"
+            else:
+                continue
+            if not ok and not sf.allowed("unsafe", t.line):
+                out.append(
+                    Finding(
+                        sf.path,
+                        t.line,
+                        "unsafe",
+                        f"{what} without an adjacent `// SAFETY:` comment "
+                        "(or `# Safety` doc section) stating the discharged "
+                        "precondition",
+                    )
+                )
+    # every call of a #[target_feature] fn needs its own SAFETY comment:
+    # the runtime-detection guard is the precondition being discharged.
+    names = {n for _, n in tf_fns}
+    for sf in files.values():
+        toks = sf.tokens
+        for i, t in enumerate(toks):
+            if t.kind != "ident" or t.text not in names:
+                continue
+            if i + 1 >= len(toks) or toks[i + 1].text != "(":
+                continue
+            if i > 0 and toks[i - 1].text == "fn":
+                continue  # the definition itself
+            if not sf.has_adjacent(t.line, "SAFETY") and not sf.allowed("unsafe", t.line):
+                out.append(
+                    Finding(
+                        sf.path,
+                        t.line,
+                        "unsafe",
+                        f"call of #[target_feature] fn `{t.text}` without an "
+                        "adjacent `// SAFETY:` comment naming the runtime "
+                        "detection that guards it",
+                    )
+                )
+    return out
+
+
+def check_msrv(files, tree):
+    out = []
+    for sf in files.values():
+        for t in sf.tokens:
+            if t.kind == "ident" and t.text in config.MSRV_DENYLIST:
+                if sf.allowed("msrv", t.line):
+                    continue
+                out.append(
+                    Finding(
+                        sf.path,
+                        t.line,
+                        "msrv",
+                        f"`{t.text}` needs Rust {config.MSRV_DENYLIST[t.text]} but "
+                        f"rust-version pins {config.MSRV}",
+                    )
+                )
+    return out
+
+
+def check_line_length(files, tree):
+    out = []
+    for sf in files.values():
+        for ln, text in enumerate(sf.lines, start=1):
+            if len(text) > config.MAX_WIDTH and not sf.allowed("line-length", ln):
+                out.append(
+                    Finding(
+                        sf.path,
+                        ln,
+                        "line-length",
+                        f"line is {len(text)} columns (rustfmt max_width is "
+                        f"{config.MAX_WIDTH})",
+                    )
+                )
+    return out
+
+
+def check_pub_doc(files, tree):
+    out = []
+    for sf in files.values():
+        if not sf.path.startswith(tuple(d + "/" for d in config.PUB_DOC_DIRS)):
+            continue
+        toks = sf.tokens
+        for i, t in enumerate(toks):
+            if t.kind != "ident" or t.text != "pub" or sf.in_test(t.line):
+                continue
+            nxt = toks[i + 1] if i + 1 < len(toks) else None
+            if nxt is None or nxt.text in ("(", "use"):
+                continue  # restricted visibility / re-export
+            j = i + 1
+            while j < len(toks) and toks[j].text in ("unsafe", "async", "extern") or (
+                j < len(toks) and toks[j].kind == "str"
+            ):
+                j += 1
+            if j >= len(toks):
+                continue
+            kw = toks[j].text
+            is_field = (
+                toks[j].kind == "ident"
+                and kw not in _ITEM_KEYWORDS
+                and j + 1 < len(toks)
+                and toks[j + 1].text == ":"
+            )
+            if kw not in _ITEM_KEYWORDS and not is_field:
+                continue
+            if _has_doc(sf, t.line):
+                continue
+            if kw == "mod" and _mod_file_has_inner_doc(files, sf, toks, j):
+                continue
+            if sf.allowed("pub-doc", t.line):
+                continue
+            what = "field" if is_field else f"`pub {kw}`"
+            name = toks[j + 1].text if j + 1 < len(toks) and not is_field else kw
+            if is_field:
+                name = kw
+            out.append(
+                Finding(
+                    sf.path,
+                    t.line,
+                    "pub-doc",
+                    f"public {what} `{name}` has no doc comment (missing_docs "
+                    "is a CI docs-job error; document it here instead of "
+                    "waiting for a toolchain)",
+                )
+            )
+    return out
+
+
+def _has_doc(sf: SourceFile, line: int) -> bool:
+    # Only *outer* docs (`///`, `/**`) document the item below; inner
+    # (`//!`) docs belong to the enclosing module and must not satisfy
+    # the first item in a file.
+    for c in sf.comment_block_above(line):
+        if c.doc and c.text.startswith(("///", "/**")):
+            return True
+    # #[doc = ...] / #[doc(hidden)] attributes count
+    ln = line - 1
+    while ln >= 1:
+        stripped = sf.lines[ln - 1].lstrip()
+        if stripped.startswith("#[doc"):
+            return True
+        if stripped.startswith(("#[", "#![")) or stripped == "":
+            ln -= 1
+            continue
+        break
+    return False
+
+
+def _mod_file_has_inner_doc(files, sf: SourceFile, toks, j: int) -> bool:
+    """`pub mod name;` is documented if name.rs / name/mod.rs opens with
+    inner docs (`//!`)."""
+    if j + 1 >= len(toks) or toks[j + 1].kind != "ident":
+        return False
+    if j + 2 >= len(toks) or toks[j + 2].text != ";":
+        return False
+    name = toks[j + 1].text
+    base = sf.path.rsplit("/", 1)[0]
+    for cand in (f"{base}/{name}.rs", f"{base}/{name}/mod.rs"):
+        target = files.get(cand)
+        if target and any(c.doc and c.text.startswith("//!") for c in target.comments):
+            return True
+    return False
+
+
+def check_cli_docs(files, tree):
+    out = []
+    cli = files.get(config.CLI_FILE)
+    if cli is None:
+        return out
+    docs_text = ""
+    for doc in config.CLI_DOC_FILES:
+        docs_text += tree.read_doc(doc)
+    seen: set[str] = set()
+    for t in cli.tokens:
+        if t.kind != "str":
+            continue
+        for flag in FLAG_RE.findall(t.text):
+            if flag in seen:
+                continue
+            seen.add(flag)
+            if flag not in docs_text and not cli.allowed("cli-docs", t.line):
+                out.append(
+                    Finding(
+                        cli.path,
+                        t.line,
+                        "cli-docs",
+                        f"flag `{flag}` appears in cli.rs but in none of "
+                        f"{', '.join(config.CLI_DOC_FILES)}",
+                    )
+                )
+    return out
+
+
+CHECKS = {
+    "struct-exhaustive": check_struct_exhaustive,
+    "determinism": check_determinism,
+    "metrics-registry": check_metrics_registry,
+    "unsafe": check_unsafe,
+    "msrv": check_msrv,
+    "line-length": check_line_length,
+    "pub-doc": check_pub_doc,
+    "cli-docs": check_cli_docs,
+}

@@ -1,0 +1,21 @@
+//! Planted violations: an unknown check name, an empty reason, and a
+//! stale allow that suppresses nothing (annotation).
+
+// dart-analyze: allow(no-such-check): not a real check name.
+fn one() -> u32 {
+    1
+}
+
+// dart-analyze: allow(unsafe):
+fn two() -> u32 {
+    2
+}
+
+// dart-analyze: allow(msrv): nothing on the next line needs this.
+fn three() -> u32 {
+    3
+}
+
+fn main() {
+    let _ = one() + two() + three();
+}

@@ -1,0 +1,8 @@
+//! Planted violation: a flag parsed here but absent from the
+//! documentation files (cli-docs).
+
+const USAGE: &str = "dart-pim frob --frobnicate";
+
+fn main() {
+    let _ = USAGE;
+}

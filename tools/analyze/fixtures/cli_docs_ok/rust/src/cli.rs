@@ -1,0 +1,7 @@
+//! Clean counterexample: the parsed flag is documented (cli-docs).
+
+const USAGE: &str = "dart-pim frob --frobnicate";
+
+fn main() {
+    let _ = USAGE;
+}

@@ -1,0 +1,16 @@
+//! Planted violation: an unannotated `HashMap` in a byte-producing
+//! module (determinism).
+
+use std::collections::HashMap;
+
+fn count(keys: &[u64]) -> usize {
+    let mut m: HashMap<u64, u32> = HashMap::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0) += 1;
+    }
+    m.len()
+}
+
+fn main() {
+    let _ = count(&[1, 2, 2]);
+}

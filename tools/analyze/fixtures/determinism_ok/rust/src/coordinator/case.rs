@@ -1,0 +1,18 @@
+//! Clean counterexample: the hazard carries an annotation with a
+//! written proof at its first use (determinism).
+
+// dart-analyze: allow(determinism): the map is keyed-access only and
+// never iterated, so its order cannot reach emitted bytes.
+use std::collections::HashMap;
+
+fn count(keys: &[u64]) -> usize {
+    let mut m: HashMap<u64, u32> = HashMap::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0) += 1;
+    }
+    m.len()
+}
+
+fn main() {
+    let _ = count(&[1, 2, 2]);
+}

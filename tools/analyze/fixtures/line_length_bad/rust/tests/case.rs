@@ -1,0 +1,5 @@
+//! Planted violation: a line wider than rustfmt's max_width (line-length).
+
+fn main() {
+    // planted: padding padding padding padding padding padding padding padding padding padding padding
+}

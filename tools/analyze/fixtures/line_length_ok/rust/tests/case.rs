@@ -1,0 +1,5 @@
+//! Clean counterexample: every line fits the budget (line-length).
+
+fn main() {
+    // short and within budget
+}

@@ -1,0 +1,20 @@
+//! Planted violation: a `Metrics` counter field absent from
+//! `invariant_counters()` and unannotated (metrics-registry).
+
+use std::collections::BTreeMap;
+
+struct Metrics {
+    mapped: u64,
+    dropped: u64,
+}
+
+impl Metrics {
+    fn invariant_counters(&self) -> BTreeMap<&'static str, u64> {
+        BTreeMap::from([("mapped", self.mapped)])
+    }
+}
+
+fn main() {
+    let m = Metrics { mapped: 0, dropped: 0 };
+    let _ = m.invariant_counters();
+}

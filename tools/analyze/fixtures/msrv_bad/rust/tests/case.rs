@@ -1,0 +1,9 @@
+//! Planted violation: an API stabilized after the pinned MSRV (msrv).
+
+fn check(v: Option<u32>) -> bool {
+    v.is_none_or(|x| x > 0)
+}
+
+fn main() {
+    let _ = check(None);
+}

@@ -1,0 +1,9 @@
+//! Clean counterexample: the MSRV-compatible spelling (msrv).
+
+fn check(v: Option<u32>) -> bool {
+    v.map_or(true, |x| x > 0)
+}
+
+fn main() {
+    let _ = check(None);
+}

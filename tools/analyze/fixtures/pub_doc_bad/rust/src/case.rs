@@ -1,0 +1,6 @@
+//! Planted violation: an undocumented `pub` item in the library tree
+//! (pub-doc).
+
+pub fn undocumented() -> u32 {
+    7
+}

@@ -1,0 +1,7 @@
+//! Clean counterexample: the public item carries a doc comment
+//! (pub-doc).
+
+/// Returns the answer used by the fixture tests.
+pub fn documented() -> u32 {
+    7
+}

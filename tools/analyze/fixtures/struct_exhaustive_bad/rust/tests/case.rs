@@ -1,0 +1,15 @@
+//! Planted violation: a `SimCounts` literal that omits a declared
+//! field without a `..` base (struct-exhaustive).
+
+struct SimCounts {
+    reads: u64,
+    pairs: u64,
+}
+
+fn mk() -> SimCounts {
+    SimCounts { reads: 0 }
+}
+
+fn main() {
+    let _ = mk();
+}

@@ -1,0 +1,19 @@
+//! Clean counterexample: exhaustive and `..`-based `SimCounts`
+//! literals (struct-exhaustive).
+
+struct SimCounts {
+    reads: u64,
+    pairs: u64,
+}
+
+fn mk() -> SimCounts {
+    SimCounts { reads: 0, pairs: 0 }
+}
+
+fn bump() -> SimCounts {
+    SimCounts { reads: 1, ..mk() }
+}
+
+fn main() {
+    let _ = bump();
+}

@@ -1,0 +1,11 @@
+//! Planted violation: an `unsafe` block with no adjacent `// SAFETY:`
+//! comment (unsafe).
+
+fn read_raw(v: &u32) -> u32 {
+    let p = v as *const u32;
+    unsafe { *p }
+}
+
+fn main() {
+    let _ = read_raw(&7);
+}

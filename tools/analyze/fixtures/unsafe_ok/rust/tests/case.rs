@@ -1,0 +1,13 @@
+//! Clean counterexample: the discharged precondition is stated next to
+//! the `unsafe` block (unsafe).
+
+fn read_raw(v: &u32) -> u32 {
+    let p = v as *const u32;
+    // SAFETY: `p` was created from a live shared reference one line
+    // above, so it is valid, aligned, and initialized for this read.
+    unsafe { *p }
+}
+
+fn main() {
+    let _ = read_raw(&7);
+}

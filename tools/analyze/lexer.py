@@ -1,0 +1,213 @@
+"""A small Rust lexer: just enough to separate code from non-code.
+
+The checks in this package are token-level, so the lexer's one job is
+to classify every byte of a ``.rs`` file as *code token* or *comment*
+correctly — string literals (including raw/byte strings), char literals
+vs. lifetimes, nested block comments, and doc comments are the cases a
+naive regex pass gets wrong, and each of those wrong cases would either
+hide a real violation or fabricate one.
+
+The output is deliberately lossy in the other direction: numeric
+suffixes, operator composition beyond a small multi-char set, and
+keyword-vs-identifier distinctions are left to the checks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# Multi-char operators the checks care about, longest first. `..=` must
+# precede `..` and `..` must exist so rest-patterns (`..Default::default()`,
+# `Struct { .. }`) surface as one token.
+_PUNCT2 = ("..=", "::", "->", "=>", "..", "&&", "||", "<<", ">>")
+
+_IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+_IDENT_CONT = _IDENT_START | set("0123456789")
+
+
+@dataclass(frozen=True)
+class Tok:
+    """One code token."""
+
+    kind: str  # "ident" | "num" | "str" | "char" | "lifetime" | "punct"
+    text: str
+    line: int  # 1-based line of the token's first character
+
+
+@dataclass(frozen=True)
+class Comment:
+    """One comment, with enough position info to attach it to code."""
+
+    text: str  # raw text including the `//`/`/*` introducer
+    line: int  # 1-based first line
+    end_line: int  # 1-based last line (== line for line comments)
+    doc: bool  # `///`, `//!`, `/**`, `/*!`
+
+
+def lex(src: str):
+    """Lex ``src`` into ``(tokens, comments)`` lists."""
+    toks: list[Tok] = []
+    comments: list[Comment] = []
+    i, n, line = 0, len(src), 1
+
+    def bump_lines(text: str) -> int:
+        return text.count("\n")
+
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        # -- comments ------------------------------------------------
+        if c == "/" and i + 1 < n:
+            nxt = src[i + 1]
+            if nxt == "/":
+                j = src.find("\n", i)
+                if j == -1:
+                    j = n
+                text = src[i:j]
+                comments.append(
+                    Comment(text, line, line, doc=text.startswith(("///", "//!")))
+                )
+                i = j
+                continue
+            if nxt == "*":
+                # nested block comments are legal Rust
+                depth, j = 1, i + 2
+                while j < n and depth:
+                    if src.startswith("/*", j):
+                        depth += 1
+                        j += 2
+                    elif src.startswith("*/", j):
+                        depth -= 1
+                        j += 2
+                    else:
+                        j += 1
+                text = src[i:j]
+                comments.append(
+                    Comment(
+                        text,
+                        line,
+                        line + bump_lines(text),
+                        doc=text.startswith(("/**", "/*!")) and not text.startswith("/**/"),
+                    )
+                )
+                line += bump_lines(text)
+                i = j
+                continue
+        # -- string-ish literals --------------------------------------
+        # raw / byte-string prefixes: r"", r#""#, b"", br"", br#""#
+        if c in "rb" and _string_prefix(src, i):
+            j, text = _string_prefix(src, i)
+            toks.append(Tok("str", text, line))
+            line += bump_lines(text)
+            i = j
+            continue
+        if c == '"':
+            j = _scan_quoted(src, i + 1)
+            text = src[i:j]
+            toks.append(Tok("str", text, line))
+            line += bump_lines(text)
+            i = j
+            continue
+        if c == "'":
+            # char literal or lifetime
+            if i + 1 < n and src[i + 1] == "\\":
+                j = _scan_quoted(src, i + 2, quote="'")
+                toks.append(Tok("char", src[i:j], line))
+                i = j
+                continue
+            if i + 2 < n and src[i + 1] in _IDENT_START:
+                # 'a' is a char; 'a / 'static (no closing quote) is a
+                # lifetime. Scan the identifier and peek.
+                j = i + 1
+                while j < n and src[j] in _IDENT_CONT:
+                    j += 1
+                if j < n and src[j] == "'":
+                    toks.append(Tok("char", src[i : j + 1], line))
+                    i = j + 1
+                else:
+                    toks.append(Tok("lifetime", src[i:j], line))
+                    i = j
+                continue
+            if i + 2 < n and src[i + 2] == "'":
+                toks.append(Tok("char", src[i : i + 3], line))
+                i = i + 3
+                continue
+            toks.append(Tok("punct", "'", line))
+            i += 1
+            continue
+        # -- identifiers / numbers ------------------------------------
+        if c in _IDENT_START:
+            j = i + 1
+            while j < n and src[j] in _IDENT_CONT:
+                j += 1
+            toks.append(Tok("ident", src[i:j], line))
+            i = j
+            continue
+        if c.isdigit():
+            j = i + 1
+            # good enough for 1_000, 0x5eed, 1e-3, suffixes; `..` after a
+            # number must not be swallowed by a float scan
+            while j < n and (src[j] in _IDENT_CONT or src[j] == "."):
+                if src[j] == "." and src.startswith("..", j):
+                    break
+                j += 1
+            toks.append(Tok("num", src[i:j], line))
+            i = j
+            continue
+        # -- punctuation ----------------------------------------------
+        for p in _PUNCT2:
+            if src.startswith(p, i):
+                toks.append(Tok("punct", p, line))
+                i += len(p)
+                break
+        else:
+            toks.append(Tok("punct", c, line))
+            i += 1
+    return toks, comments
+
+
+def _scan_quoted(src: str, i: int, quote: str = '"') -> int:
+    """Scan past a (non-raw) quoted literal body starting at ``i``;
+    returns the index just past the closing quote."""
+    n = len(src)
+    while i < n:
+        c = src[i]
+        if c == "\\":
+            i += 2
+            continue
+        if c == quote:
+            return i + 1
+        i += 1
+    return n
+
+
+def _string_prefix(src: str, i: int):
+    """If ``src[i:]`` starts a raw/byte string, return ``(end, text)``;
+    else None. Handles b"", r"", br"", rb"" and any number of #."""
+    j = i
+    n = len(src)
+    seen = set()
+    while j < n and src[j] in "rb" and src[j] not in seen:
+        seen.add(src[j])
+        j += 1
+    raw = "r" in seen
+    hashes = 0
+    if raw:
+        while j < n and src[j] == "#":
+            hashes += 1
+            j += 1
+    if j >= n or src[j] != '"':
+        return None
+    if not raw:
+        end = _scan_quoted(src, j + 1)
+        return end, src[i:end]
+    closer = '"' + "#" * hashes
+    k = src.find(closer, j + 1)
+    end = n if k == -1 else k + len(closer)
+    return end, src[i:end]

@@ -1,0 +1,189 @@
+"""Source-file model: lexed tokens plus the comment-derived structure
+the checks share — suppression annotations, ``#[cfg(test)]`` regions,
+and comment-block adjacency queries."""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from .lexer import Comment, Tok, lex
+
+ANNOTATION_RE = re.compile(
+    r"dart-analyze:\s*allow\(\s*([a-z0-9_-]+)\s*\)\s*:\s*(.*)"
+)
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One reported violation."""
+
+    path: str  # repo-relative path
+    line: int
+    check: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.check}] {self.message}"
+
+
+@dataclass
+class Annotation:
+    """One ``// dart-analyze: allow(check): reason`` comment."""
+
+    check: str
+    reason: str
+    line: int  # line the annotation comment ends on
+    covers: int  # code line it suppresses
+    used: bool = False
+
+
+@dataclass
+class SourceFile:
+    """One lexed ``.rs`` file plus derived structure."""
+
+    path: str  # repo-relative, '/'-separated
+    text: str
+    tokens: list[Tok] = field(default_factory=list)
+    comments: list[Comment] = field(default_factory=list)
+    lines: list[str] = field(default_factory=list)
+    annotations: list[Annotation] = field(default_factory=list)
+    test_ranges: list[tuple[int, int]] = field(default_factory=list)
+    _comment_lines: set[int] = field(default_factory=set)
+    _code_lines: set[int] = field(default_factory=set)
+
+    @classmethod
+    def parse(cls, path: str, text: str) -> "SourceFile":
+        toks, comments = lex(text)
+        sf = cls(path=path, text=text, tokens=toks, comments=comments, lines=text.split("\n"))
+        for c in comments:
+            sf._comment_lines.update(range(c.line, c.end_line + 1))
+        for t in toks:
+            sf._code_lines.add(t.line)
+        sf._collect_annotations()
+        sf._collect_test_ranges()
+        return sf
+
+    # -- annotations ---------------------------------------------------
+
+    def _collect_annotations(self) -> None:
+        for c in self.comments:
+            m = ANNOTATION_RE.search(c.text)
+            if not m:
+                continue
+            check, reason = m.group(1), m.group(2).strip().rstrip("*/").strip()
+            covers = c.end_line if c.end_line in self._code_lines else self._next_code_line(
+                c.end_line + 1
+            )
+            self.annotations.append(
+                Annotation(check=check, reason=reason, line=c.end_line, covers=covers)
+            )
+
+    def _next_code_line(self, start: int) -> int:
+        """First line >= start holding a code token, skipping blank,
+        comment-only, and attribute lines (so an annotation above a
+        documented/attributed item covers the item)."""
+        ln = start
+        last = len(self.lines)
+        while ln <= last:
+            if ln in self._code_lines:
+                stripped = self.lines[ln - 1].lstrip()
+                if stripped.startswith(("#[", "#![")):
+                    ln += 1
+                    continue
+                return ln
+            ln += 1
+        return -1
+
+    def allowed(self, check: str, line: int) -> bool:
+        """True (and marks the annotation used) if ``check`` is
+        suppressed at ``line`` by an adjacent annotation."""
+        for a in self.annotations:
+            if a.check == check and a.covers == line:
+                a.used = True
+                return True
+        return False
+
+    # -- test regions --------------------------------------------------
+
+    def _collect_test_ranges(self) -> None:
+        """Record line ranges of ``#[cfg(test)] mod ... { }`` blocks and
+        ``#[test]``/``#[bench]`` functions, where production-byte checks
+        do not apply."""
+        toks = self.tokens
+        i = 0
+        while i < len(toks):
+            if (
+                toks[i].text == "#"
+                and i + 1 < len(toks)
+                and toks[i + 1].text == "["
+            ):
+                close = self._match(i + 1, "[", "]")
+                attr = " ".join(t.text for t in toks[i + 2 : close])
+                if attr.startswith(("cfg ( test", "test", "bench")):
+                    # find the block the attribute governs
+                    j = close + 1
+                    while j < len(toks) and toks[j].text != "{":
+                        if toks[j].text == ";":  # e.g. `#[cfg(test)] mod t;`
+                            break
+                        j += 1
+                    if j < len(toks) and toks[j].text == "{":
+                        end = self._match(j, "{", "}")
+                        self.test_ranges.append((toks[i].line, toks[end].line))
+                        i = close + 1
+                        continue
+                i = close + 1
+                continue
+            i += 1
+
+    def in_test(self, line: int) -> bool:
+        return any(lo <= line <= hi for lo, hi in self.test_ranges)
+
+    # -- adjacency helpers ---------------------------------------------
+
+    def _match(self, i_open: int, op: str, cl: str) -> int:
+        """Index of the token closing the bracket opened at ``i_open``
+        (or the last token index if unbalanced)."""
+        depth = 0
+        for j in range(i_open, len(self.tokens)):
+            t = self.tokens[j].text
+            if t == op:
+                depth += 1
+            elif t == cl:
+                depth -= 1
+                if depth == 0:
+                    return j
+        return len(self.tokens) - 1
+
+    def comment_block_above(self, line: int) -> list[Comment]:
+        """The contiguous run of comment-only lines directly above
+        ``line`` (attribute-only lines are transparent), nearest last."""
+        out: list[Comment] = []
+        ln = line - 1
+        while ln >= 1:
+            if ln in self._comment_lines and ln not in self._code_lines:
+                for c in self.comments:
+                    if c.end_line == ln:
+                        out.append(c)
+                        ln = c.line - 1
+                        break
+                else:
+                    ln -= 1
+                continue
+            stripped = self.lines[ln - 1].lstrip() if ln <= len(self.lines) else ""
+            if stripped.startswith(("#[", "#![")) or stripped == "":
+                ln -= 1
+                continue
+            break
+        return out
+
+    def comments_on_line(self, line: int) -> list[Comment]:
+        return [c for c in self.comments if c.line <= line <= c.end_line]
+
+    def has_adjacent(self, line: int, needle: str) -> bool:
+        """True if ``needle`` appears in a comment on ``line`` or in the
+        comment block directly above it."""
+        for c in self.comments_on_line(line) + self.comment_block_above(line):
+            if needle in c.text:
+                return True
+        return False

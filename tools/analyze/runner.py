@@ -1,0 +1,137 @@
+"""Discovery, orchestration, and reporting for ``python3 -m tools.analyze``."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import config
+from .checks import CHECKS
+from .model import Finding, SourceFile
+
+
+class Tree:
+    """The analyzed file set rooted at one directory."""
+
+    def __init__(self, root: Path):
+        self.root = root
+        self.files: dict[str, SourceFile] = {}
+
+    def load(self) -> None:
+        for scan in config.SCAN_DIRS:
+            base = self.root / scan
+            if not base.is_dir():
+                continue
+            for path in sorted(base.rglob("*.rs")):
+                rel = path.relative_to(self.root).as_posix()
+                if rel.startswith(tuple(d + "/" for d in config.EXCLUDE_DIRS)):
+                    continue
+                self.files[rel] = SourceFile.parse(
+                    rel, path.read_text(encoding="utf-8", errors="replace")
+                )
+
+    def read_doc(self, rel: str) -> str:
+        path = self.root / rel
+        return path.read_text(encoding="utf-8") if path.is_file() else ""
+
+
+def validate_annotations(tree: Tree, checks_run) -> list[Finding]:
+    """Annotations are themselves checked: unknown check names, empty
+    reasons, and allows that matched no violation are findings — the
+    allowlist cannot rot silently."""
+    out = []
+    for sf in tree.files.values():
+        for a in sf.annotations:
+            if a.check not in config.ALL_CHECKS:
+                out.append(
+                    Finding(
+                        sf.path,
+                        a.line,
+                        "annotation",
+                        f"allow({a.check}) names no known check "
+                        f"(known: {', '.join(config.ALL_CHECKS)})",
+                    )
+                )
+                continue
+            if not a.reason:
+                out.append(
+                    Finding(
+                        sf.path,
+                        a.line,
+                        "annotation",
+                        f"allow({a.check}) has an empty reason; every "
+                        "suppression must say why",
+                    )
+                )
+                continue
+            if a.check in checks_run and not a.used:
+                out.append(
+                    Finding(
+                        sf.path,
+                        a.line,
+                        "annotation",
+                        f"allow({a.check}) suppresses nothing at its site "
+                        "(stale annotation — remove it, or move it to the "
+                        "violation it is meant to cover)",
+                    )
+                )
+    return out
+
+
+def run(root: Path, checks: list[str]) -> list[Finding]:
+    tree = Tree(root)
+    tree.load()
+    findings: list[Finding] = []
+    for name in checks:
+        findings.extend(CHECKS[name](tree.files, tree))
+    findings.extend(validate_annotations(tree, set(checks)))
+    findings.sort(key=lambda f: (f.path, f.line, f.check))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python3 -m tools.analyze",
+        description="Toolchain-free static analysis of the Rust tree "
+        "(determinism invariants, unsafe audit, MSRV, docs parity).",
+    )
+    parser.add_argument(
+        "--root",
+        type=Path,
+        default=None,
+        help="tree root (default: the repository containing this package)",
+    )
+    parser.add_argument(
+        "--check",
+        action="append",
+        choices=sorted(CHECKS),
+        help="run only this check (repeatable; default: all)",
+    )
+    parser.add_argument(
+        "--list-checks", action="store_true", help="list check names and exit"
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_checks:
+        for name in config.ALL_CHECKS:
+            print(name)
+        return 0
+
+    root = args.root or Path(__file__).resolve().parents[2]
+    checks = args.check or list(config.ALL_CHECKS)
+    findings = run(root, checks)
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(
+            f"dart-analyze: {len(findings)} finding(s) "
+            f"[checks: {', '.join(checks)}]",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"dart-analyze: clean [checks: {', '.join(checks)}]",
+        file=sys.stderr,
+    )
+    return 0
