@@ -3,12 +3,24 @@
 
 PYTHON ?= python3
 
-.PHONY: analyze build test fmt clippy artifacts python-test
+.PHONY: analyze analyze-fast analyze-bench build test fmt clippy artifacts python-test
 
-# Toolchain-free static analysis (determinism invariants, unsafe audit,
-# MSRV, docs parity) — see tools/analyze/ and ARCHITECTURE.md.
+# Toolchain-free static analysis (call-graph determinism taint,
+# protocol lints, unsafe audit, MSRV, docs parity) — see tools/analyze/
+# and ARCHITECTURE.md.
 analyze:
 	$(PYTHON) -m tools.analyze
+
+# Pre-commit loop: whole-tree analysis, findings reported only for
+# git-changed files (call resolution stays global, so a hazard you just
+# made reachable is still caught in the file you touched).
+analyze-fast:
+	$(PYTHON) -m tools.analyze --changed
+
+# Full run + wall-time budget, recorded into BENCH_analyze.json (CI
+# fails the analyze job if the pass ever crosses 10 s on the real tree).
+analyze-bench:
+	$(PYTHON) -m tools.analyze --bench BENCH_analyze.json
 
 build:
 	cargo build --release

@@ -34,6 +34,10 @@ impl<'a> CpuMapper<'a> {
     /// Returns `None` when seeding yields no candidate at all.
     pub fn map(&self, read: &Seq) -> Option<Mapping> {
         let mut best: Option<Mapping> = None;
+        // dart-analyze: allow(determinism): membership-only dedup set —
+        // insert() return value gates re-evaluation and the set is never
+        // iterated; candidate order comes from all_seed_hits, and the
+        // (dist, pos) min below is order-free.
         let mut evaluated = std::collections::HashSet::new();
         for hit in all_seed_hits(self.index, read) {
             // distinct segments only: one evaluation per occurrence

@@ -39,6 +39,10 @@ use crate::util::json::Json;
 pub struct Args {
     /// The subcommand (first argv token; "help" when absent).
     pub cmd: String,
+    // dart-analyze: allow(determinism): accessed only through keyed
+    // get()/insert()/remove() (`Args::get` and the paired-end rewrite in
+    // cmd_map) — never iterated, so option-map order cannot influence
+    // parsing results or any emitted byte.
     opts: HashMap<String, String>,
     flags: Vec<String>,
 }

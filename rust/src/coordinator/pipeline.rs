@@ -51,9 +51,6 @@
 
 use std::borrow::Borrow;
 use std::sync::Arc;
-// dart-analyze: allow(determinism): Instant feeds only the stage clocks
-// (t_seed/t_total), excluded from invariant_counters() by design
-// (invariant 4); no wall-clock value reaches emitted bytes.
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};

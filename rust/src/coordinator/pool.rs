@@ -38,18 +38,10 @@
 //! over real sockets.
 
 use std::borrow::Borrow;
-// dart-analyze: allow(determinism): the session and poisoned maps in
-// pool_worker are the only HashMaps here and neither is ever iterated —
-// every access is keyed by session id (entry/get/remove), so the maps'
-// nondeterministic order has no observable effect; see the invariant-7
-// audit comment at their declarations.
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
-// dart-analyze: allow(determinism): Instant feeds only the stage clocks
-// (t_seed/t_total), which Metrics::invariant_counters() excludes by
-// design (invariant 4); no wall-clock value reaches emitted bytes.
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -215,6 +207,10 @@ fn pool_worker(
     // channels are FIFO per sender, and flush acks are keyed by shard
     // index. Switching to BTreeMap would change nothing observable; the
     // HashMap stays for O(1) lookups on the per-item hot path.
+    // dart-analyze: allow(determinism): neither map is ever iterated —
+    // `sessions` is touched only via entry()/get_mut()/remove() and
+    // `poisoned` via contains_key()/insert()/remove(), all keyed by the
+    // session id carried in each PoolMsg, so map order is unobservable.
     let mut sessions: HashMap<u64, ShardWorker<'_>> = HashMap::new();
     let mut poisoned: HashMap<u64, anyhow::Error> = HashMap::new();
     while let Ok(msg) = rx.recv() {
@@ -284,6 +280,11 @@ pub struct MapSession<'a> {
     epoch_seqs: Vec<Arc<[u8]>>,
     metrics: Metrics,
     t_route: Duration,
+    // dart-analyze: allow(determinism): Instant feeds only the stage
+    // clocks (t_route/t_total), which Metrics::invariant_counters()
+    // excludes by design (invariant 4); no wall-clock value reaches
+    // emitted bytes — the TSV and DATA frames are built purely from
+    // mapping outcomes.
     t_start: Instant,
     next_pair: u32,
     next_id: u32,
@@ -500,6 +501,13 @@ impl Drop for MapSession<'_> {
         if !self.closed {
             let (ack_tx, _ack_rx) = mpsc::channel::<(usize, Metrics)>();
             for tx in &self.txs {
+                // dart-analyze: allow(flush-ack): fire-and-forget by
+                // design — Drop runs on abort paths where no caller can
+                // consume an ack, and blocking in Drop could deadlock a
+                // panicking thread against a full pool queue. Dropping
+                // _ack_rx makes the workers' replies fail silently; the
+                // worker still removes the session either way, so no
+                // per-session state leaks (held by tests/serve_e2e.rs).
                 let _ = tx.send(PoolMsg::Close { session: self.id, ack: ack_tx.clone() });
             }
         }

@@ -8,10 +8,6 @@
 //! that is a flat map lookup plus [`crate::pim::controller::addr_of`]
 //! for the hierarchical address.
 
-// dart-analyze: allow(determinism): the assignment table is built from
-// a sorted minimizer list and afterwards only read through keyed get()
-// in target_of() — it is never iterated, so crossbar numbering and all
-// routing decisions are independent of HashMap order.
 use std::collections::HashMap;
 
 use crate::index::MinimizerIndex;
@@ -44,6 +40,10 @@ pub struct RoutedPair {
 
 /// The routing table.
 pub struct Router {
+    // dart-analyze: allow(determinism): built from a sorted minimizer
+    // list and afterwards only read through keyed get() in target_of()
+    // — never iterated, so crossbar numbering and all routing decisions
+    // are independent of HashMap order.
     assignment: HashMap<u64, (u32, u32)>,
     /// Total crossbars allocated by the offline assignment.
     pub xbars_used: u32,

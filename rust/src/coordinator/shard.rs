@@ -42,15 +42,8 @@
 //!   (`linear_batches`/`affine_batches`) and wall-clock timings depend on
 //!   the shard count and epoch size.
 
-// dart-analyze: allow(determinism): the only HashMap here is the
-// per-crossbar FIFO map, accessed exclusively through entry() keyed by
-// crossbar id — it is never iterated, so its order is unobservable.
-// Order-sensitive state (pair_best) deliberately lives in a BTreeMap.
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
-// dart-analyze: allow(determinism): Instant feeds only the stage clocks
-// (t_seed/t_linear/t_affine), excluded from invariant_counters() by
-// design (invariant 4); no wall-clock value reaches emitted bytes.
 use std::time::Instant;
 
 use anyhow::Result;
@@ -119,6 +112,11 @@ pub struct ShardWorker<'a> {
     index: &'a MinimizerIndex,
     cfg: &'a PipelineConfig,
     metrics: Metrics,
+    // dart-analyze: allow(determinism): accessed exclusively through
+    // entry()/get keyed by crossbar id and never iterated, so map order
+    // is unobservable; order-sensitive state (pair_best) deliberately
+    // lives in a BTreeMap. Proof: every `fifos` use in this file is
+    // `entry(..)`, `get(..)`, `get_mut(..)`, or `clear()`.
     fifos: HashMap<u32, ReadsFifo>,
     linear_batcher: Batcher,
     affine_batcher: Batcher,
@@ -138,12 +136,16 @@ impl<'a> ShardWorker<'a> {
     /// Empty worker for one shard.
     pub fn new(index: &'a MinimizerIndex, cfg: &'a PipelineConfig) -> Self {
         // report the configured lane width of the bit-parallel worker
-        // engine — a dispatch gauge, outside the invariant counters
+        // engine — a dispatch gauge, outside the invariant counters.
+        // dart-analyze: allow(determinism): simd_width is a diagnostic
+        // gauge on Metrics, excluded from invariant_counters() (invariant
+        // 4); it is compared by the golden tests only for presence, never
+        // folded into mapping output bytes.
         let simd_width = match cfg.worker_engine {
             crate::runtime::EngineKind::Bitpal => {
                 cfg.simd.resolve().map_or(0, |w| w.bits() as u64)
             }
-            _ => 0,
+            crate::runtime::EngineKind::Rust => 0,
         };
         ShardWorker {
             index,
@@ -169,6 +171,10 @@ impl<'a> ShardWorker<'a> {
         engine: &mut E,
         items: impl IntoIterator<Item = ShardItem>,
     ) -> Result<()> {
+        // dart-analyze: allow(determinism): Instant feeds only the stage
+        // clocks (t_seed/t_linear/t_affine), excluded from
+        // invariant_counters() by design (invariant 4); no wall-clock
+        // value reaches emitted bytes.
         let mut t0 = Instant::now();
         let (index, cfg) = (self.index, self.cfg);
         for item in items {

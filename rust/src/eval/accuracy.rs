@@ -150,7 +150,8 @@ pub fn evaluate_pair_accuracy(
                 match m.pair {
                     crate::coordinator::PairStatus::Proper => r.proper_mates += 1,
                     crate::coordinator::PairStatus::Rescued => r.rescued_mates += 1,
-                    _ => {}
+                    crate::coordinator::PairStatus::Unpaired
+                    | crate::coordinator::PairStatus::Single => {}
                 }
             }
         }

@@ -1,11 +1,6 @@
 //! The minimizer index: minimizer k-mer -> all reference occurrences,
 //! plus segment extraction (the data a crossbar stores at indexing time).
 
-// dart-analyze: allow(determinism): the occurrence map is iterated only
-// through iter(), whose three consumers are all order-free — Router::new
-// and save_index sort the collected entries by k-mer before use, and
-// stats() computes sums/maxes. Keyed lookups (occurrences()) carry the
-// hot path; per-minimizer position lists are sorted at build time.
 use std::collections::HashMap;
 
 use super::minimizer::minimizers;
@@ -21,6 +16,12 @@ use crate::params::{segment_len, ETH};
 /// area/energy models, not duplicated in host memory).
 pub struct MinimizerIndex {
     /// minimizer k-mer -> sorted occurrence positions (k-mer start).
+    // dart-analyze: allow(determinism): iterated only through iter(),
+    // whose three consumers are all order-free — Router::new and
+    // save_index sort the collected entries by k-mer before use, and
+    // stats() computes sums/maxes. Keyed lookups (occurrences()) carry
+    // the hot path; per-minimizer position lists are sorted at build
+    // time.
     occurrences: HashMap<u64, Vec<u32>>,
     /// The reference genome (base codes).
     pub reference: Seq,

@@ -359,6 +359,11 @@ fn portable_kernel(width: SimdWidth) -> Box<dyn SimdKernel> {
 fn make_kernel(width: SimdWidth) -> Box<dyn SimdKernel> {
     #[cfg(target_arch = "x86_64")]
     {
+        // dart-analyze: allow(determinism): feature detection selects
+        // between kernels that are bit-identical by contract (the x86
+        // wrappers wrap the portable kernel they must agree with, held
+        // by the kernel-equivalence tests); detection changes speed,
+        // never bytes (invariant 8).
         if width == SimdWidth::W512 && std::arch::is_x86_feature_detected!("avx512f") {
             return Box::new(x86::Avx512Kernel(PortableKernel::new()));
         }

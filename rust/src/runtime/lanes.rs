@@ -147,6 +147,11 @@ impl SimdMode {
     pub fn resolve(self) -> Option<SimdWidth> {
         match self {
             SimdMode::U64 => Some(SimdWidth::W64),
+            // dart-analyze: allow(determinism): host detection picks a
+            // lane *width*, and output bytes are width-invariant by
+            // construction (invariant 8) — the determinism suite compares
+            // Wide vs U64 mappings byte-for-byte; only throughput and the
+            // simd_width gauge vary with the host.
             SimdMode::Wide => Some(detect_wide()),
             SimdMode::Off => None,
         }

@@ -3,15 +3,18 @@
 No container this repo grows in has ever shipped a Rust toolchain
 (ROADMAP P0), so every compile/correctness gate that *can* run without
 `cargo` must. This package mechanizes the manual "line-by-line compile
-review" that previous PRs relied on, as token-level checks on top of a
-small Rust lexer (comments, strings, and doc-comments are stripped
-before any check looks at code, so a `HashMap` in prose never trips the
-determinism check).
+review" that previous PRs relied on. Two tiers share one small Rust
+lexer (comments, strings, and doc-comments are stripped before any
+check looks at code, so a `HashMap` in prose never trips the
+determinism check): *lexical* checks read one file's tokens, and
+*semantic* checks run on an item-level symbol table (``items.py``) and
+an intra-crate call graph (``callgraph.py``) built over the whole tree.
 
 Run it from the repository root::
 
     python3 -m tools.analyze            # whole tree, exit 0 = clean
     make analyze                        # same thing
+    make analyze-fast                   # findings scoped to git-changed files
 
 Checks (each name is also its annotation key):
 
@@ -19,9 +22,21 @@ Checks (each name is also its annotation key):
   struct (``Metrics``, ``SimCounts``) names exactly the declared fields
   or uses functional-update ``..`` syntax. Kills the E0063 class that
   shipped in PR 5 when ``SimCounts`` grew fields.
-- ``determinism``      — ``HashMap``/``HashSet``, ``Instant``/
-  ``SystemTime``, and unseeded randomness are forbidden in
-  byte-producing modules unless annotated with a written proof.
+- ``determinism``      — call-graph byte-purity taint:
+  ``HashMap``/``HashSet`` iteration, ``Instant``/``SystemTime``,
+  unseeded randomness, and host gauges (``simd_width``,
+  ``detect_wide``) are findings iff reachable from a byte-emitting
+  sink (``config.TAINT_SINKS``); hazard-typed *fields* propagate too,
+  so iterating ``self.sessions`` is caught without ``HashMap``
+  appearing at the use site. The finding carries the witness call
+  path from the sink.
+- ``flush-ack``        — the epoch-barrier protocol: an ack-bearing
+  message send needs its channel created in the sending fn and a
+  reachable ack-receive; sent-but-unhandled and dead variants are
+  findings.
+- ``enum-wildcard``    — no silent ``_`` arms in matches on
+  byte-affecting enums; ``KIND_*`` frame-kind matches may keep a
+  wildcard only if it fails loudly.
 - ``metrics-registry`` — every ``Metrics`` counter field appears in
   ``invariant_counters()`` or carries the non-invariant annotation.
 - ``unsafe``           — every ``unsafe`` block/fn/impl carries an

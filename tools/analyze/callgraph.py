@@ -1,0 +1,203 @@
+"""Intra-crate call graph over the item table (`items.py`).
+
+Crate partitioning mirrors Cargo's: everything under ``rust/src/`` is
+the one lib crate; each file under ``rust/tests``, ``rust/benches``,
+and ``examples`` is its own crate that can additionally resolve into
+the lib (the dependency direction Cargo gives integration tests).
+
+Resolution is name-based with path/`use`/receiver narrowing, and it
+over-approximates on purpose: a method call ``x.f()`` links to every
+in-crate impl fn named ``f`` unless the receiver is ``self`` and the
+caller's impl type pins it down. Extra edges can only widen
+reachability — a taint check built on this graph may ask for a proof
+it strictly didn't need, but it can never miss a real path from a
+hazard to an emit site. Calls whose callee lives outside the tree
+(std, vendored APIs) resolve to nothing and create no edge.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+from .items import RUST_KEYWORDS, FileItems, FnItem, parse_file
+
+# Path segments that scope but don't name a module we model.
+_PATH_FILLER = {"crate", "self", "super", "Self"}
+
+
+class CallGraph:
+    """Fns, edges, and reachability queries for one analyzed tree."""
+
+    def __init__(self, files):
+        self.files = files
+        self.items: dict[str, FileItems] = {p: parse_file(sf) for p, sf in files.items()}
+        self.fns: dict[tuple, FnItem] = {}
+        self._by_crate: dict[str, dict] = {}
+        for path, fi in self.items.items():
+            crate = self.crate_of(path)
+            idx = self._by_crate.setdefault(
+                crate, {"by_name": {}, "by_typed": {}, "by_qual": {}}
+            )
+            for fn in fi.fns:
+                self.fns[fn.key] = fn
+                idx["by_name"].setdefault(fn.name, []).append(fn.key)
+                if fn.self_type:
+                    idx["by_typed"].setdefault((fn.self_type, fn.name), []).append(fn.key)
+                idx["by_qual"].setdefault(fn.qual + (fn.name,), []).append(fn.key)
+        self.edges: dict[tuple, set] = {k: set() for k in self.fns}
+        for path, fi in self.items.items():
+            for fn in fi.fns:
+                self._link(fn, fi)
+
+    @staticmethod
+    def crate_of(path: str) -> str:
+        return "lib" if path.startswith("rust/src/") else path
+
+    def _indices(self, path: str):
+        """Resolution indices for a file: its own crate, then the lib
+        crate for test/bench/example crates."""
+        crate = self.crate_of(path)
+        out = [self._by_crate[crate]]
+        if crate != "lib" and "lib" in self._by_crate:
+            out.append(self._by_crate["lib"])
+        return out
+
+    # -- edge construction ---------------------------------------------
+
+    def _link(self, fn: FnItem, fi: FileItems) -> None:
+        sf = self.files[fn.path]
+        toks = sf.tokens
+        for lo, hi in fn.own_ranges():
+            k = lo
+            while k < hi:
+                t = toks[k]
+                if (
+                    t.kind == "ident"
+                    and t.text not in RUST_KEYWORDS
+                    and k + 1 < hi
+                    and toks[k + 1].text == "("
+                    and not fi.in_use_item(k)
+                ):
+                    prev = toks[k - 1].text if k > 0 else ""
+                    if prev == ".":
+                        self._link_method(fn, toks, k)
+                    elif prev == "::":
+                        self._link_path(fn, fi, toks, k)
+                    else:
+                        self._link_plain(fn, fi, t.text)
+                k += 1
+
+    def _add(self, fn: FnItem, keys) -> None:
+        for key in keys:
+            if key != fn.key:
+                self.edges[fn.key].add(key)
+
+    def _link_method(self, fn: FnItem, toks, k: int) -> None:
+        name = toks[k].text
+        # `self.f()` inside `impl T` pins the candidate set to T's fns
+        if fn.self_type and k >= 2 and toks[k - 2].text == "self":
+            for idx in self._indices(fn.path):
+                keys = idx["by_typed"].get((fn.self_type, name))
+                if keys:
+                    self._add(fn, keys)
+                    return
+        for idx in self._indices(fn.path):
+            for (_, n), keys in idx["by_typed"].items():
+                if n == name:
+                    self._add(fn, keys)
+
+    def _link_path(self, fn: FnItem, fi: FileItems, toks, k: int) -> None:
+        # collect the `a::b::name` segment chain ending at toks[k]
+        segs = []
+        j = k - 1
+        while j >= 1 and toks[j].text == "::":
+            if toks[j - 1].kind == "ident":
+                segs.append(toks[j - 1].text)
+                j -= 2
+            elif toks[j - 1].text == ">":  # `<T as Trait>::f` — give up on the type
+                break
+            else:
+                break
+        segs.reverse()
+        name = toks[k].text
+        if segs and segs[0] in fi.uses:
+            segs = list(fi.uses[segs[0]]) + segs[1:]
+        segs = [s for s in segs if s not in _PATH_FILLER]
+        for idx in self._indices(fn.path):
+            if segs:
+                keys = idx["by_typed"].get((segs[-1], name))
+                if keys:
+                    self._add(fn, keys)
+                    return
+                keys = idx["by_qual"].get(tuple(segs) + (name,))
+                if keys:
+                    self._add(fn, keys)
+                    return
+        # `std::mem::take`-style externals fall through to by-name,
+        # which simply finds nothing in-crate.
+        self._link_plain(fn, fi, name)
+
+    def _link_plain(self, fn: FnItem, fi: FileItems, name: str) -> None:
+        for idx in self._indices(fn.path):
+            keys = idx["by_qual"].get(fn.qual + (name,))
+            if keys:
+                self._add(fn, keys)
+                return
+        if name in fi.uses:
+            segs = [s for s in fi.uses[name] if s not in _PATH_FILLER]
+            if len(segs) >= 2:
+                for idx in self._indices(fn.path):
+                    keys = idx["by_qual"].get(tuple(segs))
+                    if keys:
+                        self._add(fn, keys)
+                        return
+        for idx in self._indices(fn.path):
+            keys = idx["by_name"].get(name)
+            if keys:
+                self._add(fn, keys)
+                return
+
+    # -- queries --------------------------------------------------------
+
+    def find(self, path: str, name: str):
+        """All fns named ``name`` declared in ``path``."""
+        fi = self.items.get(path)
+        return [fn for fn in fi.fns if fn.name == name] if fi else []
+
+    def enclosing(self, path: str, tok_idx: int):
+        """Innermost fn whose body contains token ``tok_idx``."""
+        fi = self.items.get(path)
+        best = None
+        for fn in fi.fns if fi else []:
+            lo, hi = fn.body
+            if lo <= tok_idx < hi and (best is None or lo > best.body[0]):
+                best = fn
+        return best
+
+    def reachable(self, start_keys):
+        """BFS forward over callee edges: key -> parent key (roots map
+        to None). Deterministic: queue order follows sorted keys."""
+        parents: dict[tuple, tuple | None] = {}
+        dq = deque()
+        for key in sorted(start_keys):
+            if key in self.fns and key not in parents:
+                parents[key] = None
+                dq.append(key)
+        while dq:
+            cur = dq.popleft()
+            for nxt in sorted(self.edges.get(cur, ())):
+                if nxt not in parents:
+                    parents[nxt] = cur
+                    dq.append(nxt)
+        return parents
+
+    def chain(self, parents, key) -> list[str]:
+        """Call path root -> ... -> ``key`` as fn names, for messages."""
+        names = []
+        cur = key
+        while cur is not None:
+            fn = self.fns[cur]
+            names.append(f"{fn.self_type}::{fn.name}" if fn.self_type else fn.name)
+            cur = parents.get(cur)
+        names.reverse()
+        return names

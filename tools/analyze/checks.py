@@ -11,6 +11,7 @@ from __future__ import annotations
 import re
 
 from . import config
+from .items import RUST_KEYWORDS
 from .model import Finding, SourceFile
 
 FLAG_RE = re.compile(r"--[a-z][a-z0-9-]*")
@@ -211,36 +212,268 @@ def check_struct_exhaustive(files, tree):
     return out
 
 
-def check_determinism(files, tree):
-    out = []
-    for sf in files.values():
-        if not sf.path.startswith(tuple(d + "/" for d in config.BYTE_PRODUCING_DIRS)):
-            continue
-        for category, idents in config.DETERMINISM_HAZARDS.items():
-            first = next(
-                (
-                    t
-                    for t in sf.tokens
-                    if t.kind == "ident" and t.text in idents and not sf.in_test(t.line)
-                ),
-                None,
-            )
-            if first is None:
-                continue
-            if sf.allowed("determinism", first.line):
-                continue
-            out.append(
-                Finding(
-                    sf.path,
-                    first.line,
-                    "determinism",
-                    f"{category} hazard `{first.text}` in byte-producing module; "
-                    "prove iteration order / wall clock / randomness never reaches "
-                    "emitted bytes with `// dart-analyze: allow(determinism): "
-                    "<proof>` at this first use, or remove it",
-                )
-            )
+def _hazard_category(idents: tuple) -> dict:
+    return {i: cat for cat, ids in config.DETERMINISM_HAZARDS.items() for i in ids}
+
+
+def _hazard_fields(graph):
+    """Struct fields whose type mentions a hazard identifier:
+    field name -> (category, declaring path, decl line)."""
+    cat_of = _hazard_category(config.DETERMINISM_HAZARDS)
+    out = {}
+    for fi in graph.items.values():
+        for st in fi.structs:
+            for fname, type_idents, fline in st.fields:
+                for ti in type_idents:
+                    if ti in cat_of:
+                        out.setdefault(fname, (cat_of[ti], fi.path, fline))
+                        break
     return out
+
+
+def check_determinism(files, tree):
+    """Byte-purity taint: a nondeterminism hazard is a finding iff the
+    fn using it is reachable from a byte-emitting sink (config
+    TAINT_SINKS) in the call graph. The hazard may be a direct
+    identifier (`Instant`, `HashMap::new`) or a *use of a field* whose
+    declared type is a hazard (iterating `self.sessions` never names
+    `HashMap` at the use site). One finding per (file, category); the
+    annotation is honored at the hazard line, the enclosing fn, or the
+    hazard-typed field's declaration."""
+    graph = tree.callgraph()
+    cat_of = _hazard_category(config.DETERMINISM_HAZARDS)
+    fields = _hazard_fields(graph)
+    sink_keys = [
+        fn.key for path, name in config.TAINT_SINKS for fn in graph.find(path, name)
+    ]
+    parents = graph.reachable(sink_keys)
+    sites = []  # (path, tok start, line, category, label, fn item, field decl)
+    for key in parents:
+        fn = graph.fns[key]
+        sf = files[fn.path]
+        fi = graph.items[fn.path]
+        if sf.in_test(fn.line):
+            continue
+        for lo, hi in fn.own_ranges():
+            for k in range(lo, hi):
+                t = sf.tokens[k]
+                if t.kind != "ident" or fi.in_use_item(k) or sf.in_test(t.line):
+                    continue
+                if t.text in cat_of:
+                    sites.append((fn.path, t.start, t.line, cat_of[t.text], f"`{t.text}`", key, None))
+                elif t.text in fields:
+                    cat, dpath, dline = fields[t.text]
+                    label = f"field `{t.text}` ({cat_of_field(cat)} declared at {dpath}:{dline})"
+                    sites.append((fn.path, t.start, t.line, cat, label, key, (dpath, dline)))
+    sites.sort(key=lambda s: (s[0], s[1]))
+    out = []
+    seen = set()
+    for path, _, line, category, label, key, decl in sites:
+        if (path, category) in seen:
+            continue
+        seen.add((path, category))
+        sf = files[path]
+        fn = graph.fns[key]
+        if sf.allowed("determinism", line) or sf.allowed("determinism", fn.line):
+            continue
+        if decl is not None and files[decl[0]].allowed("determinism", decl[1]):
+            continue
+        via = " -> ".join(graph.chain(parents, key))
+        out.append(
+            Finding(
+                path,
+                line,
+                "determinism",
+                f"{category} hazard {label} is reachable from emitted bytes "
+                f"(sink path: {via}); prove iteration order / wall clock / "
+                "randomness / host gauges never steer output bytes with "
+                "`// dart-analyze: allow(determinism): <proof>` here, on the "
+                "enclosing fn, or on the field declaration — or remove it",
+            )
+        )
+    return out
+
+
+def cat_of_field(cat: str) -> str:
+    return {"hash-iteration": "hash container"}.get(cat, cat + " type")
+
+
+def check_flush_ack(files, tree):
+    """Epoch-barrier protocol lint. For every enum variant carrying an
+    `ack` field (the PoolMsg::Flush/Close shape): each construction
+    site must create the ack channel in the same fn and have an
+    ack-receive reachable from that fn; and every variant of the enum
+    must be both constructed somewhere and handled by some match arm —
+    a sent-but-never-matched message is a silent drop, a
+    declared-but-never-sent one is dead protocol."""
+    graph = tree.callgraph()
+    out = []
+    enums = [e for fi in graph.items.values() for e in fi.enums]
+    protocol = [e for e in enums if any("ack" in v.fields for v in e.variants)]
+    for enum in protocol:
+        vnames = {v.name for v in enum.variants}
+        handled, constructed = set(), {}
+        for path, fi in graph.items.items():
+            sf = files[path]
+            toks = sf.tokens
+            pat_spans = fi.pattern_spans()
+            for k, t in enumerate(toks):
+                if (
+                    t.text not in vnames
+                    or k < 2
+                    or toks[k - 1].text != "::"
+                    or toks[k - 2].text != enum.name
+                ):
+                    continue
+                if any(lo <= k < hi for lo, hi in pat_spans):
+                    handled.add(t.text)
+                elif not fi.in_use_item(k):
+                    constructed.setdefault(t.text, []).append((path, k, t.line))
+        for v in enum.variants:
+            if "ack" not in v.fields:
+                continue
+            for path, k, line in constructed.get(v.name, []):
+                sf = files[path]
+                fn = graph.enclosing(path, k)
+                if fn is None or sf.in_test(line):
+                    continue
+                probs = []
+                if not _fn_mentions(sf, graph.items[path], fn, config.CHANNEL_IDENTS):
+                    probs.append(
+                        "no ack channel is created in the sending fn "
+                        f"({'/'.join(config.CHANNEL_IDENTS)})"
+                    )
+                if not _recv_reachable(graph, files, fn):
+                    probs.append(
+                        "no ack receive "
+                        f"({'/'.join(config.RECV_IDENTS)}) is reachable from the "
+                        "sending fn — the barrier cannot complete"
+                    )
+                for prob in probs:
+                    if sf.allowed("flush-ack", line) or sf.allowed("flush-ack", fn.line):
+                        continue
+                    out.append(
+                        Finding(
+                            path,
+                            line,
+                            "flush-ack",
+                            f"`{enum.name}::{v.name}` sent here but {prob}",
+                        )
+                    )
+        for v in enum.variants:
+            decl_sf = files[enum.path]
+            if v.name in constructed and v.name not in handled:
+                path, _, line = constructed[v.name][0]
+                if not files[path].allowed("flush-ack", line):
+                    out.append(
+                        Finding(
+                            path,
+                            line,
+                            "flush-ack",
+                            f"`{enum.name}::{v.name}` is sent but no match arm "
+                            "anywhere handles it — the receiver drops it silently",
+                        )
+                    )
+            elif v.name not in constructed and v.name not in handled:
+                if not decl_sf.allowed("flush-ack", v.line):
+                    out.append(
+                        Finding(
+                            enum.path,
+                            v.line,
+                            "flush-ack",
+                            f"`{enum.name}::{v.name}` is declared but never sent "
+                            "nor handled — dead protocol message",
+                        )
+                    )
+    return out
+
+
+def _fn_mentions(sf, fi, fn, idents) -> bool:
+    return any(
+        sf.tokens[k].kind == "ident"
+        and sf.tokens[k].text in idents
+        and not fi.in_use_item(k)
+        for lo, hi in fn.own_ranges()
+        for k in range(lo, hi)
+    )
+
+
+def _recv_reachable(graph, files, fn) -> bool:
+    for key in graph.reachable([fn.key]):
+        callee = graph.fns[key]
+        if _fn_mentions(files[callee.path], graph.items[callee.path], callee, config.RECV_IDENTS):
+            return True
+    return False
+
+
+def check_enum_wildcard(files, tree):
+    """Silent-fallthrough audit: a `match` whose arms name a configured
+    byte-affecting enum must not end in an unguarded `_`/bare-binding
+    arm; a match over `KIND_*` frame constants may keep its wildcard
+    only if the arm is loud (error or panic family)."""
+    graph = tree.callgraph()
+    out = []
+    for path, fi in graph.items.items():
+        sf = files[path]
+        toks = sf.tokens
+        for m in fi.matches:
+            enums, kind_consts = set(), False
+            for arm in m.arms:
+                for k in range(*arm.pat):
+                    t = toks[k]
+                    if (
+                        t.kind == "ident"
+                        and t.text in config.WILDCARD_ENUMS
+                        and k + 1 < arm.pat[1]
+                        and toks[k + 1].text == "::"
+                    ):
+                        enums.add(t.text)
+                    if t.kind == "ident" and t.text.startswith(config.FRAME_KIND_PREFIX):
+                        kind_consts = True
+            if not enums and not kind_consts:
+                continue
+            for arm in m.arms:
+                if arm.has_guard or not _is_wildcard_arm(toks, arm):
+                    continue
+                loud = any(
+                    toks[k].kind == "ident" and toks[k].text in config.LOUD_WILDCARD_TOKENS
+                    for k in range(*arm.body)
+                )
+                if enums:
+                    what = "/".join(sorted(enums))
+                    msg = (
+                        f"wildcard arm in a match on byte-affecting enum `{what}`: "
+                        "a new variant would fall through silently; name every "
+                        "variant, or annotate with the reason the fallthrough is "
+                        "byte-safe"
+                    )
+                elif not loud:
+                    msg = (
+                        f"silent wildcard arm in a match over `{config.FRAME_KIND_PREFIX}*` "
+                        "frame kinds: unknown kinds must fail loudly "
+                        f"({'/'.join(config.LOUD_WILDCARD_TOKENS[:3])}...), not be absorbed"
+                    )
+                else:
+                    continue
+                if sf.allowed("enum-wildcard", arm.line) or sf.allowed("enum-wildcard", m.line):
+                    continue
+                if sf.in_test(arm.line):
+                    continue
+                out.append(Finding(path, arm.line, "enum-wildcard", msg))
+    return out
+
+
+def _is_wildcard_arm(toks, arm) -> bool:
+    lo, hi = arm.pat
+    pat = [toks[k] for k in range(lo, hi)]
+    if len(pat) != 1:
+        return False
+    t = pat[0]
+    if t.text == "_":
+        return True
+    # a bare lowercase binding (`other => ...`) catches everything too;
+    # lowercase excludes unit variants like `None` by Rust convention
+    return t.kind == "ident" and t.text[0].islower() and t.text not in RUST_KEYWORDS
 
 
 def check_metrics_registry(files, tree):
@@ -538,6 +771,8 @@ def check_cli_docs(files, tree):
 CHECKS = {
     "struct-exhaustive": check_struct_exhaustive,
     "determinism": check_determinism,
+    "flush-ack": check_flush_ack,
+    "enum-wildcard": check_enum_wildcard,
     "metrics-registry": check_metrics_registry,
     "unsafe": check_unsafe,
     "msrv": check_msrv,

@@ -18,23 +18,27 @@ EXCLUDE_DIRS = ("rust/vendor",)
 # E0063 break) and are constructed far from their declarations.
 EXHAUSTIVE_STRUCTS = ("Metrics", "SimCounts")
 
-# Modules whose output feeds emitted bytes (mapping TSVs, serve replies,
-# golden fixtures). Determinism hazards inside these need a written
-# proof; metrics/bench/signal code earns its annotation, it is not
-# exempted wholesale.
-BYTE_PRODUCING_DIRS = (
-    "rust/src/coordinator",
-    "rust/src/serve",
-    "rust/src/align",
-    "rust/src/runtime",
-    "rust/src/index",
-    "rust/src/seeding",
+# Byte-emitting sinks for the determinism taint check: (path, fn name).
+# Taint = reachability in the call graph: a hazard matters iff some
+# sink can reach the fn using it. This replaced the per-directory grep
+# (BYTE_PRODUCING_DIRS) in PR 9 — scope is now "reachable from an emit
+# site", wherever the file lives.
+TAINT_SINKS = (
+    ("rust/src/cli.rs", "cmd_map"),
+    ("rust/src/cli.rs", "write_tsv_header"),
+    ("rust/src/cli.rs", "write_tsv_row"),
+    ("rust/src/coordinator/pipeline.rs", "emit_epoch"),
+    ("rust/src/serve/conn.rs", "handle_connection"),
+    ("rust/src/serve/conn.rs", "run_session"),
+    ("rust/src/serve/conn.rs", "metrics_line"),
 )
 
 # Hazard categories for the determinism check: category -> identifiers.
-# The first non-test occurrence per (file, category) is the gate: the
-# annotation (and its proof) lives there and covers the file, keeping
-# the audit in one greppable place instead of smeared over every use.
+# The first occurrence per (file, category) that is reachable from a
+# sink is the gate: the annotation (and its proof) lives there — or on
+# the enclosing fn, or on a hazard-typed field's declaration — and
+# covers the file, keeping the audit in one greppable place instead of
+# smeared over every use.
 DETERMINISM_HAZARDS = {
     "hash-iteration": ("HashMap", "HashSet"),
     "wall-clock": ("Instant", "SystemTime"),
@@ -46,6 +50,9 @@ DETERMINISM_HAZARDS = {
         "RandomState",
         "getrandom",
     ),
+    # Host-dependent gauges: values that vary with the machine (SIMD
+    # width, feature detection) and must never steer emitted bytes.
+    "host-gauge": ("simd_width", "detect_wide", "is_x86_feature_detected"),
 }
 
 # std APIs stabilized after rust-version = "1.74" (rust/Cargo.toml) that
@@ -89,9 +96,25 @@ CLI_DOC_FILES = ("README.md", "SERVING.md")
 # excludes them by design.
 METRICS_TIMING_TYPES = ("Duration",)
 
+# flush-ack: identifiers that constitute "receiving an ack" / "creating
+# the ack channel". An enum variant carrying a field literally named
+# `ack` is treated as an ack-bearing protocol message.
+RECV_IDENTS = ("recv", "recv_timeout", "try_recv", "recv_deadline")
+CHANNEL_IDENTS = ("channel", "sync_channel")
+
+# enum-wildcard: matching these byte-affecting enums with a `_` (or
+# bare-binding) arm is a silent-fallthrough hazard. A match over DART/1
+# frame-kind constants (the `KIND_*` u8 group) may keep its wildcard
+# only if the arm is loud (error/panic), since u8 is never exhaustive.
+WILDCARD_ENUMS = ("PairStatus", "EngineKind", "SimdMode", "PoolMsg", "Mode", "Framing")
+FRAME_KIND_PREFIX = "KIND_"
+LOUD_WILDCARD_TOKENS = ("Err", "panic", "unreachable", "todo", "unimplemented", "bail")
+
 ALL_CHECKS = (
     "struct-exhaustive",
     "determinism",
+    "flush-ack",
+    "enum-wildcard",
     "metrics-registry",
     "unsafe",
     "msrv",

@@ -1,7 +1,12 @@
-//! Planted violation: an unannotated `HashMap` in a byte-producing
-//! module (determinism).
+//! Planted violation: a hash-iteration hazard inside a fn that a
+//! byte-emitting sink (`cmd_map`) calls directly.
 
 use std::collections::HashMap;
+
+fn cmd_map() {
+    let n = count(&[1, 2, 2]);
+    println!("{n}");
+}
 
 fn count(keys: &[u64]) -> usize {
     let mut m: HashMap<u64, u32> = HashMap::new();
@@ -9,8 +14,4 @@ fn count(keys: &[u64]) -> usize {
         *m.entry(k).or_insert(0) += 1;
     }
     m.len()
-}
-
-fn main() {
-    let _ = count(&[1, 2, 2]);
 }

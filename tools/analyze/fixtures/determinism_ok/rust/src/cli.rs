@@ -1,0 +1,21 @@
+//! Clean counterexample: the same hazard exists, but no byte-emitting
+//! sink can reach it — `count` is called only by a diagnostics helper
+//! that `cmd_map` never calls, so taint reachability stays empty.
+
+use std::collections::HashMap;
+
+fn cmd_map() {
+    println!("mapped");
+}
+
+fn debug_histogram(keys: &[u64]) -> usize {
+    count(keys)
+}
+
+fn count(keys: &[u64]) -> usize {
+    let mut m: HashMap<u64, u32> = HashMap::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0) += 1;
+    }
+    m.len()
+}

@@ -1,0 +1,25 @@
+//! Planted violations: a byte-affecting enum matched with a silent
+//! wildcard, and a frame-kind match that absorbs unknown kinds.
+
+enum EngineKind {
+    Rust,
+    Bitpal,
+}
+
+const KIND_DATA: u8 = 1;
+const KIND_FINISH: u8 = 2;
+
+fn width(kind: &EngineKind) -> u64 {
+    match kind {
+        EngineKind::Bitpal => 64,
+        _ => 0,
+    }
+}
+
+fn on_frame(kind: u8) -> u32 {
+    match kind {
+        KIND_DATA => 1,
+        KIND_FINISH => 2,
+        _ => 0,
+    }
+}

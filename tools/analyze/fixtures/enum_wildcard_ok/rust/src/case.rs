@@ -1,0 +1,35 @@
+//! Clean counterexamples: every variant named; the frame-kind wildcard
+//! fails loudly; one wildcard carries an annotation with its reason.
+
+enum EngineKind {
+    Rust,
+    Bitpal,
+}
+
+const KIND_DATA: u8 = 1;
+const KIND_FINISH: u8 = 2;
+
+fn width(kind: &EngineKind) -> u64 {
+    match kind {
+        EngineKind::Bitpal => 64,
+        EngineKind::Rust => 0,
+    }
+}
+
+fn on_frame(kind: u8) -> u32 {
+    match kind {
+        KIND_DATA => 1,
+        KIND_FINISH => 2,
+        other => panic!("unknown frame kind {other}"),
+    }
+}
+
+fn label(kind: &EngineKind) -> &'static str {
+    match kind {
+        EngineKind::Bitpal => "bitpal",
+        // dart-analyze: allow(enum-wildcard): label is a log-only
+        // string; a new variant falling through to "other" cannot
+        // change mapping bytes.
+        _ => "other",
+    }
+}

@@ -1,0 +1,27 @@
+//! Planted protocol violations: a Flush whose ack is never received,
+//! and a Close variant that exists only on paper.
+
+use std::sync::mpsc;
+
+enum PoolMsg {
+    Items { n: u32 },
+    Flush { ack: mpsc::Sender<u32> },
+    Close { ack: mpsc::Sender<u32> },
+}
+
+fn flush(tx: &mpsc::Sender<PoolMsg>) {
+    let (ack_tx, _ack_rx) = mpsc::channel();
+    let _ = tx.send(PoolMsg::Flush { ack: ack_tx });
+    // the barrier never completes: _ack_rx is dropped unread
+}
+
+fn worker(rx: mpsc::Receiver<PoolMsg>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            PoolMsg::Items { n } => drop(n),
+            PoolMsg::Flush { ack } => {
+                let _ = ack.send(1);
+            }
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Clean counterexample: the ack channel is created in the sending fn
+//! and the receive is reachable (one call away), so the epoch barrier
+//! closes; every variant is both sent and handled.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+enum PoolMsg {
+    Items { n: u32 },
+    Flush { ack: mpsc::Sender<u32> },
+}
+
+fn push(tx: &mpsc::Sender<PoolMsg>) {
+    let _ = tx.send(PoolMsg::Items { n: 1 });
+}
+
+fn flush(tx: &mpsc::Sender<PoolMsg>) {
+    let (ack_tx, ack_rx) = mpsc::channel();
+    let _ = tx.send(PoolMsg::Flush { ack: ack_tx });
+    wait_ack(ack_rx);
+}
+
+fn wait_ack(rx: mpsc::Receiver<u32>) {
+    let _ = rx.recv_timeout(Duration::from_secs(1));
+}
+
+fn worker(rx: mpsc::Receiver<PoolMsg>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            PoolMsg::Items { n } => drop(n),
+            PoolMsg::Flush { ack } => {
+                let _ = ack.send(1);
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Same shape as taint_transitive_bad, but the hazard carries a proof:
+//! the set is drained through a sort, so hash order never escapes.
+
+use std::collections::HashSet;
+
+fn dedup_order(keys: &[u64]) -> Vec<u64> {
+    // dart-analyze: allow(determinism): membership dedup only; the
+    // collected vector is sorted before returning, so hash order is
+    // unobservable downstream.
+    let mut seen: HashSet<u64> = HashSet::new();
+    for &k in keys {
+        seen.insert(k);
+    }
+    let mut out: Vec<u64> = seen.iter().copied().collect();
+    out.sort_unstable();
+    out
+}

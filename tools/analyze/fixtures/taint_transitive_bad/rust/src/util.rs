@@ -1,0 +1,12 @@
+//! The callee is dirty: it iterates a HashSet, so the emission order
+//! printed by `cmd_map` depends on hash state two hops away.
+
+use std::collections::HashSet;
+
+fn dedup_order(keys: &[u64]) -> Vec<u64> {
+    let mut seen: HashSet<u64> = HashSet::new();
+    for &k in keys {
+        seen.insert(k);
+    }
+    seen.iter().copied().collect()
+}

@@ -1,0 +1,535 @@
+"""Item-level symbol table: the parser half of the semantic pass.
+
+One linear walk over a file's token stream recovers the structure the
+interprocedural checks need — `fn` items with body spans and their
+`mod`/`impl` context, `enum` declarations with variants and variant
+fields, `struct` fields with their type identifiers, `use` aliases,
+and `match` expressions with per-arm pattern/body spans.
+
+This is deliberately not a full Rust parser. It tracks exactly the
+bracket/angle structure needed to find item boundaries, and it
+over-approximates everywhere a real compiler would disambiguate
+(macro bodies are plain tokens, generics are skipped, patterns are
+token slices). The call graph built on top (`callgraph.py`) inherits
+that over-approximation, which is the safe direction for a checker:
+extra edges can only make a hazard *look* reachable, never hide one.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .lexer import Tok
+from .model import SourceFile
+
+# Keywords that look like `ident (` call sites but are not calls, plus
+# everything that can never name a fn item.
+RUST_KEYWORDS = {
+    "as", "async", "await", "box", "break", "const", "continue", "crate",
+    "dyn", "else", "enum", "extern", "fn", "for", "if", "impl", "in",
+    "let", "loop", "match", "mod", "move", "mut", "pub", "ref", "return",
+    "self", "Self", "static", "struct", "super", "trait", "type",
+    "union", "unsafe", "use", "where", "while", "yield",
+}
+
+
+def _angle_delta(text: str) -> int:
+    return {"<": 1, "<<": 2, ">": -1, ">>": -2}.get(text, 0)
+
+
+def _skip_attr(sf: SourceFile, i: int) -> int:
+    """Index just past an attribute starting at ``i``, else ``i``."""
+    toks = sf.tokens
+    j = i
+    if j < len(toks) and toks[j].text == "#":
+        j += 1
+        if j < len(toks) and toks[j].text == "!":
+            j += 1
+        if j < len(toks) and toks[j].text == "[":
+            return sf._match(j, "[", "]") + 1
+    return i
+
+
+@dataclass
+class FnItem:
+    """One ``fn`` item (free fn, method, trait default, or nested fn)."""
+
+    path: str
+    name: str
+    line: int  # line of the `fn` keyword
+    qual: tuple  # in-crate module path, e.g. ("coordinator", "pool")
+    self_type: str | None  # impl/trait type, None for free and nested fns
+    fn_tok: int  # token index of the `fn` keyword
+    body: tuple[int, int]  # token range (open+1, close) of the body, (-1, -1) if none
+    nested: list = field(default_factory=list)  # full token ranges of nested fn items
+
+    @property
+    def key(self) -> tuple[str, int]:
+        return (self.path, self.fn_tok)
+
+    def own_ranges(self) -> list[tuple[int, int]]:
+        """Body token ranges minus nested ``fn`` items. Closures stay:
+        a closure's effects belong to the fn that runs or spawns it."""
+        lo, hi = self.body
+        if lo < 0:
+            return []
+        out, cur = [], lo
+        for nlo, nhi in sorted(self.nested):
+            if nlo > cur:
+                out.append((cur, nlo))
+            cur = max(cur, nhi)
+        if cur < hi:
+            out.append((cur, hi))
+        return out
+
+
+@dataclass
+class Variant:
+    name: str
+    line: int
+    fields: tuple  # record-variant field names, () for tuple/unit
+
+
+@dataclass
+class EnumItem:
+    path: str
+    name: str
+    line: int
+    variants: list
+
+
+@dataclass
+class StructItem:
+    path: str
+    name: str
+    line: int
+    fields: list  # (field name, tuple of type identifier texts, line)
+
+
+@dataclass
+class MatchArm:
+    line: int
+    pat: tuple[int, int]  # token range of the pattern (guard excluded)
+    body: tuple[int, int]  # token range of the arm body
+    has_guard: bool
+
+
+@dataclass
+class MatchExpr:
+    line: int
+    arms: list
+
+
+@dataclass
+class FileItems:
+    """Everything `parse_file` recovers from one source file."""
+
+    path: str
+    fns: list = field(default_factory=list)
+    enums: list = field(default_factory=list)
+    structs: list = field(default_factory=list)
+    uses: dict = field(default_factory=dict)  # leaf/alias -> full path segments
+    use_ranges: list = field(default_factory=list)  # token ranges of `use` items
+    matches: list = field(default_factory=list)
+
+    def in_use_item(self, idx: int) -> bool:
+        return any(lo <= idx < hi for lo, hi in self.use_ranges)
+
+    def pattern_spans(self) -> list[tuple[int, int]]:
+        return [arm.pat for m in self.matches for arm in m.arms]
+
+
+def file_qual(path: str) -> tuple:
+    """In-crate module path of a lib file:
+    ``rust/src/coordinator/pool.rs`` -> ``("coordinator", "pool")``."""
+    if not path.startswith("rust/src/"):
+        return ()
+    parts = path[len("rust/src/"):].removesuffix(".rs").split("/")
+    if parts and parts[-1] in ("lib", "main", "mod"):
+        parts = parts[:-1]
+    return tuple(parts)
+
+
+def parse_file(sf: SourceFile) -> FileItems:
+    """One pass: fns (with scope context), enums, structs, uses, matches."""
+    toks = sf.tokens
+    n = len(toks)
+    fi = FileItems(path=sf.path)
+    base = file_qual(sf.path)
+    mods: list[tuple[int, str]] = []  # (close token index, mod name)
+    impls: list[tuple[int, str | None]] = []  # (close, self type)
+    fn_stack: list[tuple[int, FnItem]] = []  # (body close, enclosing fn)
+    i = 0
+    while i < n:
+        while mods and i > mods[-1][0]:
+            mods.pop()
+        while impls and i > impls[-1][0]:
+            impls.pop()
+        while fn_stack and i > fn_stack[-1][0]:
+            fn_stack.pop()
+        t = toks[i]
+        if t.text == "#":
+            i = max(i + 1, _skip_attr(sf, i))
+            continue
+        if t.kind != "ident":
+            i += 1
+            continue
+        if t.text == "use":
+            j = i + 1
+            while j < n and toks[j].text != ";":
+                j += 1
+            fi.use_ranges.append((i, j + 1))
+            _use_tree(toks, i + 1, j, [], fi.uses)
+            i = j + 1
+            continue
+        if t.text == "mod" and i + 1 < n and toks[i + 1].kind == "ident":
+            if i + 2 < n and toks[i + 2].text == "{":
+                mods.append((sf._match(i + 2, "{", "}"), toks[i + 1].text))
+                i += 3
+                continue
+            i += 2
+            continue
+        if t.text in ("impl", "trait"):
+            scope = _impl_scope(sf, i)
+            if scope is not None:
+                close, self_type, open_idx = scope
+                impls.append((close, self_type))
+                i = open_idx + 1
+                continue
+            i += 1
+            continue
+        if t.text == "fn" and i + 1 < n and toks[i + 1].kind == "ident":
+            item = _fn_item(sf, i, base, mods, impls, fn_stack)
+            fi.fns.append(item)
+            if item.body[0] >= 0:
+                if fn_stack:
+                    fn_stack[-1][1].nested.append((i, item.body[1] + 1))
+                fn_stack.append((item.body[1], item))
+                i = item.body[0]
+                continue
+            i += 2
+            continue
+        if t.text == "enum" and i + 1 < n and toks[i + 1].kind == "ident":
+            item = _enum_item(sf, i)
+            if item is not None:
+                fi.enums.append(item)
+        if t.text == "struct" and i + 1 < n and toks[i + 1].kind == "ident":
+            item = _struct_item(sf, i)
+            if item is not None:
+                fi.structs.append(item)
+        if t.text == "match":
+            m = _match_expr(sf, i)
+            if m is not None:
+                fi.matches.append(m)
+        i += 1
+    return fi
+
+
+# -- item sub-parsers --------------------------------------------------
+
+
+def _use_tree(toks, lo, hi, prefix, out) -> None:
+    """Aliases declared by one use tree: leaf (or `as` name) -> path."""
+    segs = list(prefix)
+    alias = None
+    i = lo
+    while i < hi:
+        tx = toks[i].text
+        if tx == "{":
+            close = _slice_match(toks, i, hi)
+            for clo, chi in _split_commas(toks, i + 1, close):
+                _use_tree(toks, clo, chi, segs, out)
+            return
+        if tx == "as":
+            alias = toks[i + 1].text if i + 1 < hi else None
+            i += 2
+            continue
+        if tx == "*":
+            return  # glob: contributes no resolvable alias
+        if toks[i].kind == "ident":
+            segs.append(tx)
+        i += 1
+    if segs and segs[-1] == "self":
+        segs.pop()
+    name = alias or (segs[-1] if segs else None)
+    if name and name != "_":
+        out[name] = tuple(segs)
+
+
+def _slice_match(toks, i_open, hi) -> int:
+    depth = 0
+    for j in range(i_open, hi):
+        if toks[j].text == "{":
+            depth += 1
+        elif toks[j].text == "}":
+            depth -= 1
+            if depth == 0:
+                return j
+    return hi
+
+
+def _split_commas(toks, lo, hi):
+    depth = 0
+    cur = lo
+    for j in range(lo, hi):
+        tx = toks[j].text
+        if tx in "([{":
+            depth += 1
+        elif tx in ")]}":
+            depth -= 1
+        elif tx == "," and depth == 0:
+            yield (cur, j)
+            cur = j + 1
+    if cur < hi:
+        yield (cur, hi)
+
+
+def _impl_scope(sf, i):
+    """``(body close, self type, body open)`` of an impl/trait block, or
+    None for `impl Trait` in type position etc. Self type: the last
+    angle-depth-0 identifier after the last top-level `for` (so
+    `impl fmt::Display for Metrics` and `impl Metrics` both yield
+    `Metrics`; a trait block yields the trait name)."""
+    toks = sf.tokens
+    n = len(toks)
+    j = i + 1
+    angle = 0
+    last_ident = None
+    while j < n:
+        tx = toks[j].text
+        angle += _angle_delta(tx)
+        if tx == "{" and angle <= 0:
+            break
+        if tx == ";" and angle <= 0:
+            return None
+        if angle <= 0:
+            if tx == "for":
+                last_ident = None
+            elif toks[j].kind == "ident" and tx not in RUST_KEYWORDS:
+                last_ident = tx
+            elif tx == "Self":
+                last_ident = tx
+        j += 1
+    if j >= n:
+        return None
+    return (sf._match(j, "{", "}"), last_ident, j)
+
+
+def _fn_item(sf, i, base, mods, impls, fn_stack) -> FnItem:
+    toks = sf.tokens
+    n = len(toks)
+    name = toks[i + 1].text
+    j = i + 2
+    depth = angle = 0
+    body = (-1, -1)
+    while j < n:
+        tx = toks[j].text
+        if tx in "([":
+            depth += 1
+        elif tx in ")]":
+            depth -= 1
+        elif depth == 0:
+            angle += _angle_delta(tx)
+            if tx == "{" and angle <= 0:
+                body = (j + 1, sf._match(j, "{", "}"))
+                break
+            if tx == ";" and angle <= 0:
+                break
+        j += 1
+    # a nested fn is a free fn even inside an impl method
+    self_type = impls[-1][1] if impls and not fn_stack else None
+    return FnItem(
+        path=sf.path,
+        name=name,
+        line=toks[i].line,
+        qual=base + tuple(m[1] for m in mods),
+        self_type=self_type,
+        fn_tok=i,
+        body=body,
+    )
+
+
+def _enum_item(sf, i):
+    toks = sf.tokens
+    n = len(toks)
+    name = toks[i + 1].text
+    j = i + 2
+    angle = 0
+    while j < n:
+        tx = toks[j].text
+        angle += _angle_delta(tx)
+        if tx == "{" and angle <= 0:
+            break
+        if tx == ";" and angle <= 0:
+            return None
+        j += 1
+    if j >= n:
+        return None
+    close = sf._match(j, "{", "}")
+    variants = []
+    k = j + 1
+    while k < close:
+        k = _skip_attr(sf, k)
+        if k >= close or toks[k].kind != "ident":
+            k += 1
+            continue
+        v = Variant(name=toks[k].text, line=toks[k].line, fields=())
+        k += 1
+        if k < close and toks[k].text == "{":
+            vclose = sf._match(k, "{", "}")
+            names = []
+            m = k + 1
+            while m < vclose:
+                m = _skip_attr(sf, m)
+                if (
+                    m + 1 < vclose
+                    and toks[m].kind == "ident"
+                    and toks[m + 1].text == ":"
+                ):
+                    names.append(toks[m].text)
+                    # skip the field type to the next top-level comma
+                    d = 0
+                    while m < vclose:
+                        tx = toks[m].text
+                        if tx in "([{":
+                            d += 1
+                        elif tx in ")]}":
+                            d -= 1
+                        if tx == "," and d == 0:
+                            break
+                        m += 1
+                m += 1
+            v = Variant(name=v.name, line=v.line, fields=tuple(names))
+            k = vclose + 1
+        elif k < close and toks[k].text == "(":
+            k = sf._match(k, "(", ")") + 1
+        variants.append(v)
+        while k < close and toks[k].text != ",":  # skip `= disc`
+            k += 1
+        k += 1
+    return EnumItem(path=sf.path, name=name, line=toks[i].line, variants=variants)
+
+
+def _struct_item(sf, i):
+    toks = sf.tokens
+    n = len(toks)
+    name = toks[i + 1].text
+    j = i + 2
+    angle = 0
+    while j < n:
+        tx = toks[j].text
+        angle += _angle_delta(tx)
+        if tx == "{" and angle <= 0:
+            break
+        if tx in (";", "(") and angle <= 0:
+            return StructItem(path=sf.path, name=name, line=toks[i].line, fields=[])
+        j += 1
+    if j >= n:
+        return None
+    close = sf._match(j, "{", "}")
+    fields = []
+    k = j + 1
+    while k < close:
+        k = _skip_attr(sf, k)
+        if k >= close:
+            break
+        if toks[k].text == "pub":
+            k += 1
+            if k < close and toks[k].text == "(":
+                k = sf._match(k, "(", ")") + 1
+        if k + 1 < close and toks[k].kind == "ident" and toks[k + 1].text == ":":
+            fname, fline = toks[k].text, toks[k].line
+            type_idents = []
+            d = 0
+            m = k + 2
+            while m < close:
+                tx = toks[m].text
+                if tx in "([{":
+                    d += 1
+                elif tx in ")]}":
+                    d -= 1
+                if tx == "," and d == 0:
+                    break
+                if toks[m].kind == "ident":
+                    type_idents.append(tx)
+                m += 1
+            fields.append((fname, tuple(type_idents), fline))
+            k = m + 1
+            continue
+        k += 1
+    return StructItem(path=sf.path, name=name, line=toks[i].line, fields=fields)
+
+
+def _match_expr(sf, i):
+    """Parse ``match scrutinee { arms }`` starting at the ``match``
+    keyword; None if no arm block is found (e.g. a `match` path seg)."""
+    toks = sf.tokens
+    n = len(toks)
+    j = i + 1
+    depth = 0
+    while j < n:
+        tx = toks[j].text
+        if tx == "{" and depth == 0:
+            break
+        if tx in "([{":
+            depth += 1
+        elif tx in ")]}":
+            depth -= 1
+        elif tx == ";" and depth == 0:
+            return None
+        j += 1
+    if j >= n or j == i + 1:
+        return None
+    close = sf._match(j, "{", "}")
+    arms = []
+    k = j + 1
+    while k < close:
+        k = _skip_attr(sf, k)
+        if k >= close:
+            break
+        pat_lo = k
+        guard_at = -1
+        d = 0
+        while k < close:
+            tx = toks[k].text
+            if tx == "=>" and d == 0:
+                break
+            if tx in "([{":
+                d += 1
+            elif tx in ")]}":
+                d -= 1
+            elif tx == "if" and d == 0 and guard_at < 0:
+                guard_at = k
+            k += 1
+        if k >= close:
+            break
+        pat_hi = guard_at if guard_at >= 0 else k
+        body_lo = k + 1
+        if body_lo < close and toks[body_lo].text == "{":
+            body_hi = sf._match(body_lo, "{", "}") + 1
+            k = body_hi
+            if k < close and toks[k].text == ",":
+                k += 1
+        else:
+            d = 0
+            k = body_lo
+            while k < close:
+                tx = toks[k].text
+                if tx == "," and d == 0:
+                    break
+                if tx in "([{":
+                    d += 1
+                elif tx in ")]}":
+                    d -= 1
+                k += 1
+            body_hi = k
+            k += 1
+        arms.append(
+            MatchArm(
+                line=toks[pat_lo].line,
+                pat=(pat_lo, pat_hi),
+                body=(body_lo, body_hi),
+                has_guard=guard_at >= 0,
+            )
+        )
+    return MatchExpr(line=toks[i].line, arms=arms)

@@ -32,6 +32,13 @@ class Tok:
     kind: str  # "ident" | "num" | "str" | "char" | "lifetime" | "punct"
     text: str
     line: int  # 1-based line of the token's first character
+    start: int = -1  # byte offset of the first character
+    end: int = -1  # byte offset one past the last character
+
+    def span(self) -> tuple[int, int]:
+        """The token's ``[start, end)`` byte span; ``src[start:end] ==
+        text`` is the round-trip property the tests hold."""
+        return (self.start, self.end)
 
 
 @dataclass(frozen=True)
@@ -42,6 +49,12 @@ class Comment:
     line: int  # 1-based first line
     end_line: int  # 1-based last line (== line for line comments)
     doc: bool  # `///`, `//!`, `/**`, `/*!`
+    start: int = -1  # byte offset of the first character
+    end: int = -1  # byte offset one past the last character
+
+    def span(self) -> tuple[int, int]:
+        """The comment's ``[start, end)`` byte span."""
+        return (self.start, self.end)
 
 
 def lex(src: str):
@@ -71,7 +84,14 @@ def lex(src: str):
                     j = n
                 text = src[i:j]
                 comments.append(
-                    Comment(text, line, line, doc=text.startswith(("///", "//!")))
+                    Comment(
+                        text,
+                        line,
+                        line,
+                        doc=text.startswith(("///", "//!")),
+                        start=i,
+                        end=j,
+                    )
                 )
                 i = j
                 continue
@@ -94,6 +114,8 @@ def lex(src: str):
                         line,
                         line + bump_lines(text),
                         doc=text.startswith(("/**", "/*!")) and not text.startswith("/**/"),
+                        start=i,
+                        end=j,
                     )
                 )
                 line += bump_lines(text)
@@ -103,14 +125,14 @@ def lex(src: str):
         # raw / byte-string prefixes: r"", r#""#, b"", br"", br#""#
         if c in "rb" and _string_prefix(src, i):
             j, text = _string_prefix(src, i)
-            toks.append(Tok("str", text, line))
+            toks.append(Tok("str", text, line, start=i, end=j))
             line += bump_lines(text)
             i = j
             continue
         if c == '"':
             j = _scan_quoted(src, i + 1)
             text = src[i:j]
-            toks.append(Tok("str", text, line))
+            toks.append(Tok("str", text, line, start=i, end=j))
             line += bump_lines(text)
             i = j
             continue
@@ -118,7 +140,7 @@ def lex(src: str):
             # char literal or lifetime
             if i + 1 < n and src[i + 1] == "\\":
                 j = _scan_quoted(src, i + 2, quote="'")
-                toks.append(Tok("char", src[i:j], line))
+                toks.append(Tok("char", src[i:j], line, start=i, end=j))
                 i = j
                 continue
             if i + 2 < n and src[i + 1] in _IDENT_START:
@@ -128,17 +150,17 @@ def lex(src: str):
                 while j < n and src[j] in _IDENT_CONT:
                     j += 1
                 if j < n and src[j] == "'":
-                    toks.append(Tok("char", src[i : j + 1], line))
+                    toks.append(Tok("char", src[i : j + 1], line, start=i, end=j + 1))
                     i = j + 1
                 else:
-                    toks.append(Tok("lifetime", src[i:j], line))
+                    toks.append(Tok("lifetime", src[i:j], line, start=i, end=j))
                     i = j
                 continue
             if i + 2 < n and src[i + 2] == "'":
-                toks.append(Tok("char", src[i : i + 3], line))
+                toks.append(Tok("char", src[i : i + 3], line, start=i, end=i + 3))
                 i = i + 3
                 continue
-            toks.append(Tok("punct", "'", line))
+            toks.append(Tok("punct", "'", line, start=i, end=i + 1))
             i += 1
             continue
         # -- identifiers / numbers ------------------------------------
@@ -146,7 +168,7 @@ def lex(src: str):
             j = i + 1
             while j < n and src[j] in _IDENT_CONT:
                 j += 1
-            toks.append(Tok("ident", src[i:j], line))
+            toks.append(Tok("ident", src[i:j], line, start=i, end=j))
             i = j
             continue
         if c.isdigit():
@@ -157,17 +179,17 @@ def lex(src: str):
                 if src[j] == "." and src.startswith("..", j):
                     break
                 j += 1
-            toks.append(Tok("num", src[i:j], line))
+            toks.append(Tok("num", src[i:j], line, start=i, end=j))
             i = j
             continue
         # -- punctuation ----------------------------------------------
         for p in _PUNCT2:
             if src.startswith(p, i):
-                toks.append(Tok("punct", p, line))
+                toks.append(Tok("punct", p, line, start=i, end=i + len(p)))
                 i += len(p)
                 break
         else:
-            toks.append(Tok("punct", c, line))
+            toks.append(Tok("punct", c, line, start=i, end=i + 1))
             i += 1
     return toks, comments
 

@@ -1,0 +1,103 @@
+"""Finding renderers: plain text, GitHub workflow commands, SARIF 2.1.0.
+
+The text form (`path:line: [check] message`) is the contract pinned by
+the test suite; the other two exist so CI can surface findings inline
+on PRs (GitHub annotations) and archive them in a machine-readable run
+log (SARIF) without changing the analyzer's exit-code semantics.
+"""
+
+from __future__ import annotations
+
+import json
+
+from . import config
+
+_SARIF_VERSION = "2.1.0"
+_SARIF_SCHEMA = (
+    "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/"
+    "Schemata/sarif-schema-2.1.0.json"
+)
+
+# One-line rule descriptions surfaced in SARIF viewers.
+_RULE_DESCRIPTIONS = {
+    "struct-exhaustive": "Struct literals of evolving structs must name every field.",
+    "determinism": "Nondeterminism hazards reachable from byte-emitting sinks need proofs.",
+    "flush-ack": "Ack-bearing protocol messages need a created channel and a reachable receive.",
+    "enum-wildcard": "Matches on byte-affecting enums must not fall through a wildcard arm.",
+    "metrics-registry": "Every Metrics counter must be registered in invariant_counters().",
+    "unsafe": "unsafe code needs an adjacent SAFETY justification.",
+    "msrv": "No std APIs newer than the pinned rust-version.",
+    "line-length": "rustfmt max_width, enforced without rustfmt.",
+    "pub-doc": "Public items need doc comments (missing_docs parity).",
+    "cli-docs": "Every CLI flag must appear in the user documentation.",
+    "annotation": "allow() annotations must name a check, give a reason, and stay live.",
+}
+
+
+def render_text(findings) -> str:
+    return "\n".join(f.render() for f in findings)
+
+
+def render_github(findings) -> str:
+    """GitHub Actions workflow commands — one `::error` per finding.
+    Messages must not contain the `::` command delimiters raw; GitHub
+    requires percent-encoding of %, CR, LF in the message property."""
+    lines = []
+    for f in findings:
+        msg = (
+            f"[{f.check}] {f.message}"
+            .replace("%", "%25")
+            .replace("\r", "%0D")
+            .replace("\n", "%0A")
+        )
+        lines.append(f"::error file={f.path},line={f.line}::{msg}")
+    return "\n".join(lines)
+
+
+def render_sarif(findings) -> str:
+    rules = [
+        {
+            "id": name,
+            "shortDescription": {"text": _RULE_DESCRIPTIONS.get(name, name)},
+        }
+        for name in tuple(config.ALL_CHECKS) + ("annotation",)
+    ]
+    results = [
+        {
+            "ruleId": f.check,
+            "level": "error",
+            "message": {"text": f.message},
+            "locations": [
+                {
+                    "physicalLocation": {
+                        "artifactLocation": {"uri": f.path},
+                        "region": {"startLine": f.line},
+                    }
+                }
+            ],
+        }
+        for f in findings
+    ]
+    doc = {
+        "$schema": _SARIF_SCHEMA,
+        "version": _SARIF_VERSION,
+        "runs": [
+            {
+                "tool": {
+                    "driver": {
+                        "name": "dart-analyze",
+                        "rules": rules,
+                    }
+                },
+                "results": results,
+            }
+        ],
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)
+
+
+RENDERERS = {
+    "text": render_text,
+    "github": render_github,
+    "sarif": render_sarif,
+}

@@ -3,10 +3,14 @@
 from __future__ import annotations
 
 import argparse
+import json
+import subprocess
 import sys
+import time
 from pathlib import Path
 
 from . import config
+from .callgraph import CallGraph
 from .checks import CHECKS
 from .model import Finding, SourceFile
 
@@ -17,6 +21,7 @@ class Tree:
     def __init__(self, root: Path):
         self.root = root
         self.files: dict[str, SourceFile] = {}
+        self._graph: CallGraph | None = None
 
     def load(self) -> None:
         for scan in config.SCAN_DIRS:
@@ -30,6 +35,13 @@ class Tree:
                 self.files[rel] = SourceFile.parse(
                     rel, path.read_text(encoding="utf-8", errors="replace")
                 )
+
+    def callgraph(self) -> CallGraph:
+        """Item table + call graph, built once and shared by the
+        semantic checks."""
+        if self._graph is None:
+            self._graph = CallGraph(self.files)
+        return self._graph
 
     def read_doc(self, rel: str) -> str:
         path = self.root / rel
@@ -79,22 +91,95 @@ def validate_annotations(tree: Tree, checks_run) -> list[Finding]:
     return out
 
 
-def run(root: Path, checks: list[str]) -> list[Finding]:
+def changed_paths(root: Path) -> set[str]:
+    """Repo-relative paths touched per git: unstaged + staged diffs and
+    untracked files. Empty when git is unavailable (degrades to the
+    full run rather than silently analyzing nothing)."""
+    out: set[str] = set()
+    cmds = (
+        ["git", "diff", "--name-only"],
+        ["git", "diff", "--name-only", "--cached"],
+        ["git", "ls-files", "--others", "--exclude-standard"],
+    )
+    for cmd in cmds:
+        try:
+            p = subprocess.run(cmd, cwd=root, capture_output=True, text=True, timeout=30)
+        except (OSError, subprocess.TimeoutExpired):
+            return set()
+        if p.returncode != 0:
+            return set()
+        out.update(ln.strip() for ln in p.stdout.splitlines() if ln.strip())
+    return out
+
+
+def run(root: Path, checks: list[str], changed: set[str] | None = None) -> list[Finding]:
+    """Run ``checks`` over the tree at ``root``. With ``changed``, the
+    whole tree is still loaded (taint and call resolution stay global)
+    but findings are filtered to the changed files — a hazard you just
+    introduced in an untouched file's callee still names *that* file,
+    so `--changed` trades recall for speed only in reporting scope."""
     tree = Tree(root)
     tree.load()
     findings: list[Finding] = []
     for name in checks:
         findings.extend(CHECKS[name](tree.files, tree))
     findings.extend(validate_annotations(tree, set(checks)))
+    if changed is not None:
+        findings = [f for f in findings if f.path in changed]
     findings.sort(key=lambda f: (f.path, f.line, f.check))
     return findings
+
+
+def write_bench(path: Path, elapsed: float, n_files: int, n_findings: int, budget: float) -> None:
+    path.write_text(
+        json.dumps(
+            {
+                "tool": "dart-analyze",
+                "wall_s": round(elapsed, 3),
+                "budget_s": budget,
+                "files": n_files,
+                "findings": n_findings,
+                "within_budget": elapsed < budget,
+            },
+            indent=2,
+            sort_keys=True,
+        )
+        + "\n"
+    )
+
+
+def verify_fixtures(root: Path) -> int:
+    """CI drift gate: every fixture dir is in the manifest and vice
+    versa, and every expected finding names a file that exists."""
+    fixtures = root / "tools" / "analyze" / "fixtures"
+    manifest = json.loads((fixtures / "manifest.json").read_text())
+    listed = {c["dir"] for c in manifest["cases"]}
+    present = {d.name for d in fixtures.iterdir() if d.is_dir()}
+    bad = 0
+    for name in sorted(listed ^ present):
+        where = "manifest only" if name in listed else "directory only"
+        print(f"fixture drift: {name} ({where})", file=sys.stderr)
+        bad += 1
+    for case in manifest["cases"]:
+        for f in case.get("findings", ()):
+            if not (fixtures / case["dir"] / f["file"]).is_file():
+                print(
+                    f"fixture drift: {case['dir']} expects findings in "
+                    f"missing file {f['file']}",
+                    file=sys.stderr,
+                )
+                bad += 1
+    if bad:
+        return 1
+    print(f"dart-analyze: fixture manifest is drift-free ({len(listed)} cases)", file=sys.stderr)
+    return 0
 
 
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python3 -m tools.analyze",
         description="Toolchain-free static analysis of the Rust tree "
-        "(determinism invariants, unsafe audit, MSRV, docs parity).",
+        "(determinism taint, protocol lints, unsafe audit, MSRV, docs parity).",
     )
     parser.add_argument(
         "--root",
@@ -111,6 +196,42 @@ def main(argv: list[str] | None = None) -> int:
     parser.add_argument(
         "--list-checks", action="store_true", help="list check names and exit"
     )
+    parser.add_argument(
+        "--changed",
+        action="store_true",
+        help="report only findings in git-changed files (analysis itself "
+        "stays whole-tree so call resolution is unaffected)",
+    )
+    parser.add_argument(
+        "--changed-from",
+        metavar="FILE",
+        default=None,
+        help=argparse.SUPPRESS,  # test hook: newline-separated path list
+    )
+    parser.add_argument(
+        "--format",
+        choices=("text", "github", "sarif"),
+        default="text",
+        help="finding output format (default: text)",
+    )
+    parser.add_argument(
+        "--bench",
+        metavar="FILE",
+        default=None,
+        help="write wall-time/budget JSON to FILE and fail if the run "
+        "exceeds the budget",
+    )
+    parser.add_argument(
+        "--budget-s",
+        type=float,
+        default=10.0,
+        help="wall-time budget for --bench (default: 10)",
+    )
+    parser.add_argument(
+        "--verify-fixtures",
+        action="store_true",
+        help="check the fixture manifest against the fixtures directory and exit",
+    )
     args = parser.parse_args(argv)
 
     if args.list_checks:
@@ -119,19 +240,52 @@ def main(argv: list[str] | None = None) -> int:
         return 0
 
     root = args.root or Path(__file__).resolve().parents[2]
+
+    if args.verify_fixtures:
+        return verify_fixtures(root)
+
+    changed: set[str] | None = None
+    if args.changed_from is not None:
+        changed = {
+            ln.strip()
+            for ln in Path(args.changed_from).read_text().splitlines()
+            if ln.strip()
+        }
+    elif args.changed:
+        changed = changed_paths(root) or None
+
     checks = args.check or list(config.ALL_CHECKS)
-    findings = run(root, checks)
-    for f in findings:
-        print(f.render())
+    t0 = time.monotonic()
+    findings = run(root, checks, changed)
+    elapsed = time.monotonic() - t0
+
+    from .report import RENDERERS
+
+    rendered = RENDERERS[args.format](findings)
+    if rendered:
+        print(rendered)
+
+    scope = f" [changed: {len(changed)} path(s)]" if changed is not None else ""
+    if args.bench is not None:
+        n_files = len(list((root / "rust").rglob("*.rs"))) if (root / "rust").is_dir() else 0
+        write_bench(Path(args.bench), elapsed, n_files, len(findings), args.budget_s)
+        print(
+            f"dart-analyze: {elapsed:.2f}s wall (budget {args.budget_s:.0f}s)",
+            file=sys.stderr,
+        )
+        if elapsed >= args.budget_s:
+            print("dart-analyze: over wall-time budget", file=sys.stderr)
+            return 2
+
     if findings:
         print(
             f"dart-analyze: {len(findings)} finding(s) "
-            f"[checks: {', '.join(checks)}]",
+            f"[checks: {', '.join(checks)}]{scope}",
             file=sys.stderr,
         )
         return 1
     print(
-        f"dart-analyze: clean [checks: {', '.join(checks)}]",
+        f"dart-analyze: clean [checks: {', '.join(checks)}]{scope}",
         file=sys.stderr,
     )
     return 0
