@@ -24,7 +24,7 @@ use crate::genome::fastq::{save_fastq, FastqRecord, FastqStream, PairedFastqStre
 use crate::genome::mutate::MutateConfig;
 use crate::genome::synth::{ReadSimConfig, SynthConfig};
 use crate::genome::ReadRecord;
-use crate::index::MinimizerIndex;
+use crate::index::{sniff_format, IndexBackend, IndexFormat, IndexRef, MappedIndex, MinimizerIndex};
 use crate::params::{K, READ_LEN, W};
 use crate::pim::xbar_sim::{self, CostSource};
 use crate::pim::DartPimConfig;
@@ -110,8 +110,11 @@ COMMANDS
             [--snp-rate 0.001] [--sub-rate 0.004]
             [--paired] [--insert-mean 350] [--insert-sd 30]
   index     --ref R.fasta --out index.bin [--read-len 150]
+            [--index-format v1|v2] [--shards 16]
+            (or --from old.bin to re-encode an existing index)
   map       --ref R.fasta --reads R.fastq|- [--engine xla|rust|bitpal]
             (or --index index.bin instead of --ref)
+            [--index-format v1|v2]
             [--reads2 R2.fastq | --interleaved]
             [--insert-min 50] [--insert-max 1000] [--no-rescue]
             [--max-reads 25000] [--low-th 3] [--batch 256] [--min-only]
@@ -119,6 +122,7 @@ COMMANDS
             [--stream-epoch 2048] [--out mappings.tsv]
   serve     --socket /path/daemon.sock | --tcp HOST:PORT
             (--ref R.fasta [--read-len 150] | --index index.bin)
+            [--index-format v1|v2]
             [--engine rust|bitpal] [--threads 1] [--stream-epoch 2048]
             [--max-reads 25000] [--low-th 3] [--batch 256] [--min-only]
             [--revcomp] [--insert-min 50] [--insert-max 1000] [--no-rescue]
@@ -166,6 +170,19 @@ invariant 8). DART_PIM_ENGINE sets the default worker engine.
 --engine xla is always single-threaded (the PJRT client cannot be
 shared across threads); combining it with --threads N > 1 warns and
 runs with 1.
+
+INDEX FORMATS: v1 (DARTPIM1) is the original length-prefixed stream,
+deserialized into a heap-resident table on load. v2 (DARTPIM2) lays the
+index out in fixed little-endian sections — reference, per-shard
+postings directory, sorted per-shard slabs — so `map` and `serve` mmap
+the file and answer lookups zero-copy from the page cache: resident
+memory stays far below the on-disk index size. `index --index-format
+v2` builds it in two streaming passes (bounded memory); `index --from
+old.bin --index-format v2 --out new.bin` re-encodes an existing index
+in either direction. `map` and `serve` auto-detect the format from the
+file magic; `--index-format` forces a backend (v1 = heap, loading a v2
+file through one-shot conversion; v2 = mmap, refusing v1 files). The
+backend never changes output bytes (determinism invariant 9).
 
 SERVE: `serve` keeps the index resident and maps many concurrent FASTQ
 streams over one worker pool. Each connection is a session: handshake
@@ -288,21 +305,85 @@ fn cmd_synth(args: &Args) -> Result<()> {
 }
 
 fn cmd_index(args: &Args) -> Result<()> {
-    let ref_path = args.get("ref").context("--ref required")?;
     let out = args.get("out").context("--out required")?;
+    let format = index_format_from_args(args)?.unwrap_or(IndexFormat::V1);
+    let n_shards = args.get_usize("shards", crate::index::v2::DEFAULT_V2_SHARDS)?;
+    if let Some(from) = args.get("from") {
+        return convert_index(from, out, format, n_shards);
+    }
+    let ref_path = args.get("ref").context("--ref or --from required")?;
     let read_len = args.get_usize("read-len", READ_LEN)?;
     let reference = load_reference(ref_path)?;
-    let index = MinimizerIndex::build(reference, K, W, read_len);
-    crate::index::save_index(out, &index)?;
-    let stats = index.stats(3);
+    match format {
+        IndexFormat::V1 => {
+            let index = MinimizerIndex::build(reference, K, W, read_len);
+            crate::index::save_index(out, &index)?;
+            let stats = index.stats(3);
+            println!(
+                "indexed {} bp -> {} (v1, {} minimizers, {} occurrences)",
+                index.reference.len(),
+                out,
+                stats.n_minimizers,
+                stats.n_occurrences
+            );
+        }
+        IndexFormat::V2 => {
+            // two streaming passes over the reference: peak memory is
+            // O(reference + largest shard), never the whole posting
+            // table (ISSUE: index a genome larger than RAM allows)
+            let stats = crate::index::build_index_v2(out, &reference, K, W, read_len, n_shards)
+                .with_context(|| format!("writing v2 index {out}"))?;
+            println!(
+                "indexed {} bp -> {} (v2, {} shards, {} minimizers, {} occurrences)",
+                reference.len(),
+                out,
+                n_shards,
+                stats.n_entries,
+                stats.n_positions
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `index --from old --out new [--index-format F]`: re-encode an
+/// existing index in either direction (v1->v2, v2->v1, or a
+/// same-format rewrite). The postings survive byte-exactly — both
+/// writers order every shard by key, so converting and mapping again
+/// cannot change output bytes (determinism invariant 9).
+fn convert_index(from: &str, out: &str, format: IndexFormat, n_shards: usize) -> Result<()> {
+    let src_format = sniff_format(from).with_context(|| format!("sniffing index {from}"))?;
+    let heap = match src_format {
+        IndexFormat::V1 => crate::index::load_index(from)
+            .with_context(|| format!("loading v1 index {from}"))?,
+        IndexFormat::V2 => MappedIndex::open(from)
+            .with_context(|| format!("mapping v2 index {from}"))?
+            .to_heap(),
+    };
+    match format {
+        IndexFormat::V1 => crate::index::save_index(out, &heap)
+            .with_context(|| format!("writing v1 index {out}"))?,
+        IndexFormat::V2 => crate::index::save_index_v2(out, &heap, n_shards)
+            .with_context(|| format!("writing v2 index {out}"))?,
+    }
     println!(
-        "indexed {} bp -> {} ({} minimizers, {} occurrences)",
-        index.reference.len(),
-        out,
-        stats.n_minimizers,
-        stats.n_occurrences
+        "converted {from} ({}) -> {out} ({}, {} minimizers)",
+        src_format.as_str(),
+        format.as_str(),
+        heap.n_minimizers()
     );
     Ok(())
+}
+
+/// The `--index-format` selection: `Some` when the user forces a
+/// format, `None` for auto-detection (file magic on load, v1 on build).
+fn index_format_from_args(args: &Args) -> Result<Option<IndexFormat>> {
+    match args.get("index-format") {
+        None => Ok(None),
+        Some("v1") => Ok(Some(IndexFormat::V1)),
+        Some("v2") => Ok(Some(IndexFormat::V2)),
+        Some(other) => bail!("unknown --index-format {other:?} (v1|v2)"),
+    }
 }
 
 /// Load the first sequence of a reference FASTA, with the file path in
@@ -476,23 +557,70 @@ fn stream_input(
     }
 }
 
-/// Load the prebuilt index (`--index`) or build one from `--ref`,
-/// checked against the read stream's geometry.
-fn load_or_build_index(args: &Args, read_len: usize) -> Result<MinimizerIndex> {
-    if let Some(idx_path) = args.get("index") {
-        let idx = crate::index::load_index(idx_path)
-            .with_context(|| format!("loading index {idx_path}"))?;
-        anyhow::ensure!(
-            idx.read_len == read_len,
-            "index was built for {} bp reads, FASTQ has {} bp",
-            idx.read_len,
-            read_len
-        );
-        Ok(idx)
+/// Open an on-disk index as the backend `--index-format` selects (or
+/// the file's own format when the flag is absent): v1 deserializes
+/// into the heap, v2 memory-maps the file and serves lookups zero-copy.
+/// Forcing `v1` on a v2 file loads it through a one-shot heap
+/// conversion; forcing `v2` on a v1 file errors (convert it first).
+fn load_backend(args: &Args, idx_path: &str) -> Result<IndexBackend> {
+    let forced = index_format_from_args(args)?;
+    let on_disk =
+        sniff_format(idx_path).with_context(|| format!("sniffing index {idx_path}"))?;
+    Ok(match (forced.unwrap_or(on_disk), on_disk) {
+        (IndexFormat::V1, IndexFormat::V1) => IndexBackend::Heap(
+            crate::index::load_index(idx_path)
+                .with_context(|| format!("loading index {idx_path}"))?,
+        ),
+        (IndexFormat::V1, IndexFormat::V2) => IndexBackend::Heap(
+            MappedIndex::open(idx_path)
+                .with_context(|| format!("mapping index {idx_path}"))?
+                .to_heap(),
+        ),
+        (IndexFormat::V2, IndexFormat::V2) => IndexBackend::Mapped(
+            MappedIndex::open(idx_path)
+                .with_context(|| format!("mapping index {idx_path}"))?,
+        ),
+        (IndexFormat::V2, IndexFormat::V1) => bail!(
+            "{idx_path} is a v1 index; the mapped backend needs the DARTPIM2 layout \
+             (convert with `index --from {idx_path} --index-format v2 --out NEW`)"
+        ),
+    })
+}
+
+/// Load the prebuilt index (`--index`) as a backend, or build a heap
+/// index from `--ref`, checked against the read stream's geometry.
+/// Whichever backend comes out, the mapping output bytes are identical
+/// (determinism invariant 9).
+fn load_or_build_backend(args: &Args, read_len: usize) -> Result<IndexBackend> {
+    let backend = if let Some(idx_path) = args.get("index") {
+        load_backend(args, idx_path)?
     } else {
+        anyhow::ensure!(
+            index_format_from_args(args)? != Some(IndexFormat::V2),
+            "--index-format v2 needs an on-disk index (--index FILE); build one with \
+             `index --ref ... --index-format v2` first"
+        );
         let ref_path = args.get("ref").context("--ref or --index required")?;
         let reference = load_reference(ref_path)?;
-        Ok(MinimizerIndex::build(reference, K, W, read_len))
+        IndexBackend::Heap(MinimizerIndex::build(reference, K, W, read_len))
+    };
+    anyhow::ensure!(
+        backend.view().read_len() == read_len,
+        "index was built for {} bp reads, FASTQ has {} bp",
+        backend.view().read_len(),
+        read_len
+    );
+    Ok(backend)
+}
+
+/// Load the prebuilt index (`--index`) or build one from `--ref`,
+/// checked against the read stream's geometry — always heap-resident
+/// (v2 files convert on load), for subcommands whose internals hold a
+/// concrete [`MinimizerIndex`] (`evaluate`, `simulate`).
+fn load_or_build_index(args: &Args, read_len: usize) -> Result<MinimizerIndex> {
+    match load_or_build_backend(args, read_len)? {
+        IndexBackend::Heap(idx) => Ok(idx),
+        IndexBackend::Mapped(mapped) => Ok(mapped.to_heap()),
     }
 }
 
@@ -630,7 +758,7 @@ pub(crate) fn write_tsv_row(
 /// TSV rows, `evaluate` collects via [`run_pipeline`]).
 fn run_pipeline_stream<I, R, S>(
     args: &Args,
-    index: &MinimizerIndex,
+    index: IndexRef<'_>,
     reads: I,
     sink: S,
 ) -> Result<crate::coordinator::metrics::Metrics>
@@ -640,7 +768,7 @@ where
     S: FnMut(u32, Option<crate::coordinator::FinalMapping>) -> Result<()>,
 {
     anyhow::ensure!(
-        index.read_len == READ_LEN || args.get("engine") != Some("xla"),
+        index.read_len() == READ_LEN || args.get("engine") != Some("xla"),
         "the AOT artifacts target {}bp reads; use --engine rust or bitpal for other lengths",
         READ_LEN
     );
@@ -704,7 +832,7 @@ fn run_pipeline(
     reads: &[ReadRecord],
 ) -> Result<(Vec<Option<crate::coordinator::FinalMapping>>, crate::coordinator::metrics::Metrics)> {
     let mut out = Vec::with_capacity(reads.len());
-    let metrics = run_pipeline_stream(args, index, reads.iter().map(Ok), |_, m| {
+    let metrics = run_pipeline_stream(args, index.into(), reads.iter().map(Ok), |_, m| {
         out.push(m);
         Ok(())
     })?;
@@ -713,7 +841,8 @@ fn run_pipeline(
 
 fn cmd_map(args: &Args) -> Result<()> {
     let (read_len, paired, reads) = stream_input(args)?;
-    let index = load_or_build_index(args, read_len)?;
+    let backend = load_or_build_backend(args, read_len)?;
+    let index = backend.view();
     let out_path = args.get("out");
     // write through a `.tmp` sibling so a mid-stream failure (malformed
     // FASTQ record, worker error) never leaves a truncated TSV at the
@@ -732,7 +861,7 @@ fn cmd_map(args: &Args) -> Result<()> {
     // and --engine setting
     let result = (|| -> Result<crate::coordinator::metrics::Metrics> {
         write_tsv_header(&mut out, paired)?;
-        let metrics = run_pipeline_stream(args, &index, reads, |_, m| {
+        let metrics = run_pipeline_stream(args, index, reads, |_, m| {
             if let Some(m) = m {
                 write_tsv_row(&mut out, paired, &m)?;
             }
@@ -779,24 +908,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.threads = cfg.threads.max(1);
     // The daemon fixes the read length up front (it determines the index
     // geometry); sessions whose streams diverge are rejected at intake.
-    let index = if let Some(idx_path) = args.get("index") {
-        let idx = crate::index::load_index(idx_path)
-            .with_context(|| format!("loading index {idx_path}"))?;
+    let backend = if let Some(idx_path) = args.get("index") {
+        let backend = load_backend(args, idx_path)?;
         if let Some(rl) = args.get("read-len") {
             let rl: usize = rl.parse().context("--read-len expects an integer")?;
             anyhow::ensure!(
-                idx.read_len == rl,
+                backend.view().read_len() == rl,
                 "index {idx_path} was built for {} bp reads, --read-len says {rl}",
-                idx.read_len
+                backend.view().read_len()
             );
         }
-        idx
+        backend
     } else {
+        anyhow::ensure!(
+            index_format_from_args(args)? != Some(IndexFormat::V2),
+            "--index-format v2 needs an on-disk index (--index FILE); build one with \
+             `index --ref ... --index-format v2` first"
+        );
         let ref_path = args.get("ref").context("--ref or --index required")?;
         let read_len = args.get_usize("read-len", READ_LEN)?;
         let reference = load_reference(ref_path)?;
-        MinimizerIndex::build(reference, K, W, read_len)
+        IndexBackend::Heap(MinimizerIndex::build(reference, K, W, read_len))
     };
+    eprintln!("serve: index backend: {}", backend.kind());
     let template = crate::serve::SessionTemplate {
         cfg,
         pairing: pairing_from_args(args)?,
@@ -808,7 +942,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         (None, Some(addr)) => crate::serve::Bind::Tcp(addr.to_string()),
         (None, None) => bail!("serve requires --socket PATH or --tcp HOST:PORT"),
     };
-    crate::serve::run_daemon(&index, template, bind)
+    crate::serve::run_daemon(backend.view(), template, bind)
 }
 
 /// `serve` needs Unix-domain sockets and POSIX signal numbers.
@@ -1195,6 +1329,55 @@ mod tests {
              --low-th 0"
         )))
         .unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_index_builds_converts_and_maps_byte_identically() {
+        let dir = std::env::temp_dir().join(format!("dartpim-v2cli-{}", std::process::id()));
+        let d = dir.to_str().unwrap();
+        run(&argv(&format!("synth --out-dir {d} --len 60000 --reads 30"))).unwrap();
+        run(&argv(&format!("index --ref {d}/ref.fasta --out {d}/v1.idx"))).unwrap();
+        run(&argv(&format!(
+            "index --ref {d}/ref.fasta --out {d}/v2.idx --index-format v2 --shards 4"
+        )))
+        .unwrap();
+        // the streaming builder and the v1->v2 converter must emit the
+        // same bytes (both order shards and keys identically)
+        run(&argv(&format!(
+            "index --from {d}/v1.idx --out {d}/v2c.idx --index-format v2 --shards 4"
+        )))
+        .unwrap();
+        let built = std::fs::read(dir.join("v2.idx")).unwrap();
+        let converted = std::fs::read(dir.join("v2c.idx")).unwrap();
+        assert_eq!(built, converted, "streaming build and conversion must agree");
+        // invariant 9: heap (v1), mapped (v2), and forced-heap-on-v2
+        // backends produce byte-identical mappings
+        for (idx, fmt, out) in [
+            ("v1.idx", "", "heap.tsv"),
+            ("v2.idx", "", "mapped.tsv"),
+            ("v2.idx", "--index-format v1", "forced.tsv"),
+        ] {
+            run(&argv(&format!(
+                "map --index {d}/{idx} {fmt} --reads {d}/reads.fastq --low-th 0 --out {d}/{out}"
+            )))
+            .unwrap();
+        }
+        let heap = std::fs::read_to_string(dir.join("heap.tsv")).unwrap();
+        let mapped = std::fs::read_to_string(dir.join("mapped.tsv")).unwrap();
+        let forced = std::fs::read_to_string(dir.join("forced.tsv")).unwrap();
+        assert!(heap.lines().count() > 20, "workload must map reads:\n{heap}");
+        assert_eq!(heap, mapped, "mapped backend must be byte-identical to heap");
+        assert_eq!(heap, forced, "forced heap load of a v2 file must be byte-identical");
+        // forcing the mapped backend onto a v1 file must refuse loudly
+        let err = run(&argv(&format!(
+            "map --index {d}/v1.idx --index-format v2 --reads {d}/reads.fastq --out {d}/x.tsv"
+        )))
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("convert"),
+            "v2-on-v1 must point at the converter: {err:#}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -40,7 +40,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::genome::revcomp;
-use crate::index::MinimizerIndex;
+use crate::index::IndexRef;
 use crate::params::{ETH, SAT_AFFINE};
 use crate::runtime::{RustEngine, WfEngine};
 
@@ -111,7 +111,7 @@ pub(crate) fn resolve_epoch_pairs(
     start: u32,
     lists: Vec<Vec<AffineOutcome>>,
     seqs: &[Arc<[u8]>],
-    index: &MinimizerIndex,
+    index: IndexRef<'_>,
     pcfg: &PairingConfig,
     metrics: &mut Metrics,
 ) -> Result<Vec<Option<FinalMapping>>> {
@@ -128,7 +128,7 @@ pub(crate) fn resolve_epoch_pairs(
         // is which mate
         debug_assert!(l1.iter().all(|o| o.mate == 0), "R1 list holds a mate-1 outcome");
         debug_assert!(l2.iter().all(|o| o.mate == 1), "R2 list holds a mate-0 outcome");
-        match best_proper_combination(&l1, &l2, index.read_len, pcfg) {
+        match best_proper_combination(&l1, &l2, index.read_len(), pcfg) {
             Some((i1, i2)) => {
                 metrics.proper_pairs += 1;
                 out.push(Some(final_mapping(id1, &l1[i1], l1.len() as u32, PairStatus::Proper)));
@@ -241,11 +241,11 @@ fn rescue_mate(
     mate_seq: &Arc<[u8]>,
     read_id: u32,
     mate: u8,
-    index: &MinimizerIndex,
+    index: IndexRef<'_>,
     pcfg: &PairingConfig,
     metrics: &mut Metrics,
 ) -> Result<Option<FinalMapping>> {
-    let rl = index.read_len as i64;
+    let rl = index.read_len() as i64;
     // Expected leftmost position range of the rescued mate under the
     // insert window (FR orientation, partner's side known).
     let (lo, hi) = if partner.reverse {
@@ -258,7 +258,7 @@ fn rescue_mate(
         (partner.pos + pcfg.insert_min as i64 - rl, partner.pos + pcfg.insert_max as i64 - rl)
     };
     let lo = lo.max(0);
-    let hi = hi.min(index.reference.len() as i64 - 1);
+    let hi = hi.min(index.reference().len() as i64 - 1);
     if hi < lo {
         return Ok(None);
     }

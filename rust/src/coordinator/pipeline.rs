@@ -57,7 +57,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::align::Cigar;
 use crate::genome::ReadRecord;
-use crate::index::MinimizerIndex;
+use crate::index::IndexRef;
 use crate::pim::DartPimConfig;
 use crate::runtime::{EngineKind, SimdMode, WfEngine};
 
@@ -215,8 +215,10 @@ pub struct FinalMapping {
 /// assert_eq!(metrics.n_reads, 4);
 /// ```
 pub struct Pipeline<'a, E: WfEngine> {
-    /// The offline minimizer index being mapped against.
-    pub index: &'a MinimizerIndex,
+    /// The offline minimizer index being mapped against (either
+    /// backend; the output bytes are identical for both — determinism
+    /// invariant 9).
+    pub index: IndexRef<'a>,
     /// Minimizer -> crossbar / RISC-V routing table.
     pub router: Router,
     /// Run configuration.
@@ -228,7 +230,8 @@ impl<'a, E: WfEngine> Pipeline<'a, E> {
     /// Build a pipeline over `index` with the given engine (the engine
     /// is only used by the single-threaded path; worker shards build
     /// their own from [`PipelineConfig::worker_engine`]).
-    pub fn new(index: &'a MinimizerIndex, cfg: PipelineConfig, engine: E) -> Self {
+    pub fn new(index: impl Into<IndexRef<'a>>, cfg: PipelineConfig, engine: E) -> Self {
+        let index = index.into();
         let router = Router::new(index, &cfg.dart);
         Pipeline { index, router, cfg, engine }
     }
@@ -403,7 +406,7 @@ pub(crate) fn check_even_paired_stream(paired: bool, n_reads: u32) -> Result<()>
 /// sequence slice (retained per epoch in paired mode for mate rescue).
 pub(crate) fn route_read(
     router: &Router,
-    index: &MinimizerIndex,
+    index: IndexRef<'_>,
     handle_revcomp: bool,
     read_id: u32,
     read: &ReadRecord,
@@ -447,7 +450,7 @@ pub(crate) fn route_read(
 /// epoch's retained forward sequences (`epoch_seqs`) for mate rescue.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn emit_epoch<S>(
-    index: &MinimizerIndex,
+    index: IndexRef<'_>,
     pairing: Option<&PairingConfig>,
     epoch_seqs: &mut Vec<Arc<[u8]>>,
     (start, end): (u32, u32),
@@ -515,6 +518,7 @@ where
 mod tests {
     use super::*;
     use crate::genome::synth::{ReadSimConfig, SynthConfig};
+    use crate::index::MinimizerIndex;
     use crate::params::{ETH, K, READ_LEN, SAT_AFFINE, W};
     use crate::runtime::{BitpalEngine, RustEngine};
 

@@ -47,7 +47,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::genome::ReadRecord;
-use crate::index::{shard_of, MinimizerIndex};
+use crate::index::{shard_of, IndexRef};
 
 use super::metrics::Metrics;
 use super::pipeline::{
@@ -149,10 +149,11 @@ impl WorkerPool {
     /// `worker_engine`, `simd`) are fixed at spawn for all sessions.
     pub fn spawn<'scope, 'env>(
         s: &'scope thread::Scope<'scope, 'env>,
-        index: &'env MinimizerIndex,
+        index: impl Into<IndexRef<'env>>,
         cfg: &'env PipelineConfig,
         n_shards: usize,
     ) -> WorkerPool {
+        let index = index.into();
         let n = n_shards.max(1);
         let mut txs = Vec::with_capacity(n);
         let mut alive = Vec::with_capacity(n);
@@ -185,7 +186,7 @@ impl WorkerPool {
 /// failed session reports its error exactly once (at its next flush)
 /// without taking the worker — or any other session — down with it.
 fn pool_worker(
-    index: &MinimizerIndex,
+    index: IndexRef<'_>,
     cfg: &PipelineConfig,
     sh: usize,
     rx: mpsc::Receiver<PoolMsg>,
@@ -271,7 +272,7 @@ fn pool_worker(
 /// state without blocking.
 pub struct MapSession<'a> {
     id: u64,
-    index: &'a MinimizerIndex,
+    index: IndexRef<'a>,
     router: &'a Router,
     cfg: PipelineConfig,
     txs: Vec<mpsc::SyncSender<PoolMsg>>,
@@ -300,7 +301,7 @@ impl<'a> MapSession<'a> {
     /// session with the config it was spawned with.
     pub fn new(
         id: u64,
-        index: &'a MinimizerIndex,
+        index: impl Into<IndexRef<'a>>,
         router: &'a Router,
         cfg: PipelineConfig,
         pool: &WorkerPool,
@@ -308,7 +309,7 @@ impl<'a> MapSession<'a> {
         let n = pool.txs.len();
         MapSession {
             id,
-            index,
+            index: index.into(),
             router,
             cfg,
             txs: pool.txs.clone(),
@@ -519,7 +520,7 @@ impl Drop for MapSession<'_> {
 /// sharded path, kept here so the pipeline and the daemon share one
 /// code path for everything past routing.
 pub(crate) fn map_stream_pooled<I, R, S>(
-    index: &MinimizerIndex,
+    index: IndexRef<'_>,
     router: &Router,
     cfg: &PipelineConfig,
     reads: I,
@@ -552,6 +553,7 @@ where
 mod tests {
     use super::*;
     use crate::genome::synth::{ReadSimConfig, SynthConfig};
+    use crate::index::MinimizerIndex;
     use crate::params::{K, READ_LEN, W};
     use crate::runtime::RustEngine;
 

@@ -10,7 +10,7 @@
 
 use std::collections::HashMap;
 
-use crate::index::MinimizerIndex;
+use crate::index::IndexRef;
 use crate::pim::DartPimConfig;
 use crate::seeding::{seed_read, ReadSeed};
 
@@ -51,8 +51,11 @@ pub struct Router {
 }
 
 impl Router {
-    /// Build from the offline index (deterministic layout).
-    pub fn new(index: &MinimizerIndex, cfg: &DartPimConfig) -> Self {
+    /// Build from the offline index (deterministic layout; both
+    /// backends yield the same table — the minimizer list is sorted
+    /// before any crossbar is numbered).
+    pub fn new<'a>(index: impl Into<IndexRef<'a>>, cfg: &DartPimConfig) -> Self {
+        let index = index.into();
         let mut assignment = HashMap::new();
         let mut next = 0u32;
         let mut minis: Vec<(u64, usize)> = index.iter().map(|(m, o)| (m, o.len())).collect();
@@ -83,8 +86,13 @@ impl Router {
     }
 
     /// Route one read: seed it and target every productive minimizer.
-    pub fn route(&self, index: &MinimizerIndex, read_id: u32, read: &[u8]) -> Vec<RoutedPair> {
-        seed_read(index, read)
+    pub fn route<'a>(
+        &self,
+        index: impl Into<IndexRef<'a>>,
+        read_id: u32,
+        read: &[u8],
+    ) -> Vec<RoutedPair> {
+        seed_read(index.into(), read)
             .into_iter()
             .filter_map(|seed| {
                 self.target_of(&seed).map(|target| RoutedPair {
@@ -103,6 +111,7 @@ impl Router {
 mod tests {
     use super::*;
     use crate::genome::synth::{ReadSimConfig, SynthConfig};
+    use crate::index::MinimizerIndex;
     use crate::params::{K, READ_LEN, W};
 
     fn setup() -> (MinimizerIndex, Vec<crate::genome::ReadRecord>, Router) {

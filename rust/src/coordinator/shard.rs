@@ -50,7 +50,7 @@ use anyhow::Result;
 
 use crate::align::traceback::{script_cost, traceback};
 use crate::align::Cigar;
-use crate::index::MinimizerIndex;
+use crate::index::IndexRef;
 use crate::params::{ETH, SAT_AFFINE};
 use crate::runtime::{RustEngine, WfEngine};
 
@@ -109,7 +109,7 @@ fn emission_key(pair_id: u32, ref_pos: u32) -> u64 {
 /// index. All engine work happens eagerly as batches fill; see the
 /// module docs for the ingest/drain/finish protocol.
 pub struct ShardWorker<'a> {
-    index: &'a MinimizerIndex,
+    index: IndexRef<'a>,
     cfg: &'a PipelineConfig,
     metrics: Metrics,
     // dart-analyze: allow(determinism): accessed exclusively through
@@ -133,8 +133,9 @@ pub struct ShardWorker<'a> {
 }
 
 impl<'a> ShardWorker<'a> {
-    /// Empty worker for one shard.
-    pub fn new(index: &'a MinimizerIndex, cfg: &'a PipelineConfig) -> Self {
+    /// Empty worker for one shard (either index backend).
+    pub fn new(index: impl Into<IndexRef<'a>>, cfg: &'a PipelineConfig) -> Self {
+        let index = index.into();
         // report the configured lane width of the bit-parallel worker
         // engine — a dispatch gauge, outside the invariant counters.
         // dart-analyze: allow(determinism): simd_width is a diagnostic
@@ -152,8 +153,8 @@ impl<'a> ShardWorker<'a> {
             cfg,
             metrics: Metrics { simd_width, ..Metrics::default() },
             fifos: HashMap::new(),
-            linear_batcher: Batcher::new(cfg.batch_size, index.read_len),
-            affine_batcher: Batcher::new(cfg.batch_size, index.read_len),
+            linear_batcher: Batcher::new(cfg.batch_size, index.read_len()),
+            affine_batcher: Batcher::new(cfg.batch_size, index.read_len()),
             pair_best: BTreeMap::new(),
             riscv_items: Vec::new(),
             outcomes: Vec::new(),
@@ -426,7 +427,7 @@ impl<'a> ShardWorker<'a> {
 /// suite use this; the streaming pipeline drives a [`ShardWorker`]
 /// incrementally as chunks stream in.
 pub fn run_shard<'a, E: WfEngine + ?Sized>(
-    index: &'a MinimizerIndex,
+    index: impl Into<IndexRef<'a>>,
     cfg: &'a PipelineConfig,
     engine: &mut E,
     items: &[ShardItem],
@@ -475,7 +476,7 @@ mod tests {
     use super::*;
     use crate::genome::synth::{ReadSimConfig, SynthConfig};
     use crate::genome::ReadRecord;
-    use crate::index::shard_of;
+    use crate::index::{shard_of, MinimizerIndex};
     use crate::params::{K, READ_LEN, W};
 
     fn route_all(

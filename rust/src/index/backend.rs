@@ -1,0 +1,251 @@
+//! Index backends: one query interface over the heap (v1) and mapped
+//! (DARTPIM2) representations.
+//!
+//! The pipeline, router, seeder, and serve daemon are all written
+//! against [`IndexRef`], a `Copy` by-reference view. Its contract is
+//! determinism invariant 9: *for a fixed index content, every query —
+//! `occurrences`, `window_for`, geometry — returns identical results
+//! from both backends, so the mapping output bytes never depend on
+//! which backend served them.* `occurrences` hits the same
+//! sorted-deduplicated position lists either way, and `window_for` is
+//! literally the same function (`super::index::window_from`) on both
+//! arms.
+
+use std::io::{self, Read};
+use std::path::Path;
+
+use super::index::MinimizerIndex;
+use super::v2::MappedIndex;
+use crate::genome::encode::Seq;
+
+/// On-disk index format selector (the `--index-format` flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexFormat {
+    /// `DARTPIM1`: length-prefixed stream, deserialized into the heap.
+    V1,
+    /// `DARTPIM2`: mmap-able sharded slabs, served zero-copy.
+    V2,
+}
+
+impl IndexFormat {
+    /// The flag spelling (`v1` / `v2`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IndexFormat::V1 => "v1",
+            IndexFormat::V2 => "v2",
+        }
+    }
+}
+
+/// Identify an index file's format from its magic tag — the auto-detect
+/// behind `map`/`serve` when `--index-format` is not forced.
+pub fn sniff_format<P: AsRef<Path>>(path: P) -> io::Result<IndexFormat> {
+    let path = path.as_ref();
+    let mut magic = [0u8; 8];
+    std::fs::File::open(path)?.read_exact(&mut magic).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("{}: truncated index: shorter than the 8-byte magic", path.display()),
+            )
+        } else {
+            e
+        }
+    })?;
+    match &magic {
+        b"DARTPIM1" => Ok(IndexFormat::V1),
+        b"DARTPIM2" => Ok(IndexFormat::V2),
+        _ => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("{}: not a DART-PIM index file (bad magic)", path.display()),
+        )),
+    }
+}
+
+/// An owned index, either backend. The CLI resolves flags and file
+/// magic into one of these, then hands [`IndexBackend::view`] to the
+/// pipeline.
+pub enum IndexBackend {
+    /// Heap-resident [`MinimizerIndex`] (v1 files, or in-memory builds).
+    Heap(MinimizerIndex),
+    /// Memory-mapped DARTPIM2 file served zero-copy.
+    Mapped(MappedIndex),
+}
+
+impl IndexBackend {
+    /// Borrow the backend as the common query view.
+    pub fn view(&self) -> IndexRef<'_> {
+        match self {
+            IndexBackend::Heap(idx) => IndexRef::Heap(idx),
+            IndexBackend::Mapped(idx) => IndexRef::Mapped(idx),
+        }
+    }
+
+    /// Human-readable backend name for banners and logs.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            IndexBackend::Heap(_) => "heap",
+            IndexBackend::Mapped(_) => "mapped",
+        }
+    }
+}
+
+/// A `Copy` by-reference view of either index backend — the type every
+/// index consumer takes. Public constructors accept
+/// `impl Into<IndexRef>`, so existing `&MinimizerIndex` call sites keep
+/// working unchanged.
+#[derive(Clone, Copy)]
+pub enum IndexRef<'a> {
+    /// Borrowed heap index.
+    Heap(&'a MinimizerIndex),
+    /// Borrowed mapped index.
+    Mapped(&'a MappedIndex),
+}
+
+impl<'a> From<&'a MinimizerIndex> for IndexRef<'a> {
+    fn from(idx: &'a MinimizerIndex) -> IndexRef<'a> {
+        IndexRef::Heap(idx)
+    }
+}
+
+impl<'a> From<&'a MappedIndex> for IndexRef<'a> {
+    fn from(idx: &'a MappedIndex) -> IndexRef<'a> {
+        IndexRef::Mapped(idx)
+    }
+}
+
+impl<'a> From<&'a IndexBackend> for IndexRef<'a> {
+    fn from(b: &'a IndexBackend) -> IndexRef<'a> {
+        b.view()
+    }
+}
+
+impl<'a> IndexRef<'a> {
+    /// k-mer length used at build time.
+    pub fn k(self) -> usize {
+        match self {
+            IndexRef::Heap(idx) => idx.k,
+            IndexRef::Mapped(idx) => idx.k(),
+        }
+    }
+
+    /// Minimizer window size (k-mers per window) used at build time.
+    pub fn w(self) -> usize {
+        match self {
+            IndexRef::Heap(idx) => idx.w,
+            IndexRef::Mapped(idx) => idx.w(),
+        }
+    }
+
+    /// Read length the segment geometry is built for.
+    pub fn read_len(self) -> usize {
+        match self {
+            IndexRef::Heap(idx) => idx.read_len,
+            IndexRef::Mapped(idx) => idx.read_len(),
+        }
+    }
+
+    /// The reference genome (base codes).
+    pub fn reference(self) -> &'a [u8] {
+        match self {
+            IndexRef::Heap(idx) => &idx.reference,
+            IndexRef::Mapped(idx) => idx.reference(),
+        }
+    }
+
+    /// Number of distinct minimizers.
+    pub fn n_minimizers(self) -> usize {
+        match self {
+            IndexRef::Heap(idx) => idx.n_minimizers(),
+            IndexRef::Mapped(idx) => idx.n_minimizers(),
+        }
+    }
+
+    /// Occurrence positions of a minimizer (sorted ascending, empty if
+    /// absent) — identical lists from both backends (invariant 9).
+    pub fn occurrences(self, kmer: u64) -> &'a [u32] {
+        match self {
+            IndexRef::Heap(idx) => idx.occurrences(kmer),
+            IndexRef::Mapped(idx) => idx.occurrences(kmer),
+        }
+    }
+
+    /// Banded-WF window for (occurrence `pos`, read minimizer offset
+    /// `q`) — one shared implementation behind both arms, so the
+    /// alignment inputs cannot diverge by backend.
+    pub fn window_for(self, pos: u32, q: usize) -> Seq {
+        match self {
+            IndexRef::Heap(idx) => idx.window_for(pos, q),
+            IndexRef::Mapped(idx) => idx.window_for(pos, q),
+        }
+    }
+
+    /// Iterate over (minimizer, occurrence list). Iteration *order*
+    /// differs by backend (heap: map order; mapped: shard-major sorted)
+    /// — every consumer either sorts or is order-free, which
+    /// dart-analyze's determinism taint check enforces.
+    pub fn iter(self) -> Box<dyn Iterator<Item = (u64, &'a [u32])> + 'a> {
+        match self {
+            IndexRef::Heap(idx) => Box::new(idx.iter()),
+            IndexRef::Mapped(idx) => Box::new(idx.iter()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::synth::SynthConfig;
+    use crate::index::v2::save_index_v2;
+    use crate::params::{K, READ_LEN, W};
+
+    #[test]
+    fn both_backends_answer_every_query_identically() {
+        let g = SynthConfig { len: 30_000, ..Default::default() }.generate();
+        let heap = MinimizerIndex::build(g, K, W, READ_LEN);
+        let path =
+            std::env::temp_dir().join(format!("dartpim-backend-{}.idx2", std::process::id()));
+        save_index_v2(&path, &heap, 8).unwrap();
+        let backend = IndexBackend::Mapped(MappedIndex::open(&path).unwrap());
+        let (h, m) = (IndexRef::from(&heap), backend.view());
+        assert_eq!((h.k(), h.w(), h.read_len()), (m.k(), m.w(), m.read_len()));
+        assert_eq!(h.reference(), m.reference());
+        assert_eq!(h.n_minimizers(), m.n_minimizers());
+        for (kmer, occs) in h.iter() {
+            assert_eq!(m.occurrences(kmer), occs, "minimizer {kmer:#x}");
+            assert_eq!(h.window_for(occs[0], 2), m.window_for(occs[0], 2));
+        }
+        // both iterations cover the same entry set (order may differ:
+        // the mapped backend is shard-major, sorted within each shard)
+        let mut hk: Vec<u64> = h.iter().map(|(k, _)| k).collect();
+        hk.sort_unstable();
+        let mut mk: Vec<u64> = m.iter().map(|(k, _)| k).collect();
+        mk.sort_unstable();
+        assert_eq!(hk, mk);
+        drop(backend);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sniffing_distinguishes_formats_and_garbage() {
+        let g = SynthConfig { len: 20_000, ..Default::default() }.generate();
+        let heap = MinimizerIndex::build(g, K, W, READ_LEN);
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let p1 = dir.join(format!("dartpim-sniff1-{pid}.idx"));
+        let p2 = dir.join(format!("dartpim-sniff2-{pid}.idx"));
+        let pg = dir.join(format!("dartpim-sniffg-{pid}.idx"));
+        crate::index::save_index(&p1, &heap).unwrap();
+        save_index_v2(&p2, &heap, 4).unwrap();
+        std::fs::write(&pg, b"not an index at all").unwrap();
+        assert_eq!(sniff_format(&p1).unwrap(), IndexFormat::V1);
+        assert_eq!(sniff_format(&p2).unwrap(), IndexFormat::V2);
+        assert!(sniff_format(&pg).unwrap_err().to_string().contains("magic"));
+        let short = dir.join(format!("dartpim-sniffs-{pid}.idx"));
+        std::fs::write(&short, b"DAR").unwrap();
+        assert!(sniff_format(&short).unwrap_err().to_string().contains("truncated"));
+        for p in [p1, p2, pg, short] {
+            std::fs::remove_file(&p).ok();
+        }
+    }
+}

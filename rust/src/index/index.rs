@@ -58,6 +58,25 @@ pub fn shard_of(kmer: u64, n_shards: usize) -> usize {
     (x % n_shards as u64) as usize
 }
 
+/// Banded-WF window for (occurrence `pos`, read minimizer offset `q`)
+/// against a raw reference slice — the single implementation behind
+/// [`MinimizerIndex::window_for`] and the mapped backend's
+/// [`super::backend::IndexRef::window_for`]. Sharing the body is what
+/// makes determinism invariant 9 (backend never changes output bytes)
+/// hold by construction rather than by parallel maintenance.
+pub(crate) fn window_from(reference: &[u8], read_len: usize, pos: u32, q: usize) -> Seq {
+    let wl = crate::params::window_len(read_len);
+    let start = pos as i64 - q as i64 - ETH as i64;
+    let mut out = vec![BASE_N; wl];
+    let lo = start.max(0) as usize;
+    let hi = ((start + wl as i64).min(reference.len() as i64)).max(0) as usize;
+    if lo < hi {
+        let off = (lo as i64 - start) as usize;
+        out[off..off + (hi - lo)].copy_from_slice(&reference[lo..hi]);
+    }
+    out
+}
+
 /// Summary statistics of an index (drives Fig. 8-10 workload modelling
 /// and the §II data-volume motivation numbers).
 #[derive(Debug, Clone)]
@@ -164,16 +183,7 @@ impl MinimizerIndex {
     /// 300-base segment — the host-side fast path; the PIM cost model
     /// still charges for the replicated segments).
     pub fn window_for(&self, pos: u32, q: usize) -> Seq {
-        let wl = crate::params::window_len(self.read_len);
-        let start = self.potential_location(pos, q) - ETH as i64;
-        let mut out = vec![BASE_N; wl];
-        let lo = start.max(0) as usize;
-        let hi = ((start + wl as i64).min(self.reference.len() as i64)).max(0) as usize;
-        if lo < hi {
-            let off = (lo as i64 - start) as usize;
-            out[off..off + (hi - lo)].copy_from_slice(&self.reference[lo..hi]);
-        }
-        out
+        window_from(&self.reference, self.read_len, pos, q)
     }
 
     /// Occurrence totals per shard under an `n_shards`-way

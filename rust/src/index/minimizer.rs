@@ -16,48 +16,83 @@ pub struct Minimizer {
     pub kmer: u64,
 }
 
-/// Select minimizers of `seq` with k-mer length `k` and window of `w`
-/// k-mers. Deduplicates consecutive repeats (same (pos, kmer) chosen by
-/// adjacent windows is reported once). Ties within a window are broken
-/// toward the *rightmost* position (minimap2 convention).
-pub fn minimizers(seq: &[u8], k: usize, w: usize) -> Vec<Minimizer> {
-    assert!(w >= 1);
-    let mut out: Vec<Minimizer> = Vec::new();
-    // Monotone deque of (pos, kmer, hash), increasing hash front-to-back.
-    let mut deque: std::collections::VecDeque<(u32, u64, u64)> = Default::default();
-    let mut n_kmers = 0usize;
-    let mut last_reported: Option<(u32, u64)> = None;
-    for (pos, kmer) in KmerIter::new(seq, k) {
-        let h = kmer_hash(kmer);
-        // Note: KmerIter skips N-interrupted regions; positions restart
-        // monotonically, so stale entries are evicted by the window check.
-        while let Some(&(_, _, bh)) = deque.back() {
-            if bh >= h {
-                deque.pop_back(); // rightmost tie-break: >= evicts equals
-            } else {
-                break;
-            }
-        }
-        deque.push_back((pos, kmer, h));
-        n_kmers += 1;
-        // Evict k-mers that fell out of the current window of w k-mers
-        // (window = k-mer start positions in [pos-w+1, pos]).
-        while let Some(&(fp, _, _)) = deque.front() {
-            if fp + (w as u32) <= pos {
-                deque.pop_front();
-            } else {
-                break;
-            }
-        }
-        if n_kmers >= w {
-            let &(mp, mk, _) = deque.front().expect("deque non-empty within a window");
-            if last_reported != Some((mp, mk)) {
-                out.push(Minimizer { pos: mp, kmer: mk });
-                last_reported = Some((mp, mk));
-            }
+/// Streaming minimizer selection over a sequence: yields each selected
+/// [`Minimizer`] in emission order with O(w) state, no matter how long
+/// the input is. [`minimizers`] is its collect; the DARTPIM2 streaming
+/// index builder iterates it directly so whole-genome index
+/// construction never materializes the minimizer list.
+pub struct MinimizerScan<'a> {
+    kmers: KmerIter<'a>,
+    w: usize,
+    /// Monotone deque of (pos, kmer, hash), increasing hash
+    /// front-to-back.
+    deque: std::collections::VecDeque<(u32, u64, u64)>,
+    n_kmers: usize,
+    last_reported: Option<(u32, u64)>,
+}
+
+impl<'a> MinimizerScan<'a> {
+    /// Scan `seq` with k-mer length `k` and a window of `w` k-mers.
+    /// Deduplicates consecutive repeats (same (pos, kmer) chosen by
+    /// adjacent windows is reported once). Ties within a window are
+    /// broken toward the *rightmost* position (minimap2 convention).
+    pub fn new(seq: &'a [u8], k: usize, w: usize) -> Self {
+        assert!(w >= 1);
+        MinimizerScan {
+            kmers: KmerIter::new(seq, k),
+            w,
+            deque: Default::default(),
+            n_kmers: 0,
+            last_reported: None,
         }
     }
-    out
+}
+
+impl Iterator for MinimizerScan<'_> {
+    type Item = Minimizer;
+
+    fn next(&mut self) -> Option<Minimizer> {
+        for (pos, kmer) in self.kmers.by_ref() {
+            let h = kmer_hash(kmer);
+            // Note: KmerIter skips N-interrupted regions; positions
+            // restart monotonically, so stale entries are evicted by
+            // the window check.
+            while let Some(&(_, _, bh)) = self.deque.back() {
+                if bh >= h {
+                    self.deque.pop_back(); // rightmost tie-break: >= evicts equals
+                } else {
+                    break;
+                }
+            }
+            self.deque.push_back((pos, kmer, h));
+            self.n_kmers += 1;
+            // Evict k-mers that fell out of the current window of w
+            // k-mers (window = k-mer start positions in [pos-w+1, pos]).
+            while let Some(&(fp, _, _)) = self.deque.front() {
+                if fp + (self.w as u32) <= pos {
+                    self.deque.pop_front();
+                } else {
+                    break;
+                }
+            }
+            if self.n_kmers >= self.w {
+                let &(mp, mk, _) =
+                    self.deque.front().expect("deque non-empty within a window");
+                if self.last_reported != Some((mp, mk)) {
+                    self.last_reported = Some((mp, mk));
+                    return Some(Minimizer { pos: mp, kmer: mk });
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Select minimizers of `seq` with k-mer length `k` and window of `w`
+/// k-mers — the materialized form of [`MinimizerScan`] (identical
+/// emissions by construction).
+pub fn minimizers(seq: &[u8], k: usize, w: usize) -> Vec<Minimizer> {
+    MinimizerScan::new(seq, k, w).collect()
 }
 
 #[cfg(test)]

@@ -1,0 +1,192 @@
+//! Read-only file memory mapping via the C `mmap(2)` entry point.
+//!
+//! This offline build vendors no `libc`/`memmap2`, so the mapping goes
+//! through bare `extern "C"` declarations, the same way
+//! [`crate::serve`]'s signal latch binds `signal(2)`. The wrapper is
+//! deliberately minimal: map a whole file read-only and private, expose
+//! the bytes, and unmap on drop. Every `unsafe` in the mapped-index
+//! backend lives in this module — callers only ever see checked safe
+//! slices — so dart-analyze's `unsafe` audit covers the entire surface
+//! in one place.
+
+use std::fs::File;
+use std::io;
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+/// `PROT_READ` from `<sys/mman.h>` (asm-generic value, shared by
+/// x86-64 / aarch64 Linux).
+const PROT_READ: i32 = 1;
+/// `MAP_PRIVATE` from `<sys/mman.h>` (asm-generic value).
+const MAP_PRIVATE: i32 = 2;
+
+extern "C" {
+    /// C library `mmap(2)`: maps `len` bytes of `fd` from `offset`;
+    /// returns `MAP_FAILED` (-1 cast to a pointer) on error.
+    fn mmap(addr: *mut u8, len: usize, prot: i32, flags: i32, fd: i32, offset: i64) -> *mut u8;
+    /// C library `munmap(2)`: releases a mapping created by `mmap`.
+    fn munmap(addr: *mut u8, len: usize) -> i32;
+}
+
+/// A read-only, private, whole-file memory mapping.
+///
+/// The kernel pages file contents in on demand, so opening a mapping is
+/// O(1) in file size and resident memory grows only with the pages
+/// actually touched — the property the DARTPIM2 mapped backend is
+/// built on. The base address is page-aligned (a kernel guarantee), so
+/// any 8-aligned file offset is also 8-aligned in memory; the typed
+/// accessors below rely on that.
+pub struct Mmap {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ + MAP_PRIVATE: the pages cannot be
+// written through this handle and carry no interior mutability, so
+// moving the handle across threads is sound.
+unsafe impl Send for Mmap {}
+
+// SAFETY: as above — concurrent reads of immutable pages are sound.
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map the whole file at `path` read-only. Empty files are rejected
+    /// (`mmap` cannot create zero-length mappings; an empty file is
+    /// never a valid index anyway).
+    pub fn open(path: &Path) -> io::Result<Mmap> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("{}: cannot map an empty file", path.display()),
+            ));
+        }
+        let len = usize::try_from(len).map_err(|_| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("{}: file exceeds the address space", path.display()),
+            )
+        })?;
+        // SAFETY: `mmap` is the C library entry point; a whole-file
+        // PROT_READ + MAP_PRIVATE mapping of an owned descriptor
+        // aliases no Rust-managed memory, and the returned region
+        // (checked against MAP_FAILED below) stays valid until the
+        // matching `munmap` in `Drop`. The descriptor may close right
+        // after — POSIX keeps the mapping alive independently.
+        let ptr = unsafe {
+            mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+        };
+        if ptr as usize == usize::MAX {
+            return Err(io::Error::new(
+                io::Error::last_os_error().kind(),
+                format!("{}: mmap failed: {}", path.display(), io::Error::last_os_error()),
+            ));
+        }
+        Ok(Mmap { ptr, len })
+    }
+
+    /// The mapped bytes.
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: `ptr` is a live PROT_READ mapping of exactly `len`
+        // bytes (established in `open`, released only in `Drop`), and
+        // the pages are never written through any alias in this
+        // process, so the slice is valid and immutable for the
+        // borrow's lifetime.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// The `n` native-endian `u64` words starting at byte offset `off`
+    /// — zero-copy. DARTPIM2 stores little-endian words and refuses to
+    /// open on big-endian hosts, so native == file order wherever this
+    /// can run.
+    ///
+    /// # Panics
+    ///
+    /// If the range leaves the mapping or `off` is not 8-byte aligned;
+    /// the DARTPIM2 validator establishes both before any call.
+    pub fn u64s_at(&self, off: usize, n: usize) -> &[u64] {
+        let bytes = n.checked_mul(8).expect("u64 range overflows");
+        assert!(off.checked_add(bytes).is_some_and(|end| end <= self.len), "u64 range OOB");
+        assert!(off % 8 == 0, "u64 range misaligned");
+        // SAFETY: the range is in bounds and 8-aligned (asserted above;
+        // the base address is page-aligned), the mapping is immutable
+        // and outlives the borrow, and any bit pattern is a valid u64.
+        unsafe { std::slice::from_raw_parts(self.ptr.add(off) as *const u64, n) }
+    }
+
+    /// The `n` native-endian `u32` words starting at byte offset `off`
+    /// — zero-copy; same contract as [`Mmap::u64s_at`] with 4-byte
+    /// alignment.
+    ///
+    /// # Panics
+    ///
+    /// If the range leaves the mapping or `off` is not 4-byte aligned.
+    pub fn u32s_at(&self, off: usize, n: usize) -> &[u32] {
+        let bytes = n.checked_mul(4).expect("u32 range overflows");
+        assert!(off.checked_add(bytes).is_some_and(|end| end <= self.len), "u32 range OOB");
+        assert!(off % 4 == 0, "u32 range misaligned");
+        // SAFETY: the range is in bounds and 4-aligned (asserted above;
+        // the base address is page-aligned), the mapping is immutable
+        // and outlives the borrow, and any bit pattern is a valid u32.
+        unsafe { std::slice::from_raw_parts(self.ptr.add(off) as *const u32, n) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        // SAFETY: `ptr`/`len` describe exactly the mapping created in
+        // `open` and unmapped nowhere else; after this call the pointer
+        // is never dereferenced again.
+        unsafe {
+            munmap(self.ptr, self.len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("dartpim-mmap-{}-{name}", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_file_bytes_exactly() {
+        let want: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let p = tmp("bytes.bin", &want);
+        let m = Mmap::open(&p).unwrap();
+        assert_eq!(m.bytes(), want.as_slice());
+        drop(m);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_and_missing_files_are_rejected() {
+        let p = tmp("empty.bin", b"");
+        let err = Mmap::open(&p).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+        std::fs::remove_file(&p).ok();
+        assert!(Mmap::open(std::path::Path::new("/nonexistent/dartpim.idx")).is_err());
+    }
+
+    #[test]
+    fn typed_views_decode_little_endian_words() {
+        let mut bytes = Vec::new();
+        for v in [1u64, u64::MAX, 0xDEAD_BEEF_0123_4567] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [7u32, u32::MAX] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let p = tmp("words.bin", &bytes);
+        let m = Mmap::open(&p).unwrap();
+        assert_eq!(m.u64s_at(0, 3), &[1, u64::MAX, 0xDEAD_BEEF_0123_4567]);
+        assert_eq!(m.u32s_at(24, 2), &[7, u32::MAX]);
+        drop(m);
+        std::fs::remove_file(&p).ok();
+    }
+}

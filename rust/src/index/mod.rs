@@ -4,14 +4,24 @@
 //! the reference and record, per minimizer, every occurrence position
 //! plus the surrounding *reference segment* (2(rl+eth)−k bases) that a
 //! crossbar stores verbatim.
+//!
+//! Two on-disk formats back the same query interface ([`IndexRef`]):
+//! `DARTPIM1` (heap-deserialized, [`io`]) and `DARTPIM2` (mmap-able
+//! sharded slabs served zero-copy, [`v2`] over [`mmap`]).
 
+pub mod backend;
 pub mod io;
 pub mod kmer;
 pub mod minimizer;
+pub mod mmap;
+pub mod v2;
 #[allow(clippy::module_inception)]
 pub mod index;
 
+pub use backend::{sniff_format, IndexBackend, IndexFormat, IndexRef};
 pub use index::{shard_of, IndexStats, MinimizerIndex};
 pub use io::{load_index, save_index};
 pub use kmer::{kmer_hash, pack_kmer};
-pub use minimizer::{minimizers, Minimizer};
+pub use minimizer::{minimizers, Minimizer, MinimizerScan};
+pub use mmap::Mmap;
+pub use v2::{build_index_v2, parse_v2, save_index_v2, MappedIndex, V2BuildStats};

@@ -1,0 +1,846 @@
+//! DARTPIM2 — the mmap-able sharded on-disk index format.
+//!
+//! The v1 format (`super::io`) deserializes the whole postings table
+//! into one heap `HashMap`, which is the named scaling wall: a
+//! GRCh38-scale index cannot load at all, and every restart re-parses
+//! the file. DARTPIM2 instead lays the index out so the *file is the
+//! index*: fixed little-endian sections, every section 8-byte aligned,
+//! postings grouped into per-shard slabs by [`shard_of`] — the host
+//! mirror of the paper's per-crossbar data organization (§V-B), where
+//! each crossbar owns exactly its own slice of the reference segments.
+//! A mapped process touches only the pages of the shards it queries.
+//!
+//! # Layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size            field
+//! 0       8               magic  b"DARTPIM2"
+//! 8       8               k
+//! 16      8               w                (minimizer window, k-mers)
+//! 24      8               read_len
+//! 32      8               ref_len          (bases; <= u32::MAX)
+//! 40      8               n_shards         (1 ..= 2^20)
+//! 48      8               n_entries_total  (distinct minimizers)
+//! 56      8               n_positions_total
+//! 64      8               file_len         (whole file, bytes)
+//! 72      ref_len         reference base codes (0..=4), zero-padded
+//!                         to the next 8-byte boundary
+//! dir     n_shards * 32   per-shard directory records:
+//!                           slab_off u64 (absolute, 8-aligned)
+//!                           n_entries u64
+//!                           n_positions u64
+//!                           slab_len u64 (8-aligned, padding included)
+//! slabs   ...             shard slabs, ascending, contiguous:
+//!                           keys      n_entries  x u64, strictly
+//!                                     ascending, owned by this shard
+//!                           ends      n_entries  x u64, cumulative
+//!                                     position counts (strictly
+//!                                     increasing; last == n_positions)
+//!                           positions n_positions x u32, ascending
+//!                                     within each entry
+//!                           zero padding to the 8-byte boundary
+//! ```
+//!
+//! A lookup is `shard_of(kmer)` → binary search the shard's key array →
+//! slice `positions[ends[i-1]..ends[i]]`, all zero-copy against the
+//! mapping. [`parse_v2`] validates every structural invariant above at
+//! open (same hardening ethos as the v1 reader: a lying field fails
+//! loudly, it never misparses), so the hot path needs no checks beyond
+//! the binary search.
+
+use std::collections::BTreeMap;
+use std::io::{self, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use super::index::{shard_of, window_from, MinimizerIndex};
+use super::minimizer::MinimizerScan;
+use super::mmap::Mmap;
+use crate::genome::encode::Seq;
+
+/// Magic tag of the DARTPIM2 format (family `DARTPIM`, version `2`).
+pub const MAGIC_V2: &[u8; 8] = b"DARTPIM2";
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 72;
+/// Bytes per shard-directory record.
+pub const DIR_RECORD_LEN: usize = 32;
+/// Upper bound on the shard count a file may declare (a format cap, not
+/// a runtime tunable; 2^20 slabs is far beyond any sane partition).
+pub const MAX_SHARDS: usize = 1 << 20;
+
+/// Default shard count for newly built v2 indexes (`--shards`).
+pub const DEFAULT_V2_SHARDS: usize = 16;
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn bad_input(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidInput, msg)
+}
+
+/// Round `x` up to the next multiple of 8.
+fn align8(x: u64) -> u64 {
+    (x + 7) & !7
+}
+
+fn u64_at(buf: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(buf[off..off + 8].try_into().expect("8 bytes"))
+}
+
+fn u32_at(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(buf[off..off + 4].try_into().expect("4 bytes"))
+}
+
+/// Validated offsets of one shard's slab inside a DARTPIM2 file.
+#[derive(Debug, Clone)]
+pub struct ShardLayout {
+    /// Byte offset of the key array (== the slab offset; 8-aligned).
+    pub keys_off: usize,
+    /// Byte offset of the cumulative-ends array (8-aligned).
+    pub ends_off: usize,
+    /// Byte offset of the position array (8-aligned).
+    pub pos_off: usize,
+    /// Distinct minimizers in this shard.
+    pub n_entries: usize,
+    /// Occurrence positions in this shard.
+    pub n_positions: usize,
+}
+
+/// Validated layout of a DARTPIM2 file: header fields plus per-shard
+/// slab offsets. Holds no borrow of the buffer — offsets only — so it
+/// can live next to the mapping that produced it.
+#[derive(Debug, Clone)]
+pub struct V2Layout {
+    /// k-mer length.
+    pub k: usize,
+    /// Minimizer window size (k-mers).
+    pub w: usize,
+    /// Read length the segment geometry is built for.
+    pub read_len: usize,
+    /// Byte offset of the reference section (== [`HEADER_LEN`]).
+    pub ref_off: usize,
+    /// Reference length in bases.
+    pub ref_len: usize,
+    /// Shard count of the on-disk partition.
+    pub n_shards: usize,
+    /// Total distinct minimizers.
+    pub n_entries: u64,
+    /// Total occurrence positions.
+    pub n_positions: u64,
+    /// Per-shard slab offsets, indexed by shard id.
+    pub shards: Vec<ShardLayout>,
+}
+
+/// Validate a DARTPIM2 image and return its layout.
+///
+/// Purely byte-wise and allocation-light: it works on any `&[u8]`
+/// (unaligned test buffers included) and performs the *full* structural
+/// audit — magic/version, geometry, section bounds, declared-vs-actual
+/// file length, directory/slab agreement, slab alignment and
+/// contiguity, key ordering and shard ownership, cumulative-end
+/// monotonicity, position bounds and per-entry ordering, and zeroed
+/// padding. Everything [`MappedIndex`] later does zero-copy is proven
+/// here once, at open.
+pub fn parse_v2(buf: &[u8]) -> io::Result<V2Layout> {
+    if buf.len() < 8 {
+        return Err(bad("truncated index: shorter than the 8-byte magic"));
+    }
+    if &buf[..8] != MAGIC_V2 {
+        if &buf[..7] == b"DARTPIM" {
+            return Err(bad(&format!(
+                "unsupported DART-PIM index version {:?} (this reader handles '2'; convert \
+                 with `index --from`)",
+                buf[7] as char
+            )));
+        }
+        return Err(bad("not a DART-PIM index file (bad magic)"));
+    }
+    if buf.len() < HEADER_LEN {
+        return Err(bad("truncated index: incomplete DARTPIM2 header"));
+    }
+    let k64 = u64_at(buf, 8);
+    let w64 = u64_at(buf, 16);
+    let read_len64 = u64_at(buf, 24);
+    let ref_len64 = u64_at(buf, 32);
+    let n_shards64 = u64_at(buf, 40);
+    let n_entries = u64_at(buf, 48);
+    let n_positions = u64_at(buf, 56);
+    let file_len = u64_at(buf, 64);
+    if k64 == 0 || k64 > 32 || w64 == 0 || read_len64 < k64 {
+        return Err(bad(&format!(
+            "implausible index geometry: k={k64}, w={w64}, read_len={read_len64}"
+        )));
+    }
+    if ref_len64 > u32::MAX as u64 {
+        return Err(bad(&format!(
+            "corrupted index: reference length {ref_len64} exceeds u32 occurrence positions"
+        )));
+    }
+    if file_len != buf.len() as u64 {
+        return Err(bad(&format!(
+            "truncated or padded index: header declares {file_len} bytes, found {}",
+            buf.len()
+        )));
+    }
+    let (k, w, read_len) = (k64 as usize, w64 as usize, read_len64 as usize);
+    let ref_len = ref_len64 as usize;
+    let ref_end = HEADER_LEN + ref_len; // no overflow: ref_len <= u32::MAX
+    if ref_end > buf.len() {
+        return Err(bad(&format!(
+            "truncated index: reference section needs {ref_len} bytes past the header"
+        )));
+    }
+    if buf[HEADER_LEN..ref_end].iter().any(|&c| c > 4) {
+        return Err(bad("corrupted index: invalid base codes in reference"));
+    }
+    if n_shards64 == 0 || n_shards64 > MAX_SHARDS as u64 {
+        return Err(bad(&format!("implausible shard count {n_shards64}")));
+    }
+    let n_shards = n_shards64 as usize;
+    let dir_off = align8(ref_end as u64) as usize;
+    if dir_off > buf.len() || buf[ref_end..dir_off].iter().any(|&b| b != 0) {
+        return Err(bad("corrupted index: nonzero padding after the reference"));
+    }
+    let dir_end = dir_off + n_shards * DIR_RECORD_LEN; // bounded by MAX_SHARDS * 32
+    if dir_end > buf.len() {
+        return Err(bad(&format!(
+            "truncated index: shard directory needs {n_shards} records"
+        )));
+    }
+    let mut shards = Vec::with_capacity(n_shards);
+    let mut expected = dir_end as u64;
+    let (mut sum_entries, mut sum_positions) = (0u64, 0u64);
+    for s in 0..n_shards {
+        let rec = dir_off + s * DIR_RECORD_LEN;
+        let slab_off = u64_at(buf, rec);
+        let n_e = u64_at(buf, rec + 8);
+        let n_p = u64_at(buf, rec + 16);
+        let slab_len = u64_at(buf, rec + 24);
+        if slab_off % 8 != 0 {
+            return Err(bad(&format!(
+                "corrupted index: shard {s} slab at {slab_off} is misaligned (8-byte \
+                 alignment required)"
+            )));
+        }
+        if slab_off != expected {
+            return Err(bad(&format!(
+                "corrupted index: shard {s} slab at {slab_off}, expected {expected} (slabs \
+                 must be contiguous)"
+            )));
+        }
+        let payload = n_e
+            .checked_mul(16)
+            .and_then(|b| n_p.checked_mul(4).and_then(|p| b.checked_add(p)))
+            .ok_or_else(|| bad(&format!("corrupted index: shard {s} counts overflow")))?;
+        // bound the raw payload by the file before align8 (which would
+        // wrap for payloads within 7 bytes of u64::MAX) — after this,
+        // every count-derived offset below fits the buffer
+        if payload > buf.len() as u64 {
+            return Err(bad(&format!(
+                "truncated index: shard {s} slab runs past the end of the file"
+            )));
+        }
+        if slab_len != align8(payload) {
+            return Err(bad(&format!(
+                "corrupted index: shard {s} slab length {slab_len} disagrees with its \
+                 directory counts (want {})",
+                align8(payload)
+            )));
+        }
+        let slab_end = slab_off
+            .checked_add(slab_len)
+            .filter(|&e| e <= buf.len() as u64)
+            .ok_or_else(|| {
+                bad(&format!("truncated index: shard {s} slab runs past the end of the file"))
+            })?;
+        sum_entries = sum_entries
+            .checked_add(n_e)
+            .ok_or_else(|| bad("corrupted index: entry totals overflow"))?;
+        sum_positions = sum_positions
+            .checked_add(n_p)
+            .ok_or_else(|| bad("corrupted index: position totals overflow"))?;
+        let (n_e, n_p) = (n_e as usize, n_p as usize);
+        let keys_off = slab_off as usize;
+        let ends_off = keys_off + 8 * n_e;
+        let pos_off = ends_off + 8 * n_e;
+        // keys: strictly ascending, every key owned by this shard
+        let mut prev_key: Option<u64> = None;
+        for i in 0..n_e {
+            let key = u64_at(buf, keys_off + 8 * i);
+            if prev_key.is_some_and(|p| p >= key) {
+                return Err(bad(&format!("corrupted index: shard {s} keys are not sorted")));
+            }
+            prev_key = Some(key);
+            let owner = shard_of(key, n_shards);
+            if owner != s {
+                return Err(bad(&format!(
+                    "corrupted index: minimizer {key:#x} stored in shard {s} but owned by \
+                     shard {owner}"
+                )));
+            }
+        }
+        // ends: strictly increasing cumulative counts, closing at n_p
+        let mut prev_end = 0u64;
+        for i in 0..n_e {
+            let e = u64_at(buf, ends_off + 8 * i);
+            if e <= prev_end {
+                return Err(bad(&format!(
+                    "corrupted index: shard {s} cumulative ends are not increasing"
+                )));
+            }
+            prev_end = e;
+        }
+        if prev_end != n_p as u64 {
+            return Err(bad(&format!(
+                "corrupted index: shard {s} ends close at {prev_end} but the directory \
+                 declares {n_p} positions"
+            )));
+        }
+        // positions: in reference bounds, ascending within each entry
+        let mut lo = 0usize;
+        for i in 0..n_e {
+            let hi = u64_at(buf, ends_off + 8 * i) as usize;
+            let mut prev_pos: Option<u32> = None;
+            for j in lo..hi {
+                let p = u32_at(buf, pos_off + 4 * j);
+                if p as usize + k > ref_len {
+                    return Err(bad(&format!(
+                        "corrupted index: occurrence at {p} in shard {s} is out of \
+                         reference bounds"
+                    )));
+                }
+                if prev_pos.is_some_and(|q| q >= p) {
+                    return Err(bad(&format!(
+                        "corrupted index: shard {s} occurrence positions are not sorted"
+                    )));
+                }
+                prev_pos = Some(p);
+            }
+            lo = hi;
+        }
+        let pad_start = pos_off + 4 * n_p;
+        if buf[pad_start..slab_end as usize].iter().any(|&b| b != 0) {
+            return Err(bad(&format!("corrupted index: nonzero padding in shard {s} slab")));
+        }
+        shards.push(ShardLayout { keys_off, ends_off, pos_off, n_entries: n_e, n_positions: n_p });
+        expected = slab_end;
+    }
+    if expected != buf.len() as u64 {
+        return Err(bad("corrupted index: trailing bytes after the last slab"));
+    }
+    if sum_entries != n_entries || sum_positions != n_positions {
+        return Err(bad(&format!(
+            "corrupted index: directory totals ({sum_entries} entries, {sum_positions} \
+             positions) disagree with the header ({n_entries}, {n_positions})"
+        )));
+    }
+    Ok(V2Layout {
+        k,
+        w,
+        read_len,
+        ref_off: HEADER_LEN,
+        ref_len,
+        n_shards,
+        n_entries,
+        n_positions,
+        shards,
+    })
+}
+
+/// A DARTPIM2 index served zero-copy from a memory-mapped file.
+///
+/// Opening validates the whole image once ([`parse_v2`]); every lookup
+/// after that is a shard pick + binary search over borrowed slab
+/// views, touching only that shard's pages. The mapped backend returns
+/// byte-identical mapping output to the heap backend (determinism
+/// invariant 9, held by `tests/index_v2.rs`).
+pub struct MappedIndex {
+    map: Mmap,
+    layout: V2Layout,
+}
+
+impl MappedIndex {
+    /// Map and validate the DARTPIM2 file at `path`.
+    pub fn open<P: AsRef<Path>>(path: P) -> io::Result<MappedIndex> {
+        if cfg!(target_endian = "big") {
+            return Err(bad_input(
+                "the mapped DARTPIM2 backend requires a little-endian host (use the v1 \
+                 heap backend instead)",
+            ));
+        }
+        let path = path.as_ref();
+        let map = Mmap::open(path)?;
+        let layout = parse_v2(map.bytes())
+            .map_err(|e| io::Error::new(e.kind(), format!("{}: {e}", path.display())))?;
+        Ok(MappedIndex { map, layout })
+    }
+
+    /// k-mer length used at build time.
+    pub fn k(&self) -> usize {
+        self.layout.k
+    }
+
+    /// Minimizer window size (k-mers per window) used at build time.
+    pub fn w(&self) -> usize {
+        self.layout.w
+    }
+
+    /// Read length the segment geometry is built for.
+    pub fn read_len(&self) -> usize {
+        self.layout.read_len
+    }
+
+    /// Shard count of the on-disk partition (a file property,
+    /// independent of the runtime worker count).
+    pub fn n_shards(&self) -> usize {
+        self.layout.n_shards
+    }
+
+    /// Number of distinct minimizers.
+    pub fn n_minimizers(&self) -> usize {
+        self.layout.n_entries as usize
+    }
+
+    /// The reference genome (base codes), borrowed from the mapping.
+    pub fn reference(&self) -> &[u8] {
+        &self.map.bytes()[self.layout.ref_off..self.layout.ref_off + self.layout.ref_len]
+    }
+
+    /// Occurrence positions of a minimizer (empty if absent) — a
+    /// zero-copy slice of the owning shard's slab.
+    pub fn occurrences(&self, kmer: u64) -> &[u32] {
+        let sh = &self.layout.shards[shard_of(kmer, self.layout.n_shards)];
+        let keys = self.map.u64s_at(sh.keys_off, sh.n_entries);
+        match keys.binary_search(&kmer) {
+            Ok(i) => {
+                let ends = self.map.u64s_at(sh.ends_off, sh.n_entries);
+                let lo = if i == 0 { 0 } else { ends[i - 1] as usize };
+                let hi = ends[i] as usize;
+                &self.map.u32s_at(sh.pos_off, sh.n_positions)[lo..hi]
+            }
+            Err(_) => &[],
+        }
+    }
+
+    /// Banded-WF window for (occurrence `pos`, read minimizer offset
+    /// `q`) — the same implementation the heap index uses.
+    pub fn window_for(&self, pos: u32, q: usize) -> Seq {
+        window_from(self.reference(), self.layout.read_len, pos, q)
+    }
+
+    /// Iterate over (minimizer, occurrence list) in shard-major,
+    /// key-ascending order (a total order, unlike the heap backend's
+    /// map order; all iter consumers are order-free).
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &[u32])> {
+        self.layout.shards.iter().flat_map(move |sh| {
+            let keys = self.map.u64s_at(sh.keys_off, sh.n_entries);
+            let ends = self.map.u64s_at(sh.ends_off, sh.n_entries);
+            let pos = self.map.u32s_at(sh.pos_off, sh.n_positions);
+            (0..sh.n_entries).map(move |i| {
+                let lo = if i == 0 { 0 } else { ends[i - 1] as usize };
+                (keys[i], &pos[lo..ends[i] as usize])
+            })
+        })
+    }
+
+    /// Materialize a heap [`MinimizerIndex`] with identical contents —
+    /// the v2 → v1 conversion path, and the bridge for heap-only
+    /// consumers (`evaluate`, `simulate`).
+    pub fn to_heap(&self) -> MinimizerIndex {
+        // dart-analyze: allow(determinism): deserialization target only;
+        // the constructed map is read through keyed lookups or
+        // sorted/order-free iteration (see the allow note in index.rs).
+        let mut occurrences = std::collections::HashMap::with_capacity(self.n_minimizers());
+        for (kmer, occs) in self.iter() {
+            occurrences.insert(kmer, occs.to_vec());
+        }
+        MinimizerIndex::from_parts(
+            occurrences,
+            self.reference().to_vec(),
+            self.layout.k,
+            self.layout.w,
+            self.layout.read_len,
+        )
+    }
+}
+
+/// Per-shard postings of one shard, sorted by key — the unit both
+/// writers feed to [`push_slab`].
+type ShardEntries<'a> = Vec<(u64, &'a [u32])>;
+
+/// Append one shard's slab bytes (keys, cumulative ends, positions,
+/// zero padding to 8) to `out`. Entries must arrive key-sorted; both
+/// writers build them from `BTreeMap`s, so any upstream `HashMap`
+/// iteration order is laundered through a total order before a single
+/// byte is produced.
+fn push_slab(out: &mut Vec<u8>, entries: &ShardEntries<'_>) {
+    for (kmer, _) in entries {
+        out.extend_from_slice(&kmer.to_le_bytes());
+    }
+    let mut cum = 0u64;
+    for (_, occs) in entries {
+        cum += occs.len() as u64;
+        out.extend_from_slice(&cum.to_le_bytes());
+    }
+    for (_, occs) in entries {
+        for &p in *occs {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+    }
+    while out.len() % 8 != 0 {
+        out.push(0);
+    }
+}
+
+/// Serialize the 72-byte header.
+fn header_bytes(
+    k: usize,
+    w: usize,
+    read_len: usize,
+    ref_len: usize,
+    n_shards: usize,
+    n_entries: u64,
+    n_positions: u64,
+    file_len: u64,
+) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(MAGIC_V2);
+    for (i, v) in [
+        k as u64,
+        w as u64,
+        read_len as u64,
+        ref_len as u64,
+        n_shards as u64,
+        n_entries,
+        n_positions,
+        file_len,
+    ]
+    .iter()
+    .enumerate()
+    {
+        h[8 + 8 * i..16 + 8 * i].copy_from_slice(&v.to_le_bytes());
+    }
+    h
+}
+
+/// Writer-side validation shared by both writers: refuse anything the
+/// format cannot represent (the same totality guarantee
+/// [`super::io::write_index`] gives v1).
+fn check_writable(
+    k: usize,
+    w: usize,
+    read_len: usize,
+    ref_len: usize,
+    n_shards: usize,
+) -> io::Result<()> {
+    if n_shards == 0 || n_shards > MAX_SHARDS {
+        return Err(bad_input(&format!(
+            "index not serializable: shard count {n_shards} outside 1..={MAX_SHARDS}"
+        )));
+    }
+    if ref_len > u32::MAX as usize {
+        return Err(bad_input(&format!(
+            "index not serializable: reference length {ref_len} exceeds u32 occurrence \
+             positions"
+        )));
+    }
+    if k == 0 || k > 32 || w == 0 || read_len < k {
+        return Err(bad_input(&format!(
+            "index not serializable: implausible geometry k={k}, w={w}, read_len={read_len}"
+        )));
+    }
+    Ok(())
+}
+
+/// Convert a heap [`MinimizerIndex`] to DARTPIM2 (the v1 → v2
+/// converter). Memory stays O(index + one slab); the output is
+/// byte-identical to what the streaming builder produces for the same
+/// reference and shard count (held by the tests below).
+pub fn write_index_v2<W: Write>(
+    w: &mut W,
+    idx: &MinimizerIndex,
+    n_shards: usize,
+) -> io::Result<()> {
+    check_writable(idx.k, idx.w, idx.read_len, idx.reference.len(), n_shards)?;
+    // bucket the (unordered) heap iteration into per-shard BTreeMaps:
+    // every downstream byte derives from these key-sorted maps, never
+    // from HashMap order
+    let mut shards: Vec<BTreeMap<u64, &[u32]>> = vec![BTreeMap::new(); n_shards];
+    for (m, occs) in idx.iter() {
+        shards[shard_of(m, n_shards)].insert(m, occs);
+    }
+    let mut n_entries = 0u64;
+    let mut n_positions = 0u64;
+    let mut slab_lens: Vec<u64> = Vec::with_capacity(n_shards);
+    for sh in &shards {
+        let e = sh.len() as u64;
+        let p: u64 = sh.values().map(|o| o.len() as u64).sum();
+        n_entries += e;
+        n_positions += p;
+        slab_lens.push(align8(16 * e + 4 * p));
+    }
+    let ref_len = idx.reference.len();
+    let dir_off = align8((HEADER_LEN + ref_len) as u64);
+    let dir_end = dir_off + (n_shards * DIR_RECORD_LEN) as u64;
+    let file_len = dir_end + slab_lens.iter().sum::<u64>();
+    w.write_all(&header_bytes(
+        idx.k,
+        idx.w,
+        idx.read_len,
+        ref_len,
+        n_shards,
+        n_entries,
+        n_positions,
+        file_len,
+    ))?;
+    w.write_all(&idx.reference)?;
+    w.write_all(&vec![0u8; dir_off as usize - (HEADER_LEN + ref_len)])?;
+    let mut slab_off = dir_end;
+    for (sh, &slab_len) in shards.iter().zip(&slab_lens) {
+        let p: u64 = sh.values().map(|o| o.len() as u64).sum();
+        for v in [slab_off, sh.len() as u64, p, slab_len] {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        slab_off += slab_len;
+    }
+    for sh in &shards {
+        let entries: ShardEntries<'_> = sh.iter().map(|(&m, &o)| (m, o)).collect();
+        let mut slab = Vec::new();
+        push_slab(&mut slab, &entries);
+        w.write_all(&slab)?;
+    }
+    Ok(())
+}
+
+/// Statistics reported by the streaming builder.
+#[derive(Debug, Clone)]
+pub struct V2BuildStats {
+    /// Total distinct minimizers written.
+    pub n_entries: u64,
+    /// Total occurrence positions written.
+    pub n_positions: u64,
+    /// Occurrence positions per shard (partition-balance report).
+    pub shard_positions: Vec<u64>,
+}
+
+/// Build a DARTPIM2 index straight from a reference with bounded
+/// memory — the two-pass streaming builder. Pass 1 streams the
+/// reference once through [`MinimizerScan`] counting postings per
+/// shard; pass 2 re-scans once per shard, holding only that shard's
+/// postings, and writes its slab in place. Peak memory is O(scan
+/// window + largest shard), never O(index) — a heap `MinimizerIndex`
+/// is never constructed. The directory and header totals are
+/// backpatched once the last slab lands, which is why the writer needs
+/// `Seek`.
+pub fn write_index_v2_streaming<W: Write + Seek>(
+    out: &mut W,
+    reference: &[u8],
+    k: usize,
+    w: usize,
+    read_len: usize,
+    n_shards: usize,
+) -> io::Result<V2BuildStats> {
+    check_writable(k, w, read_len, reference.len(), n_shards)?;
+    let base = out.stream_position()?;
+    // pass 1: one streaming scan, counting postings per shard
+    let mut shard_positions = vec![0u64; n_shards];
+    for m in MinimizerScan::new(reference, k, w) {
+        shard_positions[shard_of(m.kmer, n_shards)] += 1;
+    }
+    let ref_len = reference.len();
+    let dir_off = align8((HEADER_LEN + ref_len) as u64);
+    let dir_end = dir_off + (n_shards * DIR_RECORD_LEN) as u64;
+    // placeholders for the header and directory; backpatched below
+    out.write_all(&[0u8; HEADER_LEN])?;
+    out.write_all(reference)?;
+    out.write_all(&vec![0u8; dir_off as usize - (HEADER_LEN + ref_len)])?;
+    out.write_all(&vec![0u8; n_shards * DIR_RECORD_LEN])?;
+    // pass 2: one sub-pass per shard, memory O(that shard)
+    let mut dir: Vec<[u64; 4]> = Vec::with_capacity(n_shards);
+    let mut slab_off = dir_end;
+    let mut n_entries = 0u64;
+    let mut n_positions = 0u64;
+    for s in 0..n_shards {
+        let mut postings: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+        for m in MinimizerScan::new(reference, k, w) {
+            if shard_of(m.kmer, n_shards) == s {
+                postings.entry(m.kmer).or_default().push(m.pos);
+            }
+        }
+        // mirror MinimizerIndex::build exactly: sorted, deduplicated
+        for v in postings.values_mut() {
+            v.sort_unstable();
+            v.dedup();
+        }
+        let entries: ShardEntries<'_> =
+            postings.iter().map(|(&m, o)| (m, o.as_slice())).collect();
+        let e = entries.len() as u64;
+        let p: u64 = entries.iter().map(|(_, o)| o.len() as u64).sum();
+        let mut slab = Vec::new();
+        push_slab(&mut slab, &entries);
+        out.write_all(&slab)?;
+        dir.push([slab_off, e, p, slab.len() as u64]);
+        slab_off += slab.len() as u64;
+        n_entries += e;
+        n_positions += p;
+    }
+    let file_len = slab_off;
+    // backpatch the directory, then the header, then park at the end
+    out.seek(SeekFrom::Start(base + dir_off))?;
+    for rec in &dir {
+        for v in rec {
+            out.write_all(&v.to_le_bytes())?;
+        }
+    }
+    out.seek(SeekFrom::Start(base))?;
+    out.write_all(&header_bytes(
+        k,
+        w,
+        read_len,
+        ref_len,
+        n_shards,
+        n_entries,
+        n_positions,
+        file_len,
+    ))?;
+    out.seek(SeekFrom::Start(base + file_len))?;
+    Ok(V2BuildStats { n_entries, n_positions, shard_positions })
+}
+
+/// Convert a heap index to a DARTPIM2 file at `path`.
+pub fn save_index_v2<P: AsRef<Path>>(
+    path: P,
+    idx: &MinimizerIndex,
+    n_shards: usize,
+) -> io::Result<()> {
+    let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+    write_index_v2(&mut f, idx, n_shards)?;
+    f.flush()
+}
+
+/// Build a DARTPIM2 file at `path` straight from a reference with
+/// bounded memory (see [`write_index_v2_streaming`]).
+pub fn build_index_v2<P: AsRef<Path>>(
+    path: P,
+    reference: &[u8],
+    k: usize,
+    w: usize,
+    read_len: usize,
+    n_shards: usize,
+) -> io::Result<V2BuildStats> {
+    let mut f = io::BufWriter::new(std::fs::File::create(path)?);
+    let stats = write_index_v2_streaming(&mut f, reference, k, w, read_len, n_shards)?;
+    f.flush()?;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::genome::synth::SynthConfig;
+    use crate::params::{K, READ_LEN, W};
+
+    fn build() -> MinimizerIndex {
+        let g = SynthConfig { len: 30_000, ..Default::default() }.generate();
+        MinimizerIndex::build(g, K, W, READ_LEN)
+    }
+
+    fn v2_bytes(idx: &MinimizerIndex, n_shards: usize) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_index_v2(&mut buf, idx, n_shards).unwrap();
+        buf
+    }
+
+    #[test]
+    fn converter_output_parses_and_round_trips_contents() {
+        let idx = build();
+        for n_shards in [1usize, 4, 16] {
+            let buf = v2_bytes(&idx, n_shards);
+            let layout = parse_v2(&buf).unwrap();
+            assert_eq!(layout.n_shards, n_shards);
+            assert_eq!(layout.n_entries as usize, idx.n_minimizers());
+            assert_eq!((layout.k, layout.w, layout.read_len), (idx.k, idx.w, idx.read_len));
+            assert_eq!(&buf[layout.ref_off..layout.ref_off + layout.ref_len], &idx.reference[..]);
+        }
+    }
+
+    #[test]
+    fn streaming_builder_matches_converter_byte_for_byte() {
+        let idx = build();
+        for n_shards in [1usize, 3, 16] {
+            let converted = v2_bytes(&idx, n_shards);
+            let mut streamed = io::Cursor::new(Vec::new());
+            let stats = write_index_v2_streaming(
+                &mut streamed,
+                &idx.reference,
+                idx.k,
+                idx.w,
+                idx.read_len,
+                n_shards,
+            )
+            .unwrap();
+            assert_eq!(
+                converted,
+                streamed.into_inner(),
+                "shards={n_shards}: the two build paths must agree bytewise"
+            );
+            assert_eq!(stats.n_entries as usize, idx.n_minimizers());
+            assert_eq!(stats.shard_positions.len(), n_shards);
+            assert_eq!(
+                stats.shard_positions.iter().sum::<u64>(),
+                stats.n_positions,
+                "pass-1 balance counts must sum to the written total"
+            );
+        }
+    }
+
+    #[test]
+    fn mapped_lookups_match_heap_lookups() {
+        let idx = build();
+        let path =
+            std::env::temp_dir().join(format!("dartpim-v2-{}.idx2", std::process::id()));
+        save_index_v2(&path, &idx, 8).unwrap();
+        let mapped = MappedIndex::open(&path).unwrap();
+        assert_eq!(mapped.n_minimizers(), idx.n_minimizers());
+        assert_eq!(mapped.reference(), &idx.reference[..]);
+        for (m, occs) in idx.iter() {
+            assert_eq!(mapped.occurrences(m), occs, "minimizer {m:#x}");
+        }
+        assert_eq!(mapped.occurrences(0xFFFF_FFFF_FFFF_FFFF), &[] as &[u32]);
+        // windows must come out identical too (shared implementation)
+        let (_, occs) = idx.iter().next().unwrap();
+        assert_eq!(mapped.window_for(occs[0], 3), idx.window_for(occs[0], 3));
+        let heap_again = mapped.to_heap();
+        assert_eq!(heap_again.n_minimizers(), idx.n_minimizers());
+        for (m, occs) in idx.iter() {
+            assert_eq!(heap_again.occurrences(m), occs);
+        }
+        drop(mapped);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn writers_refuse_unserializable_inputs() {
+        let idx = build();
+        let mut sink = Vec::new();
+        let err = write_index_v2(&mut sink, &idx, 0).unwrap_err();
+        assert!(err.to_string().contains("shard count"), "{err}");
+        let err = write_index_v2(&mut sink, &idx, MAX_SHARDS + 1).unwrap_err();
+        assert!(err.to_string().contains("shard count"), "{err}");
+        let mut cur = io::Cursor::new(Vec::new());
+        let err =
+            write_index_v2_streaming(&mut cur, &idx.reference, 0, W, READ_LEN, 4).unwrap_err();
+        assert!(err.to_string().contains("geometry"), "{err}");
+    }
+
+    #[test]
+    fn empty_reference_builds_an_empty_valid_index() {
+        let mut cur = io::Cursor::new(Vec::new());
+        let stats = write_index_v2_streaming(&mut cur, &[], K, W, READ_LEN, 4).unwrap();
+        assert_eq!(stats.n_entries, 0);
+        let buf = cur.into_inner();
+        let layout = parse_v2(&buf).unwrap();
+        assert_eq!(layout.n_entries, 0);
+        assert_eq!(layout.n_positions, 0);
+    }
+}

@@ -1,7 +1,7 @@
 //! Read seeding: extract a read's minimizers and resolve them against the
 //! reference index into potential locations (PLs).
 
-use crate::index::{minimizers, MinimizerIndex};
+use crate::index::{minimizers, IndexRef};
 
 /// One read minimizer resolved against the index.
 #[derive(Debug, Clone)]
@@ -32,13 +32,14 @@ pub struct SeedHit {
 /// Duplicate minimizer k-mers within one read are collapsed to their
 /// first occurrence (the paper routes one Reads-FIFO entry per (read,
 /// minimizer) pair; a duplicate would re-route the same pair).
-pub fn seed_read(index: &MinimizerIndex, read: &[u8]) -> Vec<ReadSeed> {
+pub fn seed_read<'a>(index: impl Into<IndexRef<'a>>, read: &[u8]) -> Vec<ReadSeed> {
+    let index = index.into();
     // dart-analyze: allow(determinism): membership test only (insert()
     // return value); the set is never iterated, and seed emission order
     // follows the minimizers() scan of the read.
     let mut seen = std::collections::HashSet::new();
     let mut out = Vec::new();
-    for m in minimizers(read, index.k, index.w) {
+    for m in minimizers(read, index.k(), index.w()) {
         if seen.insert(m.kmer) {
             out.push(ReadSeed {
                 kmer: m.kmer,
@@ -54,7 +55,8 @@ pub fn seed_read(index: &MinimizerIndex, read: &[u8]) -> Vec<ReadSeed> {
 /// ground-truth mapper and the data-volume motivation study; the PIM
 /// pipeline never materializes this list — that is the point of the
 /// paper).
-pub fn all_seed_hits(index: &MinimizerIndex, read: &[u8]) -> Vec<SeedHit> {
+pub fn all_seed_hits<'a>(index: impl Into<IndexRef<'a>>, read: &[u8]) -> Vec<SeedHit> {
+    let index = index.into();
     let mut hits = Vec::new();
     for seed in seed_read(index, read) {
         for &p in index.occurrences(seed.kmer) {

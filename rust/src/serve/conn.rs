@@ -18,7 +18,7 @@ use crate::coordinator::pool::{MapSession, WorkerPool};
 use crate::coordinator::{FinalMapping, Router};
 use crate::genome::fastq::{FastqRecord, PairedFastqStream};
 use crate::genome::ReadRecord;
-use crate::index::MinimizerIndex;
+use crate::index::IndexRef;
 
 use super::protocol::{
     read_handshake, FrameReader, FrameWriter, Framing, Mode, KIND_ERROR, KIND_METRICS,
@@ -108,7 +108,7 @@ impl OutChan {
 pub(crate) fn handle_connection(
     mut stream: Stream,
     session_id: u64,
-    index: &MinimizerIndex,
+    index: IndexRef<'_>,
     router: &Router,
     template: &SessionTemplate,
     pool: &WorkerPool,
@@ -167,7 +167,7 @@ fn run_session(
     out: &mut OutChan,
     mode: Mode,
     session_id: u64,
-    index: &MinimizerIndex,
+    index: IndexRef<'_>,
     router: &Router,
     template: &SessionTemplate,
     pool: &WorkerPool,
@@ -185,10 +185,10 @@ fn run_session(
         (rl, Box::new(it))
     };
     anyhow::ensure!(
-        read_len == index.read_len,
+        read_len == index.read_len(),
         "session streams {read_len} bp reads, but this daemon's index was built for {} bp \
          (restart serve with --read-len {read_len} to serve them)",
-        index.read_len
+        index.read_len()
     );
     cli::write_tsv_header(out, paired)?;
     let mut sink = |_id: u32, m: Option<FinalMapping>| -> Result<()> {

@@ -38,7 +38,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::pool::WorkerPool;
 use crate::coordinator::{PairingConfig, PipelineConfig, Router};
-use crate::index::MinimizerIndex;
+use crate::index::IndexRef;
 
 mod conn;
 pub mod protocol;
@@ -192,7 +192,12 @@ struct DaemonStats {
 /// pool. Returns `Ok(())` after a graceful drain (so `serve` exits 0
 /// under SIGTERM) and `Err` for daemon-level failures (bad bind,
 /// accept-loop I/O errors, dead worker pool).
-pub fn run_daemon(index: &MinimizerIndex, template: SessionTemplate, bind: Bind) -> Result<()> {
+pub fn run_daemon<'a>(
+    index: impl Into<IndexRef<'a>>,
+    template: SessionTemplate,
+    bind: Bind,
+) -> Result<()> {
+    let index = index.into();
     signal::install();
     let (listener, _guard, addr) = match &bind {
         Bind::Unix(path) => {
@@ -220,7 +225,7 @@ pub fn run_daemon(index: &MinimizerIndex, template: SessionTemplate, bind: Bind)
     // spawn), never per-session — the banner is the place to see it
     eprintln!(
         "serve: listening on {addr} ({} bp reads, {} shard worker(s), engine {}, simd {})",
-        index.read_len,
+        index.read_len(),
         n_shards,
         template.cfg.worker_engine.name(),
         template.cfg.simd.name()

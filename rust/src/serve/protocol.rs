@@ -179,7 +179,17 @@ impl<R: Read> Read for FrameReader<R> {
             })?;
             let len = u32::from_be_bytes([hdr[1], hdr[2], hdr[3], hdr[4]]) as usize;
             match hdr[0] {
-                KIND_FINISH => self.finished = true,
+                KIND_FINISH => {
+                    if len != 0 {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!(
+                                "finish frame declares a {len} byte payload; F frames carry none"
+                            ),
+                        ));
+                    }
+                    self.finished = true;
+                }
                 KIND_DATA => {
                     if len > MAX_FRAME_LEN {
                         return Err(io::Error::new(
@@ -278,8 +288,14 @@ pub fn read_framed_response<R: Read>(
         }
         let len = u32::from_be_bytes([hdr[1], hdr[2], hdr[3], hdr[4]]) as usize;
         anyhow::ensure!(len <= MAX_FRAME_LEN, "server frame length {len} exceeds cap");
-        let mut payload = vec![0u8; len];
-        r.read_exact(&mut payload)?;
+        // never preallocate from the untrusted header length: read
+        // through `take`, so memory tracks bytes actually received
+        let mut payload = Vec::new();
+        let got = r.by_ref().take(len as u64).read_to_end(&mut payload)?;
+        anyhow::ensure!(
+            got == len,
+            "truncated server frame: header declares {len} bytes, stream ended after {got}"
+        );
         match hdr[0] {
             KIND_DATA => tsv.extend_from_slice(&payload),
             KIND_METRICS => metrics = Some(String::from_utf8_lossy(&payload).into_owned()),
@@ -375,6 +391,45 @@ mod tests {
         let mut got = Vec::new();
         let err = rd.read_to_end(&mut got).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn finish_frame_with_payload_is_rejected() {
+        let wire = vec![KIND_FINISH, 0, 0, 0, 4];
+        let mut rd = FrameReader::new(io::Cursor::new(wire));
+        let mut got = Vec::new();
+        let err = rd.read_to_end(&mut got).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("finish frame"), "{err}");
+    }
+
+    #[test]
+    fn oversized_data_frame_header_fails_before_any_payload_read() {
+        // a malicious header claiming u32::MAX bytes must be rejected
+        // from the 5 header bytes alone — no allocation, no read
+        let wire = vec![KIND_DATA, 0xFF, 0xFF, 0xFF, 0xFF];
+        let mut rd = FrameReader::new(io::Cursor::new(wire));
+        let mut got = Vec::new();
+        let err = rd.read_to_end(&mut got).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn truncated_server_frame_is_a_loud_error() {
+        // header declares 9 payload bytes but the stream ends after 3
+        let mut wire = encode_data_frame(b"short.tsv");
+        wire.truncate(5 + 3);
+        let err = read_framed_response(&mut io::Cursor::new(wire)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated server frame"), "{msg}");
+    }
+
+    #[test]
+    fn oversized_server_frame_header_is_rejected_without_allocating() {
+        let wire = vec![KIND_DATA, 0xFF, 0xFF, 0xFF, 0xFF];
+        let err = read_framed_response(&mut io::Cursor::new(wire)).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds cap"), "{err:#}");
     }
 
     #[test]

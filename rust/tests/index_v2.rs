@@ -1,0 +1,258 @@
+//! Integration: the DARTPIM2 mmap-able index must round-trip exactly,
+//! reject truncated / misaligned / internally-inconsistent files with
+//! descriptive errors (never misparse, never trust a declared length),
+//! and — determinism invariant 9 — produce byte-identical `map` output
+//! whichever backend serves it, across threads and engines.
+
+use std::path::PathBuf;
+
+use dart_pim::cli;
+use dart_pim::genome::synth::SynthConfig;
+use dart_pim::index::v2::{write_index_v2, V2Layout};
+use dart_pim::index::{parse_v2, save_index_v2, MappedIndex, MinimizerIndex};
+use dart_pim::params::{K, READ_LEN, W};
+
+fn build_index() -> MinimizerIndex {
+    let g = SynthConfig { len: 40_000, ..Default::default() }.generate();
+    MinimizerIndex::build(g, K, W, READ_LEN)
+}
+
+fn serialized(idx: &MinimizerIndex, n_shards: usize) -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_index_v2(&mut buf, idx, n_shards).unwrap();
+    buf
+}
+
+fn parse(buf: &[u8]) -> std::io::Result<V2Layout> {
+    parse_v2(buf)
+}
+
+/// Byte offset of shard `s`'s 32-byte directory record.
+fn dir_record(buf: &[u8], s: usize) -> usize {
+    let ref_len = u64::from_le_bytes(buf[32..40].try_into().unwrap()) as usize;
+    ((72 + ref_len + 7) & !7) + 32 * s
+}
+
+#[test]
+fn mapped_file_round_trip_preserves_everything() {
+    let idx = build_index();
+    let path = std::env::temp_dir().join(format!("dartpim-v2io-{}.bin", std::process::id()));
+    save_index_v2(&path, &idx, 4).unwrap();
+    let mapped = MappedIndex::open(&path).unwrap();
+    assert_eq!((mapped.k(), mapped.w(), mapped.read_len()), (idx.k, idx.w, idx.read_len));
+    assert_eq!(mapped.reference(), &idx.reference[..]);
+    assert_eq!(mapped.n_minimizers(), idx.n_minimizers());
+    for (m, occs) in idx.iter() {
+        assert_eq!(mapped.occurrences(m), occs, "minimizer {m:#x}");
+    }
+    drop(mapped);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn every_truncation_point_is_rejected() {
+    let idx = build_index();
+    let buf = serialized(&idx, 4);
+    // sweep the header + directory densely and the slabs sparsely;
+    // every proper prefix must fail (the header pins the exact file
+    // length, so the format has no optional tail)
+    let mut cuts: Vec<usize> = (0..256.min(buf.len())).collect();
+    cuts.extend((256..buf.len()).step_by(buf.len() / 31 + 1));
+    cuts.push(buf.len() - 1);
+    for cut in cuts {
+        let err = parse(&buf[..cut]).expect_err(&format!("prefix of {cut} bytes must fail"));
+        let msg = err.to_string();
+        assert!(
+            msg.contains("truncated") || msg.contains("magic"),
+            "cut={cut}: unhelpful error {msg:?}"
+        );
+    }
+    // one byte too many must fail just as loudly
+    let mut long = buf.clone();
+    long.push(0);
+    let err = parse(&long).unwrap_err();
+    assert!(err.to_string().contains("truncated or padded"), "{err}");
+}
+
+#[test]
+fn bad_magic_and_version_skew_are_distinguished() {
+    let idx = build_index();
+    let mut buf = serialized(&idx, 2);
+    // wholly different magic
+    let err = parse(b"NOTANIDXatall").unwrap_err();
+    assert!(err.to_string().contains("not a DART-PIM index"), "{err}");
+    // same family, other version byte: the error must point at the
+    // converter rather than claiming corruption
+    buf[7] = b'1';
+    let err = parse(&buf).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("version") && msg.contains("--from"), "{msg}");
+}
+
+#[test]
+fn corrupt_header_fields_fail_without_huge_allocation() {
+    let idx = build_index();
+    let buf = serialized(&idx, 4);
+    // ref_len -> absurd: must fail loudly, never pre-allocate
+    let mut evil = buf.clone();
+    evil[32..40].copy_from_slice(&u64::MAX.to_le_bytes());
+    parse(&evil).unwrap_err();
+    // geometry: k = 0 is implausible
+    let mut evil = buf.clone();
+    evil[8..16].copy_from_slice(&0u64.to_le_bytes());
+    let err = parse(&evil).unwrap_err();
+    assert!(err.to_string().contains("geometry"), "{err}");
+    // shard count 0 and beyond the format cap
+    for bogus in [0u64, 1 << 21] {
+        let mut evil = buf.clone();
+        evil[40..48].copy_from_slice(&bogus.to_le_bytes());
+        let err = parse(&evil).unwrap_err();
+        assert!(err.to_string().contains("shard count"), "{err}");
+    }
+}
+
+#[test]
+fn misaligned_slab_is_rejected() {
+    let idx = build_index();
+    let buf = serialized(&idx, 4);
+    let mut evil = buf.clone();
+    let rec = dir_record(&buf, 0);
+    let off = u64::from_le_bytes(buf[rec..rec + 8].try_into().unwrap());
+    evil[rec..rec + 8].copy_from_slice(&(off + 4).to_le_bytes());
+    let err = parse(&evil).unwrap_err();
+    assert!(err.to_string().contains("misaligned"), "{err}");
+    // an aligned but displaced slab breaks contiguity instead
+    let mut evil = buf.clone();
+    evil[rec..rec + 8].copy_from_slice(&(off + 8).to_le_bytes());
+    let err = parse(&evil).unwrap_err();
+    assert!(err.to_string().contains("contiguous"), "{err}");
+}
+
+#[test]
+fn directory_and_slab_disagreements_are_rejected() {
+    let idx = build_index();
+    let buf = serialized(&idx, 4);
+    // a directory record whose counts no longer match its slab length
+    let mut evil = buf.clone();
+    let rec = dir_record(&buf, 0);
+    let n_e = u64::from_le_bytes(buf[rec + 8..rec + 16].try_into().unwrap());
+    evil[rec + 8..rec + 16].copy_from_slice(&(n_e + 1).to_le_bytes());
+    let err = parse(&evil).unwrap_err();
+    assert!(err.to_string().contains("disagrees"), "{err}");
+    // directory totals that no longer match the header totals
+    let mut evil = buf.clone();
+    let total = u64::from_le_bytes(buf[48..56].try_into().unwrap());
+    evil[48..56].copy_from_slice(&(total + 1).to_le_bytes());
+    let err = parse(&evil).unwrap_err();
+    assert!(err.to_string().contains("disagree with the header"), "{err}");
+}
+
+#[test]
+fn corrupt_slab_payload_is_rejected() {
+    let idx = build_index();
+    let buf = serialized(&idx, 4);
+    let layout = parse(&buf).unwrap();
+    let sh = layout
+        .shards
+        .iter()
+        .find(|sh| sh.n_entries >= 2)
+        .expect("a 40kb genome fills every shard");
+    // keys must be strictly ascending
+    let mut evil = buf.clone();
+    let k0 = buf[sh.keys_off..sh.keys_off + 8].to_vec();
+    evil[sh.keys_off + 8..sh.keys_off + 16].copy_from_slice(&k0);
+    let err = parse(&evil).unwrap_err();
+    assert!(err.to_string().contains("keys are not sorted"), "{err}");
+    // a key stored in a shard that does not own it
+    let other = layout
+        .shards
+        .iter()
+        .find(|o| o.n_entries >= 1 && o.keys_off != sh.keys_off)
+        .expect("two populated shards");
+    let mut evil = buf.clone();
+    let foreign = buf[other.keys_off..other.keys_off + 8].to_vec();
+    evil[sh.keys_off..sh.keys_off + 8].copy_from_slice(&foreign);
+    let err = parse(&evil).unwrap_err();
+    assert!(err.to_string().contains("owned by"), "{err}");
+    // an occurrence position beyond the reference
+    let mut evil = buf.clone();
+    let last = sh.pos_off + 4 * (sh.n_positions - 1);
+    evil[last..last + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    let err = parse(&evil).unwrap_err();
+    assert!(err.to_string().contains("out of reference bounds"), "{err}");
+}
+
+#[test]
+fn mapped_open_validates_the_file_end_to_end() {
+    let idx = build_index();
+    let buf = serialized(&idx, 4);
+    let dir = std::env::temp_dir().join(format!("dartpim-v2open-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // the clean file opens
+    let good = dir.join("good.idx");
+    std::fs::write(&good, &buf).unwrap();
+    let mapped = MappedIndex::open(&good).unwrap();
+    assert_eq!(mapped.n_minimizers(), idx.n_minimizers());
+    drop(mapped);
+    // a truncated file is refused through the same validation
+    let bad = dir.join("bad.idx");
+    std::fs::write(&bad, &buf[..buf.len() - 1]).unwrap();
+    let err = MappedIndex::open(&bad).unwrap_err();
+    assert!(err.to_string().contains("truncated or padded"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn fixtures() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden")
+}
+
+fn run(cmd: &str) {
+    let argv: Vec<String> = cmd.split_whitespace().map(|s| s.to_string()).collect();
+    cli::run(&argv).unwrap_or_else(|e| panic!("`{cmd}` failed: {e:#}"));
+}
+
+/// Determinism invariant 9 on the golden fixtures: the index backend —
+/// heap (v1) or mmap (v2) — never changes a single output byte, across
+/// threads {1,4} x engines {rust,bitpal}.
+#[test]
+fn golden_mapping_is_byte_identical_across_backends_threads_and_engines() {
+    let fx = fixtures();
+    let dir = std::env::temp_dir().join(format!("dartpim-v2golden-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let (rf, rd) = (fx.join("ref.fasta"), fx.join("reads_se.fastq"));
+    run(&format!(
+        "index --ref {} --read-len 100 --out {}",
+        rf.display(),
+        dir.join("golden-v1.idx").display()
+    ));
+    run(&format!(
+        "index --ref {} --read-len 100 --index-format v2 --shards 4 --out {}",
+        rf.display(),
+        dir.join("golden-v2.idx").display()
+    ));
+    let mut outputs: Vec<(String, String)> = Vec::new();
+    for backend in ["v1", "v2"] {
+        for threads in [1usize, 4] {
+            for engine in ["rust", "bitpal"] {
+                let out = dir.join(format!("se-{backend}-{threads}-{engine}.tsv"));
+                run(&format!(
+                    "map --index {} --reads {} --low-th 0 --engine {engine} \
+                     --threads {threads} --out {}",
+                    dir.join(format!("golden-{backend}.idx")).display(),
+                    rd.display(),
+                    out.display()
+                ));
+                outputs.push((
+                    format!("backend={backend} threads={threads} engine={engine}"),
+                    std::fs::read_to_string(&out).unwrap(),
+                ));
+            }
+        }
+    }
+    let (base_label, base) = &outputs[0];
+    assert_eq!(base.lines().count(), 1 + 11, "one header + 11 mapped rows:\n{base}");
+    for (label, tsv) in &outputs[1..] {
+        assert_eq!(base, tsv, "{label} must equal {base_label} (invariant 9)");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -296,6 +296,50 @@ fn malformed_fastq_poisons_only_its_own_session() {
 }
 
 #[test]
+fn malicious_frame_headers_fail_loudly_without_exhausting_memory() {
+    let fx = fixtures();
+    let se = std::fs::read(fx.join("reads_se.fastq")).unwrap();
+    let want_se =
+        map_tsv(&format!("--reads {}", fx.join("reads_se.fastq").display()), "--threads 2");
+    let daemon = Daemon::start(&["--threads", "2"]);
+
+    // a data-frame header claiming u32::MAX payload bytes: the daemon
+    // must reject it from the 5 header bytes alone (no allocation, no
+    // payload read) and answer with an E frame naming the cap
+    let mut s = UnixStream::connect(&daemon.sock).unwrap();
+    writeln!(s, "DART/1 mode=se").unwrap();
+    s.write_all(&[b'D', 0xFF, 0xFF, 0xFF, 0xFF]).unwrap();
+    s.flush().unwrap();
+    let (_, metrics, error) =
+        read_framed_response(&mut s).expect("reading the error response");
+    let error = error.expect("the oversized frame must fail the session");
+    assert!(error.contains("cap"), "error must name the frame cap: {error}");
+    assert_eq!(metrics, None, "a failed session reports no metrics frame");
+    drop(s);
+
+    // a finish frame smuggling a payload length is rejected too
+    let mut s = UnixStream::connect(&daemon.sock).unwrap();
+    writeln!(s, "DART/1 mode=se").unwrap();
+    s.write_all(&encode_data_frame(&se)).unwrap();
+    s.write_all(&[b'F', 0, 0, 0, 8]).unwrap();
+    s.flush().unwrap();
+    let (_, _, error) = read_framed_response(&mut s).expect("reading the error response");
+    let error = error.expect("the nonzero-length finish frame must fail the session");
+    assert!(error.contains("finish frame"), "{error}");
+    drop(s);
+
+    // the daemon and its workers survive both attacks: a clean session
+    // on the same socket still matches `map`
+    let (tsv, _, error) = framed_session(&daemon.sock, "se", &se, 4096);
+    assert_eq!(error, None, "session after the malicious ones must succeed");
+    assert_eq!(
+        String::from_utf8(tsv).unwrap(),
+        want_se,
+        "session after the malicious ones must still match `map`"
+    );
+}
+
+#[test]
 fn sigterm_drains_in_flight_sessions_and_exits_zero() {
     let fx = fixtures();
     let se = std::fs::read(fx.join("reads_se.fastq")).unwrap();

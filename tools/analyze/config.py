@@ -31,6 +31,11 @@ TAINT_SINKS = (
     ("rust/src/serve/conn.rs", "handle_connection"),
     ("rust/src/serve/conn.rs", "run_session"),
     ("rust/src/serve/conn.rs", "metrics_line"),
+    # The DARTPIM2 writers: on-disk index bytes are output bytes too —
+    # both builders must emit identical files for identical inputs
+    # (invariant 9), so map-order hazards reaching them are findings.
+    ("rust/src/index/v2.rs", "write_index_v2"),
+    ("rust/src/index/v2.rs", "write_index_v2_streaming"),
 )
 
 # Hazard categories for the determinism check: category -> identifiers.
@@ -106,7 +111,17 @@ CHANNEL_IDENTS = ("channel", "sync_channel")
 # bare-binding) arm is a silent-fallthrough hazard. A match over DART/1
 # frame-kind constants (the `KIND_*` u8 group) may keep its wildcard
 # only if the arm is loud (error/panic), since u8 is never exhaustive.
-WILDCARD_ENUMS = ("PairStatus", "EngineKind", "SimdMode", "PoolMsg", "Mode", "Framing")
+WILDCARD_ENUMS = (
+    "PairStatus",
+    "EngineKind",
+    "SimdMode",
+    "PoolMsg",
+    "Mode",
+    "Framing",
+    "IndexFormat",
+    "IndexBackend",
+    "IndexRef",
+)
 FRAME_KIND_PREFIX = "KIND_"
 LOUD_WILDCARD_TOKENS = ("Err", "panic", "unreachable", "todo", "unimplemented", "bail")
 

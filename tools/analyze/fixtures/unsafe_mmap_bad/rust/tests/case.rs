@@ -1,0 +1,17 @@
+//! Planted violation: an mmap-style FFI binding whose unsafe call
+//! sites carry no adjacent `// SAFETY:` comments (unsafe).
+
+extern "C" {
+    fn mmap(addr: usize, len: usize, prot: i32, flags: i32, fd: i32, off: i64) -> usize;
+    fn munmap(addr: usize, len: usize) -> i32;
+}
+
+fn map_file(fd: i32, len: usize) -> &'static [u8] {
+    let p = unsafe { mmap(0, len, 1, 2, fd, 0) };
+    unsafe { std::slice::from_raw_parts(p as *const u8, len) }
+}
+
+fn main() {
+    let _ = map_file(0, 8);
+    let _ = munmap as *const ();
+}

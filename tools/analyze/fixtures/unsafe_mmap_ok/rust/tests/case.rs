@@ -1,0 +1,22 @@
+//! Clean counterexample: the same mmap binding with every unsafe call
+//! site's precondition discharged right next to it (unsafe).
+
+extern "C" {
+    fn mmap(addr: usize, len: usize, prot: i32, flags: i32, fd: i32, off: i64) -> usize;
+    fn munmap(addr: usize, len: usize) -> i32;
+}
+
+fn map_file(fd: i32, len: usize) -> &'static [u8] {
+    // SAFETY: addr 0 lets the kernel pick the placement; fd is the
+    // caller's live descriptor and the result is checked before use.
+    let p = unsafe { mmap(0, len, 1, 2, fd, 0) };
+    assert!(p != usize::MAX, "mmap failed");
+    // SAFETY: `p` is a page-aligned read-only mapping of exactly `len`
+    // bytes; it is never unmapped, so the 'static borrow stays valid.
+    unsafe { std::slice::from_raw_parts(p as *const u8, len) }
+}
+
+fn main() {
+    let _ = map_file(0, 8);
+    let _ = munmap as *const ();
+}
